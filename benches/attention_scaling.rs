@@ -1,0 +1,79 @@
+//! E2 — the paper's headline complexity claim: attention cost vs sequence
+//! length.  softmax is O(n^2 d); the factorized order-2 attention is
+//! O(n d_v d^2); elu+1 linear attention is O(n d_v d).
+//!
+//!   cargo bench --bench attention_scaling [-- max_n]
+//!
+//! Executes the AOT attention artifacts (batch 1, 4 heads, d=64, causal)
+//! for n in {64..4096} and reports ms/call plus the per-doubling growth
+//! ratio — ~4x for the quadratic baseline vs ~2x for the linear methods
+//! at large n.  Writes results/e2_scaling.csv.
+
+use holt::bench::{bench_budget, BenchResult};
+use holt::rng::Rng;
+use holt::runtime::{Runtime, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let max_n: usize = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let ns: Vec<usize> = [64, 128, 256, 512, 1024, 2048, 4096]
+        .into_iter()
+        .filter(|&n| n <= max_n)
+        .collect();
+    let kinds = ["softmax", "linear", "ho2"];
+
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut table: Vec<(usize, [f64; 3])> = Vec::new();
+    for &n in &ns {
+        let mut ms = [0.0; 3];
+        for (ki, kind) in kinds.iter().enumerate() {
+            let name = format!("attn_{kind}_n{n}");
+            let exe = rt.load(&name)?;
+            let shape = exe.artifact.inputs[0].shape.clone();
+            let count: usize = shape.iter().product();
+            let mut rng = Rng::new(n as u64);
+            let q = Tensor::f32(shape.clone(), rng.normal_vec_f32(count, 1.0));
+            let k = Tensor::f32(shape.clone(), rng.normal_vec_f32(count, 1.0));
+            let v = Tensor::f32(shape.clone(), rng.normal_vec_f32(count, 1.0));
+            let r = bench_budget(&name, 0.4, || {
+                std::hint::black_box(exe.run(&[q.clone(), k.clone(), v.clone()]).unwrap());
+            });
+            println!("{}", r.report());
+            ms[ki] = r.mean_s * 1e3;
+            rows.push(r);
+        }
+        table.push((n, ms));
+    }
+
+    println!("\nE2 — wall-clock per call (ms) and growth per doubling");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>8} {:>8} {:>8}",
+        "n", "softmax", "linear", "ho2", "sm x", "lin x", "ho2 x"
+    );
+    for (i, (n, ms)) in table.iter().enumerate() {
+        let ratio = |k: usize| {
+            if i == 0 {
+                "-".to_string()
+            } else {
+                format!("{:.2}", ms[k] / table[i - 1].1[k])
+            }
+        };
+        println!(
+            "{:>6} {:>12.3} {:>12.3} {:>12.3} {:>8} {:>8} {:>8}",
+            n, ms[0], ms[1], ms[2], ratio(0), ratio(1), ratio(2)
+        );
+    }
+
+    holt::bench::write_csv(std::path::Path::new("results/e2_scaling.csv"), &rows)?;
+    println!("\nwrote results/e2_scaling.csv");
+    println!(
+        "expected shape: softmax ratio -> ~4x/doubling at large n (O(n^2));\n\
+         linear + ho2 -> ~2x (O(n)); ho2 sits ~d/1 above linear in absolute\n\
+         cost (feature dim 1+d+d^2 vs d) but keeps the same slope."
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! E4 — autoregressive decoding: per-token latency vs context depth, and
+//! per-slot state size.  The paper's RNN formulation gives O(1) state and
+//! flat per-token cost; the softmax baseline drags a KV cache that grows
+//! with context (and does O(ctx) work per token).
+//!
+//!   cargo bench --bench decode_latency [-- tokens_per_phase]
+//!
+//! Writes results/e4_decode.csv (model, ctx_bucket, us/token, state KiB).
+
+use holt::bench::write_csv;
+use holt::bench::BenchResult;
+use holt::coordinator::generation::{decode_step, CachedParams};
+use holt::coordinator::state::StateManager;
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let per_phase: usize = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(24);
+    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let mut rows: Vec<BenchResult> = Vec::new();
+
+    println!("E4 — per-token decode latency vs context depth (tiny preset)\n");
+    println!(
+        "{:<14} {:>10} {:>14} {:>12}",
+        "model", "ctx", "us/token", "state KiB"
+    );
+    for attn in ["ho2", "linear", "softmax"] {
+        let model = format!("{attn}_tiny");
+        let entry = rt.manifest.model(&model)?.clone();
+        let exe = rt.load(entry.artifacts.get("decode").unwrap())?;
+        let params = ParamStore::init(&entry.param_spec, &mut Rng::new(2));
+        let cached = CachedParams::new(&params)?;
+        let mut sm = StateManager::new(&entry.state_spec)?;
+        let b = sm.n_slots();
+        for _ in 0..b {
+            sm.alloc();
+        }
+        let state_kib = sm.state_elements_per_slot() as f64 * 4.0 / 1024.0;
+        let max_ctx = entry.config.max_len - 1;
+
+        // decode continuously; bucket timings by context depth
+        let mut rng = Rng::new(3);
+        let mut ctx = 0usize;
+        while ctx + per_phase <= max_ctx.min(ctx + per_phase) && ctx < max_ctx {
+            let phase_end = (ctx + per_phase).min(max_ctx);
+            let t0 = std::time::Instant::now();
+            let mut steps = 0;
+            while ctx < phase_end {
+                let feed: Vec<i32> =
+                    (0..b).map(|_| rng.uniform_int(0, 256) as i32).collect();
+                std::hint::black_box(decode_step(&exe, &cached, &mut sm, &feed)?);
+                for s in 0..b {
+                    sm.advance(s);
+                }
+                ctx += 1;
+                steps += 1;
+            }
+            let per_token_us =
+                t0.elapsed().as_secs_f64() * 1e6 / (steps as f64 * b as f64);
+            println!(
+                "{:<14} {:>10} {:>14.1} {:>12.1}",
+                model, ctx, per_token_us, state_kib
+            );
+            rows.push(BenchResult {
+                name: format!("{model}_ctx{ctx}"),
+                iters: steps * b,
+                mean_s: per_token_us / 1e6,
+                std_s: 0.0,
+                min_s: per_token_us / 1e6,
+            });
+        }
+        println!();
+    }
+    write_csv(std::path::Path::new("results/e4_decode.csv"), &rows)?;
+    println!("wrote results/e4_decode.csv");
+    println!(
+        "expected shape: ho2/linear flat in ctx with constant state;\n\
+         softmax per-token cost grows with ctx and its cache is max_len-sized."
+    );
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Figure 1 — the paper's only figure: exp(x) against its Taylor
+//! truncations of order 1, 2, 3 on [-3, 3].
+//!
+//!   cargo bench --bench taylor_fig1
+//!
+//! Writes results/fig1_taylor.csv (plot-ready) and verifies the visual
+//! claims the paper makes about the figure: near-0 fidelity, rapid
+//! divergence away from 0, even orders overshooting for x < 0 and odd
+//! orders undershooting.
+
+use holt::experiments::{fig1_taylor_csv, write_results};
+use holt::mathref::taylor_exp;
+
+fn main() -> anyhow::Result<()> {
+    let csv = fig1_taylor_csv(121);
+    let path = write_results(std::path::Path::new("results"), "fig1_taylor.csv", &csv)?;
+
+    // the figure's qualitative content, as assertions
+    // (1) near zero all orders are good
+    for x in [-0.25, 0.0, 0.25] {
+        for o in [1, 2, 3] {
+            assert!((taylor_exp(x, o) - x.exp()).abs() < 0.05, "near-zero fit");
+        }
+    }
+    // (2) far from zero the approximation is "quickly very wrong" (paper)
+    assert!((taylor_exp(3.0, 2) - 3f64.exp()).abs() > 10.0);
+    // (3) even order overestimates for negative x, odd underestimates
+    assert!(taylor_exp(-2.0, 2) > (-2f64).exp());
+    assert!(taylor_exp(-2.0, 3) < (-2f64).exp());
+
+    println!("fig1: wrote {path:?}");
+    println!("{:>6} {:>10} {:>10} {:>10} {:>10}", "x", "exp", "o1", "o2", "o3");
+    for x in [-3.0f64, -1.5, 0.0, 1.5, 3.0] {
+        println!(
+            "{:>6.1} {:>10.4} {:>10.4} {:>10.4} {:>10.4}",
+            x,
+            x.exp(),
+            taylor_exp(x, 1),
+            taylor_exp(x, 2),
+            taylor_exp(x, 3)
+        );
+    }
+    println!("\nfigure-1 invariants verified (near-0 fit, divergence, parity bias)");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! E5 — train-step throughput by attention type (tokens/sec through the
+//! fused AdamW artifact, the whole L3 hot path included).
+//!
+//!   cargo bench --bench train_throughput [-- preset]
+//!
+//! Writes results/e5_train_throughput.csv.
+
+use holt::bench::{bench, write_csv, BenchResult};
+use holt::coordinator::trainer::Trainer;
+use holt::data;
+use holt::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let preset = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with("--"))
+        .unwrap_or_else(|| "tiny".into());
+    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let mut rows: Vec<BenchResult> = Vec::new();
+
+    println!("E5 — fused train-step throughput ({preset} preset)\n");
+    for attn in ["softmax", "linear", "ho2"] {
+        let model = format!("{attn}_{preset}");
+        let mut trainer = Trainer::new(&rt, &model, 1)?;
+        let (b, t) = trainer.train_shape();
+        let mut gen = data::make("charlm", 1)?;
+        let batch = gen.batch(b, t);
+        let tokens = (b * t) as f64;
+        let r = bench(&model, 2, 8, || {
+            trainer.train_step(&batch, 3e-4).unwrap();
+        });
+        println!(
+            "{}   ({:.0} tok/s, batch {}x{})",
+            r.report(),
+            tokens / r.mean_s,
+            b,
+            t
+        );
+        rows.push(r);
+    }
+    write_csv(std::path::Path::new("results/e5_train_throughput.csv"), &rows)?;
+    println!("\nwrote results/e5_train_throughput.csv");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load the AOT artifacts, prove the three-layer stack
+//! composes, and run the paper's attention end to end.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Steps:
+//!  1. open the PJRT runtime over `artifacts/` (built by `make artifacts`),
+//!  2. cross-check the Pallas-kernel artifact (L1) and the fused-jnp
+//!     artifact (L2) against an independent pure-rust oracle (L3),
+//!  3. run a fresh tiny model forward and one training step,
+//!  4. print the E1 headline: order-2 beats order-1 beats order-0.
+
+use holt::coordinator::trainer::Trainer;
+use holt::data;
+use holt::experiments;
+use holt::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    println!("== HOLT quickstart (platform: {}) ==\n", rt.platform());
+
+    println!("[1/3] artifact cross-checks vs pure-rust reference");
+    for art in ["attn_ho2_n256", "attn_ho2_n256_pallas"] {
+        let err = experiments::crosscheck_attention(&rt, art, 0, 5e-4)?;
+        println!("  {art:<28} max|diff| = {err:.2e}  OK");
+    }
+
+    println!("\n[2/3] fresh ho2_tiny model: forward + one train step");
+    let mut trainer = Trainer::new(&rt, "ho2_tiny", 42)?;
+    let (b, t) = trainer.train_shape();
+    let mut gen = data::make("copy", 42)?;
+    let batch = gen.batch(b, t);
+    let logits = trainer.forward(&batch)?;
+    println!("  forward: logits {:?}", logits.shape);
+    let s = trainer.train_step(&batch, 3e-4)?;
+    println!("  train:   loss {:.4} in {:.0} ms", s.loss, s.step_time_s * 1e3);
+
+    println!("\n[3/3] E1 — Taylor-order ablation on random data (paper section 3)");
+    let rows = experiments::approx_quality(&rt, 0)?;
+    println!("  {:>6} {:>6} {:>14}", "alpha", "order", "rel_l2_error");
+    for r in rows.iter().filter(|r| r.alpha == 3.0) {
+        println!("  {:>6} {:>6} {:>14.4}", r.alpha, r.order, r.rel_err_vs_target);
+    }
+    println!("\nquickstart OK — see `holt --help` for the full CLI");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! E2E validation driver (experiment E3): train the same transformer with
+//! the paper's ho2 attention and both baselines on a real small workload,
+//! logging loss curves for EXPERIMENTS.md.
+//!
+//!   cargo run --release --example train_lm [-- steps task model1,model2,..]
+//!
+//! Defaults: 300 steps of the char-LM task on ho2_small + softmax_small +
+//! linear_small (~3.3M params each).  Loss histories land in
+//! results/e3_loss_<model>_<task>.jsonl, a summary table on stdout.
+
+use holt::config::TrainConfig;
+use holt::coordinator::trainer::run_training;
+use holt::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let task = args.get(1).cloned().unwrap_or_else(|| "charlm".into());
+    let models: Vec<String> = args
+        .get(2)
+        .map(|s| s.split(',').map(String::from).collect())
+        .unwrap_or_else(|| {
+            vec!["ho2_small".into(), "softmax_small".into(), "linear_small".into()]
+        });
+
+    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let mut summary = Vec::new();
+    for model in &models {
+        let cfg = TrainConfig {
+            model: model.clone(),
+            task: task.clone(),
+            steps,
+            lr: 3e-4,
+            warmup: 20,
+            seed: 42,
+            log_every: 10,
+            eval_every: 50,
+            ckpt_every: steps, // final checkpoint only
+            out_dir: "results".into(),
+            ..Default::default()
+        };
+        println!("\n=== {model} on {task} for {steps} steps ===");
+        let t0 = std::time::Instant::now();
+        let hist = run_training(&rt, &cfg, false)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let first = hist.first().map(|s| s.loss).unwrap_or(f32::NAN);
+        let last10: f32 = hist.iter().rev().take(10).map(|s| s.loss).sum::<f32>()
+            / 10f32.min(hist.len() as f32);
+        summary.push((model.clone(), first, last10, wall));
+        // rename the jsonl to the E3 naming convention
+        let src = format!("results/train_{model}_{task}.jsonl");
+        let dst = format!("results/e3_loss_{model}_{task}.jsonl");
+        std::fs::rename(&src, &dst).ok();
+    }
+
+    println!("\n=== E3 summary ({task}, {steps} steps) ===");
+    println!("{:<16} {:>12} {:>14} {:>10}", "model", "first loss", "last-10 loss", "wall (s)");
+    for (m, f, l, w) in &summary {
+        println!("{m:<16} {f:>12.4} {l:>14.4} {w:>10.1}");
+    }
+    println!("\nloss curves: results/e3_loss_<model>_{task}.jsonl");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+"""Model configuration presets for the HOLT reproduction.
+
+The preset names are shared between python (AOT lowering) and rust (the
+coordinator reads them back from artifacts/manifest.json), so change them
+in lockstep with rust/src/config/.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# byte-level vocab: 256 raw bytes + specials, padded to a multiple of 16
+# for MXU-friendly embedding/LM-head shapes.
+PAD, BOS, EOS = 256, 257, 258
+VOCAB_SIZE = 272
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the decoder-only LM (L2 graph)."""
+    name: str = "small"
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 1024
+    max_len: int = 256
+    attn: str = "ho2"        # softmax | linear | ho2
+    order: int = 2           # taylor order (ho2 only): 0, 1 or 2
+    alpha: float = 3.0       # the paper's extra temperature (section 3)
+    impl: str = "jnp"        # jnp (XLA-fused oracle) | pallas (L1 kernels)
+    # training-artifact shapes (fixed at lowering)
+    train_batch: int = 16
+    train_len: int = 128
+    decode_batch: int = 8
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def n_params(self) -> int:
+        """Parameter count (tied embeddings)."""
+        d, v, l, f = self.d_model, self.vocab_size, self.n_layers, self.d_ff
+        # wq/wk/wv/wo + (w1,b1,w2,b2) + ln1(g,b) + ln2(g,b)
+        per_block = 4 * d * d + 2 * d * f + f + d + 4 * d
+        return v * d + self.max_len * d + l * per_block + 2 * d
+
+
+PRESETS = {
+    "tiny": ModelConfig(name="tiny", d_model=64, n_heads=2, n_layers=2,
+                        d_ff=256, max_len=128, train_batch=8, train_len=64,
+                        decode_batch=4),
+    "small": ModelConfig(name="small", d_model=256, n_heads=8, n_layers=4,
+                         d_ff=1024, max_len=256, train_batch=16,
+                         train_len=128, decode_batch=8),
+    "base": ModelConfig(name="base", d_model=512, n_heads=16, n_layers=8,
+                        d_ff=2048, max_len=512, train_batch=8, train_len=256,
+                        decode_batch=8),
+    # ~124M parameters, GPT-2-small shaped (documented capability; lowering
+    # it is supported but not part of the default `make artifacts`).
+    "large": ModelConfig(name="large", vocab_size=32768, d_model=768,
+                         n_heads=12, n_layers=12, d_ff=3072, max_len=1024,
+                         train_batch=4, train_len=512, decode_batch=4),
+}

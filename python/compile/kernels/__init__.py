@@ -1,0 +1,21 @@
+"""L1 Pallas kernels + pure-jnp oracles for the HOLT reproduction.
+
+Layout:
+    ref.py                pure-jnp ground truth for everything below
+    ho_attention.py       the paper's order-{0,1,2} linear attention
+    linear_attention.py   elu+1 first-order baseline (Katharopoulos 2020)
+    softmax_attention.py  exact blocked softmax baseline (flash-style)
+    layernorm.py          no-affine LayerNorm (paper section 3)
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the supported lowering for this
+testbed (see /opt/xla-example/README.md).  Block shapes are chosen for the
+TPU VMEM/MXU budget regardless — see DESIGN.md section Hardware-Adaptation.
+"""
+
+from . import ref
+from .ho_attention import ho_attention_pallas, ho_attention_causal_pallas
+from .linear_attention import (linear_attention_pallas,
+                               linear_attention_causal_pallas)
+from .softmax_attention import softmax_attention_pallas
+from .layernorm import layernorm_noaffine_pallas

@@ -1,0 +1,104 @@
+"""Chunked-scan causal linear attention in pure jnp (memory-light).
+
+The cumsum forms in ref.py materialize the running state for every
+position — O(n * f * d_v) memory, which for the order-2 feature dimension
+f = 1 + d + d^2 is infeasible beyond toy sizes.  These versions scan over
+sequence chunks carrying one (f, d_v) state, exactly mirroring the causal
+Pallas kernel (ho_attention.py::_causal_kernel) — they are the fused-XLA
+implementation the L2 training graph uses, and they are what the paper's
+complexity claim actually describes: O(n d_v d^2) time, O(f d_v) space.
+
+Within a chunk the (c x c) Taylor attention matrix is formed directly
+(<phi(q), phi(k)> == taylor(q.k / a sqrt d), so this is exact and cheaper
+than materializing phi when c <= f); across chunks the (S, z) carry
+propagates.  Tested equal to ref.ho_attention / ref.linear_attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import (EPS_DEN, elu_feature_map, ho_feature_dim, ho_feature_map,
+                  layernorm_noaffine, taylor_exp)
+
+DEFAULT_CHUNK = 128
+
+
+def _chunked_scan(fq, fk, v, a_intra):
+    """Shared scan: fq/fk (nc, c, f), v (nc, c, dv), a_intra (nc, c, c)."""
+    f, dv = fq.shape[-1], v.shape[-1]
+
+    def step(carry, inp):
+        s_mat, z = carry
+        fq_c, fk_c, v_c, a_c = inp
+        num = fq_c @ s_mat + a_c @ v_c
+        den = fq_c @ z[:, None] + jnp.sum(a_c, axis=-1, keepdims=True)
+        out = num / jnp.maximum(den, EPS_DEN)
+        s_mat = s_mat + fk_c.T @ v_c
+        z = z + jnp.sum(fk_c, axis=0)
+        return (s_mat, z), out
+
+    init = (jnp.zeros((f, dv), fq.dtype), jnp.zeros((f,), fq.dtype))
+    _, out = jax.lax.scan(step, init, (fq, fk, v, a_intra))
+    return out  # (nc, c, dv)
+
+
+def _tril(a):
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, a.ndim - 2)
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, a.ndim - 1)
+    return jnp.where(rows >= cols, a, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("order", "alpha",
+                                             "normalize_qk", "chunk"))
+def _ho_single(q, k, v, *, order, alpha, normalize_qk, chunk):
+    n, d = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, n)
+    assert n % c == 0, f"seq len {n} not divisible by chunk {c}"
+    if normalize_qk:
+        q, k = layernorm_noaffine(q), layernorm_noaffine(k)
+    scale = 1.0 / (alpha * jnp.sqrt(jnp.asarray(d, q.dtype)))
+    qc = q.reshape(n // c, c, d)
+    kc = k.reshape(n // c, c, d)
+    vc = v.reshape(n // c, c, dv)
+    fq = ho_feature_map(qc, alpha, order)
+    fk = ho_feature_map(kc, alpha, order)
+    a_intra = _tril(taylor_exp(
+        jnp.einsum("ncd,nmd->ncm", qc, kc) * scale, order))
+    return _chunked_scan(fq, fk, vc, a_intra).reshape(n, dv)
+
+
+def ho_attention_chunked(q, k, v, *, order=2, alpha=3.0, normalize_qk=True,
+                         chunk=DEFAULT_CHUNK):
+    """Causal HO attention via chunked scan; q/k/v: (..., n, d)."""
+    fn = functools.partial(_ho_single, order=order, alpha=alpha,
+                           normalize_qk=normalize_qk, chunk=chunk)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _linear_single(q, k, v, *, chunk):
+    n, d = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, n)
+    assert n % c == 0
+    qc = q.reshape(n // c, c, d)
+    kc = k.reshape(n // c, c, d)
+    vc = v.reshape(n // c, c, dv)
+    fq, fk = elu_feature_map(qc), elu_feature_map(kc)
+    a_intra = _tril(jnp.einsum("ncf,nmf->ncm", fq, fk))
+    return _chunked_scan(fq, fk, vc, a_intra).reshape(n, dv)
+
+
+def linear_attention_chunked(q, k, v, *, chunk=DEFAULT_CHUNK):
+    """Causal elu+1 linear attention via chunked scan; q/k/v: (..., n, d)."""
+    fn = functools.partial(_linear_single, chunk=chunk)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

@@ -1,0 +1,240 @@
+"""Pallas kernels for the paper's higher-order linear attention.
+
+Two kernels implement the factorized form of
+``softmax(QK^T/(a sqrt d)) V ~ (1 + X + X.X/2) V`` (paper eq. 2-3):
+
+* non-causal: a **state kernel** sweeps the sequence once accumulating
+  ``S = sum_j phi(k_j) v_j^T`` and ``z = sum_j phi(k_j)`` in VMEM, then a
+  **query kernel** computes ``phi(q_i) S / phi(q_i) z`` block-by-block.
+* causal: a single **chunked-scan kernel** — within a chunk the (c x c)
+  Taylor attention matrix is formed in VMEM and masked lower-triangular;
+  across chunks the running ``(S, z)`` state is carried in VMEM scratch.
+  This is the TPU translation of the paper's "transformers are RNNs"
+  recurrence: the GPU fork scans per-thread, we scan per sequence chunk.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the d^2 feature
+dimension of ``phi`` exists only in VMEM — phi(k-block) is (re)computed on
+the fly from the (block_n, d) tile and fed straight to the MXU contraction,
+never written to HBM.  BlockSpecs express the HBM->VMEM schedule the CUDA
+version expressed with threadblocks.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import EPS_DEN, ho_feature_dim
+
+DEFAULT_BLOCK_N = 128  # sequence tile: 128 rows feeds the 128x128 MXU
+
+
+def _ln_noaffine(x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def _phi(u, alpha: float, order: int):
+    """Feature map on a (bn, d) block -> (bn, f); f = 1 [+ d [+ d^2]].
+
+    Matches ref.ho_feature_map exactly (shared constants), but written
+    block-local so it lives in VMEM only.
+    """
+    bn, d = u.shape
+    s = alpha * math.sqrt(d)
+    parts = [jnp.ones((bn, 1), u.dtype)]
+    if order >= 1:
+        parts.append(u / math.sqrt(s))
+    if order >= 2:
+        outer = u[:, :, None] * u[:, None, :]
+        parts.append(outer.reshape(bn, d * d) / (math.sqrt(2.0) * s))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def _taylor(x, order: int):
+    acc = jnp.ones_like(x)
+    term = jnp.ones_like(x)
+    for i in range(1, order + 1):
+        term = term * x / i
+        acc = acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# non-causal: state kernel + query kernel
+# ---------------------------------------------------------------------------
+
+def _state_kernel(k_ref, v_ref, s_ref, z_ref, *, alpha, order, normalize_qk):
+    """Accumulate S += phi(k_blk)^T v_blk and z += sum phi(k_blk)."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    k = k_ref[...]
+    if normalize_qk:
+        k = _ln_noaffine(k)
+    fk = _phi(k, alpha, order)                        # (bn, f) in VMEM only
+    s_ref[...] += jax.lax.dot_general(
+        fk, v_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (f, dv) MXU
+    z_ref[...] += jnp.sum(fk, axis=0, keepdims=True)  # (1, f)
+
+
+def _query_kernel(q_ref, s_ref, z_ref, o_ref, *, alpha, order, normalize_qk):
+    """o_blk = phi(q_blk) S / max(phi(q_blk) z, eps)."""
+    q = q_ref[...]
+    if normalize_qk:
+        q = _ln_noaffine(q)
+    fq = _phi(q, alpha, order)                        # (bn, f)
+    num = jax.lax.dot_general(
+        fq, s_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (bn, dv)
+    den = jax.lax.dot_general(
+        fq, z_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (bn, 1)
+    o_ref[...] = num / jnp.maximum(den, EPS_DEN)
+
+
+@functools.partial(jax.jit, static_argnames=("order", "alpha", "normalize_qk",
+                                             "block_n", "interpret"))
+def _ho_attention_single(q, k, v, *, order=2, alpha=3.0, normalize_qk=True,
+                         block_n=DEFAULT_BLOCK_N, interpret=True):
+    """Non-causal HO attention for one (n, d) problem."""
+    n, d = q.shape
+    dv = v.shape[-1]
+    bn = min(block_n, n)
+    assert n % bn == 0, f"seq len {n} not divisible by block {bn}"
+    f = ho_feature_dim(d, order)
+
+    s_mat, z = pl.pallas_call(
+        functools.partial(_state_kernel, alpha=alpha, order=order,
+                          normalize_qk=normalize_qk),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, dv), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((f, dv), lambda i: (0, 0)),
+                   pl.BlockSpec((1, f), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((f, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((1, f), jnp.float32)],
+        interpret=interpret,
+    )(k, v)
+
+    return pl.pallas_call(
+        functools.partial(_query_kernel, alpha=alpha, order=order,
+                          normalize_qk=normalize_qk),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((f, dv), lambda i: (0, 0)),
+                  pl.BlockSpec((1, f), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bn, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        interpret=interpret,
+    )(q, s_mat, z)
+
+
+def ho_attention_pallas(q, k, v, *, order=2, alpha=3.0, normalize_qk=True,
+                        block_n=DEFAULT_BLOCK_N, interpret=True):
+    """Non-causal higher-order linear attention; q/k/v: (..., n, d)."""
+    fn = functools.partial(_ho_attention_single, order=order, alpha=alpha,
+                           normalize_qk=normalize_qk, block_n=block_n,
+                           interpret=interpret)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# causal: chunked scan with VMEM-resident (S, z) carry
+# ---------------------------------------------------------------------------
+
+def _causal_kernel(q_ref, k_ref, v_ref, o_ref, s_ref, z_ref,
+                   *, alpha, order, normalize_qk, block_n):
+    """One chunk of the causal scan.
+
+    out_chunk = (phi(q) S_prev + tril(taylor(q k^T / a sqrt d)) v)
+              / (phi(q) z_prev + rowsum(tril(...)))
+    then S_prev += phi(k)^T v ; z_prev += sum phi(k).
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    q, k, v = q_ref[...], k_ref[...], v_ref[...]
+    if normalize_qk:
+        q, k = _ln_noaffine(q), _ln_noaffine(k)
+    d = q.shape[-1]
+    scale = 1.0 / (alpha * math.sqrt(d))
+
+    # cross-chunk term (strictly earlier chunks) via the carried state
+    fq = _phi(q, alpha, order)
+    num = jax.lax.dot_general(fq, s_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jax.lax.dot_general(fq, z_ref[...], (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    # intra-chunk term: exact (c x c) Taylor matrix, lower-triangular.
+    # <phi(q_i), phi(k_j)> == taylor(x_ij) so forming it directly is the
+    # cheaper equivalent when c <= f.
+    x = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    a = _taylor(x, order)
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(rows >= cols, a, 0.0)
+    num += jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    den += jnp.sum(a, axis=-1, keepdims=True)
+
+    o_ref[...] = num / jnp.maximum(den, EPS_DEN)
+
+    # fold this chunk into the carry for the next grid step
+    fk = _phi(k, alpha, order)
+    s_ref[...] += jax.lax.dot_general(fk, v, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    z_ref[...] += jnp.sum(fk, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("order", "alpha", "normalize_qk",
+                                             "block_n", "interpret"))
+def _ho_attention_causal_single(q, k, v, *, order=2, alpha=3.0,
+                                normalize_qk=True, block_n=DEFAULT_BLOCK_N,
+                                interpret=True):
+    n, d = q.shape
+    dv = v.shape[-1]
+    bn = min(block_n, n)
+    assert n % bn == 0, f"seq len {n} not divisible by block {bn}"
+    f = ho_feature_dim(d, order)
+
+    return pl.pallas_call(
+        functools.partial(_causal_kernel, alpha=alpha, order=order,
+                          normalize_qk=normalize_qk, block_n=bn),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, dv), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((f, dv), jnp.float32),
+                        pltpu.VMEM((1, f), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def ho_attention_causal_pallas(q, k, v, *, order=2, alpha=3.0,
+                               normalize_qk=True, block_n=DEFAULT_BLOCK_N,
+                               interpret=True):
+    """Causal higher-order linear attention; q/k/v: (..., n, d)."""
+    fn = functools.partial(_ho_attention_causal_single, order=order,
+                           alpha=alpha, normalize_qk=normalize_qk,
+                           block_n=block_n, interpret=interpret)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

@@ -1,0 +1,50 @@
+"""Pallas kernel for the paper's no-affine LayerNorm (section 3).
+
+Row-wise mean/variance normalization over the feature axis, blocked over
+rows.  The paper applies this to Q and K (without the usual gain/bias) so
+that q~.k~/(a sqrt d) stays near zero, where the Taylor expansion is valid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _ln_kernel(x_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def _layernorm_single(x, *, eps=1e-5, block_rows=DEFAULT_BLOCK_ROWS,
+                      interpret=True):
+    n, d = x.shape
+    bn = min(block_rows, n)
+    assert n % bn == 0
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def layernorm_noaffine_pallas(x, *, eps=1e-5, block_rows=DEFAULT_BLOCK_ROWS,
+                              interpret=True):
+    """No-affine LayerNorm over the last axis; x: (..., n, d)."""
+    fn = functools.partial(_layernorm_single, eps=eps, block_rows=block_rows,
+                           interpret=interpret)
+    for _ in range(x.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(x)

@@ -1,0 +1,148 @@
+"""Pallas kernel for the first-order baseline: elu(x)+1 linear attention.
+
+This is the Katharopoulos et al. 2020 model the paper forks from.  Same
+blocked structure as ho_attention.py — state sweep + query sweep for the
+non-causal case, chunked scan for the causal case — with the feature map
+``phi(u) = elu(u) + 1`` (dim d instead of 1+d+d^2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import EPS_DEN
+
+DEFAULT_BLOCK_N = 128
+
+
+def _elu1(u):
+    return jnp.where(u > 0, u + 1.0, jnp.exp(u))
+
+
+def _state_kernel(k_ref, v_ref, s_ref, z_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+    fk = _elu1(k_ref[...])
+    s_ref[...] += jax.lax.dot_general(fk, v_ref[...], (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    z_ref[...] += jnp.sum(fk, axis=0, keepdims=True)
+
+
+def _query_kernel(q_ref, s_ref, z_ref, o_ref):
+    fq = _elu1(q_ref[...])
+    num = jax.lax.dot_general(fq, s_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jax.lax.dot_general(fq, z_ref[...], (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = num / jnp.maximum(den, EPS_DEN)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _linear_attention_single(q, k, v, *, block_n=DEFAULT_BLOCK_N,
+                             interpret=True):
+    n, d = q.shape
+    dv = v.shape[-1]
+    bn = min(block_n, n)
+    assert n % bn == 0
+
+    s_mat, z = pl.pallas_call(
+        _state_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, dv), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((d, dv), lambda i: (0, 0)),
+                   pl.BlockSpec((1, d), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((d, dv), jnp.float32),
+                   jax.ShapeDtypeStruct((1, d), jnp.float32)],
+        interpret=interpret,
+    )(k, v)
+
+    return pl.pallas_call(
+        _query_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d, dv), lambda i: (0, 0)),
+                  pl.BlockSpec((1, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bn, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        interpret=interpret,
+    )(q, s_mat, z)
+
+
+def linear_attention_pallas(q, k, v, *, block_n=DEFAULT_BLOCK_N,
+                            interpret=True):
+    """Non-causal elu+1 linear attention; q/k/v: (..., n, d)."""
+    fn = functools.partial(_linear_attention_single, block_n=block_n,
+                           interpret=interpret)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)
+
+
+def _causal_kernel(q_ref, k_ref, v_ref, o_ref, s_ref, z_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    fq, fk = _elu1(q_ref[...]), _elu1(k_ref[...])
+    v = v_ref[...]
+
+    num = jax.lax.dot_general(fq, s_ref[...], (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    den = jax.lax.dot_general(fq, z_ref[...], (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+
+    a = jax.lax.dot_general(fq, fk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, a.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+    a = jnp.where(rows >= cols, a, 0.0)
+    num += jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    den += jnp.sum(a, axis=-1, keepdims=True)
+
+    o_ref[...] = num / jnp.maximum(den, EPS_DEN)
+
+    s_ref[...] += jax.lax.dot_general(fk, v, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    z_ref[...] += jnp.sum(fk, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _linear_attention_causal_single(q, k, v, *, block_n=DEFAULT_BLOCK_N,
+                                    interpret=True):
+    n, d = q.shape
+    dv = v.shape[-1]
+    bn = min(block_n, n)
+    assert n % bn == 0
+
+    return pl.pallas_call(
+        _causal_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, dv), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, dv), jnp.float32),
+                        pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def linear_attention_causal_pallas(q, k, v, *, block_n=DEFAULT_BLOCK_N,
+                                   interpret=True):
+    """Causal elu+1 linear attention; q/k/v: (..., n, d)."""
+    fn = functools.partial(_linear_attention_causal_single, block_n=block_n,
+                           interpret=interpret)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

@@ -1,0 +1,230 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels are tested against, and they
+double as the fast XLA-fused implementation used inside the L2 training
+graph (`model.py` with impl="jnp") — the Pallas path (`impl="pallas"`) runs
+under interpret=True on CPU, which is structurally faithful to the TPU
+kernel but much slower to execute, so we reserve it for kernel tests,
+the quickstart artifact and the structure-level perf analysis.
+
+Math (paper, Mercat 2020 "Higher Order Linear Transformer"):
+
+    softmax(Q K^T / (a sqrt(d))) V  is approximated through the 2nd-order
+    Taylor expansion of exp:  exp(x) ~ 1 + x + x^2/2,  x = q~.k~/(a sqrt(d))
+
+with q~, k~ layer-normalized (no affine).  Every term factorizes over the
+sequence dimension via the feature map
+
+    phi(u) = [ 1,  u / sqrt(s),  vec(u (x) u) / (sqrt(2) s) ],  s = a sqrt(d)
+
+so that  <phi(q), phi(k)> = 1 + x + x^2/2  exactly.  Attention becomes
+
+    out_i = phi(q_i) . ( sum_j phi(k_j) v_j^T )  /  phi(q_i) . sum_j phi(k_j)
+
+which is O(n d_v d^2) instead of O(n^2 d) (paper eq. 3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS_DEN = 1e-6  # denominator clamp, as in fast-transformers
+
+
+# ---------------------------------------------------------------------------
+# layer norm (no affine) — paper section 3
+# ---------------------------------------------------------------------------
+
+def layernorm_noaffine(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis without the element-wise affine."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def layernorm_affine(x: jax.Array, g: jax.Array, b: jax.Array,
+                     eps: float = 1e-5) -> jax.Array:
+    """Standard LayerNorm with scale/shift (used by transformer blocks)."""
+    return layernorm_noaffine(x, eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# Taylor expansion of exp — paper figure 1
+# ---------------------------------------------------------------------------
+
+def taylor_exp(x: jax.Array, order: int) -> jax.Array:
+    """sum_{i<=order} x^i / i!  — the paper's exp approximation."""
+    acc = jnp.ones_like(x)
+    term = jnp.ones_like(x)
+    for i in range(1, order + 1):
+        term = term * x / i
+        acc = acc + term
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# feature map — the factorized form of the order-2 Taylor expansion
+# ---------------------------------------------------------------------------
+
+def ho_feature_map(u: jax.Array, alpha: float, order: int) -> jax.Array:
+    """phi(u): map (..., d) -> (..., d_f) with d_f = 1 [+ d [+ d^2]].
+
+    <phi(q), phi(k)> == taylor_exp(q.k / (alpha sqrt(d)), order).
+    """
+    d = u.shape[-1]
+    s = alpha * jnp.sqrt(jnp.asarray(d, u.dtype))
+    parts = [jnp.ones(u.shape[:-1] + (1,), u.dtype)]
+    if order >= 1:
+        parts.append(u * jax.lax.rsqrt(s))
+    if order >= 2:
+        outer = u[..., :, None] * u[..., None, :]  # (..., d, d)
+        parts.append(outer.reshape(u.shape[:-1] + (d * d,)) /
+                     (jnp.sqrt(jnp.asarray(2.0, u.dtype)) * s))
+    if order >= 3:
+        raise NotImplementedError(
+            "order>=3 costs n*d_v*d^3 — the paper argues this is unlikely "
+            "to be worthwhile (section 4); not implemented")
+    return jnp.concatenate(parts, axis=-1)
+
+
+def ho_feature_dim(d: int, order: int) -> int:
+    """Feature dimension of `ho_feature_map` for head dim d."""
+    return 1 + (d if order >= 1 else 0) + (d * d if order >= 2 else 0)
+
+
+# ---------------------------------------------------------------------------
+# attention oracles.  all take (..., n, d) q/k and (..., n, d_v) v where the
+# leading axes are batch-like (batch, heads).
+# ---------------------------------------------------------------------------
+
+def ho_attention_direct(q, k, v, *, order: int = 2, alpha: float = 3.0,
+                        causal: bool = False, normalize_qk: bool = True):
+    """Quadratic-cost direct evaluation of the paper's approximation.
+
+    Materializes taylor_exp(Q~ K~^T / (a sqrt d)) — used only as an oracle
+    to check the factorized O(n d^2) implementations against.
+    """
+    if normalize_qk:
+        q, k = layernorm_noaffine(q), layernorm_noaffine(k)
+    d = q.shape[-1]
+    x = jnp.einsum("...nd,...md->...nm", q, k) / (alpha * jnp.sqrt(
+        jnp.asarray(d, q.dtype)))
+    a = taylor_exp(x, order)
+    if causal:
+        n, m = a.shape[-2], a.shape[-1]
+        mask = jnp.tril(jnp.ones((n, m), bool))
+        a = jnp.where(mask, a, 0.0)
+    den = jnp.maximum(jnp.sum(a, axis=-1, keepdims=True), EPS_DEN)
+    return jnp.einsum("...nm,...mv->...nv", a / den, v)
+
+
+def ho_attention(q, k, v, *, order: int = 2, alpha: float = 3.0,
+                 causal: bool = False, normalize_qk: bool = True):
+    """Factorized linear-complexity form (paper eq. 2-3) via the feature map.
+
+    Non-causal:  out_i = phi(q_i) S / max(phi(q_i) z, eps)
+                 with S = sum_j phi(k_j) v_j^T,  z = sum_j phi(k_j).
+    Causal: prefix sums (the 'transformers are RNNs' view, lifted to order 2).
+    """
+    if normalize_qk:
+        q, k = layernorm_noaffine(q), layernorm_noaffine(k)
+    fq = ho_feature_map(q, alpha, order)  # (..., n, f)
+    fk = ho_feature_map(k, alpha, order)
+    if not causal:
+        s = jnp.einsum("...nf,...nv->...fv", fk, v)
+        z = jnp.sum(fk, axis=-2)
+        num = jnp.einsum("...nf,...fv->...nv", fq, s)
+        den = jnp.einsum("...nf,...f->...n", fq, z)
+    else:
+        s = jnp.cumsum(fk[..., :, :, None] * v[..., :, None, :], axis=-3)
+        z = jnp.cumsum(fk, axis=-2)
+        num = jnp.einsum("...nf,...nfv->...nv", fq, s)
+        den = jnp.einsum("...nf,...nf->...n", fq, z)
+    return num / jnp.maximum(den, EPS_DEN)[..., None]
+
+
+def elu_feature_map(u: jax.Array) -> jax.Array:
+    """elu(u)+1 — the Katharopoulos et al. 2020 baseline feature map."""
+    return jax.nn.elu(u) + 1.0
+
+
+def linear_attention(q, k, v, *, causal: bool = False):
+    """First-order linear attention baseline (Katharopoulos et al. 2020)."""
+    fq, fk = elu_feature_map(q), elu_feature_map(k)
+    if not causal:
+        s = jnp.einsum("...nf,...nv->...fv", fk, v)
+        z = jnp.sum(fk, axis=-2)
+        num = jnp.einsum("...nf,...fv->...nv", fq, s)
+        den = jnp.einsum("...nf,...f->...n", fq, z)
+    else:
+        s = jnp.cumsum(fk[..., :, :, None] * v[..., :, None, :], axis=-3)
+        z = jnp.cumsum(fk, axis=-2)
+        num = jnp.einsum("...nf,...nfv->...nv", fq, s)
+        den = jnp.einsum("...nf,...nf->...n", fq, z)
+    return num / jnp.maximum(den, EPS_DEN)[..., None]
+
+
+def softmax_attention(q, k, v, *, causal: bool = False,
+                      scale: float | None = None):
+    """Exact softmax attention baseline (Vaswani et al. 2017), O(n^2 d)."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    x = jnp.einsum("...nd,...md->...nm", q, k) * scale
+    if causal:
+        n, m = x.shape[-2], x.shape[-1]
+        mask = jnp.tril(jnp.ones((n, m), bool))
+        x = jnp.where(mask, x, -jnp.inf)
+    a = jax.nn.softmax(x, axis=-1)
+    return jnp.einsum("...nm,...mv->...nv", a, v)
+
+
+# ---------------------------------------------------------------------------
+# recurrent (decode-time) steps — O(1) per token
+# ---------------------------------------------------------------------------
+
+def ho_decode_step(q_t, k_t, v_t, state, *, order: int = 2,
+                   alpha: float = 3.0, normalize_qk: bool = True):
+    """One autoregressive step of causal HO attention.
+
+    state = (S, z): S (..., f, d_v) running sum of phi(k) v^T, z (..., f).
+    Returns (out_t, new_state).  q_t/k_t: (..., d); v_t: (..., d_v).
+    """
+    if normalize_qk:
+        q_t, k_t = layernorm_noaffine(q_t), layernorm_noaffine(k_t)
+    s_mat, z = state
+    fq = ho_feature_map(q_t, alpha, order)
+    fk = ho_feature_map(k_t, alpha, order)
+    s_mat = s_mat + fk[..., :, None] * v_t[..., None, :]
+    z = z + fk
+    num = jnp.einsum("...f,...fv->...v", fq, s_mat)
+    den = jnp.maximum(jnp.einsum("...f,...f->...", fq, z), EPS_DEN)
+    return num / den[..., None], (s_mat, z)
+
+
+def linear_decode_step(q_t, k_t, v_t, state):
+    """One autoregressive step of causal elu+1 linear attention."""
+    s_mat, z = state
+    fq, fk = elu_feature_map(q_t), elu_feature_map(k_t)
+    s_mat = s_mat + fk[..., :, None] * v_t[..., None, :]
+    z = z + fk
+    num = jnp.einsum("...f,...fv->...v", fq, s_mat)
+    den = jnp.maximum(jnp.einsum("...f,...f->...", fq, z), EPS_DEN)
+    return num / den[..., None], (s_mat, z)
+
+
+def softmax_decode_step(q_t, kcache, vcache, pos, *, scale=None):
+    """One step of exact attention against a (max_len) KV cache.
+
+    kcache/vcache: (..., max_len, d); entries >= pos are masked out.
+    (The caches must already contain k_t/v_t at index pos-1.)
+    """
+    d = q_t.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q_t.dtype))
+    x = jnp.einsum("...d,...md->...m", q_t, kcache) * scale
+    idx = jnp.arange(kcache.shape[-2])
+    x = jnp.where(idx < pos, x, -jnp.inf)
+    a = jax.nn.softmax(x, axis=-1)
+    return jnp.einsum("...m,...mv->...v", a, vcache)

@@ -1,0 +1,93 @@
+"""Blocked exact softmax attention (flash-attention style) — the baseline.
+
+Online-softmax over (block_q x block_k) tiles with running max / running
+denominator carried in VMEM scratch.  Grid is (num_q_blocks, num_k_blocks)
+with the k axis innermost, so for a fixed q block the scratch accumulators
+survive the whole k sweep; the final normalization is written on the last
+k step.  The causal variant masks the diagonal tile and relies on
+block-level skipping (the mask zeroes fully-masked tiles).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_N = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale, causal, block_n, num_k):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q, k, v = q_ref[...], k_ref[...], v_ref[...]
+    x = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        i = pl.program_id(0)
+        rows = i * block_n + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+        cols = j * block_n + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        x = jnp.where(rows >= cols, x, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(x, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(x - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(j == num_k - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_n",
+                                             "interpret"))
+def _softmax_attention_single(q, k, v, *, causal=False,
+                              block_n=DEFAULT_BLOCK_N, interpret=True):
+    n, d = q.shape
+    dv = v.shape[-1]
+    bn = min(block_n, n)
+    assert n % bn == 0
+    num_k = n // bn
+    scale = 1.0 / math.sqrt(d)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_n=bn, num_k=num_k),
+        grid=(n // bn, num_k),
+        in_specs=[pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+                  pl.BlockSpec((bn, dv), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bn, dv), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bn, 1), jnp.float32),
+                        pltpu.VMEM((bn, 1), jnp.float32),
+                        pltpu.VMEM((bn, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def softmax_attention_pallas(q, k, v, *, causal=False,
+                             block_n=DEFAULT_BLOCK_N, interpret=True):
+    """Exact blocked softmax attention; q/k/v: (..., n, d)."""
+    fn = functools.partial(_softmax_attention_single, causal=causal,
+                           block_n=block_n, interpret=interpret)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

@@ -1,0 +1,311 @@
+"""L2: decoder-only transformer LM with pluggable attention.
+
+Pure-functional jax: parameters are a nested dict pytree, every entry
+point is a plain function suitable for `jax.jit(...).lower(...)` (AOT,
+see aot.py).  The attention inside each block is selected by
+`ModelConfig.attn`:
+
+    softmax — exact baseline (Vaswani 2017)
+    linear  — elu+1 first-order linear attention (Katharopoulos 2020)
+    ho2     — the paper's higher-order (Taylor order 0/1/2) linear attention
+
+and by `ModelConfig.impl`: "jnp" uses the fused oracle from kernels/ref.py,
+"pallas" the L1 kernels (interpret mode).  Both are tested equal.
+
+The LM head is tied to the embedding.  Learned absolute positions.
+Pre-LN blocks.  All activations f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.chunked import ho_attention_chunked, linear_attention_chunked
+from .kernels.ho_attention import (ho_attention_causal_pallas)
+from .kernels.linear_attention import (linear_attention_causal_pallas)
+from .kernels.softmax_attention import softmax_attention_pallas
+
+Params = dict  # nested dict pytree
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> list[dict[str, Any]]:
+    """Ordered leaf spec: name, shape, init kind — the contract with rust.
+
+    The order here defines the flat argument order of every AOT entry
+    point (see `flatten`/`unflatten`); rust initializes, checkpoints and
+    feeds parameters strictly in this order (manifest.json carries it).
+    """
+    d, v, ff = cfg.d_model, cfg.vocab_size, cfg.d_ff
+    std = 0.02
+    spec: list[dict[str, Any]] = [
+        {"name": "embed", "shape": [v, d], "init": "normal", "std": std},
+        {"name": "pos", "shape": [cfg.max_len, d], "init": "normal",
+         "std": std},
+    ]
+    # residual-branch output projections get the GPT-2 depth-scaled init
+    std_res = std / (2 * cfg.n_layers) ** 0.5
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        spec += [
+            {"name": p + "ln1_g", "shape": [d], "init": "ones"},
+            {"name": p + "ln1_b", "shape": [d], "init": "zeros"},
+            {"name": p + "wq", "shape": [d, d], "init": "normal", "std": std},
+            {"name": p + "wk", "shape": [d, d], "init": "normal", "std": std},
+            {"name": p + "wv", "shape": [d, d], "init": "normal", "std": std},
+            {"name": p + "wo", "shape": [d, d], "init": "normal",
+             "std": std_res},
+            {"name": p + "ln2_g", "shape": [d], "init": "ones"},
+            {"name": p + "ln2_b", "shape": [d], "init": "zeros"},
+            {"name": p + "w1", "shape": [d, ff], "init": "normal",
+             "std": std},
+            {"name": p + "b1", "shape": [ff], "init": "zeros"},
+            {"name": p + "w2", "shape": [ff, d], "init": "normal",
+             "std": std_res},
+            {"name": p + "b2", "shape": [d], "init": "zeros"},
+        ]
+    spec += [
+        {"name": "lnf_g", "shape": [d], "init": "ones"},
+        {"name": "lnf_b", "shape": [d], "init": "zeros"},
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Initialize the parameter pytree (python-side mirror of rust init)."""
+    spec = param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    leaves = []
+    for s, k in zip(spec, keys):
+        if s["init"] == "normal":
+            leaves.append(s["std"] * jax.random.normal(
+                k, s["shape"], jnp.float32))
+        elif s["init"] == "ones":
+            leaves.append(jnp.ones(s["shape"], jnp.float32))
+        else:
+            leaves.append(jnp.zeros(s["shape"], jnp.float32))
+    return unflatten(cfg, leaves)
+
+
+def flatten(cfg: ModelConfig, params: Params) -> list[jax.Array]:
+    """Params pytree -> flat leaf list in param_spec order."""
+    out = []
+    for s in param_spec(cfg):
+        node: Any = params
+        for part in s["name"].split("."):
+            node = node[int(part)] if part.isdigit() else node[part]
+        out.append(node)
+    return out
+
+
+def unflatten(cfg: ModelConfig, leaves: list[jax.Array]) -> Params:
+    """Flat leaf list (param_spec order) -> params pytree."""
+    it = iter(leaves)
+    params: Params = {"embed": next(it), "pos": next(it), "blocks": []}
+    for _ in range(cfg.n_layers):
+        b = {}
+        for nm in ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g",
+                   "ln2_b", "w1", "b1", "w2", "b2"]:
+            b[nm] = next(it)
+        params["blocks"].append(b)
+    params["lnf_g"] = next(it)
+    params["lnf_b"] = next(it)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attention(cfg: ModelConfig, q, k, v):
+    """Dispatch causal attention on (B, H, T, dh) tensors."""
+    if cfg.impl == "pallas":
+        if cfg.attn == "softmax":
+            return softmax_attention_pallas(q, k, v, causal=True)
+        if cfg.attn == "linear":
+            return linear_attention_causal_pallas(q, k, v)
+        return ho_attention_causal_pallas(q, k, v, order=cfg.order,
+                                          alpha=cfg.alpha)
+    if cfg.attn == "softmax":
+        return ref.softmax_attention(q, k, v, causal=True)
+    if cfg.attn == "linear":
+        return linear_attention_chunked(q, k, v)
+    return ho_attention_chunked(q, k, v, order=cfg.order, alpha=cfg.alpha)
+
+
+def _split_heads(cfg: ModelConfig, x):
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(cfg: ModelConfig, x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _block(cfg: ModelConfig, p: dict, x):
+    h = ref.layernorm_affine(x, p["ln1_g"], p["ln1_b"])
+    q = _split_heads(cfg, h @ p["wq"])
+    k = _split_heads(cfg, h @ p["wk"])
+    v = _split_heads(cfg, h @ p["wv"])
+    a = _merge_heads(cfg, _attention(cfg, q, k, v))
+    x = x + a @ p["wo"]
+    h = ref.layernorm_affine(x, p["ln2_g"], p["ln2_b"])
+    x = x + (jax.nn.gelu(h @ p["w1"] + p["b1"])) @ p["w2"] + p["b2"]
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    """tokens (B, T) int32 -> logits (B, T, V)."""
+    _, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:t][None]
+    for p in params["blocks"]:
+        x = _block(cfg, p, x)
+    x = ref.layernorm_affine(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens, targets, weights):
+    """Weighted next-token cross-entropy.
+
+    weights (B, T) f32 mask the positions that count (synthetic tasks only
+    score the answer span); normalized by sum of weights.
+    """
+    logits = forward(cfg, params, tokens)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * weights
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step (fused into one graph; lowered with buffer donation)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.999, 1e-8, 0.01
+
+
+def train_step(cfg: ModelConfig, params: Params, m: Params, v: Params,
+               step: jax.Array, tokens, targets, weights, lr: jax.Array):
+    """One fused AdamW step. Returns (loss, params', m', v', step+1).
+
+    Weight decay applies to matrix leaves only (embeddings/LN/bias exempt),
+    matching the GPT-2 convention.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets, weights))(params)
+    step = step + 1
+    b1t = ADAM_B1 ** step.astype(jnp.float32)
+    b2t = ADAM_B2 ** step.astype(jnp.float32)
+
+    def upd(path_leaf):
+        p, g, m_, v_, decay = path_leaf
+        m_n = ADAM_B1 * m_ + (1 - ADAM_B1) * g
+        v_n = ADAM_B2 * v_ + (1 - ADAM_B2) * g * g
+        mhat = m_n / (1 - b1t)
+        vhat = v_n / (1 - b2t)
+        p_n = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + decay * p)
+        return p_n, m_n, v_n
+
+    pl_, ml_, vl_ = flatten(cfg, params), flatten(cfg, m), flatten(cfg, v)
+    gl_ = flatten(cfg, grads)
+    decays = [WEIGHT_DECAY if len(s["shape"]) == 2 and
+              s["name"] not in ("embed", "pos") else 0.0
+              for s in param_spec(cfg)]
+    out = [upd(t) for t in zip(pl_, gl_, ml_, vl_, decays)]
+    params_n = unflatten(cfg, [o[0] for o in out])
+    m_n = unflatten(cfg, [o[1] for o in out])
+    v_n = unflatten(cfg, [o[2] for o in out])
+    return loss, params_n, m_n, v_n, step
+
+
+# ---------------------------------------------------------------------------
+# recurrent decode step — the O(1)-state RNN view (paper section 4 /
+# Katharopoulos 2020), which is what the L3 serving coordinator manages
+# ---------------------------------------------------------------------------
+
+def state_spec(cfg: ModelConfig) -> list[dict[str, Any]]:
+    """Ordered decode-state leaf spec (the contract with rust).
+
+    ho2/linear: per layer S (B, H, f, dh) and z (B, H, f) — constant in
+    context length (the paper's selling point).  softmax: per layer the
+    growing KV cache (B, H, max_len, dh) x2.
+    """
+    b, h, dh = cfg.decode_batch, cfg.n_heads, cfg.d_head
+    spec = []
+    for i in range(cfg.n_layers):
+        if cfg.attn == "softmax":
+            spec.append({"name": f"layer{i}.kcache",
+                         "shape": [b, h, cfg.max_len, dh]})
+            spec.append({"name": f"layer{i}.vcache",
+                         "shape": [b, h, cfg.max_len, dh]})
+        else:
+            f = (ref.ho_feature_dim(dh, cfg.order) if cfg.attn == "ho2"
+                 else dh)
+            spec.append({"name": f"layer{i}.S", "shape": [b, h, f, dh]})
+            spec.append({"name": f"layer{i}.z", "shape": [b, h, f]})
+    return spec
+
+
+def init_state(cfg: ModelConfig) -> list[jax.Array]:
+    return [jnp.zeros(s["shape"], jnp.float32) for s in state_spec(cfg)]
+
+
+def decode_step(cfg: ModelConfig, params: Params, state: list[jax.Array],
+                token: jax.Array, pos: jax.Array):
+    """One autoregressive step: token (B,) int32, pos (B,) int32.
+
+    `pos` is *per sequence* so the rust serving coordinator can
+    continuously batch requests that are at different depths (vLLM-style
+    slot scheduling).  Returns (logits (B, V), new_state).  Exactly
+    matches column `pos` of `forward` run on the full prefix (tested in
+    python/tests).
+    """
+    b = token.shape[0]
+    x = params["embed"][token] + params["pos"][pos]  # (B, D)
+    new_state = []
+    for i, p in enumerate(params["blocks"]):
+        h = ref.layernorm_affine(x, p["ln1_g"], p["ln1_b"])
+        q = (h @ p["wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        k = (h @ p["wk"]).reshape(b, cfg.n_heads, cfg.d_head)
+        v = (h @ p["wv"]).reshape(b, cfg.n_heads, cfg.d_head)
+        if cfg.attn == "softmax":
+            kc, vc = state[2 * i], state[2 * i + 1]
+            upd = jax.vmap(
+                lambda c, x_t, p: jax.lax.dynamic_update_index_in_dim(
+                    c, x_t, p, axis=1))
+            kc = upd(kc, k, pos)  # per-sequence cache position
+            vc = upd(vc, v, pos)
+            # mask: entries <= pos are visible, per sequence
+            d = q.shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+            xattn = jnp.einsum("bhd,bhmd->bhm", q, kc) * scale
+            idx = jnp.arange(cfg.max_len)
+            xattn = jnp.where(idx[None, None, :] <= pos[:, None, None],
+                              xattn, -jnp.inf)
+            aw = jax.nn.softmax(xattn, axis=-1)
+            a = jnp.einsum("bhm,bhmv->bhv", aw, vc)
+            new_state += [kc, vc]
+        elif cfg.attn == "linear":
+            a, (s_n, z_n) = ref.linear_decode_step(
+                q, k, v, (state[2 * i], state[2 * i + 1]))
+            new_state += [s_n, z_n]
+        else:
+            a, (s_n, z_n) = ref.ho_decode_step(
+                q, k, v, (state[2 * i], state[2 * i + 1]),
+                order=cfg.order, alpha=cfg.alpha)
+            new_state += [s_n, z_n]
+        x = x + a.reshape(b, cfg.d_model) @ p["wo"]
+        h = ref.layernorm_affine(x, p["ln2_g"], p["ln2_b"])
+        x = x + (jax.nn.gelu(h @ p["w1"] + p["b1"])) @ p["w2"] + p["b2"]
+    x = ref.layernorm_affine(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["embed"].T, new_state

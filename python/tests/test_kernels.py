@@ -1,0 +1,234 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/seeds/hyper-parameters; every kernel must agree
+with its oracle to float32 tolerance for any valid configuration.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.chunked import (ho_attention_chunked,
+                                     linear_attention_chunked)
+from compile.kernels.ho_attention import (ho_attention_causal_pallas,
+                                          ho_attention_pallas)
+from compile.kernels.layernorm import layernorm_noaffine_pallas
+from compile.kernels.linear_attention import (
+    linear_attention_causal_pallas, linear_attention_pallas)
+from compile.kernels.softmax_attention import softmax_attention_pallas
+
+jax.config.update("jax_platform_name", "cpu")
+
+# hypothesis sweeps: seq lengths divisible by the block size choices below
+SEQS = [64, 128, 256]
+BLOCKS = [32, 64, 128]
+DIMS = [8, 16, 32, 64]
+
+
+def qkv(seed, n, d, batch=(2,)):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    shape = batch + (n, d)
+    return tuple(jax.random.normal(k, shape, jnp.float32) for k in ks)
+
+
+def assert_close(a, b, atol=2e-5, rtol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# feature-map identity: the mathematical heart of the paper
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.sampled_from(DIMS),
+       order=st.sampled_from([0, 1, 2]),
+       alpha=st.floats(0.5, 8.0))
+def test_feature_map_inner_product_equals_taylor(seed, d, order, alpha):
+    """<phi(q), phi(k)> == taylor_exp(q.k / (alpha sqrt d), order)."""
+    key = jax.random.PRNGKey(seed)
+    q, k = jax.random.normal(key, (2, 5, d), jnp.float32)
+    fq = ref.ho_feature_map(q, alpha, order)
+    fk = ref.ho_feature_map(k, alpha, order)
+    lhs = jnp.einsum("nf,mf->nm", fq, fk)
+    x = jnp.einsum("nd,md->nm", q, k) / (alpha * jnp.sqrt(jnp.float32(d)))
+    rhs = ref.taylor_exp(x, order)
+    assert_close(lhs, rhs, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.sampled_from(DIMS))
+def test_feature_dim(seed, d):
+    del seed
+    for order, expect in [(0, 1), (1, 1 + d), (2, 1 + d + d * d)]:
+        u = jnp.ones((3, d))
+        assert ref.ho_feature_map(u, 3.0, order).shape == (3, expect)
+        assert ref.ho_feature_dim(d, order) == expect
+
+
+# ---------------------------------------------------------------------------
+# factorized == direct (the linearization is exact, not approximate)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.sampled_from([8, 16, 32]),
+       order=st.sampled_from([0, 1, 2]), alpha=st.floats(1.0, 6.0),
+       causal=st.booleans())
+def test_ho_factorized_equals_direct(seed, d, order, alpha, causal):
+    q, k, v = qkv(seed, 64, d)
+    a = ref.ho_attention(q, k, v, order=order, alpha=alpha, causal=causal)
+    b = ref.ho_attention_direct(q, k, v, order=order, alpha=alpha,
+                                causal=causal)
+    assert_close(a, b, atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# pallas kernels vs oracles
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SEQS),
+       d=st.sampled_from([16, 32]), block=st.sampled_from(BLOCKS),
+       order=st.sampled_from([0, 1, 2]))
+def test_ho_pallas_noncausal(seed, n, d, block, order):
+    q, k, v = qkv(seed, n, d)
+    got = ho_attention_pallas(q, k, v, order=order, block_n=block)
+    want = ref.ho_attention(q, k, v, order=order)
+    assert_close(got, want, atol=5e-5, rtol=5e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SEQS),
+       d=st.sampled_from([16, 32]), block=st.sampled_from(BLOCKS),
+       order=st.sampled_from([1, 2]))
+def test_ho_pallas_causal(seed, n, d, block, order):
+    q, k, v = qkv(seed, n, d)
+    got = ho_attention_causal_pallas(q, k, v, order=order, block_n=block)
+    want = ref.ho_attention(q, k, v, order=order, causal=True)
+    assert_close(got, want, atol=2e-4, rtol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SEQS),
+       block=st.sampled_from(BLOCKS), causal=st.booleans())
+def test_linear_pallas(seed, n, block, causal):
+    q, k, v = qkv(seed, n, 32)
+    if causal:
+        got = linear_attention_causal_pallas(q, k, v, block_n=block)
+    else:
+        got = linear_attention_pallas(q, k, v, block_n=block)
+    want = ref.linear_attention(q, k, v, causal=causal)
+    assert_close(got, want, atol=5e-5, rtol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SEQS),
+       block=st.sampled_from(BLOCKS), causal=st.booleans())
+def test_softmax_pallas(seed, n, block, causal):
+    q, k, v = qkv(seed, n, 32)
+    got = softmax_attention_pallas(q, k, v, causal=causal, block_n=block)
+    want = ref.softmax_attention(q, k, v, causal=causal)
+    assert_close(got, want, atol=5e-5, rtol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from([50, 64, 100]),
+       d=st.sampled_from(DIMS))
+def test_layernorm_pallas(seed, n, d):
+    key = jax.random.PRNGKey(seed)
+    x = 3.0 * jax.random.normal(key, (2, n, d), jnp.float32) + 1.0
+    got = layernorm_noaffine_pallas(x, block_rows=n)
+    want = ref.layernorm_noaffine(x)
+    assert_close(got, want, atol=2e-5, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunked scan (the L2 training implementation) vs oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SEQS),
+       chunk=st.sampled_from([16, 32, 64]), order=st.sampled_from([1, 2]),
+       alpha=st.floats(1.0, 6.0))
+def test_ho_chunked(seed, n, chunk, order, alpha):
+    q, k, v = qkv(seed, n, 16)
+    got = ho_attention_chunked(q, k, v, order=order, alpha=alpha,
+                               chunk=chunk)
+    want = ref.ho_attention(q, k, v, order=order, alpha=alpha, causal=True)
+    assert_close(got, want, atol=2e-4, rtol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.sampled_from(SEQS),
+       chunk=st.sampled_from([16, 32, 64]))
+def test_linear_chunked(seed, n, chunk):
+    q, k, v = qkv(seed, n, 16)
+    got = linear_attention_chunked(q, k, v, chunk=chunk)
+    want = ref.linear_attention(q, k, v, causal=True)
+    assert_close(got, want, atol=5e-5, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode recurrence == causal attention (the RNN view)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), order=st.sampled_from([1, 2]))
+def test_ho_decode_matches_causal(seed, order):
+    n, d = 24, 16
+    q, k, v = qkv(seed, n, d, batch=())
+    want = ref.ho_attention(q[None], k[None], v[None], order=order,
+                            causal=True)[0]
+    f = ref.ho_feature_dim(d, order)
+    state = (jnp.zeros((f, d)), jnp.zeros((f,)))
+    outs = []
+    for t in range(n):
+        o, state = ref.ho_decode_step(q[t], k[t], v[t], state, order=order)
+        outs.append(o)
+    assert_close(jnp.stack(outs), want, atol=2e-4, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# analytic invariants
+# ---------------------------------------------------------------------------
+
+def test_taylor_order2_denominator_positive():
+    """1 + x + x^2/2 >= 1/2: the order-2 normalizer can't vanish."""
+    x = jnp.linspace(-50, 50, 10_001)
+    assert float(jnp.min(ref.taylor_exp(x, 2))) >= 0.5 - 1e-6
+
+
+def test_constant_value_reproduced():
+    """Row-normalized attention must reproduce a constant v exactly."""
+    q, k, _ = qkv(0, 64, 16)
+    v = jnp.full((2, 64, 16), 2.5)
+    for fn in [
+        lambda: ref.ho_attention(q, k, v, causal=True),
+        lambda: ref.linear_attention(q, k, v, causal=True),
+        lambda: ref.softmax_attention(q, k, v, causal=True),
+    ]:
+        assert_close(fn(), v, atol=1e-4, rtol=1e-4)
+
+
+def test_order2_beats_order1_near_zero():
+    """Approximation error of the attention matrix shrinks with order."""
+    q, k, v = qkv(3, 128, 32)
+    qn, kn = ref.layernorm_noaffine(q), ref.layernorm_noaffine(k)
+    alpha = 3.0
+    target = ref.softmax_attention(qn, kn, v,
+                                   scale=1.0 / (alpha * np.sqrt(32)))
+    errs = []
+    for order in [0, 1, 2]:
+        out = ref.ho_attention(q, k, v, order=order, alpha=alpha)
+        errs.append(float(jnp.linalg.norm(out - target)))
+    assert errs[2] < errs[1] < errs[0]
+
+
+def test_rejects_order3():
+    q, k, v = qkv(0, 16, 8)
+    with pytest.raises(NotImplementedError):
+        ref.ho_attention(q, k, v, order=3)

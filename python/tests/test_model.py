@@ -1,0 +1,159 @@
+"""L2 correctness: model shapes, decode/forward equivalence, training
+dynamics, pallas-impl equality, flatten/unflatten contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.configs import PRESETS
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny(attn="ho2", **kw):
+    return PRESETS["tiny"].with_(attn=attn, decode_batch=2, **kw)
+
+
+def tokens(b, t, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, t), 0, 256)
+
+
+def test_param_spec_counts_match():
+    for preset in ["tiny", "small", "base"]:
+        cfg = PRESETS[preset]
+        spec = model.param_spec(cfg)
+        total = sum(int(np.prod(s["shape"])) for s in spec)
+        assert total == cfg.n_params(), preset
+
+
+def test_flatten_unflatten_roundtrip():
+    cfg = tiny()
+    params = model.init_params(cfg, KEY)
+    flat = model.flatten(cfg, params)
+    assert len(flat) == len(model.param_spec(cfg))
+    back = model.unflatten(cfg, flat)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("attn", ["softmax", "linear", "ho2"])
+def test_forward_shape_and_finite(attn):
+    cfg = tiny(attn)
+    params = model.init_params(cfg, KEY)
+    logits = model.forward(cfg, params, tokens(2, 32))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("attn", ["softmax", "linear", "ho2"])
+def test_decode_matches_forward(attn):
+    """The recurrent O(1)-state decode must reproduce teacher-forced
+    forward logits exactly — the paper's RNN equivalence, at model level."""
+    cfg = tiny(attn)
+    params = model.init_params(cfg, KEY)
+    toks = tokens(2, 48)
+    full = model.forward(cfg, params, toks)
+    state = model.init_state(cfg)
+    outs = []
+    for t in range(48):
+        lg, state = model.decode_step(cfg, params, state, toks[:, t],
+                                      jnp.full((2,), t, jnp.int32))
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=5e-4, rtol=5e-3)
+
+
+def test_decode_state_is_constant_size():
+    """ho2/linear decode state must not grow with max_len; softmax must."""
+    short = tiny("ho2").with_(max_len=64)
+    long_ = tiny("ho2").with_(max_len=128)
+    size = lambda c: sum(int(np.prod(s["shape"])) for s in model.state_spec(c))
+    assert size(short) == size(long_)
+    s_short = size(tiny("softmax").with_(max_len=64))
+    s_long = size(tiny("softmax").with_(max_len=128))
+    assert s_long == 2 * s_short
+
+
+def test_causality_of_forward():
+    """Changing tokens after position p must not change logits at <= p."""
+    cfg = tiny("ho2")
+    params = model.init_params(cfg, KEY)
+    toks = tokens(1, 32)
+    toks2 = toks.at[:, 20:].set((toks[:, 20:] + 7) % 256)
+    a = model.forward(cfg, params, toks)
+    b = model.forward(cfg, params, toks2)
+    np.testing.assert_allclose(np.asarray(a[:, :20]), np.asarray(b[:, :20]),
+                               atol=1e-5, rtol=1e-4)
+    assert float(jnp.max(jnp.abs(a[:, 20:] - b[:, 20:]))) > 1e-3
+
+
+@pytest.mark.parametrize("attn", ["softmax", "linear", "ho2"])
+def test_train_step_reduces_loss(attn):
+    cfg = tiny(attn)
+    params = model.init_params(cfg, KEY)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    toks = tokens(4, 32)
+    tgt = jnp.roll(toks, -1, axis=1)
+    w = jnp.ones(toks.shape, jnp.float32)
+    step = jnp.int32(0)
+    losses = []
+    for _ in range(8):
+        loss, params, m, v, step = model.train_step(
+            cfg, params, m, v, step, toks, tgt, w, jnp.float32(1e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+    assert int(step) == 8
+
+
+def test_loss_weights_mask_positions():
+    cfg = tiny()
+    params = model.init_params(cfg, KEY)
+    toks = tokens(2, 16)
+    tgt = jnp.roll(toks, -1, axis=1)
+    w_full = jnp.ones(toks.shape, jnp.float32)
+    w_none = jnp.zeros(toks.shape, jnp.float32)
+    w_last = w_none.at[:, -1].set(1.0)
+    l_full = model.loss_fn(cfg, params, toks, tgt, w_full)
+    l_last = model.loss_fn(cfg, params, toks, tgt, w_last)
+    l_none = model.loss_fn(cfg, params, toks, tgt, w_none)
+    assert float(l_none) == 0.0
+    assert float(l_full) > 0 and float(l_last) > 0
+    assert abs(float(l_full) - float(l_last)) > 1e-6
+
+
+def test_pallas_impl_matches_jnp():
+    cfg = tiny("ho2")
+    params = model.init_params(cfg, KEY)
+    toks = tokens(2, 64)
+    a = model.forward(cfg, params, toks)
+    b = model.forward(cfg.with_(impl="pallas"), params, toks)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=5e-5, rtol=5e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000),
+       attn=st.sampled_from(["softmax", "linear", "ho2"]))
+def test_forward_deterministic(seed, attn):
+    cfg = tiny(attn)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = tokens(1, 16, seed)
+    a = model.forward(cfg, params, toks)
+    b = model.forward(cfg, params, toks)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_order_and_alpha_change_output():
+    cfg = tiny("ho2")
+    params = model.init_params(cfg, KEY)
+    toks = tokens(1, 16)
+    base = model.forward(cfg, params, toks)
+    for variant in [cfg.with_(order=1), cfg.with_(alpha=1.0)]:
+        other = model.forward(variant, params, toks)
+        assert float(jnp.max(jnp.abs(base - other))) > 1e-4

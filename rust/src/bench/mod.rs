@@ -1,0 +1,103 @@
+//! Benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports mean/std/
+//! min and writes CSV rows — the benches in `benches/` are `harness =
+//! false` binaries built on this, so `cargo bench` runs them all.
+
+use std::time::Instant;
+
+use crate::metrics::Stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms/iter (±{:.3}, min {:.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats.mean(),
+        std_s: stats.std(),
+        min_s: stats.min,
+    }
+}
+
+/// Adaptive: pick iteration count so each case takes ~`budget_s` seconds.
+pub fn bench_budget<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // one calibration run (counts as warmup)
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-7);
+    let iters = ((budget_s / once).ceil() as usize).clamp(3, 1000);
+    bench(name, 1, iters, f)
+}
+
+/// Write results as CSV (name, mean_ms, std_ms, min_ms, iters).
+pub fn write_csv(path: &std::path::Path, results: &[BenchResult]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("name,mean_ms,std_ms,min_ms,iters\n");
+    for r in results {
+        s.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{}\n",
+            r.name,
+            r.mean_s * 1e3,
+            r.std_s * 1e3,
+            r.min_s * 1e3,
+            r.iters
+        ));
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.mean_s < 0.1);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn budget_caps_iters() {
+        let r = bench_budget("sleepy", 0.02, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(r.iters >= 3 && r.iters <= 10, "iters {}", r.iters);
+    }
+}

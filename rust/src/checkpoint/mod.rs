@@ -1,0 +1,205 @@
+//! Binary checkpoint format for parameter/optimizer state.
+//!
+//! Self-describing little-endian container (magic "HOLTCKPT", version,
+//! step, named f32 leaves).  Written atomically (tmp file + rename) so a
+//! crash mid-save never corrupts the previous checkpoint.
+//!
+//! Layout:
+//! ```text
+//! magic[8] version:u32 step:u64 n_sections:u32
+//! per section: name_len:u32 name[..] n_leaves:u32
+//!   per leaf: name_len:u32 name[..] rank:u32 dims[rank]:u64 data[f32...]
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::params::ParamStore;
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 8] = b"HOLTCKPT";
+const VERSION: u32 = 1;
+
+/// A full training checkpoint: params + AdamW moments + step counter.
+pub struct Checkpoint {
+    pub step: u64,
+    pub sections: Vec<(String, ParamStore)>,
+}
+
+fn write_u32(w: &mut impl Write, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("unreasonable string length {n}");
+    }
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(MAGIC)?;
+            write_u32(&mut w, VERSION)?;
+            write_u64(&mut w, self.step)?;
+            write_u32(&mut w, self.sections.len() as u32)?;
+            for (name, store) in &self.sections {
+                write_str(&mut w, name)?;
+                write_u32(&mut w, store.len() as u32)?;
+                for (leaf_name, t) in store.names.iter().zip(&store.leaves) {
+                    write_str(&mut w, leaf_name)?;
+                    write_u32(&mut w, t.shape.len() as u32)?;
+                    for &d in &t.shape {
+                        write_u64(&mut w, d as u64)?;
+                    }
+                    let data = t.as_f32()?;
+                    // bulk write — leaves can be tens of MB
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(
+                            data.as_ptr() as *const u8,
+                            data.len() * 4,
+                        )
+                    };
+                    w.write_all(bytes)?;
+                }
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a HOLT checkpoint");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = read_u64(&mut r)?;
+        let n_sections = read_u32(&mut r)? as usize;
+        let mut sections = Vec::with_capacity(n_sections);
+        for _ in 0..n_sections {
+            let name = read_str(&mut r)?;
+            let n_leaves = read_u32(&mut r)? as usize;
+            let mut names = Vec::with_capacity(n_leaves);
+            let mut leaves = Vec::with_capacity(n_leaves);
+            for _ in 0..n_leaves {
+                let leaf_name = read_str(&mut r)?;
+                let rank = read_u32(&mut r)? as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(read_u64(&mut r)? as usize);
+                }
+                let n: usize = shape.iter().product();
+                let mut data = vec![0f32; n];
+                let bytes: &mut [u8] = unsafe {
+                    std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+                };
+                r.read_exact(bytes)?;
+                names.push(leaf_name);
+                leaves.push(Tensor::f32(shape, data));
+            }
+            sections.push((name, ParamStore { names, leaves }));
+        }
+        Ok(Checkpoint { step, sections })
+    }
+
+    pub fn section(&self, name: &str) -> Result<&ParamStore> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint has no section '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::{Init, LeafSpec};
+
+    fn store(seed: u64) -> ParamStore {
+        let spec = vec![
+            LeafSpec { name: "a".into(), shape: vec![3, 5], init: Init::Normal { std: 1.0 } },
+            LeafSpec { name: "b".into(), shape: vec![7], init: Init::Ones },
+        ];
+        ParamStore::init(&spec, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("holt_ckpt_test");
+        let path = dir.join("test.ckpt");
+        let ck = Checkpoint {
+            step: 123,
+            sections: vec![
+                ("params".into(), store(1)),
+                ("m".into(), store(2)),
+                ("v".into(), store(3)),
+            ],
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 123);
+        assert_eq!(back.sections.len(), 3);
+        for (orig, loaded) in ck.sections.iter().zip(&back.sections) {
+            assert_eq!(orig.0, loaded.0);
+            assert_eq!(orig.1.names, loaded.1.names);
+            assert_eq!(orig.1.leaves, loaded.1.leaves);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("holt_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

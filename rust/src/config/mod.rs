@@ -1,0 +1,328 @@
+//! Run configuration: a TOML-subset parser (the `toml` crate is not in the
+//! offline vendor set) plus the typed configs the CLI and examples use.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! integer, float, bool and flat-array values, `#` comments.  That covers
+//! every config this project ships; nested tables/dates are rejected
+//! loudly rather than misparsed.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed flat-TOML document: section -> key -> value.
+#[derive(Debug, Clone, Default)]
+pub struct Toml {
+    pub sections: HashMap<String, HashMap<String, Value>>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse TOML value: '{s}'")
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // naive comment strip is wrong inside strings; handle that
+                Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                    &raw[..i]
+                }
+                _ => raw,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.starts_with("[[") {
+                    bail!("line {}: unsupported table syntax '{line}'", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected key = value, got '{line}'", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let value = parse_value(&line[eq + 1..])
+                .with_context(|| format!("line {}", lineno + 1))?;
+            doc.sections.get_mut(&section).unwrap().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> Result<Toml> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Toml::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+/// Training-run configuration (CLI flags override file values).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// manifest model name, e.g. "ho2_small"
+    pub model: String,
+    pub task: String,
+    pub steps: usize,
+    pub lr: f64,
+    /// linear warmup steps (0 = constant lr)
+    pub warmup: usize,
+    /// lr schedule after warmup: "constant" or "cosine" (decay to
+    /// `min_lr` at `steps`)
+    pub schedule: String,
+    pub min_lr: f64,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub ckpt_every: usize,
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "ho2_small".into(),
+            task: "copy".into(),
+            steps: 300,
+            lr: 3e-4,
+            warmup: 20,
+            schedule: "constant".into(),
+            min_lr: 3e-5,
+            seed: 42,
+            log_every: 10,
+            eval_every: 50,
+            ckpt_every: 0,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Merge values from a `[train]` section.
+    pub fn apply_toml(&mut self, t: &Toml) -> Result<()> {
+        let Some(sec) = t.sections.get("train") else {
+            return Ok(());
+        };
+        for (k, v) in sec {
+            match k.as_str() {
+                "model" => self.model = v.as_str().context("model")?.into(),
+                "task" => self.task = v.as_str().context("task")?.into(),
+                "steps" => self.steps = v.as_i64().context("steps")? as usize,
+                "lr" => self.lr = v.as_f64().context("lr")?,
+                "warmup" => self.warmup = v.as_i64().context("warmup")? as usize,
+                "schedule" => self.schedule = v.as_str().context("schedule")?.into(),
+                "min_lr" => self.min_lr = v.as_f64().context("min_lr")?,
+                "seed" => self.seed = v.as_i64().context("seed")? as u64,
+                "log_every" => self.log_every = v.as_i64().context("log_every")? as usize,
+                "eval_every" => {
+                    self.eval_every = v.as_i64().context("eval_every")? as usize
+                }
+                "ckpt_every" => {
+                    self.ckpt_every = v.as_i64().context("ckpt_every")? as usize
+                }
+                "out_dir" => self.out_dir = v.as_str().context("out_dir")?.into(),
+                _ => bail!("unknown [train] key '{k}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Learning rate at a step: linear warmup, then constant or cosine
+    /// decay to `min_lr` at `steps`.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if self.warmup > 0 && step < self.warmup {
+            return self.lr * (step + 1) as f64 / self.warmup as f64;
+        }
+        if self.schedule == "cosine" && self.steps > self.warmup {
+            let t = (step - self.warmup) as f64 / (self.steps - self.warmup) as f64;
+            let t = t.clamp(0.0, 1.0);
+            return self.min_lr
+                + 0.5 * (self.lr - self.min_lr) * (1.0 + (std::f64::consts::PI * t).cos());
+        }
+        self.lr
+    }
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub ckpt: Option<String>,
+    pub addr: String,
+    pub max_tokens_default: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "ho2_small".into(),
+            ckpt: None,
+            addr: "127.0.0.1:8490".into(),
+            max_tokens_default: 64,
+            temperature: 0.8,
+            top_k: 40,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subset() {
+        let doc = Toml::parse(
+            r#"
+# run config
+top = "level"
+
+[train]
+model = "ho2_small"   # the paper's model
+steps = 300
+lr = 3e-4
+warmup = 20
+flag = true
+ns = [64, 128, 256]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").unwrap().as_str().unwrap(), "level");
+        assert_eq!(doc.get("train", "steps").unwrap().as_i64().unwrap(), 300);
+        assert!((doc.get("train", "lr").unwrap().as_f64().unwrap() - 3e-4).abs() < 1e-12);
+        assert_eq!(doc.get("train", "flag").unwrap().as_bool(), Some(true));
+        match doc.get("train", "ns").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn train_config_merge() {
+        let doc = Toml::parse("[train]\nmodel = \"softmax_tiny\"\nsteps = 5\n").unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.model, "softmax_tiny");
+        assert_eq!(c.steps, 5);
+        assert_eq!(c.task, "copy"); // untouched default
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_tables() {
+        let doc = Toml::parse("[train]\nbogus = 1\n").unwrap();
+        assert!(TrainConfig::default().apply_toml(&doc).is_err());
+        assert!(Toml::parse("[[arr_table]]\n").is_err());
+        assert!(Toml::parse("key value\n").is_err());
+    }
+
+    #[test]
+    fn warmup_schedule() {
+        let c = TrainConfig { lr: 1.0, warmup: 10, ..Default::default() };
+        assert!((c.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-12);
+        assert!((c.lr_at(100) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_schedule_decays_to_min() {
+        let c = TrainConfig {
+            lr: 1.0,
+            min_lr: 0.1,
+            warmup: 10,
+            steps: 110,
+            schedule: "cosine".into(),
+            ..Default::default()
+        };
+        assert!((c.lr_at(9) - 1.0).abs() < 1e-12, "end of warmup = peak");
+        let mid = c.lr_at(60);
+        assert!((mid - 0.55).abs() < 1e-9, "midpoint {mid}");
+        assert!((c.lr_at(110) - 0.1).abs() < 1e-9, "end = min_lr");
+        // monotone decreasing after warmup
+        let mut prev = f64::INFINITY;
+        for s in 10..110 {
+            let v = c.lr_at(s);
+            assert!(v <= prev + 1e-12);
+            prev = v;
+        }
+    }
+}

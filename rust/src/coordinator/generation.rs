@@ -1,0 +1,158 @@
+//! Autoregressive generation over the decode artifact.
+//!
+//! Drives the recurrent `decode_*` entry point token by token for a single
+//! prompt (the `holt generate` path).  Batched multi-request decoding
+//! lives in [`server`](crate::coordinator::server); this module also hosts
+//! the shared decode-step plumbing both use.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::state::StateManager;
+use crate::params::ParamStore;
+use crate::rng::Rng;
+use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
+use crate::tokenizer::{ByteTokenizer, EOS, PAD};
+
+/// Sampling parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleOpts {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub max_tokens: usize,
+}
+
+impl Default for SampleOpts {
+    fn default() -> Self {
+        SampleOpts { temperature: 0.8, top_k: 40, max_tokens: 64 }
+    }
+}
+
+/// Parameters converted to PJRT literals once, reused every decode step.
+///
+/// §Perf (EXPERIMENTS.md): parameters are constant during decoding, but the
+/// naive path cloned every leaf and re-built its literal per token — for
+/// the small model that is ~13 MB of copies per generated token.  Caching
+/// the literals removes that entirely; only the (much smaller) recurrent
+/// state, token and pos tensors are converted per step.
+pub struct CachedParams {
+    lits: Vec<xla::Literal>,
+    pub n_leaves: usize,
+}
+
+impl CachedParams {
+    pub fn new(params: &ParamStore) -> Result<Self> {
+        let lits: Result<Vec<xla::Literal>> =
+            params.leaves.iter().map(|t| t.to_literal()).collect();
+        Ok(CachedParams { lits: lits?, n_leaves: params.len() })
+    }
+}
+
+/// Run one batched decode step: feeds `token[b]` at `pos[b]` for every
+/// slot, updates the state manager, returns logits (B, V).
+pub fn decode_step(
+    exe: &Executable,
+    params: &CachedParams,
+    sm: &mut StateManager,
+    tokens: &[i32],
+) -> Result<Tensor> {
+    let b = sm.n_slots();
+    if tokens.len() != b {
+        bail!("token vector length {} != slots {}", tokens.len(), b);
+    }
+    // per-step literals: state + token + pos (params come from the cache)
+    let state_lits: Result<Vec<xla::Literal>> =
+        sm.leaves.iter().map(|t| t.to_literal()).collect();
+    let state_lits = state_lits?;
+    let token_lit = Tensor::i32(vec![b], tokens.to_vec()).to_literal()?;
+    let pos_lit = sm.pos_tensor().to_literal()?;
+
+    let mut lits: Vec<&xla::Literal> =
+        Vec::with_capacity(params.lits.len() + state_lits.len() + 2);
+    lits.extend(params.lits.iter());
+    lits.extend(state_lits.iter());
+    lits.push(&token_lit);
+    lits.push(&pos_lit);
+
+    let mut out = exe.run_literals(&lits)?;
+    let logits = out.remove(0);
+    sm.update_from(out)?;
+    Ok(logits)
+}
+
+/// A loaded generation stack: model + decode executable + cached params.
+pub struct Generator<'rt> {
+    pub model: ModelEntry,
+    params: CachedParams,
+    exe: Arc<Executable>,
+    pub vocab: usize,
+    _rt: &'rt Runtime,
+}
+
+impl<'rt> Generator<'rt> {
+    pub fn new(runtime: &'rt Runtime, model_name: &str, params: ParamStore) -> Result<Self> {
+        let model = runtime.manifest.model(model_name)?.clone();
+        params.check_spec(&model.param_spec)?;
+        let name = model
+            .artifacts
+            .get("decode")
+            .ok_or_else(|| anyhow::anyhow!("model '{}' has no decode artifact", model.name))?;
+        let exe = runtime.load(name)?;
+        let vocab = model.config.vocab_size;
+        let params = CachedParams::new(&params)?;
+        Ok(Generator { model, params, exe, vocab, _rt: runtime })
+    }
+
+    /// Generate a completion for one prompt (slot 0 does the work; other
+    /// slots idle on PAD).  Returns (token ids, text).
+    pub fn generate(
+        &self,
+        prompt: &str,
+        opts: SampleOpts,
+        rng: &mut Rng,
+    ) -> Result<(Vec<i32>, String)> {
+        let tok = ByteTokenizer::new();
+        let prompt_ids = tok.encode_with_specials(prompt, false);
+        let max_len = self.model.config.max_len;
+        if prompt_ids.len() + opts.max_tokens > max_len {
+            bail!(
+                "prompt ({}) + max_tokens ({}) exceeds model max_len ({max_len})",
+                prompt_ids.len(),
+                opts.max_tokens
+            );
+        }
+        let mut sm = StateManager::new(&self.model.state_spec)?;
+        let slot = sm.alloc().unwrap();
+        let b = sm.n_slots();
+        let mut feed = vec![PAD; b];
+
+        // prefill: teacher-force the prompt through the recurrence
+        let mut last_logits: Option<Vec<f32>> = None;
+        for &t in &prompt_ids {
+            feed[slot] = t;
+            let logits = decode_step(&self.exe, &self.params, &mut sm, &feed)?;
+            sm.advance(slot);
+            let v = self.vocab;
+            last_logits =
+                Some(logits.as_f32()?[slot * v..(slot + 1) * v].to_vec());
+        }
+
+        let mut out_ids = Vec::with_capacity(opts.max_tokens);
+        let mut logits = last_logits.expect("non-empty prompt (BOS at least)");
+        for _ in 0..opts.max_tokens {
+            let next = rng.sample_logits(&logits, opts.temperature, opts.top_k) as i32;
+            if next == EOS {
+                break;
+            }
+            out_ids.push(next);
+            feed[slot] = next;
+            let l = decode_step(&self.exe, &self.params, &mut sm, &feed)?;
+            sm.advance(slot);
+            let v = self.vocab;
+            logits = l.as_f32()?[slot * v..(slot + 1) * v].to_vec();
+        }
+        let text = tok.decode(&out_ids);
+        Ok((out_ids, text))
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator — the system around the paper's attention.
+//!
+//! The paper's contribution is numeric (L1/L2), so the coordinator is the
+//! production harness a user would actually run:
+//!
+//! * [`trainer`] — training orchestrator: data feed, fused-AdamW artifact
+//!   execution, lr schedule, eval, metrics (JSONL), checkpointing.
+//! * [`state`] — the recurrent decode-state manager.  Because HO linear
+//!   attention is an RNN with O(1) state, the serving "KV cache" is a
+//!   fixed set of slots; this module owns slot allocation/reset and
+//!   per-slot positions.
+//! * [`generation`] — autoregressive sampling driver over the decode
+//!   artifact (greedy / temperature / top-k).
+//! * [`server`] — continuous-batching serve loop (vLLM-style, at token
+//!   granularity) with a JSON-lines TCP front end and a synthetic
+//!   load-driver mode for benches.
+
+pub mod generation;
+pub mod server;
+pub mod state;
+pub mod trainer;

@@ -1,0 +1,427 @@
+//! Continuous-batching serve loop (the vLLM-style coordinator, for a model
+//! whose "KV cache" is O(1) per sequence).
+//!
+//! The engine owns the decode executable, the parameters and the
+//! [`StateManager`].  Scheduling is at **token granularity**: every engine
+//! step runs the decode artifact once over all B slots; requests join the
+//! batch the moment a slot is free (mid-flight of everyone else) and leave
+//! on EOS/limit.  Prefill is streamed through the same recurrence — a
+//! prompt token per step — so a long prompt never head-of-line-blocks
+//! other slots' decoding.
+//!
+//! Front ends:
+//! * [`serve_tcp`] — JSON-lines-over-TCP: `{"prompt": ..., "max_tokens":
+//!   ..}` per line, one JSON response line per request.
+//! * [`run_synthetic`] — in-process load driver used by `holt serve
+//!   --synthetic`, the E4 bench and the serve_decode example.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::generation::{decode_step, CachedParams};
+use crate::coordinator::state::StateManager;
+use crate::json::{obj, Json};
+use crate::metrics::Latencies;
+use crate::params::ParamStore;
+use crate::rng::Rng;
+use crate::runtime::{Executable, ModelEntry, Runtime};
+use crate::tokenizer::{ByteTokenizer, EOS, PAD};
+
+/// One inbound generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt_ids: Vec<i32>,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub enqueued: Instant,
+    pub respond: Sender<Response>,
+}
+
+/// The engine's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub token_ids: Vec<i32>,
+    pub text: String,
+    /// queue + prefill time until the first generated token
+    pub ttft_s: f64,
+    pub total_s: f64,
+}
+
+struct Active {
+    req: Request,
+    slot: usize,
+    /// next prompt index to feed (prefill cursor)
+    prompt_pos: usize,
+    generated: Vec<i32>,
+    last_token: i32,
+    first_token_at: Option<Instant>,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub generated_tokens: u64,
+    pub engine_steps: u64,
+    pub ttft: Latencies,
+    pub per_request: Latencies,
+    pub wall_s: f64,
+}
+
+impl ServeStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.wall_s
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} steps={} wall={:.2}s throughput={:.1} tok/s\n  ttft: {}\n  request latency: {}",
+            self.completed,
+            self.generated_tokens,
+            self.engine_steps,
+            self.wall_s,
+            self.tokens_per_sec(),
+            self.ttft.summary(),
+            self.per_request.summary(),
+        )
+    }
+}
+
+/// The continuous-batching engine.
+pub struct Engine<'rt> {
+    pub model: ModelEntry,
+    params: CachedParams,
+    exe: std::sync::Arc<Executable>,
+    sm: StateManager,
+    slots: Vec<Option<Active>>,
+    rng: Rng,
+    vocab: usize,
+    _rt: &'rt Runtime,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(
+        runtime: &'rt Runtime,
+        model_name: &str,
+        params: ParamStore,
+        seed: u64,
+    ) -> Result<Self> {
+        let model = runtime.manifest.model(model_name)?.clone();
+        params.check_spec(&model.param_spec)?;
+        let exe_name = model
+            .artifacts
+            .get("decode")
+            .ok_or_else(|| anyhow::anyhow!("model '{}' has no decode artifact", model.name))?;
+        let exe = runtime.load(exe_name)?;
+        let sm = StateManager::new(&model.state_spec)?;
+        let n = sm.n_slots();
+        let vocab = model.config.vocab_size;
+        let params = CachedParams::new(&params)?;
+        Ok(Engine {
+            model,
+            params,
+            exe,
+            sm,
+            slots: (0..n).map(|_| None).collect(),
+            rng: Rng::new(seed),
+            vocab,
+            _rt: runtime,
+        })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn has_active(&self) -> bool {
+        self.slots.iter().any(Option::is_some)
+    }
+
+    /// Try to admit one request; gives the request back when no slot is
+    /// free.  Oversized prompts are rejected immediately (error response).
+    fn admit(&mut self, req: Request) -> Option<Request> {
+        if req.prompt_ids.len() + req.max_tokens > self.model.config.max_len {
+            // reject oversized requests right away
+            let _ = req.respond.send(Response {
+                id: req.id,
+                token_ids: vec![],
+                text: String::new(),
+                ttft_s: -1.0,
+                total_s: -1.0,
+            });
+            return None; // consumed
+        }
+        let Some(slot) = self.sm.alloc() else {
+            return Some(req);
+        };
+        self.slots[slot] = Some(Active {
+            slot,
+            prompt_pos: 0,
+            generated: Vec::with_capacity(req.max_tokens),
+            last_token: PAD,
+            first_token_at: None,
+            req,
+        });
+        None
+    }
+
+    /// One engine step: build the feed vector, run the artifact, advance
+    /// every active slot.  Returns finished responses.
+    fn step(&mut self, stats: &mut ServeStats) -> Result<Vec<Response>> {
+        let b = self.n_slots();
+        let mut feed = vec![PAD; b];
+        for s in self.slots.iter().flatten() {
+            feed[s.slot] = if s.prompt_pos < s.req.prompt_ids.len() {
+                s.req.prompt_ids[s.prompt_pos]
+            } else {
+                s.last_token
+            };
+        }
+        let logits = decode_step(&self.exe, &self.params, &mut self.sm, &feed)?;
+        stats.engine_steps += 1;
+        let lf = logits.as_f32()?;
+
+        let mut done = Vec::new();
+        for slot_idx in 0..b {
+            let Some(mut a) = self.slots[slot_idx].take() else {
+                continue;
+            };
+            self.sm.advance(slot_idx);
+            if a.prompt_pos < a.req.prompt_ids.len() {
+                a.prompt_pos += 1;
+                if a.prompt_pos < a.req.prompt_ids.len() {
+                    self.slots[slot_idx] = Some(a);
+                    continue;
+                }
+                // prompt fully consumed this step: fall through to sample
+            }
+            let row = &lf[slot_idx * self.vocab..(slot_idx + 1) * self.vocab];
+            let next =
+                self.rng.sample_logits(row, a.req.temperature, a.req.top_k) as i32;
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(Instant::now());
+            }
+            let hit_eos = next == EOS;
+            if !hit_eos {
+                a.generated.push(next);
+                a.last_token = next;
+            }
+            let over_budget = a.generated.len() >= a.req.max_tokens
+                || (self.sm.pos[slot_idx] as usize) >= self.model.config.max_len - 1;
+            if hit_eos || over_budget {
+                let now = Instant::now();
+                let ttft = a
+                    .first_token_at
+                    .map(|t| t.duration_since(a.req.enqueued))
+                    .unwrap_or_default();
+                stats.completed += 1;
+                stats.generated_tokens += a.generated.len() as u64;
+                stats.ttft.push(ttft);
+                stats.per_request.push(now.duration_since(a.req.enqueued));
+                let resp = Response {
+                    id: a.req.id,
+                    text: ByteTokenizer::new().decode(&a.generated),
+                    token_ids: a.generated,
+                    ttft_s: ttft.as_secs_f64(),
+                    total_s: now.duration_since(a.req.enqueued).as_secs_f64(),
+                };
+                let _ = a.req.respond.send(resp.clone());
+                self.sm.release(slot_idx);
+                done.push(resp);
+            } else {
+                self.slots[slot_idx] = Some(a);
+            }
+        }
+        Ok(done)
+    }
+
+    /// Main loop: admit from `rx`, step while anything is active, block
+    /// when idle.  Exits when `rx` disconnects and all slots drain.
+    pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
+        let mut stats = ServeStats::default();
+        let t0 = Instant::now();
+        let mut pending: Vec<Request> = Vec::new();
+        let mut disconnected = false;
+        loop {
+            // admit as many queued requests as possible
+            loop {
+                if pending.is_empty() {
+                    match rx.try_recv() {
+                        Ok(r) => pending.push(r),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            disconnected = true;
+                            break;
+                        }
+                    }
+                }
+                let Some(r) = pending.pop() else { break };
+                if let Some(back) = self.admit(r) {
+                    pending.push(back); // no free slot — retry next step
+                    break;
+                }
+            }
+            if !self.has_active() {
+                if disconnected {
+                    break;
+                }
+                // idle: block for the next request
+                match rx.recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+                continue;
+            }
+            self.step(&mut stats)?;
+        }
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok(stats)
+    }
+}
+
+/// Serve over TCP with JSON-lines framing.  Blocks forever.
+pub fn serve_tcp(
+    runtime: &Runtime,
+    model_name: &str,
+    params: ParamStore,
+    addr: &str,
+    seed: u64,
+) -> Result<()> {
+    let (tx, rx) = channel::<Request>();
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("[serve] listening on {addr} (JSON lines: {{\"prompt\": ..}})");
+
+    // acceptor threads feed the engine channel
+    let accept_tx = tx.clone();
+    std::thread::spawn(move || {
+        let mut next_id = 0u64;
+        for conn in listener.incoming().flatten() {
+            next_id += 1;
+            let tx = accept_tx.clone();
+            let base_id = next_id * 1_000_000;
+            std::thread::spawn(move || {
+                let _ = handle_conn(conn, tx, base_id);
+            });
+        }
+    });
+    drop(tx);
+
+    let mut engine = Engine::new(runtime, model_name, params, seed)?;
+    let stats = engine.run(rx)?;
+    eprintln!("[serve] engine exited\n{}", stats.report());
+    Ok(())
+}
+
+fn handle_conn(conn: TcpStream, tx: Sender<Request>, base_id: u64) -> Result<()> {
+    let peer = conn.peer_addr()?;
+    let mut writer = conn.try_clone()?;
+    let reader = BufReader::new(conn);
+    let tok = ByteTokenizer::new();
+    let mut n = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req_json = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(writer, "{}", obj(vec![("error", format!("{e}").into())]))?;
+                continue;
+            }
+        };
+        let prompt = req_json.get("prompt").and_then(|j| j.as_str()).unwrap_or("");
+        let max_tokens = req_json
+            .get("max_tokens")
+            .and_then(|j| j.as_i64())
+            .unwrap_or(64) as usize;
+        let temperature = req_json
+            .get("temperature")
+            .and_then(|j| j.as_f64())
+            .unwrap_or(0.8) as f32;
+        let top_k =
+            req_json.get("top_k").and_then(|j| j.as_i64()).unwrap_or(40) as usize;
+        n += 1;
+        let (rtx, rrx) = channel();
+        tx.send(Request {
+            id: base_id + n,
+            prompt_ids: tok.encode_with_specials(prompt, false),
+            max_tokens,
+            temperature,
+            top_k,
+            enqueued: Instant::now(),
+            respond: rtx,
+        })
+        .map_err(|_| anyhow::anyhow!("engine gone"))?;
+        let resp = rrx.recv()?;
+        writeln!(
+            writer,
+            "{}",
+            obj(vec![
+                ("id", (resp.id as i64).into()),
+                ("text", resp.text.as_str().into()),
+                ("n_tokens", resp.token_ids.len().into()),
+                ("ttft_s", resp.ttft_s.into()),
+                ("total_s", resp.total_s.into()),
+            ])
+        )?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Synthetic load: `n_requests` prompts drawn from the embedded corpus,
+/// arrivals spaced `gap_ms` apart, all through the continuous-batching
+/// engine.  Returns aggregate stats (E4 bench / serve example).
+pub fn run_synthetic(
+    runtime: &Runtime,
+    model_name: &str,
+    params: ParamStore,
+    n_requests: usize,
+    prompt_len: usize,
+    max_tokens: usize,
+    gap_ms: u64,
+    seed: u64,
+) -> Result<ServeStats> {
+    let (tx, rx) = channel::<Request>();
+    let (rtx, _rrx) = channel::<Response>();
+    let corpus = crate::data::charlm::CORPUS.as_bytes();
+    let mut rng = Rng::new(seed ^ 0x10ad);
+    std::thread::spawn(move || {
+        for i in 0..n_requests {
+            let start = rng.uniform_int(0, (corpus.len() - prompt_len) as u64) as usize;
+            let prompt_ids: Vec<i32> = std::iter::once(crate::tokenizer::BOS)
+                .chain(corpus[start..start + prompt_len].iter().map(|&b| b as i32))
+                .collect();
+            if tx
+                .send(Request {
+                    id: i as u64,
+                    prompt_ids,
+                    max_tokens,
+                    temperature: 0.8,
+                    top_k: 40,
+                    enqueued: Instant::now(),
+                    respond: rtx.clone(),
+                })
+                .is_err()
+            {
+                return;
+            }
+            if gap_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(gap_ms));
+            }
+        }
+    });
+    let mut engine = Engine::new(runtime, model_name, params, seed)?;
+    engine.run(rx)
+}

@@ -1,0 +1,187 @@
+//! Recurrent decode-state manager — the "KV cache" of a linear-attention
+//! server.
+//!
+//! The decode artifact is lowered with a fixed slot count B
+//! (`decode_batch`); each slot holds one sequence's recurrent state: for
+//! ho2/linear that is, per layer, S (H, f, dh) and z (H, f) — **constant
+//! in context length**, the paper's headline serving property — and for
+//! the softmax baseline the (H, max_len, dh) KV cache, linear in context.
+//!
+//! The manager owns the batched state tensors (leading axis = slot),
+//! allocates/frees slots as requests arrive/finish, zeroes a slot's slice
+//! on reuse, and tracks per-slot positions (fed to the artifact as the
+//! per-sequence `pos` vector — that is what makes continuous batching
+//! possible).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{LeafSpec, Tensor};
+
+/// Slot state manager over the decode artifact's state leaves.
+pub struct StateManager {
+    /// batched state tensors, in state_spec order (leading dim = slots)
+    pub leaves: Vec<Tensor>,
+    spec: Vec<LeafSpec>,
+    /// per-slot next position (also = tokens consumed so far)
+    pub pos: Vec<i32>,
+    free: Vec<usize>,
+    n_slots: usize,
+}
+
+impl StateManager {
+    pub fn new(state_spec: &[LeafSpec]) -> Result<StateManager> {
+        if state_spec.is_empty() {
+            bail!("empty state spec");
+        }
+        let n_slots = state_spec[0].shape[0];
+        for s in state_spec {
+            if s.shape.first() != Some(&n_slots) {
+                bail!("state leaf '{}' does not lead with slot dim", s.name);
+            }
+        }
+        let leaves = state_spec
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape, crate::runtime::DType::F32))
+            .collect();
+        Ok(StateManager {
+            leaves,
+            spec: state_spec.to_vec(),
+            pos: vec![0; n_slots],
+            free: (0..n_slots).rev().collect(),
+            n_slots,
+        })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Claim a slot: zero its state slice and reset its position.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        self.reset_slot(slot);
+        Some(slot)
+    }
+
+    /// Release a slot back to the pool.
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot), "double free of slot {slot}");
+        self.free.push(slot);
+    }
+
+    /// Zero one slot's slice in every state leaf and reset its position.
+    fn reset_slot(&mut self, slot: usize) {
+        for t in &mut self.leaves {
+            let stride: usize = t.shape[1..].iter().product();
+            let data = t.as_f32_mut().expect("state is f32");
+            data[slot * stride..(slot + 1) * stride].fill(0.0);
+        }
+        self.pos[slot] = 0;
+    }
+
+    /// Swap in the artifact's updated state leaves.
+    pub fn update_from(&mut self, new_leaves: Vec<Tensor>) -> Result<()> {
+        if new_leaves.len() != self.leaves.len() {
+            bail!(
+                "state leaf count mismatch: {} vs {}",
+                new_leaves.len(),
+                self.leaves.len()
+            );
+        }
+        for (old, new) in self.leaves.iter().zip(&new_leaves) {
+            if old.shape != new.shape {
+                bail!("state leaf shape changed: {:?} -> {:?}", old.shape, new.shape);
+            }
+        }
+        self.leaves = new_leaves;
+        Ok(())
+    }
+
+    /// Advance a slot's position after it consumed a token.
+    pub fn advance(&mut self, slot: usize) {
+        self.pos[slot] += 1;
+    }
+
+    /// The per-slot `pos` vector in artifact shape (B,) i32.
+    pub fn pos_tensor(&self) -> Tensor {
+        Tensor::i32(vec![self.n_slots], self.pos.clone())
+    }
+
+    /// Total f32 elements of state per slot (the paper's O(1) vs O(n)
+    /// comparison reads this).
+    pub fn state_elements_per_slot(&self) -> usize {
+        self.spec
+            .iter()
+            .map(|s| s.shape[1..].iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Init;
+
+    fn spec(slots: usize) -> Vec<LeafSpec> {
+        vec![
+            LeafSpec { name: "layer0.S".into(), shape: vec![slots, 2, 5, 3], init: Init::Zeros },
+            LeafSpec { name: "layer0.z".into(), shape: vec![slots, 2, 5], init: Init::Zeros },
+        ]
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut sm = StateManager::new(&spec(4)).unwrap();
+        assert_eq!(sm.n_slots(), 4);
+        let a = sm.alloc().unwrap();
+        let b = sm.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(sm.free_slots(), 2);
+        sm.release(a);
+        assert_eq!(sm.free_slots(), 3);
+        // exhaust
+        let mut got = vec![b];
+        while let Some(s) = sm.alloc() {
+            got.push(s);
+        }
+        assert_eq!(got.len(), 4);
+        assert_eq!(sm.free_slots(), 0);
+    }
+
+    #[test]
+    fn reuse_zeroes_state_and_pos() {
+        let mut sm = StateManager::new(&spec(2)).unwrap();
+        let s = sm.alloc().unwrap();
+        // dirty the slot
+        let stride: usize = sm.leaves[0].shape[1..].iter().product();
+        sm.leaves[0].as_f32_mut().unwrap()[s * stride] = 7.0;
+        sm.pos[s] = 9;
+        sm.release(s);
+        let s2 = sm.alloc().unwrap();
+        assert_eq!(s2, s);
+        assert_eq!(sm.leaves[0].as_f32().unwrap()[s * stride], 0.0);
+        assert_eq!(sm.pos[s], 0);
+    }
+
+    #[test]
+    fn per_slot_isolation_on_reset() {
+        let mut sm = StateManager::new(&spec(3)).unwrap();
+        let a = sm.alloc().unwrap();
+        let b = sm.alloc().unwrap();
+        let stride: usize = sm.leaves[0].shape[1..].iter().product();
+        sm.leaves[0].as_f32_mut().unwrap()[b * stride + 1] = 3.5;
+        sm.release(a);
+        sm.alloc().unwrap(); // re-zero a
+        assert_eq!(sm.leaves[0].as_f32().unwrap()[b * stride + 1], 3.5);
+    }
+
+    #[test]
+    fn state_size_accounting() {
+        let sm = StateManager::new(&spec(2)).unwrap();
+        assert_eq!(sm.state_elements_per_slot(), 2 * 5 * 3 + 2 * 5);
+    }
+}

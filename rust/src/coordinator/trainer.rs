@@ -1,0 +1,248 @@
+//! Training orchestrator.
+//!
+//! Owns parameters + AdamW moments (as host tensors), feeds batches from a
+//! [`DataGen`](crate::data::DataGen) into the fused `train_*` artifact, and
+//! handles the run loop: lr schedule, periodic eval through the `fwd_*`
+//! artifact, JSONL metrics, and checkpointing.  Python is never involved —
+//! one artifact call per step.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::config::TrainConfig;
+use crate::data::{self, Batch};
+use crate::json::{obj, JsonlWriter};
+use crate::metrics::{Throughput, Timer};
+use crate::params::ParamStore;
+use crate::rng::Rng;
+use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
+
+/// Everything a live training run needs.
+pub struct Trainer<'rt> {
+    pub runtime: &'rt Runtime,
+    pub model: ModelEntry,
+    pub params: ParamStore,
+    pub m: ParamStore,
+    pub v: ParamStore,
+    pub step: u64,
+    train_exe: Arc<Executable>,
+    fwd_exe: Option<Arc<Executable>>,
+}
+
+/// One step's scalar outputs.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: u64,
+    pub loss: f32,
+    pub step_time_s: f64,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize fresh parameters for `model_name` (manifest init spec).
+    pub fn new(runtime: &'rt Runtime, model_name: &str, seed: u64) -> Result<Self> {
+        let model = runtime.manifest.model(model_name)?.clone();
+        let mut rng = Rng::new(seed);
+        let params = ParamStore::init(&model.param_spec, &mut rng);
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        Self::with_state(runtime, model, params, m, v, 0)
+    }
+
+    /// Resume from a checkpoint.
+    pub fn from_checkpoint(
+        runtime: &'rt Runtime,
+        model_name: &str,
+        ckpt: &Checkpoint,
+    ) -> Result<Self> {
+        let model = runtime.manifest.model(model_name)?.clone();
+        let params = ckpt.section("params")?.clone();
+        params.check_spec(&model.param_spec).context("checkpoint/model mismatch")?;
+        let m = ckpt.section("m")?.clone();
+        let v = ckpt.section("v")?.clone();
+        Self::with_state(runtime, model, params, m, v, ckpt.step)
+    }
+
+    fn with_state(
+        runtime: &'rt Runtime,
+        model: ModelEntry,
+        params: ParamStore,
+        m: ParamStore,
+        v: ParamStore,
+        step: u64,
+    ) -> Result<Self> {
+        let train_name = model
+            .artifacts
+            .get("train")
+            .ok_or_else(|| anyhow::anyhow!("model '{}' has no train artifact", model.name))?;
+        let train_exe = runtime.load(train_name)?;
+        let fwd_exe = match model.artifacts.get("fwd") {
+            Some(n) => Some(runtime.load(n)?),
+            None => None,
+        };
+        Ok(Trainer { runtime, model, params, m, v, step, train_exe, fwd_exe })
+    }
+
+    /// Execute one fused train step on a batch; updates state in place.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let timer = Timer::start();
+        let np = self.params.len();
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(3 * np + 5);
+        inputs.extend(self.params.leaves.iter().cloned());
+        inputs.extend(self.m.leaves.iter().cloned());
+        inputs.extend(self.v.leaves.iter().cloned());
+        inputs.push(Tensor::scalar_i32(self.step as i32));
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.targets.clone());
+        inputs.push(batch.weights.clone());
+        inputs.push(Tensor::scalar_f32(lr));
+
+        let mut out = self.train_exe.run(&inputs)?;
+        // outputs: loss, params x np, m x np, v x np, step
+        let loss = out[0].scalar()?;
+        let new_step = out[out.len() - 1].scalar()? as u64;
+        let rest: Vec<Tensor> = out.drain(1..1 + 3 * np).collect();
+        let mut it = rest.into_iter();
+        let p: Vec<Tensor> = it.by_ref().take(np).collect();
+        let m: Vec<Tensor> = it.by_ref().take(np).collect();
+        let v: Vec<Tensor> = it.by_ref().take(np).collect();
+        self.params.replace_from(p)?;
+        self.m.replace_from(m)?;
+        self.v.replace_from(v)?;
+        self.step = new_step;
+        Ok(StepStats { step: self.step, loss, step_time_s: timer.secs() })
+    }
+
+    /// Forward pass on a batch (eval): returns logits (B, T, V).
+    pub fn forward(&self, batch: &Batch) -> Result<Tensor> {
+        let fwd = self
+            .fwd_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model has no fwd artifact"))?;
+        let mut inputs: Vec<Tensor> = self.params.leaves.clone();
+        inputs.push(batch.tokens.clone());
+        Ok(fwd.run(&inputs)?.remove(0))
+    }
+
+    /// Weighted accuracy on an eval batch.
+    pub fn eval_accuracy(&self, batch: &Batch) -> Result<f64> {
+        batch.accuracy(&self.forward(batch)?)
+    }
+
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            step: self.step,
+            sections: vec![
+                ("params".into(), self.params.clone()),
+                ("m".into(), self.m.clone()),
+                ("v".into(), self.v.clone()),
+            ],
+        }
+    }
+
+    /// Batch shape the train artifact was lowered with.
+    pub fn train_shape(&self) -> (usize, usize) {
+        (self.model.config.train_batch, self.model.config.train_len)
+    }
+}
+
+/// Full training run per a [`TrainConfig`]: the `holt train` command and
+/// the train_lm example both call this.  Returns the loss history.
+pub fn run_training(
+    runtime: &Runtime,
+    cfg: &TrainConfig,
+    quiet: bool,
+) -> Result<Vec<StepStats>> {
+    let mut trainer = Trainer::new(runtime, &cfg.model, cfg.seed)?;
+    let (b, t) = trainer.train_shape();
+    let mut gen = data::make(&cfg.task, cfg.seed ^ 0x5eed)?;
+    let mut eval_gen = data::make(&cfg.task, cfg.seed ^ 0xe7a1)?;
+
+    let out_dir = PathBuf::from(&cfg.out_dir);
+    let log_path = out_dir.join(format!("train_{}_{}.jsonl", cfg.model, cfg.task));
+    let mut log = JsonlWriter::create(&log_path)?;
+    log.write(&obj(vec![
+        ("event", "start".into()),
+        ("model", cfg.model.as_str().into()),
+        ("task", cfg.task.as_str().into()),
+        ("n_params", trainer.model.n_params.into()),
+        ("steps", cfg.steps.into()),
+        ("lr", cfg.lr.into()),
+        ("seed", (cfg.seed as i64).into()),
+        ("batch", b.into()),
+        ("seq_len", t.into()),
+    ]))?;
+
+    let mut history = Vec::with_capacity(cfg.steps);
+    let mut tput = Throughput::new();
+    for i in 0..cfg.steps {
+        let batch = gen.batch(b, t);
+        let lr = cfg.lr_at(i) as f32;
+        let stats = trainer.train_step(&batch, lr)?;
+        tput.add((b * t) as u64);
+        history.push(stats);
+
+        if cfg.log_every > 0 && (i + 1) % cfg.log_every == 0 {
+            let recent: f64 = history[history.len().saturating_sub(cfg.log_every)..]
+                .iter()
+                .map(|s| s.loss as f64)
+                .sum::<f64>()
+                / cfg.log_every.min(history.len()) as f64;
+            if !quiet {
+                println!(
+                    "step {:>5}  loss {:.4}  lr {:.2e}  {:.0} tok/s",
+                    stats.step,
+                    recent,
+                    lr,
+                    tput.per_sec()
+                );
+            }
+            log.write(&obj(vec![
+                ("event", "step".into()),
+                ("step", (stats.step as i64).into()),
+                ("loss", (recent).into()),
+                ("lr", (lr as f64).into()),
+                ("tok_per_s", tput.per_sec().into()),
+                ("step_time_s", stats.step_time_s.into()),
+            ]))?;
+        }
+
+        if cfg.eval_every > 0 && (i + 1) % cfg.eval_every == 0 {
+            let eb = eval_gen.batch(b, t);
+            let acc = trainer.eval_accuracy(&eb)?;
+            if !quiet {
+                println!("step {:>5}  eval accuracy {:.3}", stats.step, acc);
+            }
+            log.write(&obj(vec![
+                ("event", "eval".into()),
+                ("step", (stats.step as i64).into()),
+                ("accuracy", acc.into()),
+            ]))?;
+        }
+
+        if cfg.ckpt_every > 0 && (i + 1) % cfg.ckpt_every == 0 {
+            let path = out_dir.join(format!("{}_{}.ckpt", cfg.model, cfg.task));
+            trainer.checkpoint().save(&path)?;
+            log.write(&obj(vec![
+                ("event", "checkpoint".into()),
+                ("step", (stats.step as i64).into()),
+                ("path", path.to_string_lossy().to_string().into()),
+            ]))?;
+        }
+    }
+
+    // final checkpoint if any checkpointing was requested
+    if cfg.ckpt_every > 0 {
+        let path = out_dir.join(format!("{}_{}.ckpt", cfg.model, cfg.task));
+        trainer.checkpoint().save(&path)?;
+    }
+    log.write(&obj(vec![
+        ("event", "done".into()),
+        ("final_loss", history.last().map(|s| s.loss as f64).unwrap_or(0.0).into()),
+        ("tok_per_s", tput.per_sec().into()),
+    ]))?;
+    log.flush()?;
+    Ok(history)
+}

@@ -1,0 +1,122 @@
+//! Associative recall: `[BOS, k1, v1, ..., kP, vP, SEP, kq]` and the model
+//! must emit the value bound to the queried key — the induction-head
+//! workload from the linear-attention literature.  Only the answer
+//! position is scored.
+//!
+//! Keys and values are drawn from disjoint alphabets so the model cannot
+//! confuse roles; the queried key is always one of the presented keys.
+
+use super::{Batch, DataGen, SEP};
+use crate::rng::Rng;
+use crate::runtime::Tensor;
+use crate::tokenizer::{BOS, PAD};
+
+pub struct AssocRecall {
+    rng: Rng,
+    pub n_keys: i32,
+    pub n_vals: i32,
+}
+
+impl AssocRecall {
+    pub fn new(seed: u64) -> Self {
+        AssocRecall { rng: Rng::new(seed), n_keys: 32, n_vals: 32 }
+    }
+}
+
+impl DataGen for AssocRecall {
+    fn name(&self) -> &'static str {
+        "assoc"
+    }
+
+    fn batch(&mut self, batch: usize, t: usize) -> Batch {
+        let mut tokens = vec![PAD; batch * t];
+        let mut targets = vec![PAD; batch * t];
+        let mut weights = vec![0f32; batch * t];
+        // pairs occupy 2P tokens, plus BOS, SEP, query, answer
+        let max_pairs = ((t - 4) / 2).min(self.n_keys as usize);
+        for b in 0..batch {
+            let pairs = self.rng.uniform_int(2, max_pairs as u64 + 1) as usize;
+            // distinct keys (partial Fisher–Yates over the key alphabet)
+            let mut keys: Vec<i32> = (0..self.n_keys).collect();
+            self.rng.shuffle(&mut keys);
+            keys.truncate(pairs);
+            let vals: Vec<i32> = (0..pairs)
+                .map(|_| 64 + self.rng.uniform_int(0, self.n_vals as u64) as i32)
+                .collect();
+
+            let row = &mut tokens[b * t..(b + 1) * t];
+            row[0] = BOS;
+            for i in 0..pairs {
+                row[1 + 2 * i] = keys[i];
+                row[2 + 2 * i] = vals[i];
+            }
+            let qi = self.rng.uniform_int(0, pairs as u64) as usize;
+            row[1 + 2 * pairs] = SEP;
+            row[2 + 2 * pairs] = keys[qi];
+            row[3 + 2 * pairs] = vals[qi]; // present so targets line up
+
+            let trow = &mut targets[b * t..(b + 1) * t];
+            for i in 0..t - 1 {
+                trow[i] = row[i + 1];
+            }
+            // score only the position that predicts the answer (the query
+            // key predicts its value)
+            weights[b * t + 2 + 2 * pairs] = 1.0;
+        }
+        Batch {
+            tokens: Tensor::i32(vec![batch, t], tokens),
+            targets: Tensor::i32(vec![batch, t], targets),
+            weights: Tensor::f32(vec![batch, t], weights),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_answer_consistent() {
+        let mut g = AssocRecall::new(0);
+        let b = g.batch(16, 48);
+        let toks = b.tokens.as_i32().unwrap();
+        let tgts = b.targets.as_i32().unwrap();
+        let w = b.weights.as_f32().unwrap();
+        for row in 0..16 {
+            let r = &toks[row * 48..(row + 1) * 48];
+            let sep = r.iter().position(|&x| x == SEP).unwrap();
+            let pairs = (sep - 1) / 2;
+            let qkey = r[sep + 1];
+            // find the bound value
+            let mut bound = None;
+            for i in 0..pairs {
+                if r[1 + 2 * i] == qkey {
+                    bound = Some(r[2 + 2 * i]);
+                }
+            }
+            let answer = r[sep + 2];
+            assert_eq!(Some(answer), bound, "answer must be the bound value");
+            // exactly one scored position, and it predicts the answer
+            let wrow = &w[row * 48..(row + 1) * 48];
+            assert_eq!(wrow.iter().filter(|&&x| x > 0.0).count(), 1);
+            let pos = wrow.iter().position(|&x| x > 0.0).unwrap();
+            assert_eq!(pos, sep + 1);
+            assert_eq!(tgts[row * 48 + pos], answer);
+        }
+    }
+
+    #[test]
+    fn keys_distinct_within_sequence() {
+        let mut g = AssocRecall::new(3);
+        let b = g.batch(8, 64);
+        let toks = b.tokens.as_i32().unwrap();
+        for row in 0..8 {
+            let r = &toks[row * 64..(row + 1) * 64];
+            let sep = r.iter().position(|&x| x == SEP).unwrap();
+            let pairs = (sep - 1) / 2;
+            let keys: Vec<i32> = (0..pairs).map(|i| r[1 + 2 * i]).collect();
+            let uniq: std::collections::HashSet<_> = keys.iter().collect();
+            assert_eq!(uniq.len(), keys.len());
+        }
+    }
+}

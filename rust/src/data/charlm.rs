@@ -1,0 +1,147 @@
+//! Byte-level language modelling over an embedded public-domain corpus.
+//!
+//! The paper has no dataset ("only tested on random data"), so the char-LM
+//! workload uses a small embedded corpus of public-domain English prose and
+//! verse — enough structure (word statistics, punctuation, rhythm) for a
+//! few-million-parameter model to show a meaningful loss curve in a few
+//! hundred steps, with zero external files.  Windows are sampled uniformly;
+//! every position is scored.
+
+use super::{Batch, DataGen};
+use crate::rng::Rng;
+use crate::runtime::Tensor;
+
+/// Public-domain text (US founding documents, Shakespeare, Carroll,
+/// Melville, Austen — all long out of copyright), concatenated.
+pub const CORPUS: &str = "\
+When in the Course of human events, it becomes necessary for one people to \
+dissolve the political bands which have connected them with another, and to \
+assume among the powers of the earth, the separate and equal station to \
+which the Laws of Nature and of Nature's God entitle them, a decent respect \
+to the opinions of mankind requires that they should declare the causes \
+which impel them to the separation. We hold these truths to be self-evident, \
+that all men are created equal, that they are endowed by their Creator with \
+certain unalienable Rights, that among these are Life, Liberty and the \
+pursuit of Happiness. That to secure these rights, Governments are \
+instituted among Men, deriving their just powers from the consent of the \
+governed. \
+Shall I compare thee to a summer's day? Thou art more lovely and more \
+temperate: Rough winds do shake the darling buds of May, And summer's lease \
+hath all too short a date: Sometime too hot the eye of heaven shines, And \
+often is his gold complexion dimm'd; And every fair from fair sometime \
+declines, By chance, or nature's changing course, untrimm'd; But thy eternal \
+summer shall not fade Nor lose possession of that fair thou ow'st; Nor shall \
+Death brag thou wander'st in his shade, When in eternal lines to time thou \
+grow'st; So long as men can breathe or eyes can see, So long lives this, and \
+this gives life to thee. \
+Alice was beginning to get very tired of sitting by her sister on the bank, \
+and of having nothing to do: once or twice she had peeped into the book her \
+sister was reading, but it had no pictures or conversations in it, 'and what \
+is the use of a book,' thought Alice, 'without pictures or conversations?' \
+So she was considering in her own mind (as well as she could, for the hot \
+day made her feel very sleepy and stupid), whether the pleasure of making a \
+daisy-chain would be worth the trouble of getting up and picking the \
+daisies, when suddenly a White Rabbit with pink eyes ran close by her. \
+Call me Ishmael. Some years ago - never mind how long precisely - having \
+little or no money in my purse, and nothing particular to interest me on \
+shore, I thought I would sail about a little and see the watery part of the \
+world. It is a way I have of driving off the spleen and regulating the \
+circulation. Whenever I find myself growing grim about the mouth; whenever \
+it is a damp, drizzly November in my soul; whenever I find myself \
+involuntarily pausing before coffin warehouses, and bringing up the rear of \
+every funeral I meet; and especially whenever my hypos get such an upper \
+hand of me, that it requires a strong moral principle to prevent me from \
+deliberately stepping into the street, and methodically knocking people's \
+hats off - then, I account it high time to get to sea as soon as I can. \
+It is a truth universally acknowledged, that a single man in possession of \
+a good fortune, must be in want of a wife. However little known the feelings \
+or views of such a man may be on his first entering a neighbourhood, this \
+truth is so well fixed in the minds of the surrounding families, that he is \
+considered the rightful property of some one or other of their daughters. \
+'My dear Mr. Bennet,' said his lady to him one day, 'have you heard that \
+Netherfield Park is let at last?' Mr. Bennet replied that he had not. \
+Four score and seven years ago our fathers brought forth on this continent, \
+a new nation, conceived in Liberty, and dedicated to the proposition that \
+all men are created equal. Now we are engaged in a great civil war, testing \
+whether that nation, or any nation so conceived and so dedicated, can long \
+endure. We are met on a great battle-field of that war. We have come to \
+dedicate a portion of that field, as a final resting place for those who \
+here gave their lives that that nation might live. It is altogether fitting \
+and proper that we should do this. \
+To be, or not to be, that is the question: Whether 'tis nobler in the mind \
+to suffer The slings and arrows of outrageous fortune, Or to take arms \
+against a sea of troubles And by opposing end them. To die - to sleep, No \
+more; and by a sleep to say we end The heart-ache and the thousand natural \
+shocks That flesh is heir to: 'tis a consummation Devoutly to be wish'd. \
+";
+
+pub struct CharLm {
+    rng: Rng,
+    corpus: Vec<u8>,
+}
+
+impl CharLm {
+    pub fn new(seed: u64) -> Self {
+        CharLm { rng: Rng::new(seed), corpus: CORPUS.as_bytes().to_vec() }
+    }
+
+    /// Corpus length in bytes (for sizing expectations in tests/docs).
+    pub fn corpus_len(&self) -> usize {
+        self.corpus.len()
+    }
+}
+
+impl DataGen for CharLm {
+    fn name(&self) -> &'static str {
+        "charlm"
+    }
+
+    fn batch(&mut self, batch: usize, t: usize) -> Batch {
+        assert!(self.corpus.len() > t + 1, "corpus shorter than window");
+        let mut tokens = Vec::with_capacity(batch * t);
+        let mut targets = Vec::with_capacity(batch * t);
+        for _ in 0..batch {
+            let start =
+                self.rng.uniform_int(0, (self.corpus.len() - t - 1) as u64) as usize;
+            tokens.extend(self.corpus[start..start + t].iter().map(|&b| b as i32));
+            targets
+                .extend(self.corpus[start + 1..start + t + 1].iter().map(|&b| b as i32));
+        }
+        Batch {
+            tokens: Tensor::i32(vec![batch, t], tokens),
+            targets: Tensor::i32(vec![batch, t], targets),
+            weights: Tensor::f32(vec![batch, t], vec![1.0; batch * t]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_nontrivial() {
+        let g = CharLm::new(0);
+        assert!(g.corpus_len() > 4000, "corpus {} bytes", g.corpus_len());
+    }
+
+    #[test]
+    fn targets_are_shifted_tokens() {
+        let mut g = CharLm::new(0);
+        let b = g.batch(4, 32);
+        let toks = b.tokens.as_i32().unwrap();
+        let tgts = b.targets.as_i32().unwrap();
+        for row in 0..4 {
+            for i in 0..31 {
+                assert_eq!(tgts[row * 32 + i], toks[row * 32 + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_only() {
+        let mut g = CharLm::new(1);
+        let b = g.batch(2, 64);
+        assert!(b.tokens.as_i32().unwrap().iter().all(|&t| (0..256).contains(&t)));
+    }
+}

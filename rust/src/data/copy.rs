@@ -1,0 +1,113 @@
+//! Copy task: `[BOS, x1..xL, SEP, x1..xL, PAD...]` — the model must
+//! reproduce the span after the separator.  Only the reproduction span is
+//! scored.  Span length is sampled per sequence so models can't latch onto
+//! a fixed offset.
+
+use super::{Batch, DataGen, SEP};
+use crate::rng::Rng;
+use crate::runtime::Tensor;
+use crate::tokenizer::{BOS, PAD};
+
+pub struct CopyTask {
+    rng: Rng,
+    /// alphabet size for the random spans (small = learnable quickly)
+    pub alphabet: i32,
+}
+
+impl CopyTask {
+    pub fn new(seed: u64) -> Self {
+        CopyTask { rng: Rng::new(seed), alphabet: 64 }
+    }
+}
+
+impl DataGen for CopyTask {
+    fn name(&self) -> &'static str {
+        "copy"
+    }
+
+    fn batch(&mut self, batch: usize, t: usize) -> Batch {
+        let mut tokens = vec![PAD; batch * t];
+        let mut targets = vec![PAD; batch * t];
+        let mut weights = vec![0f32; batch * t];
+        // span must fit twice plus BOS and SEP
+        let max_span = (t - 2) / 2;
+        for b in 0..batch {
+            let span = self.rng.uniform_int(1, max_span as u64 + 1) as usize;
+            let row = &mut tokens[b * t..(b + 1) * t];
+            row[0] = BOS;
+            for i in 0..span {
+                row[1 + i] = self.rng.uniform_int(0, self.alphabet as u64) as i32;
+            }
+            row[1 + span] = SEP;
+            for i in 0..span {
+                row[2 + span + i] = row[1 + i];
+            }
+            // next-token targets; score only the copy span (positions that
+            // *predict* the copied tokens: SEP predicts x1, x_i predicts
+            // x_{i+1})
+            let trow = &mut targets[b * t..(b + 1) * t];
+            let wrow = &mut weights[b * t..(b + 1) * t];
+            for i in 0..t - 1 {
+                trow[i] = row[i + 1];
+            }
+            for i in (1 + span)..(1 + 2 * span) {
+                wrow[i] = 1.0;
+            }
+        }
+        Batch {
+            tokens: Tensor::i32(vec![batch, t], tokens),
+            targets: Tensor::i32(vec![batch, t], targets),
+            weights: Tensor::f32(vec![batch, t], weights),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_is_copyable() {
+        let mut g = CopyTask::new(0);
+        let b = g.batch(8, 32);
+        let toks = b.tokens.as_i32().unwrap();
+        let tgts = b.targets.as_i32().unwrap();
+        let w = b.weights.as_f32().unwrap();
+        for row in 0..8 {
+            let r = &toks[row * 32..(row + 1) * 32];
+            assert_eq!(r[0], BOS);
+            let sep_pos = r.iter().position(|&x| x == SEP).unwrap();
+            let span = sep_pos - 1;
+            // the copy: r[2+span..2+2span] == r[1..1+span]
+            assert_eq!(&r[sep_pos + 1..sep_pos + 1 + span], &r[1..1 + span]);
+            // weighted positions all predict copied tokens correctly
+            for i in 0..31 {
+                if w[row * 32 + i] > 0.0 {
+                    assert_eq!(tgts[row * 32 + i], r[i + 1]);
+                    assert!((sep_pos..sep_pos + span).contains(&i));
+                }
+            }
+            // exactly span positions scored
+            let scored: usize =
+                w[row * 32..(row + 1) * 32].iter().filter(|&&x| x > 0.0).count();
+            assert_eq!(scored, span);
+        }
+    }
+
+    #[test]
+    fn spans_vary() {
+        let mut g = CopyTask::new(1);
+        let b = g.batch(16, 64);
+        let toks = b.tokens.as_i32().unwrap();
+        let spans: std::collections::HashSet<usize> = (0..16)
+            .map(|row| {
+                toks[row * 64..(row + 1) * 64]
+                    .iter()
+                    .position(|&x| x == SEP)
+                    .unwrap()
+                    - 1
+            })
+            .collect();
+        assert!(spans.len() > 3, "span lengths should vary, got {spans:?}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Reverse task: `[BOS, x1..xL, SEP, xL..x1]` — reproduce the span
+//! *backwards*.  A strictly harder routing pattern than copy: the
+//! induction offset is different at every answer position (position i
+//! must attend to position `2+2*span-i` instead of a constant shift), so
+//! it stresses whether the attention approximation can express
+//! position-dependent routing rather than a single induction head.
+
+use super::{Batch, DataGen, SEP};
+use crate::rng::Rng;
+use crate::runtime::Tensor;
+use crate::tokenizer::{BOS, PAD};
+
+pub struct ReverseTask {
+    rng: Rng,
+    pub alphabet: i32,
+}
+
+impl ReverseTask {
+    pub fn new(seed: u64) -> Self {
+        ReverseTask { rng: Rng::new(seed), alphabet: 64 }
+    }
+}
+
+impl DataGen for ReverseTask {
+    fn name(&self) -> &'static str {
+        "reverse"
+    }
+
+    fn batch(&mut self, batch: usize, t: usize) -> Batch {
+        let mut tokens = vec![PAD; batch * t];
+        let mut targets = vec![PAD; batch * t];
+        let mut weights = vec![0f32; batch * t];
+        let max_span = (t - 2) / 2;
+        for b in 0..batch {
+            let span = self.rng.uniform_int(1, max_span as u64 + 1) as usize;
+            let row = &mut tokens[b * t..(b + 1) * t];
+            row[0] = BOS;
+            for i in 0..span {
+                row[1 + i] = self.rng.uniform_int(0, self.alphabet as u64) as i32;
+            }
+            row[1 + span] = SEP;
+            for i in 0..span {
+                row[2 + span + i] = row[span - i]; // reversed
+            }
+            let trow = &mut targets[b * t..(b + 1) * t];
+            let wrow = &mut weights[b * t..(b + 1) * t];
+            for i in 0..t - 1 {
+                trow[i] = row[i + 1];
+            }
+            for i in (1 + span)..(1 + 2 * span) {
+                wrow[i] = 1.0;
+            }
+        }
+        Batch {
+            tokens: Tensor::i32(vec![batch, t], tokens),
+            targets: Tensor::i32(vec![batch, t], targets),
+            weights: Tensor::f32(vec![batch, t], weights),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answer_is_reversed_span() {
+        let mut g = ReverseTask::new(0);
+        let b = g.batch(8, 40);
+        let toks = b.tokens.as_i32().unwrap();
+        let w = b.weights.as_f32().unwrap();
+        for row in 0..8 {
+            let r = &toks[row * 40..(row + 1) * 40];
+            let sep = r.iter().position(|&x| x == SEP).unwrap();
+            let span = sep - 1;
+            for i in 0..span {
+                assert_eq!(r[sep + 1 + i], r[span - i], "row {row} pos {i}");
+            }
+            let scored: usize =
+                w[row * 40..(row + 1) * 40].iter().filter(|&&x| x > 0.0).count();
+            assert_eq!(scored, span);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ReverseTask::new(4).batch(2, 24);
+        let b = ReverseTask::new(4).batch(2, 24);
+        assert_eq!(a.tokens, b.tokens);
+    }
+}

@@ -1,0 +1,189 @@
+//! Paper-experiment drivers shared by the CLI, the examples and the
+//! benches.  Every experiment id (Fig1, E1, E2, ...) in DESIGN.md §4 maps
+//! to one function here; thin wrappers in `benches/`/`examples/` call them
+//! and write CSV/JSONL into `results/`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::mathref;
+use crate::rng::Rng;
+use crate::runtime::{Runtime, Tensor};
+
+/// Figure 1: exp(x) vs Taylor orders 1..3 on [-3, 3].
+/// Returns CSV text (x, exp, order1, order2, order3).
+pub fn fig1_taylor_csv(n_points: usize) -> String {
+    let mut s = String::from("x,exp,order1,order2,order3\n");
+    for i in 0..n_points {
+        let x = -3.0 + 6.0 * i as f64 / (n_points - 1) as f64;
+        s.push_str(&format!(
+            "{:.4},{:.6},{:.6},{:.6},{:.6}\n",
+            x,
+            x.exp(),
+            mathref::taylor_exp(x, 1),
+            mathref::taylor_exp(x, 2),
+            mathref::taylor_exp(x, 3),
+        ));
+    }
+    s
+}
+
+/// One row of the E1 approximation-quality table.
+#[derive(Debug, Clone)]
+pub struct ApproxRow {
+    pub alpha: f64,
+    pub order: usize,
+    /// relative L2 error of ho attention vs the alpha-rescaled LN softmax
+    pub rel_err_vs_target: f64,
+    /// relative L2 error vs the *standard* softmax attention
+    pub rel_err_vs_std: f64,
+}
+
+/// E1: run the `approx_n256` artifact on random normal q/k/v and compare
+/// every (alpha, order) grid point against its softmax target.
+///
+/// The artifact computes all outputs in one executable so every comparison
+/// sees exactly the same inputs.
+pub fn approx_quality(runtime: &Runtime, seed: u64) -> Result<Vec<ApproxRow>> {
+    let exe = runtime.load("approx_n256")?;
+    let a = &exe.artifact;
+    let mut rng = Rng::new(seed);
+    let inputs: Vec<Tensor> = a
+        .inputs
+        .iter()
+        .map(|s| {
+            let n: usize = s.shape.iter().product();
+            Tensor::f32(s.shape.clone(), rng.normal_vec_f32(n, 1.0))
+        })
+        .collect();
+    let outputs = exe.run(&inputs)?;
+
+    // manifest meta carries the grids
+    let alphas: Vec<f64> = a
+        .meta
+        .get("alphas")
+        .and_then(|j| j.as_arr().map(|v| v.iter().filter_map(|x| x.as_f64()).collect()))
+        .unwrap_or_else(|| vec![1.0, 2.0, 3.0, 4.0]);
+    let orders: Vec<usize> = a
+        .meta
+        .get("orders")
+        .and_then(|j| {
+            j.as_arr()
+                .map(|v| v.iter().filter_map(|x| x.as_i64().map(|i| i as usize)).collect())
+        })
+        .unwrap_or_else(|| vec![0, 1, 2]);
+
+    // outputs: [softmax_std, then per alpha: softmax_ln_a, ho2_a_o0.. ]
+    let std_out = &outputs[0];
+    let mut rows = Vec::new();
+    let mut idx = 1;
+    for &alpha in &alphas {
+        let target = &outputs[idx];
+        idx += 1;
+        for &order in &orders {
+            let out = &outputs[idx];
+            idx += 1;
+            rows.push(ApproxRow {
+                alpha,
+                order,
+                rel_err_vs_target: out.rel_l2(target)?,
+                rel_err_vs_std: out.rel_l2(std_out)?,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn approx_rows_csv(rows: &[ApproxRow]) -> String {
+    let mut s = String::from("alpha,order,rel_err_vs_target,rel_err_vs_std\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{},{},{:.6},{:.6}\n",
+            r.alpha, r.order, r.rel_err_vs_target, r.rel_err_vs_std
+        ));
+    }
+    s
+}
+
+/// Cross-check an attention artifact against the independent pure-rust
+/// reference (`mathref`).  Returns max |diff|; used by the quickstart
+/// example and integration tests to prove the whole AOT chain is faithful.
+pub fn crosscheck_attention(
+    runtime: &Runtime,
+    artifact: &str,
+    seed: u64,
+    tol: f32,
+) -> Result<f32> {
+    let exe = runtime.load(artifact)?;
+    let a = exe.artifact.clone();
+    let kind = a
+        .meta
+        .get("kind")
+        .and_then(|j| j.as_str())
+        .unwrap_or("ho2")
+        .to_string();
+    let causal = a.meta.get("causal").and_then(|j| j.as_bool()).unwrap_or(true);
+    let order = a.meta.get("order").and_then(|j| j.as_i64()).unwrap_or(2) as usize;
+    let alpha = a.meta.get("alpha").and_then(|j| j.as_f64()).unwrap_or(3.0);
+
+    let shape = a.inputs[0].shape.clone(); // (b, h, n, d)
+    let (b, h, n, d) = (shape[0], shape[1], shape[2], shape[3]);
+    let mut rng = Rng::new(seed);
+    let count = b * h * n * d;
+    let q = Tensor::f32(shape.clone(), rng.normal_vec_f32(count, 1.0));
+    let k = Tensor::f32(shape.clone(), rng.normal_vec_f32(count, 1.0));
+    let v = Tensor::f32(shape.clone(), rng.normal_vec_f32(count, 1.0));
+
+    let out = exe.run(&[q.clone(), k.clone(), v.clone()])?.remove(0);
+    let expect = mathref::attention_bhnd(
+        &kind,
+        q.as_f32()?,
+        k.as_f32()?,
+        v.as_f32()?,
+        b * h,
+        n,
+        d,
+        order,
+        alpha,
+        causal,
+    );
+    let expect_t = Tensor::f32(shape, expect);
+    let err = out.max_abs_diff(&expect_t)?;
+    anyhow::ensure!(
+        err < tol,
+        "artifact {artifact} disagrees with rust reference: max|diff| = {err} >= {tol}"
+    );
+    Ok(err)
+}
+
+/// Write a string to `results/<name>` (creating the directory).
+pub fn write_results(dir: &Path, name: &str, content: &str) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_shape_and_anchor_points() {
+        let csv = fig1_taylor_csv(7);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 8);
+        // x = 0 row: everything equals 1
+        let mid: Vec<f64> =
+            lines[4].split(',').map(|s| s.parse().unwrap()).collect();
+        assert_eq!(mid[0], 0.0);
+        for v in &mid[1..] {
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+        // x = 3 row: order3 underestimates exp, order2 underestimates more
+        let hi: Vec<f64> =
+            lines[7].split(',').map(|s| s.parse().unwrap()).collect();
+        assert!(hi[1] > hi[4] && hi[4] > hi[3] && hi[3] > hi[2]);
+    }
+}

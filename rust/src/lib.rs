@@ -1,0 +1,51 @@
+//! # HOLT — Higher Order Linear Transformer
+//!
+//! Reproduction of Mercat 2020, *Higher Order Linear Transformer*: linear-
+//! complexity attention through a 2nd-order Taylor expansion of the softmax,
+//! built as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for the factorized
+//!   higher-order attention + baselines, with pure-jnp oracles.
+//! * **L2** (`python/compile/model.py`): jax transformer LM (fwd / fused
+//!   AdamW train step / O(1)-state recurrent decode), AOT-lowered to HLO
+//!   text once by `python/compile/aot.py`.
+//! * **L3** (this crate): the runtime coordinator — loads the artifacts via
+//!   PJRT and runs training, serving and every paper experiment with no
+//!   python on any hot path.
+//!
+//! Entry points: the `holt` binary (see `main.rs` for the CLI), the
+//! examples (`examples/`), and the benches (`benches/`, one per paper
+//! table/figure — see DESIGN.md §4 for the experiment index).
+
+pub mod bench;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod json;
+pub mod mathref;
+pub mod metrics;
+pub mod params;
+pub mod plot;
+pub mod rng;
+pub mod runtime;
+pub mod tokenizer;
+
+/// Locate the artifacts directory: `$HOLT_ARTIFACTS`, else the first
+/// `artifacts/manifest.json` found walking up from the current directory.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("HOLT_ARTIFACTS") {
+        return dir.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,567 @@
+//! `holt` — the CLI front end of the coordinator.
+//!
+//! Subcommands:
+//!   info                     list models + artifacts from the manifest
+//!   train                    run a training job (E3 / E6)
+//!   generate                 sample a completion from a checkpoint
+//!   serve                    continuous-batching server (TCP or synthetic)
+//!   client                   load generator against a running server
+//!   approx                   E1 approximation-quality table
+//!   fig1                     regenerate the paper's Figure 1 data
+//!
+//! Argument parsing is hand-rolled (clap is not in the offline vendor
+//! set): `--key value` flags after the subcommand, `--help` anywhere.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use holt::checkpoint::Checkpoint;
+use holt::config::{ServeConfig, Toml, TrainConfig};
+use holt::coordinator::generation::{Generator, SampleOpts};
+use holt::coordinator::server;
+use holt::coordinator::trainer::{run_training, Trainer};
+use holt::experiments;
+use holt::json::{obj, Json};
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::Runtime;
+
+/// Parsed `--key value` flags (plus bare `--flag` booleans).
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let bare_bool = i + 1 >= argv.len() || argv[i + 1].starts_with("--");
+                if bare_bool {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                }
+            } else {
+                bail!("unexpected positional argument '{a}' (flags are --key value)");
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "\
+holt — Higher Order Linear Transformer coordinator
+
+USAGE: holt <command> [--key value ...]
+
+COMMANDS
+  info                         list models and artifacts
+  train      --model M --task T --steps N [--lr X --seed S --warmup W
+             --log-every K --eval-every K --ckpt-every K --out DIR
+             --config FILE]
+  generate   --model M --ckpt FILE [--prompt STR --max-tokens N
+             --temperature X --top-k K --seed S]
+  serve      --model M [--ckpt FILE --addr HOST:PORT --seed S]
+             [--synthetic --requests N --prompt-len L --max-tokens N
+              --gap-ms MS]
+  client     --addr HOST:PORT [--requests N --concurrency C
+             --prompt STR --max-tokens N]
+  approx     [--seed S --out DIR]          E1 approximation table
+  fig1       [--points N --out DIR]        Figure 1 data
+  crosscheck [--artifact NAME]             artifact vs rust reference
+  ablation   [--steps N --task T]          E6 alpha/order training grid
+  eval       --model M --ckpt FILE [--task T --batches N]
+                                           held-out loss/ppl/accuracy
+  plot       --files a.jsonl,b.jsonl [--y loss --event step --x step]
+                                           terminal chart of metric curves
+  ckpt-info  --ckpt FILE                   inspect a checkpoint
+
+Artifacts are located via $HOLT_ARTIFACTS or ./artifacts.
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(&argv[1..]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => cmd_info(args),
+        "train" => cmd_train(args),
+        "generate" => cmd_generate(args),
+        "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
+        "approx" => cmd_approx(args),
+        "fig1" => cmd_fig1(args),
+        "crosscheck" => cmd_crosscheck(args),
+        "ablation" => cmd_ablation(args),
+        "eval" => cmd_eval(args),
+        "plot" => cmd_plot(args),
+        "ckpt-info" => cmd_ckpt_info(args),
+        _ => bail!("unknown command '{cmd}'\n\n{USAGE}"),
+    }
+}
+
+fn runtime() -> Result<Runtime> {
+    Runtime::new(&holt::default_artifacts_dir())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    println!("platform: {}", rt.platform());
+    println!("\nmodels:");
+    let mut models: Vec<_> = rt.manifest.models.values().collect();
+    models.sort_by(|a, b| a.name.cmp(&b.name));
+    for m in models {
+        println!(
+            "  {:<28} {:>10} params  attn={} order={} alpha={} d={} L={} ctx={}",
+            m.name,
+            m.n_params,
+            m.config.attn,
+            m.config.order,
+            m.config.alpha,
+            m.config.d_model,
+            m.config.n_layers,
+            m.config.max_len,
+        );
+    }
+    println!("\nartifacts: {}", rt.manifest.artifacts.len());
+    for name in rt.manifest.artifact_names() {
+        let a = &rt.manifest.artifacts[&name];
+        println!("  {:<32} {} in / {} out", name, a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.apply_toml(&Toml::load(std::path::Path::new(path))?)?;
+    }
+    if let Some(m) = args.get("model") {
+        cfg.model = m.into();
+    }
+    if let Some(t) = args.get("task") {
+        cfg.task = t.into();
+    }
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.lr = args.get_f64("lr", cfg.lr)?;
+    cfg.warmup = args.get_usize("warmup", cfg.warmup)?;
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    cfg.log_every = args.get_usize("log-every", cfg.log_every)?;
+    cfg.eval_every = args.get_usize("eval-every", cfg.eval_every)?;
+    cfg.ckpt_every = args.get_usize("ckpt-every", cfg.ckpt_every)?;
+    if let Some(o) = args.get("out") {
+        cfg.out_dir = o.into();
+    }
+
+    let rt = runtime()?;
+    println!(
+        "training {} on task '{}' for {} steps (lr {:.2e}, seed {})",
+        cfg.model, cfg.task, cfg.steps, cfg.lr, cfg.seed
+    );
+    let t0 = Instant::now();
+    let history = run_training(&rt, &cfg, false)?;
+    let final_loss = history.last().map(|s| s.loss).unwrap_or(f32::NAN);
+    println!(
+        "done: {} steps in {:.1}s, final loss {:.4}",
+        history.len(),
+        t0.elapsed().as_secs_f64(),
+        final_loss
+    );
+    Ok(())
+}
+
+fn load_params(rt: &Runtime, model: &str, ckpt: Option<&str>, seed: u64) -> Result<ParamStore> {
+    match ckpt {
+        Some(path) => {
+            let ck = Checkpoint::load(std::path::Path::new(path))?;
+            let p = ck.section("params")?.clone();
+            p.check_spec(&rt.manifest.model(model)?.param_spec)?;
+            println!("loaded checkpoint at step {}", ck.step);
+            Ok(p)
+        }
+        None => {
+            eprintln!("note: no --ckpt given, using random init");
+            let spec = &rt.manifest.model(model)?.param_spec;
+            Ok(ParamStore::init(spec, &mut Rng::new(seed)))
+        }
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("ho2_small").to_string();
+    let rt = runtime()?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let params = load_params(&rt, &model, args.get("ckpt"), seed)?;
+    let gen = Generator::new(&rt, &model, params)?;
+    let opts = SampleOpts {
+        temperature: args.get_f64("temperature", 0.8)? as f32,
+        top_k: args.get_usize("top-k", 40)?,
+        max_tokens: args.get_usize("max-tokens", 64)?,
+    };
+    let prompt = args.get("prompt").unwrap_or("The ").to_string();
+    let mut rng = Rng::new(seed ^ 0x9e37);
+    let t0 = Instant::now();
+    let (ids, text) = gen.generate(&prompt, opts, &mut rng)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{prompt}{text}");
+    eprintln!(
+        "[{} tokens in {:.2}s = {:.1} tok/s, O(1) state]",
+        ids.len(),
+        dt,
+        ids.len() as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ServeConfig {
+        model: args.get("model").unwrap_or("ho2_small").to_string(),
+        ckpt: args.get("ckpt").map(String::from),
+        addr: args.get("addr").unwrap_or("127.0.0.1:8490").to_string(),
+        seed: args.get_usize("seed", 0)? as u64,
+        ..Default::default()
+    };
+    let rt = runtime()?;
+    let params = load_params(&rt, &cfg.model, cfg.ckpt.as_deref(), cfg.seed)?;
+
+    if args.has("synthetic") {
+        let stats = server::run_synthetic(
+            &rt,
+            &cfg.model,
+            params,
+            args.get_usize("requests", 32)?,
+            args.get_usize("prompt-len", 32)?,
+            args.get_usize("max-tokens", 32)?,
+            args.get_usize("gap-ms", 0)? as u64,
+            cfg.seed,
+        )?;
+        println!("{}", stats.report());
+        return Ok(());
+    }
+    server::serve_tcp(&rt, &cfg.model, params, &cfg.addr, cfg.seed)
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8490").to_string();
+    let n = args.get_usize("requests", 8)?;
+    let conc = args.get_usize("concurrency", 4)?.max(1);
+    let max_tokens = args.get_usize("max-tokens", 32)?;
+    let prompt = args.get("prompt").unwrap_or("Call me ").to_string();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..conc {
+        let addr = addr.clone();
+        let prompt = prompt.clone();
+        let reqs = n / conc + usize::from(w < n % conc);
+        handles.push(std::thread::spawn(move || -> Result<(u64, f64)> {
+            let mut tokens = 0u64;
+            let mut lat = 0.0;
+            let stream = std::net::TcpStream::connect(&addr)?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = BufReader::new(stream);
+            for _ in 0..reqs {
+                let req = obj(vec![
+                    ("prompt", prompt.as_str().into()),
+                    ("max_tokens", max_tokens.into()),
+                ]);
+                let t = Instant::now();
+                writeln!(writer, "{req}")?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                lat += t.elapsed().as_secs_f64();
+                let resp = Json::parse(&line)?;
+                tokens += resp.get("n_tokens").and_then(|j| j.as_i64()).unwrap_or(0) as u64;
+            }
+            Ok((tokens, lat / reqs.max(1) as f64))
+        }));
+    }
+    let mut total_tokens = 0u64;
+    let mut mean_lat = 0.0;
+    for h in handles {
+        let (t, l) = h.join().unwrap()?;
+        total_tokens += t;
+        mean_lat += l / conc as f64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} requests, {} tokens in {:.2}s — {:.1} tok/s, mean request latency {:.3}s",
+        n,
+        total_tokens,
+        wall,
+        total_tokens as f64 / wall,
+        mean_lat
+    );
+    Ok(())
+}
+
+fn cmd_approx(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let rows = experiments::approx_quality(&rt, seed)?;
+    println!("E1 — approximation quality (rel L2 error vs its softmax target)");
+    println!("{:>6} {:>6} {:>16} {:>16}", "alpha", "order", "err_vs_target", "err_vs_std");
+    for r in &rows {
+        println!(
+            "{:>6} {:>6} {:>16.4} {:>16.4}",
+            r.alpha, r.order, r.rel_err_vs_target, r.rel_err_vs_std
+        );
+    }
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let path =
+        experiments::write_results(&out, "e1_approx.csv", &experiments::approx_rows_csv(&rows))?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let points = args.get_usize("points", 121)?;
+    let csv = experiments::fig1_taylor_csv(points);
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let path = experiments::write_results(&out, "fig1_taylor.csv", &csv)?;
+    println!("wrote {path:?} ({points} points on [-3, 3])");
+    Ok(())
+}
+
+fn cmd_crosscheck(args: &Args) -> Result<()> {
+    let rt = runtime()?;
+    let names: Vec<String> = match args.get("artifact") {
+        Some(a) => vec![a.to_string()],
+        None => vec![
+            "attn_softmax_n256".into(),
+            "attn_linear_n256".into(),
+            "attn_ho2_n256".into(),
+            "attn_softmax_n256_pallas".into(),
+            "attn_linear_n256_pallas".into(),
+            "attn_ho2_n256_pallas".into(),
+        ],
+    };
+    for name in names {
+        let err = experiments::crosscheck_attention(&rt, &name, 7, 5e-4)?;
+        println!("{name:<32} max|diff| vs rust reference = {err:.2e}  OK");
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 120)?;
+    let lr = args.get_f64("lr", 2e-3)?;
+    let task = args.get("task").unwrap_or("copy").to_string();
+    let rt = runtime()?;
+    // the ho2 (alpha, order) grid lowered by aot.py, plus both baselines
+    let models = [
+        "ho2_tiny",        // alpha=3, order=2 (the paper's setting)
+        "ho2_tiny_a1_o2",
+        "ho2_tiny_a6_o2",
+        "ho2_tiny_a3_o1",
+        "ho2_tiny_a1_o1",
+        "ho2_tiny_a3_o0",
+        "linear_tiny",
+        "softmax_tiny",
+    ];
+    println!("E6 — alpha/order ablation: task '{task}', {steps} steps each\n");
+    println!(
+        "{:<16} {:>6} {:>6} {:>12} {:>12} {:>10}",
+        "model", "alpha", "order", "final loss", "eval acc", "wall (s)"
+    );
+    let mut csv = String::from("model,alpha,order,final_loss,eval_acc,wall_s\n");
+    for model in models {
+        let entry = rt.manifest.model(model)?.clone();
+        let mut trainer = Trainer::new(&rt, model, 42)?;
+        let (b, t) = trainer.train_shape();
+        let mut gen = holt::data::make(&task, 42)?;
+        let mut eval_gen = holt::data::make(&task, 77)?;
+        let t0 = Instant::now();
+        let mut last = f32::NAN;
+        for i in 0..steps {
+            let lr_i = if i < 20 { lr * (i + 1) as f64 / 20.0 } else { lr };
+            last = trainer.train_step(&gen.batch(b, t), lr_i as f32)?.loss;
+        }
+        let acc = if entry.artifacts.contains_key("fwd") {
+            trainer.eval_accuracy(&eval_gen.batch(b, t))?
+        } else {
+            f64::NAN
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let (alpha, order) = (entry.config.alpha, entry.config.order);
+        println!(
+            "{model:<16} {alpha:>6} {order:>6} {last:>12.4} {acc:>12.3} {wall:>10.1}"
+        );
+        csv.push_str(&format!("{model},{alpha},{order},{last},{acc},{wall}\n"));
+    }
+    let path = experiments::write_results(
+        std::path::Path::new(args.get("out").unwrap_or("results")),
+        "e6_ablation.csv",
+        &csv,
+    )?;
+    println!("\nwrote {path:?}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("ho2_small").to_string();
+    let task = args.get("task").unwrap_or("charlm").to_string();
+    let batches = args.get_usize("batches", 8)?;
+    let seed = args.get_usize("seed", 1234)? as u64;
+    let rt = runtime()?;
+    let entry = rt.manifest.model(&model)?.clone();
+    let params = load_params(&rt, &model, args.get("ckpt"), seed)?;
+
+    // evaluate through the fwd artifact with a held-out generator seed
+    let fwd = rt.load(
+        entry
+            .artifacts
+            .get("fwd")
+            .ok_or_else(|| anyhow::anyhow!("model '{model}' has no fwd artifact"))?,
+    )?;
+    let (b, t) = (entry.config.train_batch, entry.config.train_len);
+    let mut gen = holt::data::make(&task, seed)?;
+    let mut loss_sum = 0.0;
+    let mut acc_sum = 0.0;
+    for _ in 0..batches {
+        let batch = gen.batch(b, t);
+        let mut inputs = params.leaves.clone();
+        inputs.push(batch.tokens.clone());
+        let logits = fwd.run(&inputs)?.remove(0);
+        loss_sum += batch.cross_entropy(&logits)?;
+        acc_sum += batch.accuracy(&logits)?;
+    }
+    let loss = loss_sum / batches as f64;
+    let acc = acc_sum / batches as f64;
+    println!(
+        "{model} on {task}: loss {loss:.4}  ppl {:.2}  accuracy {acc:.3}  ({batches} batches of {b}x{t})",
+        loss.exp()
+    );
+    Ok(())
+}
+
+fn cmd_plot(args: &Args) -> Result<()> {
+    let files = args
+        .get("files")
+        .ok_or_else(|| anyhow::anyhow!("--files a.jsonl,b.jsonl required"))?;
+    let event = args.get("event").unwrap_or("step");
+    let x = args.get("x").unwrap_or("step");
+    let y = args.get("y").unwrap_or("loss");
+    let series: Result<Vec<_>> = files
+        .split(',')
+        .map(|f| holt::plot::Series::from_jsonl(std::path::Path::new(f), event, x, y))
+        .collect();
+    let chart = holt::plot::render(&series?, 72, 18)?;
+    println!("{y} vs {x} ({event} events)\n{chart}");
+    Ok(())
+}
+
+fn cmd_ckpt_info(args: &Args) -> Result<()> {
+    let path = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow::anyhow!("--ckpt FILE required"))?;
+    let ck = Checkpoint::load(std::path::Path::new(path))?;
+    println!("{path}: step {}", ck.step);
+    for (name, store) in &ck.sections {
+        println!(
+            "  section '{}': {} leaves, {} elements ({:.1} MiB)",
+            name,
+            store.len(),
+            store.total_elements(),
+            store.total_elements() as f64 * 4.0 / (1024.0 * 1024.0)
+        );
+    }
+    let params = ck.section("params")?;
+    for (n, t) in params.names.iter().zip(&params.leaves).take(6) {
+        let d = t.as_f32()?;
+        let rms = (d.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+            / d.len().max(1) as f64)
+            .sqrt();
+        println!("    {n:<24} {:?} rms {rms:.4}", t.shape);
+    }
+    if params.len() > 6 {
+        println!("    ... {} more leaves", params.len() - 6);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn flags_with_values() {
+        let a = parse(&["--model", "ho2_small", "--steps", "300"]);
+        assert_eq!(a.get("model"), Some("ho2_small"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 300);
+        assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bare_boolean_flags() {
+        let a = parse(&["--synthetic", "--requests", "8"]);
+        assert!(a.has("synthetic"));
+        assert_eq!(a.get_usize("requests", 0).unwrap(), 8);
+        let b = parse(&["--requests", "8", "--synthetic"]);
+        assert!(b.has("synthetic"));
+    }
+
+    #[test]
+    fn rejects_positional_and_bad_numbers() {
+        assert!(Args::parse(&["oops".to_string()]).is_err());
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.get_usize("steps", 0).is_err());
+        assert!(a.get_f64("steps", 0.0).is_err());
+    }
+}

@@ -1,0 +1,323 @@
+//! Pure-rust reference math: Taylor expansion (Figure 1), exact softmax
+//! attention, the paper's higher-order linear attention, and the elu+1
+//! baseline — all direct, readable implementations used to cross-check the
+//! AOT artifacts from a second, independently-written codebase, and to
+//! regenerate the paper's Figure 1 without touching python.
+//!
+//! Shapes: attention functions take flat row-major buffers with explicit
+//! (n, d) sizes for a single head; callers loop heads/batches.
+
+/// sum_{i<=order} x^i / i! — the paper's exp approximation (Figure 1).
+pub fn taylor_exp(x: f64, order: usize) -> f64 {
+    let mut acc = 1.0;
+    let mut term = 1.0;
+    for i in 1..=order {
+        term *= x / i as f64;
+        acc += term;
+    }
+    acc
+}
+
+/// Row-wise LayerNorm without affine, in place. x is (n, d) row-major.
+pub fn layernorm_noaffine(x: &mut [f32], n: usize, d: usize, eps: f32) {
+    assert_eq!(x.len(), n * d);
+    for r in 0..n {
+        let row = &mut x[r * d..(r + 1) * d];
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+}
+
+/// Exact softmax attention for one head: q (n,d), k (m,d), v (m,dv).
+pub fn softmax_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    causal: bool,
+) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n * dv];
+    let mut logits = vec![0.0f32; m];
+    for i in 0..n {
+        let limit = if causal { i + 1 } else { m };
+        let mut maxv = f32::NEG_INFINITY;
+        for j in 0..limit {
+            let mut dot = 0.0f32;
+            for c in 0..d {
+                dot += q[i * d + c] * k[j * d + c];
+            }
+            logits[j] = dot * scale;
+            maxv = maxv.max(logits[j]);
+        }
+        let mut den = 0.0f32;
+        for j in 0..limit {
+            logits[j] = (logits[j] - maxv).exp();
+            den += logits[j];
+        }
+        for j in 0..limit {
+            let w = logits[j] / den;
+            for c in 0..dv {
+                out[i * dv + c] += w * v[j * dv + c];
+            }
+        }
+    }
+    out
+}
+
+/// The paper's higher-order linear attention (direct O(n^2) evaluation,
+/// used as an oracle): LN(q), LN(k), A = taylor(q.k/(a sqrt d)), row-norm.
+#[allow(clippy::too_many_arguments)]
+pub fn ho_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    order: usize,
+    alpha: f64,
+    causal: bool,
+    normalize_qk: bool,
+) -> Vec<f32> {
+    let mut qn = q.to_vec();
+    let mut kn = k.to_vec();
+    if normalize_qk {
+        layernorm_noaffine(&mut qn, n, d, 1e-5);
+        layernorm_noaffine(&mut kn, m, d, 1e-5);
+    }
+    let scale = 1.0 / (alpha * (d as f64).sqrt());
+    let mut out = vec![0.0f32; n * dv];
+    for i in 0..n {
+        let limit = if causal { i + 1 } else { m };
+        let mut den = 0.0f64;
+        let mut acc = vec![0.0f64; dv];
+        for j in 0..limit {
+            let mut dot = 0.0f64;
+            for c in 0..d {
+                dot += qn[i * d + c] as f64 * kn[j * d + c] as f64;
+            }
+            let w = taylor_exp(dot * scale, order);
+            den += w;
+            for c in 0..dv {
+                acc[c] += w * v[j * dv + c] as f64;
+            }
+        }
+        let den = den.max(1e-6);
+        for c in 0..dv {
+            out[i * dv + c] = (acc[c] / den) as f32;
+        }
+    }
+    out
+}
+
+/// elu(x)+1 feature map (Katharopoulos et al. 2020 baseline).
+pub fn elu1(x: f32) -> f32 {
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp()
+    }
+}
+
+/// First-order linear attention baseline (direct evaluation oracle).
+#[allow(clippy::too_many_arguments)]
+pub fn linear_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    dv: usize,
+    causal: bool,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * dv];
+    for i in 0..n {
+        let limit = if causal { i + 1 } else { m };
+        let mut den = 0.0f64;
+        let mut acc = vec![0.0f64; dv];
+        for j in 0..limit {
+            let mut w = 0.0f64;
+            for c in 0..d {
+                w += elu1(q[i * d + c]) as f64 * elu1(k[j * d + c]) as f64;
+            }
+            den += w;
+            for c in 0..dv {
+                acc[c] += w * v[j * dv + c] as f64;
+            }
+        }
+        let den = den.max(1e-6);
+        for c in 0..dv {
+            out[i * dv + c] = (acc[c] / den) as f32;
+        }
+    }
+    out
+}
+
+/// Run a single-head attention reference over a (b, h, n, d) tensor the
+/// way the AOT attention artifacts are shaped. kind: "softmax" | "linear"
+/// | "ho2" (with order/alpha).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_bhnd(
+    kind: &str,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bh: usize,
+    n: usize,
+    d: usize,
+    order: usize,
+    alpha: f64,
+    causal: bool,
+) -> Vec<f32> {
+    let stride = n * d;
+    let mut out = vec![0.0f32; bh * stride];
+    for s in 0..bh {
+        let (qs, ks, vs) = (
+            &q[s * stride..(s + 1) * stride],
+            &k[s * stride..(s + 1) * stride],
+            &v[s * stride..(s + 1) * stride],
+        );
+        let o = match kind {
+            "softmax" => softmax_attention(qs, ks, vs, n, n, d, d, causal),
+            "linear" => linear_attention(qs, ks, vs, n, n, d, d, causal),
+            "ho2" => ho_attention(qs, ks, vs, n, n, d, d, order, alpha, causal, true),
+            _ => panic!("unknown attention kind {kind}"),
+        };
+        out[s * stride..(s + 1) * stride].copy_from_slice(&o);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn taylor_matches_exp_near_zero() {
+        for &x in &[-0.1, 0.0, 0.05, 0.2] {
+            assert!((taylor_exp(x, 2) - x.exp()).abs() < 2e-3, "x={x}");
+            assert!((taylor_exp(x, 3) - x.exp()).abs() < 1e-4, "x={x}");
+        }
+        // paper's Figure 1 point: far from zero the approximation is bad
+        assert!((taylor_exp(3.0, 2) - 3f64.exp()).abs() > 10.0);
+    }
+
+    #[test]
+    fn taylor_order2_is_positive() {
+        // 1 + x + x^2/2 >= 1/2 — the denominator-safety property
+        for i in -100..=100 {
+            let x = i as f64 * 0.3;
+            assert!(taylor_exp(x, 2) >= 0.5 - 1e-12, "x={x}");
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut r = Rng::new(0);
+        let (n, d) = (4, 64);
+        let mut x = r.normal_vec_f32(n * d, 2.0);
+        layernorm_noaffine(&mut x, n, d, 1e-5);
+        for row in x.chunks(d) {
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_are_convex_combinations() {
+        let mut r = Rng::new(1);
+        let (n, d) = (8, 16);
+        let q = r.normal_vec_f32(n * d, 1.0);
+        let k = r.normal_vec_f32(n * d, 1.0);
+        let v = vec![1.0f32; n * d]; // constant v -> output must be exactly 1
+        let out = softmax_attention(&q, &k, &v, n, n, d, d, false);
+        for x in out {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ho_attention_constant_v_invariant() {
+        // row-normalized weights: constant v must be reproduced exactly
+        let mut r = Rng::new(2);
+        let (n, d) = (8, 16);
+        let q = r.normal_vec_f32(n * d, 1.0);
+        let k = r.normal_vec_f32(n * d, 1.0);
+        let v = vec![2.5f32; n * d];
+        for order in [0, 1, 2] {
+            let out = ho_attention(&q, &k, &v, n, n, d, d, order, 3.0, true, true);
+            for x in out {
+                assert!((x - 2.5).abs() < 1e-4, "order {order}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_prefix_property() {
+        // causal attention output at position i must not change when the
+        // suffix after i changes
+        let mut r = Rng::new(3);
+        let (n, d) = (12, 8);
+        let q = r.normal_vec_f32(n * d, 1.0);
+        let k = r.normal_vec_f32(n * d, 1.0);
+        let v = r.normal_vec_f32(n * d, 1.0);
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for x in &mut k2[6 * d..] {
+            *x += 5.0;
+        }
+        for x in &mut v2[6 * d..] {
+            *x -= 3.0;
+        }
+        for kind in ["softmax", "linear", "ho2"] {
+            let a = attention_bhnd(kind, &q, &k, &v, 1, n, d, 2, 3.0, true);
+            let b = attention_bhnd(kind, &q, &k2, &v2, 1, n, d, 2, 3.0, true);
+            for i in 0..6 * d {
+                assert!((a[i] - b[i]).abs() < 1e-5, "{kind} leaked future");
+            }
+        }
+    }
+
+    #[test]
+    fn ho2_approximates_softmax_on_small_logits() {
+        // with LN + alpha=3 the logits are small, so order-2 should be a
+        // decent softmax approximation — and order 2 beats order 1
+        let mut r = Rng::new(4);
+        let (n, d) = (32, 32);
+        let q = r.normal_vec_f32(n * d, 1.0);
+        let k = r.normal_vec_f32(n * d, 1.0);
+        let v = r.normal_vec_f32(n * d, 1.0);
+        // the softmax target with the same LN + alpha rescaling
+        let mut qn = q.clone();
+        let mut kn = k.clone();
+        layernorm_noaffine(&mut qn, n, d, 1e-5);
+        layernorm_noaffine(&mut kn, n, d, 1e-5);
+        let alpha = 3.0f32;
+        let qs: Vec<f32> = qn.iter().map(|x| x / alpha.sqrt()).collect();
+        let ks: Vec<f32> = kn.iter().map(|x| x / alpha.sqrt()).collect();
+        let target = softmax_attention(&qs, &ks, &v, n, n, d, d, false);
+        let err = |o: &[f32]| -> f64 {
+            o.iter()
+                .zip(&target)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let e1 = err(&ho_attention(&q, &k, &v, n, n, d, d, 1, 3.0, false, true));
+        let e2 = err(&ho_attention(&q, &k, &v, n, n, d, d, 2, 3.0, false, true));
+        assert!(e2 < e1, "order 2 ({e2}) should beat order 1 ({e1})");
+    }
+}

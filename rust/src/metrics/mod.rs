@@ -1,0 +1,175 @@
+//! Metrics: online statistics, latency histograms, throughput meters and
+//! structured log writers (JSONL/CSV) used by the trainer, the server and
+//! the benches.
+
+use std::time::{Duration, Instant};
+
+/// Online mean/min/max/std over f64 samples (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Fixed-capacity latency recorder with exact percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct Latencies {
+    samples_us: Vec<u64>,
+}
+
+impl Latencies {
+    pub fn new() -> Self {
+        Latencies { samples_us: Vec::new() }
+    }
+
+    pub fn push(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Exact percentile (p in [0,100]) in microseconds.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        // nearest-rank: ceil(p/100 * n) - 1, clamped
+        let rank = ((p / 100.0 * v.len() as f64).ceil() as isize - 1).max(0) as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
+            self.len(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.percentile_us(100.0),
+        )
+    }
+}
+
+/// Items-per-second meter over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    pub items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / dt
+        }
+    }
+}
+
+/// Simple scoped timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_moments() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut l = Latencies::new();
+        for i in 1..=100u64 {
+            l.push(Duration::from_micros(i));
+        }
+        assert_eq!(l.percentile_us(0.0), 1);
+        assert_eq!(l.percentile_us(50.0), 50);
+        assert_eq!(l.percentile_us(100.0), 100);
+    }
+}

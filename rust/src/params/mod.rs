@@ -1,0 +1,158 @@
+//! Parameter / optimizer-state store.
+//!
+//! Rust owns model state end-to-end: initialization (from the manifest's
+//! per-leaf init specs, with the coordinator's deterministic PRNG),
+//! train-step plumbing (flat leaf lists in manifest order — the calling
+//! convention of every AOT entry point), and checkpointing.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::rng::Rng;
+use crate::runtime::{Init, LeafSpec, Tensor};
+
+/// A named, ordered set of tensors matching a manifest leaf spec.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub leaves: Vec<Tensor>,
+}
+
+impl ParamStore {
+    /// Initialize from leaf specs (normal/zeros/ones as the manifest says).
+    pub fn init(spec: &[LeafSpec], rng: &mut Rng) -> ParamStore {
+        let mut names = Vec::with_capacity(spec.len());
+        let mut leaves = Vec::with_capacity(spec.len());
+        for s in spec {
+            let n: usize = s.shape.iter().product();
+            let t = match s.init {
+                Init::Zeros => Tensor::f32(s.shape.clone(), vec![0.0; n]),
+                Init::Ones => Tensor::f32(s.shape.clone(), vec![1.0; n]),
+                Init::Normal { std } => {
+                    Tensor::f32(s.shape.clone(), rng.normal_vec_f32(n, std))
+                }
+            };
+            names.push(s.name.clone());
+            leaves.push(t);
+        }
+        ParamStore { names, leaves }
+    }
+
+    /// All-zeros store with the same shapes (optimizer moments m, v).
+    pub fn zeros_like(&self) -> ParamStore {
+        ParamStore {
+            names: self.names.clone(),
+            leaves: self
+                .leaves
+                .iter()
+                .map(|t| Tensor::f32(t.shape.clone(), vec![0.0; t.len()]))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaves.is_empty()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.leaves.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        let i = self
+            .names
+            .iter()
+            .position(|n| n == name)
+            .ok_or_else(|| anyhow!("no leaf named '{name}'"))?;
+        Ok(&self.leaves[i])
+    }
+
+    /// Replace all leaves from a drained slice (train-step outputs).
+    pub fn replace_from(&mut self, new_leaves: Vec<Tensor>) -> Result<()> {
+        if new_leaves.len() != self.leaves.len() {
+            bail!(
+                "leaf count mismatch: {} vs {}",
+                new_leaves.len(),
+                self.leaves.len()
+            );
+        }
+        for (old, new) in self.leaves.iter().zip(&new_leaves) {
+            if old.shape != new.shape {
+                bail!("leaf shape changed: {:?} -> {:?}", old.shape, new.shape);
+            }
+        }
+        self.leaves = new_leaves;
+        Ok(())
+    }
+
+    /// Validate shapes against a spec (checkpoint-load safety).
+    pub fn check_spec(&self, spec: &[LeafSpec]) -> Result<()> {
+        if spec.len() != self.leaves.len() {
+            bail!("spec has {} leaves, store has {}", spec.len(), self.leaves.len());
+        }
+        for (s, (n, t)) in spec.iter().zip(self.names.iter().zip(&self.leaves)) {
+            if &s.name != n {
+                bail!("leaf name mismatch: '{}' vs '{}'", s.name, n);
+            }
+            if s.shape != t.shape {
+                bail!("leaf '{}' shape {:?} vs spec {:?}", n, t.shape, s.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<LeafSpec> {
+        vec![
+            LeafSpec { name: "w".into(), shape: vec![4, 8], init: Init::Normal { std: 0.5 } },
+            LeafSpec { name: "g".into(), shape: vec![8], init: Init::Ones },
+            LeafSpec { name: "b".into(), shape: vec![8], init: Init::Zeros },
+        ]
+    }
+
+    #[test]
+    fn init_follows_spec() {
+        let mut rng = Rng::new(0);
+        let p = ParamStore::init(&spec(), &mut rng);
+        assert_eq!(p.total_elements(), 32 + 8 + 8);
+        assert!(p.get("g").unwrap().as_f32().unwrap().iter().all(|&x| x == 1.0));
+        assert!(p.get("b").unwrap().as_f32().unwrap().iter().all(|&x| x == 0.0));
+        let w = p.get("w").unwrap().as_f32().unwrap();
+        assert!(w.iter().any(|&x| x != 0.0));
+        // std scaling roughly holds
+        let var = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        assert!(var > 0.05 && var < 1.0, "var {var}");
+        p.check_spec(&spec()).unwrap();
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let a = ParamStore::init(&spec(), &mut Rng::new(7));
+        let b = ParamStore::init(&spec(), &mut Rng::new(7));
+        assert_eq!(a.leaves, b.leaves);
+    }
+
+    #[test]
+    fn replace_guards_shapes() {
+        let mut p = ParamStore::init(&spec(), &mut Rng::new(0));
+        let bad = vec![Tensor::f32(vec![2], vec![0.0; 2]); 3];
+        assert!(p.replace_from(bad).is_err());
+        let good = p.leaves.clone();
+        p.replace_from(good).unwrap();
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let p = ParamStore::init(&spec(), &mut Rng::new(0));
+        let z = p.zeros_like();
+        assert_eq!(z.total_elements(), p.total_elements());
+        assert!(z.leaves.iter().all(|t| t.as_f32().unwrap().iter().all(|&x| x == 0.0)));
+    }
+}

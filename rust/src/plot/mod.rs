@@ -1,0 +1,172 @@
+//! Terminal plotting: render metric series (e.g. the E3 loss curves from
+//! the trainer's JSONL logs) as a braille/ASCII chart — no plotting
+//! dependency exists offline, and eyeballing loss curves matters.
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// Extract a series from a trainer JSONL log: events with
+    /// `event == filter` contribute (`x_key`, `y_key`).
+    pub fn from_jsonl(
+        path: &std::path::Path,
+        filter: &str,
+        x_key: &str,
+        y_key: &str,
+    ) -> Result<Series> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let mut points = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line)?;
+            if v.get("event").and_then(|j| j.as_str()) == Some(filter) {
+                if let (Some(x), Some(y)) = (
+                    v.get(x_key).and_then(|j| j.as_f64()),
+                    v.get(y_key).and_then(|j| j.as_f64()),
+                ) {
+                    points.push((x, y));
+                }
+            }
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(Series { name, points })
+    }
+}
+
+const MARKS: [char; 6] = ['o', '+', 'x', '*', '#', '@'];
+
+/// Render series into a `width` x `height` character chart with axes and a
+/// legend.  Points are mapped nearest-cell; later series draw over earlier
+/// ones (legend shows each series' mark).
+pub fn render(series: &[Series], width: usize, height: usize) -> Result<String> {
+    if series.iter().all(|s| s.points.is_empty()) {
+        bail!("nothing to plot");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for s in series {
+        for &(x, y) in &s.points {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10}{:<w2$}{:>w3$.0}\n",
+        "",
+        format!("{xmin:.0}"),
+        xmax,
+        w2 = width / 2,
+        w3 = width / 2
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "    {} {}  (n={})\n",
+            MARKS[si % MARKS.len()],
+            s.name,
+            s.points.len()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_monotone_series() {
+        let s = Series {
+            name: "loss".into(),
+            points: (0..50).map(|i| (i as f64, 5.0 - 0.08 * i as f64)).collect(),
+        };
+        let chart = render(&[s], 60, 12).unwrap();
+        assert!(chart.contains('o'));
+        assert!(chart.contains("loss"));
+        // descending series: first data row (max y) has a mark near the left
+        let first_row = chart.lines().next().unwrap();
+        let last_data_row = chart.lines().nth(11).unwrap();
+        assert!(first_row.find('o').unwrap() < last_data_row.find('o').unwrap());
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_marks() {
+        let a = Series { name: "a".into(), points: vec![(0.0, 0.0), (1.0, 1.0)] };
+        let b = Series { name: "b".into(), points: vec![(0.0, 1.0), (1.0, 0.0)] };
+        let chart = render(&[a, b], 20, 8).unwrap();
+        assert!(chart.contains('o') && chart.contains('+'));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(render(&[], 10, 5).is_err());
+        let s = Series { name: "e".into(), points: vec![] };
+        assert!(render(&[s], 10, 5).is_err());
+    }
+
+    #[test]
+    fn from_jsonl_extracts_events() {
+        let dir = std::env::temp_dir().join("holt_plot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("log.jsonl");
+        std::fs::write(
+            &p,
+            concat!(
+                r#"{"event":"start","steps":2}"#,
+                "\n",
+                r#"{"event":"step","step":1,"loss":5.0}"#,
+                "\n",
+                r#"{"event":"step","step":2,"loss":4.0}"#,
+                "\n",
+                r#"{"event":"eval","step":2,"accuracy":0.5}"#,
+                "\n"
+            ),
+        )
+        .unwrap();
+        let s = Series::from_jsonl(&p, "step", "step", "loss").unwrap();
+        assert_eq!(s.points, vec![(1.0, 5.0), (2.0, 4.0)]);
+        let e = Series::from_jsonl(&p, "eval", "step", "accuracy").unwrap();
+        assert_eq!(e.points, vec![(2.0, 0.5)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

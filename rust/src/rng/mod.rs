@@ -1,0 +1,232 @@
+//! Deterministic PRNG — xoshiro256++ with splitmix64 seeding.
+//!
+//! The `rand` crate is not in the offline vendor set; this is the standard
+//! xoshiro256++ generator (Blackman & Vigna) plus the distributions the
+//! coordinator needs: uniform ints, standard normal (Box–Muller, cached
+//! spare), categorical sampling from logits, and Fisher–Yates shuffle.
+//! Everything in the system that uses randomness takes a seed, so runs are
+//! exactly reproducible.
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent stream (for per-worker rngs).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi) — unbiased via rejection.
+    pub fn uniform_int(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo, "empty range");
+        let span = hi - lo;
+        let zone = u64::MAX - u64::MAX % span;
+        loop {
+            let r = self.next_u64();
+            if r < zone {
+                return lo + r % span;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (polar form), cached spare.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.spare_normal = Some(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// Vector of normals scaled by `std`, as f32 (parameter init).
+    pub fn normal_vec_f32(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| (self.normal() as f32) * std).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.uniform_int(0, (i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized logits with temperature and
+    /// optional top-k truncation (k = 0 means no truncation).
+    /// temperature == 0.0 is greedy argmax.
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32, top_k: usize) -> usize {
+        assert!(!logits.is_empty());
+        if temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // top-k filter: indices of the k largest logits (k=0 -> all)
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if top_k > 0 && top_k < logits.len() {
+            idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            idx.truncate(top_k);
+        }
+        let maxv = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = idx
+            .iter()
+            .map(|&i| (((logits[i] - maxv) / temperature) as f64).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut r = self.uniform() * total;
+        for (w, &i) in weights.iter().zip(&idx) {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        *idx.last().unwrap()
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut a = Rng::new(42);
+        let mut s1 = a.split(1);
+        let mut s2 = a.split(2);
+        assert_ne!(s1.next_u64(), s2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+            let k = r.uniform_int(5, 17);
+            assert!((5..17).contains(&k));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(1);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn greedy_sampling() {
+        let mut r = Rng::new(3);
+        let logits = vec![0.1, 5.0, -2.0];
+        assert_eq!(r.sample_logits(&logits, 0.0, 0), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let mut r = Rng::new(3);
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        for _ in 0..200 {
+            let s = r.sample_logits(&logits, 1.0, 2);
+            assert!(s < 2, "sampled outside top-2");
+        }
+    }
+
+    #[test]
+    fn sampling_follows_distribution() {
+        let mut r = Rng::new(11);
+        let logits = vec![0.0, (3.0f32).ln()]; // p = [0.25, 0.75]
+        let n = 40_000;
+        let ones: usize = (0..n)
+            .map(|_| r.sample_logits(&logits, 1.0, 0))
+            .sum();
+        let p = ones as f64 / n as f64;
+        assert!((p - 0.75).abs() < 0.02, "p {p}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

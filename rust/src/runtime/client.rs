@@ -1,0 +1,134 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! The interchange format is HLO *text* (not serialized HloModuleProto):
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see DESIGN.md and
+//! /opt/xla-example/README.md).  One `Runtime` owns the PJRT client and a
+//! lazy compile cache keyed by artifact name — executables compile on first
+//! use and are shared thereafter (`Arc`, thread-safe).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{Artifact, Manifest};
+use crate::runtime::tensor::Tensor;
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates arity + shapes + dtypes against
+    /// the manifest, returns one host tensor per declared output.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = &self.artifact.inputs;
+        if inputs.len() != spec.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.artifact.name,
+                spec.len(),
+                inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(spec) {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "{}: input '{}' expects {:?}/{}, got {:?}/{}",
+                    self.artifact.name,
+                    s.name,
+                    s.shape,
+                    s.dtype.name(),
+                    t.shape,
+                    t.dtype().name()
+                );
+            }
+        }
+        let lits: Result<Vec<xla::Literal>> = inputs.iter().map(|t| t.to_literal()).collect();
+        let lits = lits?;
+        self.run_literals(&lits.iter().collect::<Vec<_>>())
+    }
+
+    /// Execute with pre-built literals.  The serving/training hot paths
+    /// convert their *constant* inputs (parameters) to literals once and
+    /// reuse them across calls — see §Perf in EXPERIMENTS.md; this skips a
+    /// full host copy of every parameter per step.
+    pub fn run_literals(&self, lits: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        if lits.len() != self.artifact.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {} literals",
+                self.artifact.name,
+                self.artifact.inputs.len(),
+                lits.len()
+            );
+        }
+        let result = self.exe.execute::<&xla::Literal>(lits)?;
+        // jax lowering uses return_tuple=True: one tuple literal out.
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.artifact.outputs.len() {
+            bail!(
+                "{}: manifest declares {} outputs, executable returned {}",
+                self.artifact.name,
+                self.artifact.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+/// PJRT client + artifact registry + compile cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    verbose: bool,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            verbose: std::env::var("HOLT_VERBOSE").is_ok(),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let artifact = self.manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", artifact.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        if self.verbose {
+            eprintln!("[runtime] compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        }
+        let e = Arc::new(Executable { artifact, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

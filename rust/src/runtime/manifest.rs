@@ -1,0 +1,232 @@
+//! Typed view of `artifacts/manifest.json` — the contract with the python
+//! compile path (python/compile/aot.py writes it; nothing else does).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::Json;
+use crate::runtime::tensor::DType;
+
+/// One input or output port of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: Json,
+}
+
+/// Parameter-leaf initialization spec (rust owns initialization).
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Init {
+    Zeros,
+    Ones,
+    Normal { std: f32 },
+}
+
+/// Model hyper-parameters as lowered (mirror of python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub preset: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub attn: String,
+    pub order: usize,
+    pub alpha: f64,
+    pub impl_: String,
+    pub train_batch: usize,
+    pub train_len: usize,
+    pub decode_batch: usize,
+}
+
+/// One registered model: config + leaf specs + artifact names.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub config: ModelConfig,
+    pub n_params: usize,
+    pub param_spec: Vec<LeafSpec>,
+    pub state_spec: Vec<LeafSpec>,
+    /// kind ("fwd"/"train"/"decode") -> artifact name
+    pub artifacts: HashMap<String, String>,
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, Artifact>,
+    pub models: HashMap<String, ModelEntry>,
+}
+
+fn io_spec(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v.req("name")?.as_str().unwrap_or_default().to_string(),
+        shape: v
+            .req("shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad shape"))?,
+        dtype: DType::parse(v.req("dtype")?.as_str().unwrap_or("f32"))?,
+    })
+}
+
+fn leaf_spec(v: &Json) -> Result<LeafSpec> {
+    let init = match v.get("init").and_then(|j| j.as_str()) {
+        Some("ones") => Init::Ones,
+        Some("normal") => Init::Normal {
+            std: v
+                .get("std")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.02) as f32,
+        },
+        // decode-state specs carry no init field: they start zeroed
+        _ => Init::Zeros,
+    };
+    Ok(LeafSpec {
+        name: v.req("name")?.as_str().unwrap_or_default().to_string(),
+        shape: v
+            .req("shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad shape"))?,
+        init,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in root
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let inputs: Result<Vec<_>> =
+                a.req("inputs")?.as_arr().unwrap_or(&[]).iter().map(io_spec).collect();
+            let outputs: Result<Vec<_>> =
+                a.req("outputs")?.as_arr().unwrap_or(&[]).iter().map(io_spec).collect();
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    file: dir.join(a.req("file")?.as_str().unwrap_or_default()),
+                    kind: a.req("kind")?.as_str().unwrap_or_default().to_string(),
+                    inputs: inputs?,
+                    outputs: outputs?,
+                    meta: a.get("meta").cloned().unwrap_or(Json::Obj(vec![])),
+                },
+            );
+        }
+
+        let mut models = HashMap::new();
+        for (name, m) in root
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            let c = m.req("config")?;
+            let config = ModelConfig {
+                preset: c.req("preset")?.as_str().unwrap_or_default().to_string(),
+                vocab_size: c.req("vocab_size")?.as_i64().unwrap_or(0) as usize,
+                d_model: c.req("d_model")?.as_i64().unwrap_or(0) as usize,
+                n_heads: c.req("n_heads")?.as_i64().unwrap_or(0) as usize,
+                n_layers: c.req("n_layers")?.as_i64().unwrap_or(0) as usize,
+                d_ff: c.req("d_ff")?.as_i64().unwrap_or(0) as usize,
+                max_len: c.req("max_len")?.as_i64().unwrap_or(0) as usize,
+                attn: c.req("attn")?.as_str().unwrap_or_default().to_string(),
+                order: c.req("order")?.as_i64().unwrap_or(2) as usize,
+                alpha: c.req("alpha")?.as_f64().unwrap_or(3.0),
+                impl_: c.req("impl")?.as_str().unwrap_or("jnp").to_string(),
+                train_batch: c.req("train_batch")?.as_i64().unwrap_or(0) as usize,
+                train_len: c.req("train_len")?.as_i64().unwrap_or(0) as usize,
+                decode_batch: c.req("decode_batch")?.as_i64().unwrap_or(0) as usize,
+            };
+            let param_spec: Result<Vec<_>> = m
+                .req("param_spec")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(leaf_spec)
+                .collect();
+            let state_spec: Result<Vec<_>> = m
+                .req("state_spec")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(leaf_spec)
+                .collect();
+            let mut arts = HashMap::new();
+            for (k, v) in m.req("artifacts")?.as_obj().unwrap_or(&[]) {
+                arts.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+            }
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    config,
+                    n_params: m.req("n_params")?.as_i64().unwrap_or(0) as usize,
+                    param_spec: param_spec?,
+                    state_spec: state_spec?,
+                    artifacts: arts,
+                },
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+                                   self.artifact_names()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            let mut names: Vec<_> = self.models.keys().cloned().collect();
+            names.sort();
+            anyhow!("model '{name}' not in manifest (have: {names:?})")
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+impl ModelEntry {
+    /// Total number of parameter elements (sanity-checked vs python count).
+    pub fn param_elements(&self) -> usize {
+        self.param_spec.iter().map(|l| l.shape.iter().product::<usize>()).sum()
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 runtime: PJRT client wrapper, artifact manifest, host tensors.
+//!
+//! `Runtime` loads HLO-text artifacts produced by `python/compile/aot.py`
+//! (the only python in the system, build-time exclusively) and executes
+//! them on the PJRT CPU client from the `xla` crate.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{Artifact, Init, IoSpec, LeafSpec, Manifest, ModelEntry};
+pub use tensor::{DType, Data, Tensor};

@@ -1,0 +1,220 @@
+//! Host-side tensors and conversion to/from PJRT literals.
+//!
+//! The coordinator keeps all model/optimizer/decode state as `Tensor`s
+//! (dense row-major, f32 or i32) and converts at the executable boundary.
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::f32(shape.to_vec(), vec![0.0; n]),
+            DType::I32 => Tensor::i32(shape.to_vec(), vec![0; n]),
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::f32(shape.to_vec(), vec![1.0; n])
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Tensor::f32(vec![], vec![x])
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        Tensor::i32(vec![], vec![x])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match (&self.data, self.len()) {
+            (Data::F32(v), 1) => Ok(v[0]),
+            (Data::I32(v), 1) => Ok(v[0] as f32),
+            _ => bail!("not a scalar (shape {:?})", self.shape),
+        }
+    }
+
+    /// Convert to a PJRT literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            Data::I32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from a PJRT literal (copies).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(dims, lit.to_vec::<i32>()?)),
+            t => Err(anyhow!("unsupported literal element type {t:?}")),
+        }
+    }
+
+    /// Max |a - b| over two f32 tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max))
+    }
+
+    /// Mean squared error against another tensor.
+    pub fn mse(&self, other: &Tensor) -> Result<f64> {
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        if a.len() != b.len() {
+            bail!("length mismatch");
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / a.len() as f64)
+    }
+
+    /// Relative L2 error ||a-b|| / ||b||.
+    pub fn rel_l2(&self, reference: &Tensor) -> Result<f64> {
+        let (a, b) = (self.as_f32()?, reference.as_f32()?);
+        if a.len() != b.len() {
+            bail!("length mismatch");
+        }
+        let num: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+        Ok((num / den.max(1e-30)).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = Tensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn metrics() {
+        let a = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(vec![3], vec![1.0, 2.0, 4.0]);
+        assert!((a.max_abs_diff(&b).unwrap() - 1.0).abs() < 1e-6);
+        assert!((a.mse(&b).unwrap() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_i32(7);
+        assert_eq!(t.scalar().unwrap(), 7.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Minimal byte-pair encoding: trainable merge table over bytes.
+//!
+//! Used by the char-LM workload when `--bpe-merges N` is set; the byte
+//! tokenizer is the default.  Merged tokens are assigned ids from 259
+//! upward (after the specials), capped at VOCAB_SIZE, so BPE-encoded
+//! streams remain valid inputs for the lowered models.
+
+use std::collections::HashMap;
+
+use super::VOCAB_SIZE;
+
+/// A trained BPE model: ordered merges + decode table.
+#[derive(Debug, Clone)]
+pub struct Bpe {
+    /// (left, right) -> merged id, in training order (rank = priority).
+    merges: Vec<((i32, i32), i32)>,
+    /// merged id -> byte expansion
+    expansions: HashMap<i32, Vec<u8>>,
+}
+
+impl Bpe {
+    /// Train `n_merges` merges on a corpus (greedy most-frequent-pair).
+    pub fn train(corpus: &[u8], n_merges: usize) -> Bpe {
+        let mut seq: Vec<i32> = corpus.iter().map(|&b| b as i32).collect();
+        let mut merges = Vec::new();
+        let mut expansions: HashMap<i32, Vec<u8>> = HashMap::new();
+        let mut next_id = 259; // after PAD/BOS/EOS
+
+        for _ in 0..n_merges {
+            if next_id as usize >= VOCAB_SIZE || seq.len() < 2 {
+                break;
+            }
+            // count adjacent pairs
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &count)) = counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            let id = next_id;
+            next_id += 1;
+            merges.push((pair, id));
+            let expand = |tok: i32, exp: &HashMap<i32, Vec<u8>>| -> Vec<u8> {
+                if tok < 256 {
+                    vec![tok as u8]
+                } else {
+                    exp.get(&tok).cloned().unwrap_or_default()
+                }
+            };
+            let mut e = expand(pair.0, &expansions);
+            e.extend(expand(pair.1, &expansions));
+            expansions.insert(id, e);
+            // apply the merge to the working sequence
+            seq = apply_merge(&seq, pair, id);
+        }
+        Bpe { merges, expansions }
+    }
+
+    /// Encode bytes by replaying merges in training order.
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        let mut seq: Vec<i32> = text.iter().map(|&b| b as i32).collect();
+        for &(pair, id) in &self.merges {
+            seq = apply_merge(&seq, pair, id);
+        }
+        seq
+    }
+
+    /// Decode ids back to bytes.
+    pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            if (0..256).contains(&t) {
+                out.push(t as u8);
+            } else if let Some(e) = self.expansions.get(&t) {
+                out.extend_from_slice(e);
+            }
+            // specials are dropped
+        }
+        out
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+}
+
+fn apply_merge(seq: &[i32], pair: (i32, i32), id: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(seq.len());
+    let mut i = 0;
+    while i < seq.len() {
+        if i + 1 < seq.len() && seq[i] == pair.0 && seq[i + 1] == pair.1 {
+            out.push(id);
+            i += 2;
+        } else {
+            out.push(seq[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_and_roundtrip() {
+        let corpus = b"the theme of the thesis is the theory";
+        let bpe = Bpe::train(corpus, 8);
+        assert!(bpe.n_merges() > 0);
+        let ids = bpe.encode(corpus);
+        assert!(ids.len() < corpus.len(), "BPE should compress");
+        assert_eq!(bpe.decode(&ids), corpus.to_vec());
+    }
+
+    #[test]
+    fn roundtrip_unseen_text() {
+        let bpe = Bpe::train(b"aaabbbaaabbb", 4);
+        let text = b"xyz aaa bbb unseen";
+        assert_eq!(bpe.decode(&bpe.encode(text)), text.to_vec());
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let bpe = Bpe::train(b"abababababababab", 100);
+        for &id in &bpe.encode(b"abab") {
+            assert!((id as usize) < VOCAB_SIZE);
+        }
+    }
+
+    #[test]
+    fn zero_merges_is_bytes() {
+        let bpe = Bpe::train(b"abcabc", 0);
+        let ids = bpe.encode(b"abc");
+        assert_eq!(ids, vec![97, 98, 99]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Tokenization substrate: byte-level tokenizer (the default for all
+//! experiments; vocab = 256 bytes + specials, matching python/compile/
+//! configs.py) plus a small trainable BPE for the char-LM workloads.
+
+pub mod bpe;
+
+/// Special token ids — must match python/compile/configs.py.
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+/// Total vocab size the models are lowered with (padded to multiple of 16).
+pub const VOCAB_SIZE: usize = 272;
+
+/// Byte-level tokenizer: one token per byte, specials above 255.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    /// Encode with BOS prepended and optionally EOS appended.
+    pub fn encode_with_specials(&self, text: &str, eos: bool) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 2);
+        v.push(BOS);
+        v.extend(text.as_bytes().iter().map(|&b| b as i32));
+        if eos {
+            v.push(EOS);
+        }
+        v
+    }
+
+    /// Decode, dropping specials and replacing invalid utf-8 lossily.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hello, world");
+        assert_eq!(t.decode(&ids), "hello, world");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "héllo 😀";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode_with_specials("ab", true);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = ByteTokenizer::new();
+        for id in t.encode_with_specials("\u{0}\u{7f}é", true) {
+            assert!((id as usize) < VOCAB_SIZE);
+        }
+    }
+}

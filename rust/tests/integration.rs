@@ -1,0 +1,249 @@
+//! Integration tests over the real artifacts (require `make artifacts`).
+//!
+//! These exercise the full L3 path: manifest -> PJRT compile -> execute,
+//! trainer steps, checkpoint resume, decode/forward equivalence and the
+//! continuous-batching engine — everything a user touches.
+
+use holt::checkpoint::Checkpoint;
+use holt::coordinator::generation::{decode_step, CachedParams, Generator, SampleOpts};
+use holt::coordinator::server;
+use holt::coordinator::state::StateManager;
+use holt::coordinator::trainer::Trainer;
+use holt::data;
+use holt::experiments;
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::{Runtime, Tensor};
+
+// The PJRT client is deliberately !Send (Rc internally), so each test
+// builds its own runtime; compiles are per-test but the tiny artifacts
+// compile in well under a second.
+fn runtime() -> Runtime {
+    Runtime::new(&holt::default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_expected_models() {
+    let rt = &runtime();
+    for name in ["ho2_tiny", "linear_tiny", "softmax_tiny", "ho2_small"] {
+        let m = rt.manifest.model(name).unwrap();
+        assert_eq!(m.param_elements(), m.n_params, "{name}");
+    }
+}
+
+#[test]
+fn attention_artifacts_match_rust_reference_multi_seed() {
+    // property-style: the jnp and pallas artifacts must agree with the
+    // independently-written rust reference for several random inputs
+    let rt = &runtime();
+    for seed in [1, 2, 3] {
+        for art in ["attn_ho2_n256", "attn_ho2_n256_pallas", "attn_linear_n256",
+                    "attn_softmax_n256"] {
+            let err = experiments::crosscheck_attention(rt, art, seed, 5e-4).unwrap();
+            assert!(err < 5e-4, "{art} seed {seed}: {err}");
+        }
+    }
+}
+
+#[test]
+fn fwd_executes_and_is_deterministic() {
+    let rt = &runtime();
+    let mut rng = Rng::new(0);
+    let m = rt.manifest.model("ho2_tiny").unwrap();
+    let params = ParamStore::init(&m.param_spec, &mut rng);
+    let exe = rt.load(m.artifacts.get("fwd").unwrap()).unwrap();
+    let (b, t) = (m.config.train_batch, m.config.train_len);
+    let toks = Tensor::i32(vec![b, t], (0..(b * t) as i32).map(|i| i % 256).collect());
+    let mut inputs = params.leaves.clone();
+    inputs.push(toks);
+    let a = exe.run(&inputs).unwrap().remove(0);
+    let b2 = exe.run(&inputs).unwrap().remove(0);
+    assert_eq!(a.shape, vec![b, t, m.config.vocab_size]);
+    assert_eq!(a.max_abs_diff(&b2).unwrap(), 0.0);
+    assert!(a.as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn run_rejects_wrong_arity_and_shapes() {
+    let rt = &runtime();
+    let exe = rt.load("attn_ho2_n64").unwrap();
+    // wrong arity
+    assert!(exe.run(&[]).is_err());
+    // wrong shape
+    let bad = Tensor::f32(vec![1, 4, 32, 64], vec![0.0; 4 * 32 * 64]);
+    let good = Tensor::f32(vec![1, 4, 64, 64], vec![0.0; 4 * 64 * 64]);
+    assert!(exe.run(&[bad.clone(), good.clone(), good.clone()]).is_err());
+    // wrong dtype
+    let ints = Tensor::i32(vec![1, 4, 64, 64], vec![0; 4 * 64 * 64]);
+    assert!(exe.run(&[ints, good.clone(), good.clone()]).is_err());
+}
+
+#[test]
+fn trainer_reduces_loss_on_copy_task() {
+    let rt = &runtime();
+    let mut trainer = Trainer::new(rt, "ho2_tiny", 7).unwrap();
+    let (b, t) = trainer.train_shape();
+    let mut gen = data::make("copy", 7).unwrap();
+    let mut first = None;
+    let mut last = 0.0;
+    for i in 0..15 {
+        let batch = gen.batch(b, t);
+        let s = trainer.train_step(&batch, 1e-3).unwrap();
+        if i == 0 {
+            first = Some(s.loss);
+        }
+        last = s.loss;
+    }
+    let first = first.unwrap();
+    assert!(last < first - 0.05, "loss did not decrease: {first} -> {last}");
+    assert_eq!(trainer.step, 15);
+}
+
+#[test]
+fn checkpoint_resume_is_bit_exact() {
+    let rt = &runtime();
+    let dir = std::env::temp_dir().join("holt_it_ckpt");
+    let path = dir.join("t.ckpt");
+
+    let mut a = Trainer::new(rt, "ho2_tiny", 3).unwrap();
+    let (b, t) = a.train_shape();
+    let mut gen = data::make("assoc", 3).unwrap();
+    let batches: Vec<_> = (0..6).map(|_| gen.batch(b, t)).collect();
+    for batch in &batches[..3] {
+        a.train_step(batch, 5e-4).unwrap();
+    }
+    a.checkpoint().save(&path).unwrap();
+    // continue original
+    let mut losses_a = Vec::new();
+    for batch in &batches[3..] {
+        losses_a.push(a.train_step(batch, 5e-4).unwrap().loss);
+    }
+    // resume copy
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.step, 3);
+    let mut b2 = Trainer::from_checkpoint(rt, "ho2_tiny", &ck).unwrap();
+    let mut losses_b = Vec::new();
+    for batch in &batches[3..] {
+        losses_b.push(b2.train_step(batch, 5e-4).unwrap().loss);
+    }
+    assert_eq!(losses_a, losses_b, "resume must be bit-exact");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn decode_matches_forward_teacher_forced() {
+    // the O(1)-state decode artifact must reproduce the fwd artifact's
+    // logits column by column
+    let rt = &runtime();
+    let m = rt.manifest.model("ho2_tiny").unwrap();
+    let mut rng = Rng::new(11);
+    let params = ParamStore::init(&m.param_spec, &mut rng);
+
+    let (b, t) = (m.config.train_batch, m.config.train_len);
+    let bd = m.config.decode_batch;
+    let toks_vec: Vec<i32> = (0..(b * t) as i32).map(|i| (i * 37 + 11) % 256).collect();
+    let mut inputs = params.leaves.clone();
+    inputs.push(Tensor::i32(vec![b, t], toks_vec.clone()));
+    let fwd = rt.load(m.artifacts.get("fwd").unwrap()).unwrap();
+    let logits_full = fwd.run(&inputs).unwrap().remove(0);
+    let v = m.config.vocab_size;
+    let lf = logits_full.as_f32().unwrap();
+
+    // drive decode over the first `bd` rows for 16 steps
+    let dec = rt.load(m.artifacts.get("decode").unwrap()).unwrap();
+    let cached = CachedParams::new(&params).unwrap();
+    let mut sm = StateManager::new(&m.state_spec).unwrap();
+    for _ in 0..bd {
+        sm.alloc().unwrap();
+    }
+    let steps = 16;
+    for pos in 0..steps {
+        let feed: Vec<i32> = (0..bd).map(|r| toks_vec[r * t + pos]).collect();
+        let logits = decode_step(&dec, &cached, &mut sm, &feed).unwrap();
+        for r in 0..bd {
+            sm.advance(r);
+        }
+        let dl = logits.as_f32().unwrap();
+        for r in 0..bd {
+            let want = &lf[(r * t + pos) * v..(r * t + pos) * v + v];
+            let got = &dl[r * v..(r + 1) * v];
+            let err = want
+                .iter()
+                .zip(got)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 5e-3, "pos {pos} row {r}: max|diff| {err}");
+        }
+    }
+}
+
+#[test]
+fn generator_produces_tokens() {
+    let rt = &runtime();
+    let m = rt.manifest.model("ho2_tiny").unwrap();
+    let params = ParamStore::init(&m.param_spec, &mut Rng::new(5));
+    let gen = Generator::new(rt, "ho2_tiny", params).unwrap();
+    let mut rng = Rng::new(9);
+    let opts = SampleOpts { temperature: 1.0, top_k: 0, max_tokens: 12 };
+    let (ids, text) = gen.generate("ab", opts, &mut rng).unwrap();
+    assert!(ids.len() <= 12);
+    assert!(text.len() <= ids.len() * 4);
+    // greedy decoding twice gives identical outputs
+    let g2 = SampleOpts { temperature: 0.0, top_k: 0, max_tokens: 8 };
+    let (a, _) = gen.generate("xy", g2, &mut Rng::new(1)).unwrap();
+    let (b, _) = gen.generate("xy", g2, &mut Rng::new(2)).unwrap();
+    assert_eq!(a, b, "greedy must ignore the rng");
+}
+
+#[test]
+fn engine_serves_synthetic_load() {
+    let rt = &runtime();
+    let m = rt.manifest.model("ho2_tiny").unwrap();
+    let params = ParamStore::init(&m.param_spec, &mut Rng::new(5));
+    let stats =
+        server::run_synthetic(rt, "ho2_tiny", params, 9, 12, 8, 0, 42).unwrap();
+    assert_eq!(stats.completed, 9);
+    assert!(stats.generated_tokens > 0);
+    // more requests than slots (4) forces queueing + slot reuse
+    assert!(stats.engine_steps as usize >= 12 + 8);
+    assert!(stats.tokens_per_sec() > 0.0);
+}
+
+#[test]
+fn rust_cross_entropy_matches_in_graph_loss() {
+    // the rust-side loss (data::Batch::cross_entropy over fwd logits) must
+    // agree with the loss the fused train artifact computes in-graph
+    let rt = &runtime();
+    let mut trainer = Trainer::new(rt, "ho2_tiny", 9).unwrap();
+    let (b, t) = trainer.train_shape();
+    let mut gen = data::make("charlm", 9).unwrap();
+    let batch = gen.batch(b, t);
+    let logits = trainer.forward(&batch).unwrap();
+    let ce = batch.cross_entropy(&logits).unwrap();
+    let acc = batch.accuracy(&logits).unwrap();
+    let graph_loss = trainer.train_step(&batch, 0.0).unwrap().loss as f64;
+    assert!(
+        (ce - graph_loss).abs() < 5e-3,
+        "rust ce {ce} vs in-graph {graph_loss}"
+    );
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn approx_quality_orders_correctly() {
+    // E1's headline: higher order => lower error vs the softmax target,
+    // for every alpha
+    let rt = &runtime();
+    let rows = experiments::approx_quality(rt, 123).unwrap();
+    assert_eq!(rows.len(), 12);
+    for alpha in [1.0, 2.0, 3.0, 4.0] {
+        let err = |o: usize| {
+            rows.iter()
+                .find(|r| r.alpha == alpha && r.order == o)
+                .unwrap()
+                .rel_err_vs_target
+        };
+        assert!(err(2) < err(1), "alpha {alpha}: order2 !< order1");
+        assert!(err(1) < err(0), "alpha {alpha}: order1 !< order0");
+    }
+}

@@ -1,0 +1,266 @@
+//! Property-based tests (randomized invariants with fixed seeds; the
+//! proptest crate is not in the offline vendor set, so these drive our own
+//! deterministic PRNG over many cases — shrinking is traded for exact
+//! reproducibility).
+
+use holt::checkpoint::Checkpoint;
+use holt::coordinator::state::StateManager;
+use holt::json::Json;
+use holt::mathref;
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::{Init, LeafSpec, Tensor};
+use holt::tokenizer::{bpe::Bpe, ByteTokenizer};
+
+const CASES: usize = 50;
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(0x1 + 1);
+    for case in 0..CASES {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let pick = rng.uniform_int(0, if depth == 0 { 4 } else { 6 });
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.uniform() < 0.5),
+        2 => Json::Num((rng.normal() * 100.0 * 64.0).round() / 64.0),
+        3 => {
+            let n = rng.uniform_int(0, 12) as usize;
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        char::from_u32(rng.uniform_int(32, 0x24f) as u32).unwrap_or('x')
+                    })
+                    .collect(),
+            )
+        }
+        4 => {
+            let n = rng.uniform_int(0, 4) as usize;
+            Json::Arr((0..n).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.uniform_int(0, 4) as usize;
+            Json::Obj(
+                (0..n)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_byte_tokenizer_roundtrips_any_string() {
+    let mut rng = Rng::new(7);
+    let tok = ByteTokenizer::new();
+    for _ in 0..CASES {
+        let n = rng.uniform_int(0, 64) as usize;
+        let s: String = (0..n)
+            .map(|_| char::from_u32(rng.uniform_int(1, 0x2ff) as u32).unwrap_or('?'))
+            .collect();
+        assert_eq!(tok.decode(&tok.encode(&s)), s);
+    }
+}
+
+#[test]
+fn prop_bpe_roundtrips_with_random_corpora() {
+    let mut rng = Rng::new(9);
+    for _ in 0..20 {
+        let corpus: Vec<u8> = (0..200)
+            .map(|_| b"abcdef "[rng.uniform_int(0, 7) as usize])
+            .collect();
+        let bpe = Bpe::train(&corpus, rng.uniform_int(0, 12) as usize);
+        let text: Vec<u8> = (0..50)
+            .map(|_| b"abcdefgh "[rng.uniform_int(0, 9) as usize])
+            .collect();
+        assert_eq!(bpe.decode(&bpe.encode(&text)), text);
+    }
+}
+
+#[test]
+fn prop_taylor_exp_bounds() {
+    // exp lower/upper bound relations that the paper's figure 1 illustrates:
+    // for x >= 0 every truncation underestimates exp; order2 >= order1.
+    let mut rng = Rng::new(1);
+    for _ in 0..1000 {
+        let x = rng.uniform() * 4.0;
+        let t1 = mathref::taylor_exp(x, 1);
+        let t2 = mathref::taylor_exp(x, 2);
+        let t3 = mathref::taylor_exp(x, 3);
+        let e = x.exp();
+        assert!(t1 <= t2 + 1e-12 && t2 <= t3 + 1e-12 && t3 <= e + 1e-9, "x={x}");
+        // even orders are positive everywhere, also for negative x
+        assert!(mathref::taylor_exp(-x, 2) > 0.0);
+    }
+}
+
+#[test]
+fn prop_attention_rows_convex_weights() {
+    // for every kind: if all v entries are within [lo, hi], outputs are too
+    // (row weights are a convex combination)
+    let mut rng = Rng::new(2);
+    for case in 0..12 {
+        let (n, d) = (16, 8);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v: Vec<f32> = (0..n * d).map(|_| rng.uniform() as f32 * 2.0 - 1.0).collect();
+        for kind in ["softmax", "ho2", "linear"] {
+            let out = mathref::attention_bhnd(kind, &q, &k, &v, 1, n, d, 2, 3.0, true);
+            for (i, &x) in out.iter().enumerate() {
+                assert!(
+                    (-1.0 - 1e-3..=1.0 + 1e-3).contains(&x),
+                    "case {case} {kind} out[{i}] = {x}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_attention_permutation_equivariance_noncausal() {
+    // non-causal linear/ho2 attention: permuting the key/value rows leaves
+    // the outputs unchanged (sums are order-free)
+    let mut rng = Rng::new(3);
+    for _ in 0..10 {
+        let (n, d) = (12, 8);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * d, 1.0);
+        // rotate rows by 5
+        let rot = |x: &[f32]| -> Vec<f32> {
+            let mut y = vec![0.0; x.len()];
+            for i in 0..n {
+                let j = (i + 5) % n;
+                y[j * d..(j + 1) * d].copy_from_slice(&x[i * d..(i + 1) * d]);
+            }
+            y
+        };
+        let (k2, v2) = (rot(&k), rot(&v));
+        let a = mathref::ho_attention(&q, &k, &v, n, n, d, d, 2, 3.0, false, true);
+        let b = mathref::ho_attention(&q, &k2, &v2, n, n, d, d, 2, 3.0, false, true);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn prop_rng_sample_logits_always_in_topk() {
+    let mut rng = Rng::new(4);
+    for _ in 0..CASES {
+        let n = rng.uniform_int(2, 40) as usize;
+        let k = rng.uniform_int(1, n as u64 + 1) as usize;
+        let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut ranked: Vec<usize> = (0..n).collect();
+        ranked.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let allowed: std::collections::HashSet<usize> =
+            ranked[..k].iter().copied().collect();
+        for _ in 0..20 {
+            let s = rng.sample_logits(&logits, 0.7, k);
+            assert!(allowed.contains(&s), "sampled {s} outside top-{k}");
+        }
+    }
+}
+
+#[test]
+fn prop_state_manager_random_alloc_release() {
+    // random interleavings of alloc/release/advance preserve invariants:
+    // no slot double-allocated, freed slots come back zeroed
+    let spec = vec![
+        LeafSpec { name: "s".into(), shape: vec![6, 3, 4], init: Init::Zeros },
+        LeafSpec { name: "z".into(), shape: vec![6, 3], init: Init::Zeros },
+    ];
+    let mut rng = Rng::new(5);
+    let mut sm = StateManager::new(&spec).unwrap();
+    let mut held: Vec<usize> = Vec::new();
+    for _ in 0..500 {
+        match rng.uniform_int(0, 3) {
+            0 => {
+                if let Some(s) = sm.alloc() {
+                    assert!(!held.contains(&s), "double alloc of {s}");
+                    // slot must be zeroed
+                    let stride: usize = 12;
+                    assert!(sm.leaves[0].as_f32().unwrap()
+                        [s * stride..(s + 1) * stride]
+                        .iter()
+                        .all(|&x| x == 0.0));
+                    assert_eq!(sm.pos[s], 0);
+                    held.push(s);
+                }
+            }
+            1 => {
+                if !held.is_empty() {
+                    let i = rng.uniform_int(0, held.len() as u64) as usize;
+                    let s = held.swap_remove(i);
+                    // dirty it before release; next alloc must re-zero
+                    sm.leaves[0].as_f32_mut().unwrap()[s * 12] = 1.0;
+                    sm.release(s);
+                }
+            }
+            _ => {
+                for &s in &held {
+                    sm.advance(s);
+                }
+            }
+        }
+        assert_eq!(sm.free_slots() + held.len(), 6);
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrips_random_stores() {
+    let mut rng = Rng::new(6);
+    let dir = std::env::temp_dir().join("holt_prop_ckpt");
+    for case in 0..10 {
+        let n_leaves = rng.uniform_int(1, 6) as usize;
+        let spec: Vec<LeafSpec> = (0..n_leaves)
+            .map(|i| {
+                let rank = rng.uniform_int(0, 4) as usize;
+                let shape: Vec<usize> =
+                    (0..rank).map(|_| rng.uniform_int(1, 6) as usize).collect();
+                LeafSpec {
+                    name: format!("leaf{i}"),
+                    shape,
+                    init: Init::Normal { std: 1.0 },
+                }
+            })
+            .collect();
+        let store = ParamStore::init(&spec, &mut rng);
+        let ck = Checkpoint {
+            step: rng.next_u64() % 10_000,
+            sections: vec![("params".into(), store)],
+        };
+        let path = dir.join(format!("c{case}.ckpt"));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.sections[0].1.leaves, ck.sections[0].1.leaves);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_tensor_error_metrics_consistent() {
+    let mut rng = Rng::new(8);
+    for _ in 0..CASES {
+        let n = rng.uniform_int(1, 100) as usize;
+        let a = Tensor::f32(vec![n], rng.normal_vec_f32(n, 1.0));
+        // identical tensors: all error metrics are exactly zero
+        assert_eq!(a.max_abs_diff(&a).unwrap(), 0.0);
+        assert_eq!(a.mse(&a).unwrap(), 0.0);
+        assert_eq!(a.rel_l2(&a).unwrap(), 0.0);
+        // perturbation raises all of them
+        let mut b = a.clone();
+        b.as_f32_mut().unwrap()[0] += 1.0;
+        assert!(a.max_abs_diff(&b).unwrap() >= 1.0 - 1e-6);
+        assert!(a.mse(&b).unwrap() > 0.0);
+        assert!(a.rel_l2(&b).unwrap() > 0.0);
+    }
+}

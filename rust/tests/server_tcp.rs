@@ -1,0 +1,91 @@
+//! End-to-end TCP serving test: spin up `serve_tcp` on a loopback port,
+//! drive it with JSON-lines requests over real sockets (sequential and
+//! concurrent), and validate the responses.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use holt::coordinator::server::serve_tcp;
+use holt::json::{obj, Json};
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::Runtime;
+
+const ADDR: &str = "127.0.0.1:18497";
+
+fn request(stream: &mut TcpStream, prompt: &str, max_tokens: usize) -> Json {
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(
+        stream,
+        "{}",
+        obj(vec![
+            ("prompt", prompt.into()),
+            ("max_tokens", max_tokens.into()),
+            ("temperature", 0.8.into()),
+        ])
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(&line).unwrap()
+}
+
+#[test]
+fn tcp_roundtrip_and_concurrent_clients() {
+    // server thread owns its runtime (PJRT client is !Send)
+    std::thread::spawn(|| {
+        let rt = Runtime::new(&holt::default_artifacts_dir()).unwrap();
+        let m = rt.manifest.model("ho2_tiny").unwrap();
+        let params = ParamStore::init(&m.param_spec, &mut Rng::new(1));
+        serve_tcp(&rt, "ho2_tiny", params, ADDR, 7).unwrap();
+    });
+
+    // wait for the listener (compile included), up to ~30 s
+    let mut conn = None;
+    for _ in 0..300 {
+        match TcpStream::connect(ADDR) {
+            Ok(c) => {
+                conn = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+    let mut conn = conn.expect("server did not come up");
+
+    // basic roundtrip
+    let resp = request(&mut conn, "hello", 8);
+    assert!(resp.get("error").is_none(), "{resp}");
+    let n = resp.get("n_tokens").unwrap().as_i64().unwrap();
+    assert!((0..=8).contains(&n), "n_tokens {n}");
+    assert!(resp.get("ttft_s").unwrap().as_f64().unwrap() >= 0.0);
+
+    // malformed JSON gets an error line, connection stays usable
+    writeln!(conn, "this is not json").unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(&line).unwrap().get("error").is_some());
+    let resp = request(&mut conn, "still alive", 4);
+    assert!(resp.get("n_tokens").is_some());
+
+    // oversized request is rejected cleanly (ttft_s = -1 sentinel)
+    let resp = request(&mut conn, &"x".repeat(100), 120); // 101 + 120 > 128
+    assert_eq!(resp.get("ttft_s").unwrap().as_f64().unwrap(), -1.0);
+
+    // concurrent clients — more than the 4 decode slots
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = TcpStream::connect(ADDR).unwrap();
+                let r = request(&mut c, &format!("client {i} says"), 6);
+                r.get("n_tokens").unwrap().as_i64().unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let n = h.join().unwrap();
+        assert!((0..=6).contains(&n));
+    }
+}
