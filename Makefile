@@ -1,0 +1,12 @@
+# Build-time entry points. Only the artifact path needs python/jax;
+# tier-1 (`cargo build --release && cargo test -q`) never touches this.
+
+.PHONY: artifacts tier1
+
+# AOT-lower the jax model + attention kernels to HLO-text artifacts
+# under ./artifacts (manifest.json + *.hlo). Requires python3 + jax.
+artifacts:
+	python3 python/compile/aot.py --out artifacts
+
+tier1:
+	cargo build --release && cargo test -q

@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
         .find(|a| !a.starts_with("--"))
         .and_then(|s| s.parse().ok())
         .unwrap_or(4096);
-    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
     let ns: Vec<usize> = [64, 128, 256, 512, 1024, 2048, 4096]
         .into_iter()
         .filter(|&n| n <= max_n)

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         .find(|a| !a.starts_with("--"))
         .and_then(|s| s.parse().ok())
         .unwrap_or(24);
-    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
     let mut rows: Vec<BenchResult> = Vec::new();
 
     println!("E4 — per-token decode latency vs context depth (tiny preset)\n");

@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
         .skip(1)
         .find(|a| !a.starts_with("--"))
         .unwrap_or_else(|| "tiny".into());
-    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
     let mut rows: Vec<BenchResult> = Vec::new();
 
     println!("E5 — fused train-step throughput ({preset} preset)\n");

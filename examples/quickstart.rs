@@ -1,46 +1,103 @@
-//! Quickstart: load the AOT artifacts, prove the three-layer stack
-//! composes, and run the paper's attention end to end.
+//! Quickstart — the paper end to end with **zero setup**: no PJRT
+//! artifacts, no Python, nothing but `cargo run`.
 //!
 //!   cargo run --release --example quickstart
 //!
 //! Steps:
-//!  1. open the PJRT runtime over `artifacts/` (built by `make artifacts`),
-//!  2. cross-check the Pallas-kernel artifact (L1) and the fused-jnp
-//!     artifact (L2) against an independent pure-rust oracle (L3),
-//!  3. run a fresh tiny model forward and one training step,
-//!  4. print the E1 headline: order-2 beats order-1 beats order-0.
+//!  1. cross-check the native O(n) kernels (streaming decode form and
+//!     cache-blocked chunked form) against the independent O(n²) oracle,
+//!  2. show the O(1)-per-token decode claim: per-token latency and state
+//!     size flat in context length, while the quadratic oracle grows,
+//!  3. E1 headline on random data: order-2 beats order-1 beats order-0
+//!     at every alpha,
+//!  4. point at the optional PJRT artifact path.
 
-use holt::coordinator::trainer::Trainer;
-use holt::data;
+use std::time::Instant;
+
 use holt::experiments;
-use holt::runtime::Runtime;
+use holt::kernels::{HoState, NativeBackend, RecurrentAttention};
+use holt::mathref;
+use holt::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(&holt::default_artifacts_dir())?;
-    println!("== HOLT quickstart (platform: {}) ==\n", rt.platform());
+    println!("== HOLT quickstart (native O(n) kernels, no artifacts) ==\n");
 
-    println!("[1/3] artifact cross-checks vs pure-rust reference");
-    for art in ["attn_ho2_n256", "attn_ho2_n256_pallas"] {
-        let err = experiments::crosscheck_attention(&rt, art, 0, 5e-4)?;
-        println!("  {art:<28} max|diff| = {err:.2e}  OK");
+    println!("[1/3] native kernels vs independent O(n^2) oracle");
+    for kind in ["ho2", "linear"] {
+        let err = experiments::crosscheck_native(kind, 0, 1e-4)?;
+        println!(
+            "  {kind:<8} streaming + chunked, causal + non-causal   max|diff| = {err:.2e}  OK"
+        );
     }
 
-    println!("\n[2/3] fresh ho2_tiny model: forward + one train step");
-    let mut trainer = Trainer::new(&rt, "ho2_tiny", 42)?;
-    let (b, t) = trainer.train_shape();
-    let mut gen = data::make("copy", 42)?;
-    let batch = gen.batch(b, t);
-    let logits = trainer.forward(&batch)?;
-    println!("  forward: logits {:?}", logits.shape);
-    let s = trainer.train_step(&batch, 3e-4)?;
-    println!("  train:   loss {:.4} in {:.0} ms", s.loss, s.step_time_s * 1e3);
+    println!("\n[2/3] O(1)-per-token decode: cost flat in context length");
+    let (d, dv) = (64, 64);
+    let mut rng = Rng::new(7);
+    let mut state = HoState::paper(d, dv);
+    let mut out = vec![0.0f32; dv];
+    println!(
+        "  recurrent state: {} f64 = {:.1} KiB, independent of context",
+        state.state_elements(),
+        state.state_elements() as f64 * 8.0 / 1024.0
+    );
+    println!(
+        "  {:>10} {:>16} {:>22}",
+        "context", "native us/tok", "oracle us/tok (~ctx)"
+    );
+    for ctx in [256usize, 1024, 4096] {
+        // native: decode `ctx` tokens through the recurrence, report the
+        // cost of the *last* 64 (i.e. at full context depth)
+        let q = rng.normal_vec_f32(ctx * d, 1.0);
+        let k = rng.normal_vec_f32(ctx * d, 1.0);
+        let v = rng.normal_vec_f32(ctx * dv, 1.0);
+        state.reset();
+        for i in 0..ctx - 64 {
+            state.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * dv..(i + 1) * dv], &mut out);
+        }
+        let t0 = Instant::now();
+        for i in ctx - 64..ctx {
+            state.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * dv..(i + 1) * dv], &mut out);
+        }
+        let native_us = t0.elapsed().as_secs_f64() * 1e6 / 64.0;
+        // oracle: one more token costs a fresh pass over the whole prefix
+        let t0 = Instant::now();
+        let _ = std::hint::black_box(mathref::ho_attention(
+            &q[(ctx - 1) * d..ctx * d],
+            &k,
+            &v,
+            1,
+            ctx,
+            d,
+            dv,
+            2,
+            3.0,
+            false,
+            true,
+        ));
+        let oracle_us = t0.elapsed().as_secs_f64() * 1e6;
+        println!("  {ctx:>10} {native_us:>16.1} {oracle_us:>22.1}");
+    }
 
     println!("\n[3/3] E1 — Taylor-order ablation on random data (paper section 3)");
-    let rows = experiments::approx_quality(&rt, 0)?;
+    let rows = experiments::approx_quality_native(0, 256, 64)?;
     println!("  {:>6} {:>6} {:>14}", "alpha", "order", "rel_l2_error");
     for r in rows.iter().filter(|r| r.alpha == 3.0) {
         println!("  {:>6} {:>6} {:>14.4}", r.alpha, r.order, r.rel_err_vs_target);
     }
-    println!("\nquickstart OK — see `holt --help` for the full CLI");
+
+    // and the batched entry point the benches use
+    let be = NativeBackend::paper();
+    let (bh, n) = (4, 128);
+    let q = rng.normal_vec_f32(bh * n * 32, 1.0);
+    let k = rng.normal_vec_f32(bh * n * 32, 1.0);
+    let v = rng.normal_vec_f32(bh * n * 32, 1.0);
+    let o = be.attention_bhnd("ho2", &q, &k, &v, bh, n, 32, true)?;
+    println!("\n  NativeBackend::attention_bhnd: (bh={bh}, n={n}, d=32) -> {} outputs", o.len());
+
+    println!(
+        "\nquickstart OK — native path only. For the PJRT artifact path\n\
+         (AOT-lowered jax model, training + serving coordinator) see README.md;\n\
+         `holt --help` lists the full CLI."
+    );
     Ok(())
 }

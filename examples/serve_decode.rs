@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
     let max_tokens: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
 
-    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
     println!("== continuous-batching serve demo ==");
     println!("load: {n_requests} requests, 24-byte prompts, {max_tokens} max tokens\n");
 

@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
             vec!["ho2_small".into(), "softmax_small".into(), "linear_small".into()]
         });
 
-    let rt = Runtime::new(&holt::default_artifacts_dir())?;
+    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
     let mut summary = Vec::new();
     for model in &models {
         let cfg = TrainConfig {

@@ -1,0 +1,178 @@
+//! Stub of the PJRT `xla` crate (offline vendor set has no PJRT build).
+//!
+//! Exposes the exact type/method surface the coordinator uses so the whole
+//! crate — runtime, trainer, server, CLI — compiles and links with zero
+//! native dependencies.  `PjRtClient::cpu()` (the single entry point every
+//! PJRT code path goes through) returns an error explaining the situation,
+//! so artifact-backed features fail fast at `Runtime::new` with a clear
+//! message while the native kernels (`holt::kernels`) remain fully usable.
+//!
+//! To run the real artifact path, replace this path dependency in the root
+//! `Cargo.toml` with a PJRT-backed `xla` crate; no other code changes are
+//! needed.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring the real crate's (implements `std::error::Error`,
+/// so `?` converts it into `anyhow::Error` at call sites).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend not available in this build (the vendored stub \
+         `xla` crate is linked). The native O(n) kernels in `holt::kernels` \
+         work without it; for the artifact path swap in a real PJRT `xla` \
+         crate — see README.md."
+    ))
+}
+
+/// Element types the coordinator distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Supported host element types for literal construction.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host literal. The stub only ever holds nothing: literals can be built
+/// (parameter caching does that ahead of execution) but any attempt to
+/// execute or read one reports the backend as unavailable.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Array shape (dims + element type) of a literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client. `cpu()` is the single constructor the coordinator calls;
+/// in the stub it always fails, which makes `Runtime::new` the one place
+/// users see the (actionable) error.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("PJRT backend not available"), "{msg}");
+        assert!(msg.contains("holt::kernels"), "{msg}");
+    }
+
+    #[test]
+    fn literals_can_be_built_but_not_read() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(Literal::scalar(3i32).array_shape().is_err());
+    }
+}

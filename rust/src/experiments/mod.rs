@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::kernels::{Evaluation, NativeBackend};
 use crate::mathref;
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Tensor};
@@ -95,6 +96,53 @@ pub fn approx_quality(runtime: &Runtime, seed: u64) -> Result<Vec<ApproxRow>> {
     Ok(rows)
 }
 
+/// E1 with no artifacts: the same (alpha, order) grid evaluated by the
+/// native O(n) kernels, targets computed by the `mathref` softmax oracle
+/// with the matching LN + alpha rescaling (logits qₙ·kₙ/(α√d) both sides).
+/// Non-causal over an (n, d) head, like the `approx_n256` artifact.
+pub fn approx_quality_native(seed: u64, n: usize, d: usize) -> Result<Vec<ApproxRow>> {
+    let alphas = [1.0, 2.0, 3.0, 4.0];
+    let orders = [0usize, 1, 2];
+    let mut rng = Rng::new(seed);
+    let q = rng.normal_vec_f32(n * d, 1.0);
+    let k = rng.normal_vec_f32(n * d, 1.0);
+    let v = rng.normal_vec_f32(n * d, 1.0);
+    let shape = vec![n, d];
+    let std_out = Tensor::f32(
+        shape.clone(),
+        mathref::softmax_attention(&q, &k, &v, n, n, d, d, false),
+    );
+    let mut qn = q.clone();
+    let mut kn = k.clone();
+    mathref::layernorm_noaffine(&mut qn, n, d, 1e-5);
+    mathref::layernorm_noaffine(&mut kn, n, d, 1e-5);
+    let mut rows = Vec::new();
+    for &alpha in &alphas {
+        // softmax over logits qₙ·kₙ/(α√d): fold √α into each side
+        let s = (alpha as f32).sqrt();
+        let qs: Vec<f32> = qn.iter().map(|x| x / s).collect();
+        let ks: Vec<f32> = kn.iter().map(|x| x / s).collect();
+        let target = Tensor::f32(
+            shape.clone(),
+            mathref::softmax_attention(&qs, &ks, &v, n, n, d, d, false),
+        );
+        for &order in &orders {
+            let backend = NativeBackend { order, alpha, ..NativeBackend::paper() };
+            let out = Tensor::f32(
+                shape.clone(),
+                backend.forward("ho2", &q, &k, &v, n, d, d, false)?,
+            );
+            rows.push(ApproxRow {
+                alpha,
+                order,
+                rel_err_vs_target: out.rel_l2(&target)?,
+                rel_err_vs_std: out.rel_l2(&std_out)?,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 pub fn approx_rows_csv(rows: &[ApproxRow]) -> String {
     let mut s = String::from("alpha,order,rel_err_vs_target,rel_err_vs_std\n");
     for r in rows {
@@ -157,6 +205,47 @@ pub fn crosscheck_attention(
     Ok(err)
 }
 
+/// Cross-check the native O(n) kernels — both evaluation strategies —
+/// against the direct O(n²) `mathref` oracle, causal and non-causal.
+/// The no-artifact twin of [`crosscheck_attention`]; returns the worst
+/// max |diff| seen.  `kind` ∈ {"ho2", "linear"} — "softmax" is rejected,
+/// because the native backend *is* the oracle there (no linear-time
+/// form exists) and comparing it against itself would always "pass".
+pub fn crosscheck_native(kind: &str, seed: u64, tol: f32) -> Result<f32> {
+    if kind == "softmax" {
+        anyhow::bail!(
+            "softmax has no independent native implementation (the backend falls back \
+             to the oracle itself) — nothing to cross-check"
+        );
+    }
+    let (bh, n, d) = (2, 96, 16);
+    let mut rng = Rng::new(seed);
+    let count = bh * n * d;
+    let q = rng.normal_vec_f32(count, 1.0);
+    let k = rng.normal_vec_f32(count, 1.0);
+    let v = rng.normal_vec_f32(count, 1.0);
+    let mut worst = 0.0f32;
+    for causal in [true, false] {
+        let oracle = mathref::attention_bhnd(kind, &q, &k, &v, bh, n, d, 2, 3.0, causal);
+        for evaluation in [Evaluation::Streaming, Evaluation::Chunked] {
+            let backend = NativeBackend { evaluation, chunk: 17, ..NativeBackend::paper() };
+            let out = backend.attention_bhnd(kind, &q, &k, &v, bh, n, d, causal)?;
+            let err = out
+                .iter()
+                .zip(&oracle)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            anyhow::ensure!(
+                err < tol,
+                "native {kind} ({evaluation:?}, causal={causal}) disagrees with the \
+                 O(n^2) oracle: max|diff| = {err} >= {tol}"
+            );
+            worst = worst.max(err);
+        }
+    }
+    Ok(worst)
+}
+
 /// Write a string to `results/<name>` (creating the directory).
 pub fn write_results(dir: &Path, name: &str, content: &str) -> Result<std::path::PathBuf> {
     std::fs::create_dir_all(dir)?;
@@ -185,5 +274,41 @@ mod tests {
         let hi: Vec<f64> =
             lines[7].split(',').map(|s| s.parse().unwrap()).collect();
         assert!(hi[1] > hi[4] && hi[4] > hi[3] && hi[3] > hi[2]);
+    }
+
+    #[test]
+    fn native_approx_quality_orders_correctly() {
+        // E1's headline, computed with zero artifacts: higher Taylor order
+        // => lower error vs the softmax target, for every alpha
+        let rows = approx_quality_native(123, 64, 16).unwrap();
+        assert_eq!(rows.len(), 12);
+        for alpha in [1.0, 2.0, 3.0, 4.0] {
+            let err = |o: usize| {
+                rows.iter()
+                    .find(|r| r.alpha == alpha && r.order == o)
+                    .unwrap()
+                    .rel_err_vs_target
+            };
+            assert!(err(2) < err(1), "alpha {alpha}: order2 !< order1");
+            assert!(err(1) < err(0), "alpha {alpha}: order1 !< order0");
+        }
+        // damping helps: the order-2 error shrinks as alpha grows
+        let e2 = |a: f64| {
+            rows.iter()
+                .find(|r| r.alpha == a && r.order == 2)
+                .unwrap()
+                .rel_err_vs_target
+        };
+        assert!(e2(4.0) < e2(1.0));
+    }
+
+    #[test]
+    fn native_crosscheck_all_kinds() {
+        for kind in ["ho2", "linear"] {
+            let err = crosscheck_native(kind, 7, 1e-4).unwrap();
+            assert!(err < 1e-4, "{kind}: {err}");
+        }
+        // self-comparison is not a cross-check
+        assert!(crosscheck_native("softmax", 7, 1e-4).is_err());
     }
 }

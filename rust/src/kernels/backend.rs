@@ -1,0 +1,181 @@
+//! `NativeBackend` — pure-rust attention evaluation behind the same
+//! `(kind, bh, n, d)` surface as `mathref::attention_bhnd` and the AOT
+//! attention artifacts.  This is the no-PJRT, no-Python execution path:
+//! examples, benches and the CLI cross-checks run against it end to end.
+
+use anyhow::{bail, Result};
+
+use crate::kernels::{chunked_forward, streaming_forward, HoState, LinearState, RecurrentAttention};
+use crate::mathref;
+
+/// How to evaluate the recurrence over a full sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Evaluation {
+    /// Token-by-token `step` — the decode recurrence.
+    Streaming,
+    /// Blocked: direct O(c²) inside chunks, recurrent across them.
+    Chunked,
+}
+
+/// Config + entry points for the native kernels.
+///
+/// `kind` strings match the manifest/`mathref` vocabulary: `"ho2"` (the
+/// paper kernel, honoring `order`/`alpha`/`normalize_qk`), `"linear"`
+/// (elu+1 baseline), and `"softmax"` — which has no linear-time form and
+/// falls back to the exact O(n²) reference so callers can still use one
+/// backend for every baseline in a comparison table.
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    /// Taylor order for the `"ho2"` kind (0..=2).
+    pub order: usize,
+    /// Logit damping α for the `"ho2"` kind.
+    pub alpha: f64,
+    /// Per-row LayerNorm on q/k for the `"ho2"` kind.
+    pub normalize_qk: bool,
+    /// Chunk length for [`Evaluation::Chunked`].
+    pub chunk: usize,
+    pub evaluation: Evaluation,
+}
+
+impl Default for NativeBackend {
+    /// The paper's settings: order 2, α = 3, LayerNorm on, chunked with
+    /// 64-token blocks.
+    fn default() -> NativeBackend {
+        NativeBackend {
+            order: 2,
+            alpha: 3.0,
+            normalize_qk: true,
+            chunk: 64,
+            evaluation: Evaluation::Chunked,
+        }
+    }
+}
+
+impl NativeBackend {
+    pub fn paper() -> NativeBackend {
+        NativeBackend::default()
+    }
+
+    /// Fresh recurrent state for one head — the O(1)-per-token decode
+    /// object. Errors for `"softmax"`, which has no recurrent form.
+    pub fn state(&self, kind: &str, d: usize, dv: usize) -> Result<Box<dyn RecurrentAttention>> {
+        match kind {
+            "ho2" | "ho" => Ok(Box::new(HoState::new(
+                d,
+                dv,
+                self.order,
+                self.alpha,
+                self.normalize_qk,
+            ))),
+            "linear" => Ok(Box::new(LinearState::new(d, dv))),
+            "softmax" => bail!("softmax attention has no O(1) recurrent state"),
+            _ => bail!("unknown attention kind '{kind}' (want ho2 | linear | softmax)"),
+        }
+    }
+
+    /// Single-head forward: q/k are (n, d), v is (n, dv).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward(
+        &self,
+        kind: &str,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        dv: usize,
+        causal: bool,
+    ) -> Result<Vec<f32>> {
+        if kind == "softmax" {
+            // no linear-time form — exact quadratic reference
+            return Ok(mathref::softmax_attention(q, k, v, n, n, d, dv, causal));
+        }
+        let mut state = self.state(kind, d, dv)?;
+        Ok(match self.evaluation {
+            Evaluation::Streaming => streaming_forward(state.as_mut(), q, k, v, n, causal),
+            Evaluation::Chunked => chunked_forward(state.as_mut(), q, k, v, n, self.chunk, causal),
+        })
+    }
+
+    /// Batched multi-head forward over (b·h, n, d) flat buffers — the
+    /// same layout `mathref::attention_bhnd` and the AOT artifacts use.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_bhnd(
+        &self,
+        kind: &str,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        bh: usize,
+        n: usize,
+        d: usize,
+        causal: bool,
+    ) -> Result<Vec<f32>> {
+        let stride = n * d;
+        assert_eq!(q.len(), bh * stride, "q shape");
+        assert_eq!(k.len(), bh * stride, "k shape");
+        assert_eq!(v.len(), bh * stride, "v shape");
+        let mut out = vec![0.0f32; bh * stride];
+        for s in 0..bh {
+            let o = self.forward(
+                kind,
+                &q[s * stride..(s + 1) * stride],
+                &k[s * stride..(s + 1) * stride],
+                &v[s * stride..(s + 1) * stride],
+                n,
+                d,
+                d,
+                causal,
+            )?;
+            out[s * stride..(s + 1) * stride].copy_from_slice(&o);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn bhnd_matches_mathref_for_all_kinds() {
+        let mut rng = Rng::new(31);
+        let (bh, n, d) = (3, 16, 8);
+        let q = rng.normal_vec_f32(bh * n * d, 1.0);
+        let k = rng.normal_vec_f32(bh * n * d, 1.0);
+        let v = rng.normal_vec_f32(bh * n * d, 1.0);
+        let be = NativeBackend::paper();
+        for kind in ["softmax", "linear", "ho2"] {
+            let got = be.attention_bhnd(kind, &q, &k, &v, bh, n, d, true).unwrap();
+            let want = mathref::attention_bhnd(kind, &q, &k, &v, bh, n, d, 2, 3.0, true);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_and_chunked_evaluations_agree() {
+        let mut rng = Rng::new(32);
+        let (n, d) = (33, 8);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * d, 1.0);
+        let mut be = NativeBackend::paper();
+        be.evaluation = Evaluation::Streaming;
+        let a = be.forward("ho2", &q, &k, &v, n, d, d, true).unwrap();
+        be.evaluation = Evaluation::Chunked;
+        be.chunk = 5;
+        let b = be.forward("ho2", &q, &k, &v, n, d, d, true).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_has_no_state() {
+        assert!(NativeBackend::paper().state("softmax", 4, 4).is_err());
+        assert!(NativeBackend::paper().state("nope", 4, 4).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Cache-blocked chunked forward: the training-throughput evaluation of
+//! the same recurrence.
+//!
+//! The sequence is cut into chunks of `chunk` tokens.  Inside a chunk the
+//! causal weights are computed directly (O(c²·d) pairwise, contiguous in
+//! cache); across chunks everything older flows through the O(1) kernel
+//! state.  Per token that is O(c·d + S) work (S = state read cost), so
+//! total cost stays linear in n with a knob trading recurrence overhead
+//! against intra-chunk quadratic work — the same shape as the Pallas
+//! kernel in `python/compile/kernels/chunked.py`, kept sequential here on
+//! purpose so it can be diffed against the streaming form token by token.
+//!
+//! Non-causal attention has no intra/inter split (every query sees every
+//! key), so it degenerates to absorb-all-then-query and `chunk` is
+//! irrelevant; the causal path is the interesting one.
+
+use crate::kernels::{streaming_forward, RecurrentAttention, DEN_FLOOR};
+
+/// Full-sequence forward, chunked.  `q`/`k` are (n, d) row-major, `v` is
+/// (n, dv); resets the kernel first.  Equivalent to
+/// [`streaming_forward`] (and to the O(n²) oracle) up to float
+/// reassociation — pinned by `prop_ho_chunk_size_invariance`.
+pub fn chunked_forward<K: RecurrentAttention + ?Sized>(
+    kernel: &mut K,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    chunk: usize,
+    causal: bool,
+) -> Vec<f32> {
+    let (d, dv) = (kernel.d(), kernel.dv());
+    assert_eq!(q.len(), n * d, "q shape");
+    assert_eq!(k.len(), n * d, "k shape");
+    assert_eq!(v.len(), n * dv, "v shape");
+    if !causal {
+        return streaming_forward(kernel, q, k, v, n, causal);
+    }
+    let chunk = chunk.max(1);
+    kernel.reset();
+    let mut out = vec![0.0f32; n * dv];
+    let mut num = vec![0.0f64; dv];
+    let mut c0 = 0;
+    while c0 < n {
+        let c1 = (c0 + chunk).min(n);
+        // per-row prep (LayerNorm / feature map) once per chunk, so the
+        // O(c²) triangle below is pure dot products
+        let qp = kernel.prep_rows(&q[c0 * d..c1 * d], c1 - c0);
+        let kp = kernel.prep_rows(&k[c0 * d..c1 * d], c1 - c0);
+        // query pass: recurrent prefix + direct intra-chunk triangle
+        for i in c0..c1 {
+            let qi = &qp[(i - c0) * d..(i - c0 + 1) * d];
+            let mut den = kernel.query_raw_prepped(qi, &mut num);
+            for j in c0..=i {
+                let w = kernel.pair_weight_prepped(qi, &kp[(j - c0) * d..(j - c0 + 1) * d]);
+                den += w;
+                let vj = &v[j * dv..(j + 1) * dv];
+                for (acc, &x) in num.iter_mut().zip(vj) {
+                    *acc += w * x as f64;
+                }
+            }
+            let den = den.max(DEN_FLOOR);
+            for (o, &x) in out[i * dv..(i + 1) * dv].iter_mut().zip(num.iter()) {
+                *o = (x / den) as f32;
+            }
+        }
+        // state pass: fold the whole chunk into the recurrence
+        for j in c0..c1 {
+            kernel.absorb(&k[j * d..(j + 1) * d], &v[j * dv..(j + 1) * dv]);
+        }
+        c0 = c1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{HoState, LinearState};
+    use crate::rng::Rng;
+
+    #[test]
+    fn chunked_equals_streaming_for_every_chunk_size() {
+        let mut rng = Rng::new(21);
+        let (n, d, dv) = (23, 5, 6);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let mut st = HoState::paper(d, dv);
+        let want = streaming_forward(&mut st, &q, &k, &v, n, true);
+        for chunk in [1, 2, 7, 23, 64] {
+            let got = chunked_forward(&mut st, &q, &k, &v, n, chunk, true);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn works_for_linear_kernel_too() {
+        let mut rng = Rng::new(22);
+        let (n, d, dv) = (17, 4, 4);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let mut st = LinearState::new(d, dv);
+        let want = streaming_forward(&mut st, &q, &k, &v, n, true);
+        let got = chunked_forward(&mut st, &q, &k, &v, n, 5, true);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! The paper's higher-order (Taylor) linear attention as recurrent state.
+//!
+//! Order r keeps the key moments 0..=r.  For r = 2 the quadratic moment
+//! k⊗k is symmetric, so only the upper triangle is stored: d(d+1)/2
+//! packed entries instead of d², with the factor 2 for off-diagonal terms
+//! folded into the *query-side* feature (the state stays a plain sum of
+//! per-key products, so absorb stays cheap and exact).
+//!
+//! All state is f64 — the reference oracle accumulates in f64 too, and
+//! running sums live across an entire sequence, where f32 cancellation
+//! would show up long before the 1e-4 cross-check tolerance.
+
+use crate::kernels::RecurrentAttention;
+use crate::mathref::{layernorm_noaffine, taylor_exp};
+
+/// LayerNorm epsilon — must match `mathref::ho_attention` exactly for the
+/// oracle cross-checks to be meaningful.
+const LN_EPS: f32 = 1e-5;
+
+/// Recurrent state for order-0/1/2 Taylor attention over one head.
+pub struct HoState {
+    d: usize,
+    dv: usize,
+    order: usize,
+    /// 1 / (α √d): folded into the query features, never into the state.
+    scale: f64,
+    normalize_qk: bool,
+    /// Σ 1 — number of absorbed keys (order ≥ 0 denominator).
+    s0: f64,
+    /// Σ v — (dv).
+    s0v: Vec<f64>,
+    /// Σ k — (d), order ≥ 1.
+    s1: Vec<f64>,
+    /// Σ k⊗v — (d, dv) row-major, order ≥ 1.
+    s1v: Vec<f64>,
+    /// Σ packed(k⊗k) — (d(d+1)/2), order ≥ 2.
+    s2: Vec<f64>,
+    /// Σ packed(k⊗k)⊗v — (d(d+1)/2, dv) row-major, order ≥ 2.
+    s2v: Vec<f64>,
+}
+
+impl HoState {
+    /// New empty state. `order` ≤ 2 (the paper's range — order r would
+    /// need Θ(dʳ·dv) state; r = 2 is the accuracy/cost point the paper
+    /// argues for). `alpha` is the logit damping α, `normalize_qk`
+    /// applies per-row LayerNorm to q and k as in the paper.
+    pub fn new(d: usize, dv: usize, order: usize, alpha: f64, normalize_qk: bool) -> HoState {
+        assert!(
+            order <= 2,
+            "HoState supports Taylor orders 0..=2, got {order} \
+             (order r needs d^r-sized state; see kernels::ho docs)"
+        );
+        assert!(d > 0 && dv > 0, "empty head dims");
+        assert!(alpha > 0.0, "alpha must be positive");
+        let t = d * (d + 1) / 2;
+        HoState {
+            d,
+            dv,
+            order,
+            scale: 1.0 / (alpha * (d as f64).sqrt()),
+            normalize_qk,
+            s0: 0.0,
+            s0v: vec![0.0; dv],
+            s1: vec![0.0; if order >= 1 { d } else { 0 }],
+            s1v: vec![0.0; if order >= 1 { d * dv } else { 0 }],
+            s2: vec![0.0; if order >= 2 { t } else { 0 }],
+            s2v: vec![0.0; if order >= 2 { t * dv } else { 0 }],
+        }
+    }
+
+    /// Paper defaults: order 2, α = 3, LayerNorm on q/k.
+    pub fn paper(d: usize, dv: usize) -> HoState {
+        HoState::new(d, dv, 2, 3.0, true)
+    }
+
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    /// Row-wise LayerNorm (when enabled) of a single q/k row — f32, same
+    /// arithmetic as the oracle's whole-matrix pass.
+    fn normalized(&self, row: &[f32]) -> Vec<f32> {
+        let mut out = row.to_vec();
+        if self.normalize_qk {
+            layernorm_noaffine(&mut out, 1, self.d, LN_EPS);
+        }
+        out
+    }
+
+    /// State read for an already-normalized query row.
+    fn query_raw_normed(&self, qn: &[f32], num: &mut [f64]) -> f64 {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(qn.len(), d, "q row");
+        assert_eq!(num.len(), dv, "num row");
+        // order-0 term: w ⊇ 1 for every key
+        let mut den = self.s0;
+        num.copy_from_slice(&self.s0v);
+        // u = scaled query; dot·scale == u·k
+        let u: Vec<f64> = qn.iter().map(|&x| self.scale * x as f64).collect();
+        if self.order >= 1 {
+            for a in 0..d {
+                let ua = u[a];
+                den += ua * self.s1[a];
+                let row = &self.s1v[a * dv..(a + 1) * dv];
+                for (acc, &x) in num.iter_mut().zip(row) {
+                    *acc += ua * x;
+                }
+            }
+        }
+        if self.order >= 2 {
+            // ½(u·k)² = Σ_{a≤b} f_ab · (k_a k_b), f_ab = u_a u_b (a = b)
+            // or 2·½·u_a u_b (a < b) — symmetry folded into the query side
+            let mut p = 0;
+            for a in 0..d {
+                let ua = u[a];
+                for b in a..d {
+                    let f = if a == b { 0.5 * ua * ua } else { ua * u[b] };
+                    den += f * self.s2[p];
+                    let row = &self.s2v[p * dv..(p + 1) * dv];
+                    for (acc, &x) in num.iter_mut().zip(row) {
+                        *acc += f * x;
+                    }
+                    p += 1;
+                }
+            }
+        }
+        den
+    }
+}
+
+impl RecurrentAttention for HoState {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn dv(&self) -> usize {
+        self.dv
+    }
+
+    fn reset(&mut self) {
+        self.s0 = 0.0;
+        self.s0v.fill(0.0);
+        self.s1.fill(0.0);
+        self.s1v.fill(0.0);
+        self.s2.fill(0.0);
+        self.s2v.fill(0.0);
+    }
+
+    fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(k.len(), d, "k row");
+        assert_eq!(v.len(), dv, "v row");
+        let kn = self.normalized(k);
+        self.s0 += 1.0;
+        for (acc, &x) in self.s0v.iter_mut().zip(v) {
+            *acc += x as f64;
+        }
+        if self.order >= 1 {
+            for a in 0..d {
+                let ka = kn[a] as f64;
+                self.s1[a] += ka;
+                let row = &mut self.s1v[a * dv..(a + 1) * dv];
+                for (acc, &x) in row.iter_mut().zip(v) {
+                    *acc += ka * x as f64;
+                }
+            }
+        }
+        if self.order >= 2 {
+            let mut p = 0;
+            for a in 0..d {
+                let ka = kn[a] as f64;
+                for b in a..d {
+                    let kk = ka * kn[b] as f64;
+                    self.s2[p] += kk;
+                    let row = &mut self.s2v[p * dv..(p + 1) * dv];
+                    for (acc, &x) in row.iter_mut().zip(v) {
+                        *acc += kk * x as f64;
+                    }
+                    p += 1;
+                }
+            }
+        }
+    }
+
+    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        self.query_raw_normed(&self.normalized(q), num)
+    }
+
+    fn query_raw_prepped(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        // prep_rows already applied the LayerNorm
+        self.query_raw_normed(q, num)
+    }
+
+    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
+        self.pair_weight_prepped(&self.normalized(q), &self.normalized(k))
+    }
+
+    /// LayerNorm a whole block of rows once — same arithmetic as
+    /// `normalized` per row, paid n times instead of n·c times.
+    fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32> {
+        let mut out = rows.to_vec();
+        if self.normalize_qk {
+            layernorm_noaffine(&mut out, n, self.d, LN_EPS);
+        }
+        out
+    }
+
+    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
+        let mut dot = 0.0f64;
+        for (&a, &b) in q.iter().zip(k) {
+            dot += a as f64 * b as f64;
+        }
+        taylor_exp(dot * self.scale, self.order)
+    }
+
+    fn state_elements(&self) -> usize {
+        1 + self.s0v.len() + self.s1.len() + self.s1v.len() + self.s2.len() + self.s2v.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::streaming_forward;
+    use crate::mathref;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_oracle_on_small_case() {
+        let mut rng = Rng::new(1);
+        let (n, d, dv) = (10, 6, 5);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        for order in [0, 1, 2] {
+            for causal in [true, false] {
+                let oracle =
+                    mathref::ho_attention(&q, &k, &v, n, n, d, dv, order, 3.0, causal, true);
+                let mut st = HoState::new(d, dv, order, 3.0, true);
+                let got = streaming_forward(&mut st, &q, &k, &v, n, causal);
+                for (a, b) in got.iter().zip(&oracle) {
+                    assert!((a - b).abs() < 1e-5, "order {order} causal {causal}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_v_is_reproduced() {
+        // row-normalized weights: constant v comes back exactly
+        let mut rng = Rng::new(2);
+        let (d, dv) = (8, 8);
+        let mut st = HoState::paper(d, dv);
+        let mut out = vec![0.0f32; dv];
+        let constant_v = vec![1.5f32; dv];
+        for _ in 0..20 {
+            let q = rng.normal_vec_f32(d, 1.0);
+            let k = rng.normal_vec_f32(d, 1.0);
+            st.step(&q, &k, &constant_v, &mut out);
+            for &x in &out {
+                assert!((x - 1.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn state_size_is_constant_in_sequence_length() {
+        let (d, dv) = (16, 16);
+        let mut st = HoState::paper(d, dv);
+        let before = st.state_elements();
+        let mut rng = Rng::new(3);
+        let mut out = vec![0.0f32; dv];
+        for _ in 0..500 {
+            let q = rng.normal_vec_f32(d, 1.0);
+            let k = rng.normal_vec_f32(d, 1.0);
+            let v = rng.normal_vec_f32(dv, 1.0);
+            st.step(&q, &k, &v, &mut out);
+        }
+        assert_eq!(st.state_elements(), before);
+        // packed form: d(d+1)/2 second-order rows, not d²
+        let t = d * (d + 1) / 2;
+        assert_eq!(before, 1 + dv + d + d * dv + t + t * dv);
+    }
+
+    #[test]
+    fn reset_restores_empty_state() {
+        let (d, dv) = (4, 4);
+        let mut rng = Rng::new(4);
+        let q = rng.normal_vec_f32(d, 1.0);
+        let k = rng.normal_vec_f32(d, 1.0);
+        let v = rng.normal_vec_f32(dv, 1.0);
+        let mut a = HoState::paper(d, dv);
+        let mut out1 = vec![0.0f32; dv];
+        a.step(&q, &k, &v, &mut out1);
+        a.reset();
+        let mut out2 = vec![0.0f32; dv];
+        a.step(&q, &k, &v, &mut out2);
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    #[should_panic(expected = "orders 0..=2")]
+    fn rejects_order_three() {
+        HoState::new(4, 4, 3, 3.0, true);
+    }
+}

@@ -1,0 +1,140 @@
+//! First-order linear attention baseline (Katharopoulos et al. 2020):
+//! feature map φ(x) = elu(x)+1, state Σφ(k) and Σφ(k)⊗v.  Same
+//! [`RecurrentAttention`] contract as the higher-order kernel, O(d·dv)
+//! state, and the exact counterpart of `mathref::linear_attention`.
+
+use crate::kernels::RecurrentAttention;
+use crate::mathref::elu1;
+
+/// Recurrent state for elu+1 linear attention over one head.
+pub struct LinearState {
+    d: usize,
+    dv: usize,
+    /// Σ φ(k) — (d).
+    z: Vec<f64>,
+    /// Σ φ(k)⊗v — (d, dv) row-major.
+    m: Vec<f64>,
+}
+
+impl LinearState {
+    pub fn new(d: usize, dv: usize) -> LinearState {
+        assert!(d > 0 && dv > 0, "empty head dims");
+        LinearState { d, dv, z: vec![0.0; d], m: vec![0.0; d * dv] }
+    }
+
+    /// State read with the query features supplied by `phi(a)`.
+    fn query_raw_phi<F: Fn(usize) -> f32>(&self, phi: F, num: &mut [f64]) -> f64 {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(num.len(), dv, "num row");
+        num.fill(0.0);
+        let mut den = 0.0f64;
+        for a in 0..d {
+            let p = phi(a) as f64;
+            den += p * self.z[a];
+            let row = &self.m[a * dv..(a + 1) * dv];
+            for (acc, &x) in num.iter_mut().zip(row) {
+                *acc += p * x;
+            }
+        }
+        den
+    }
+}
+
+impl RecurrentAttention for LinearState {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn dv(&self) -> usize {
+        self.dv
+    }
+
+    fn reset(&mut self) {
+        self.z.fill(0.0);
+        self.m.fill(0.0);
+    }
+
+    fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(k.len(), d, "k row");
+        assert_eq!(v.len(), dv, "v row");
+        for a in 0..d {
+            let phi = elu1(k[a]) as f64;
+            self.z[a] += phi;
+            let row = &mut self.m[a * dv..(a + 1) * dv];
+            for (acc, &x) in row.iter_mut().zip(v) {
+                *acc += phi * x as f64;
+            }
+        }
+    }
+
+    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        assert_eq!(q.len(), self.d, "q row");
+        self.query_raw_phi(|a| elu1(q[a]), num)
+    }
+
+    fn query_raw_prepped(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        // prep_rows already applied φ
+        assert_eq!(q.len(), self.d, "q row");
+        self.query_raw_phi(|a| q[a], num)
+    }
+
+    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
+        q.iter()
+            .zip(k)
+            .map(|(&a, &b)| elu1(a) as f64 * elu1(b) as f64)
+            .sum()
+    }
+
+    /// Apply φ once per row block; prepped pair weights are then plain
+    /// dot products.
+    fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
+        rows.iter().map(|&x| elu1(x)).collect()
+    }
+
+    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
+        q.iter().zip(k).map(|(&a, &b)| a as f64 * b as f64).sum()
+    }
+
+    fn state_elements(&self) -> usize {
+        self.z.len() + self.m.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::streaming_forward;
+    use crate::mathref;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_oracle_on_small_case() {
+        let mut rng = Rng::new(11);
+        let (n, d, dv) = (12, 7, 4);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        for causal in [true, false] {
+            let oracle = mathref::linear_attention(&q, &k, &v, n, n, d, dv, causal);
+            let mut st = LinearState::new(d, dv);
+            let got = streaming_forward(&mut st, &q, &k, &v, n, causal);
+            for (a, b) in got.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-5, "causal {causal}");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_are_positive() {
+        // φ > 0 everywhere, so the denominator clamp never matters after
+        // the first absorb
+        let mut rng = Rng::new(12);
+        let st = LinearState::new(8, 4);
+        for _ in 0..50 {
+            let q = rng.normal_vec_f32(8, 2.0);
+            let k = rng.normal_vec_f32(8, 2.0);
+            assert!(st.pair_weight(&q, &k) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Native O(n) attention kernels — the paper's factorized recurrent form.
+//!
+//! `mathref` holds the direct O(n²) oracles; this module holds the thing
+//! the paper is actually about: the same attention computed from running
+//! prefix-sum state, so cost is linear in sequence length and decoding is
+//! O(1) per token.  For the order-2 Taylor kernel
+//!
+//! ```text
+//! w(q, k) = 1 + u·k + ½(u·k)²          with u = q / (α√d)   (after LN)
+//! ```
+//!
+//! the weighted sums over history factorize through the moment states
+//!
+//! ```text
+//! Σ1 (scalar)   Σk (d)   Σk⊗v (d×dv)   Σk⊗k (d²)   Σ(k⊗k)⊗v (d²×dv)
+//! ```
+//!
+//! where the second-order tensors are symmetric in the two k indices and
+//! are stored in packed d(d+1)/2 form (off-diagonal entries weighted 2×
+//! on the query side).  Three evaluation strategies share one state type:
+//!
+//! * [`RecurrentAttention::step`] — streaming: absorb one (k, v), query
+//!   one q.  O(1) per token; this is the serving decode path.
+//! * [`streaming_forward`] — full sequence via repeated `step` (causal)
+//!   or absorb-all-then-query (non-causal).
+//! * [`chunked_forward`] — cache-blocked training form: direct O(c²)
+//!   weights inside each chunk, recurrent state across chunks.
+//!
+//! [`NativeBackend`] wraps kernel construction + head/batch loops behind
+//! the same `(kind, bh, n, d)` surface as `mathref::attention_bhnd`, so
+//! examples, benches and tests run end-to-end with no PJRT artifacts and
+//! no Python.  Everything here is checked against the `mathref` oracles
+//! in `rust/tests/proptests.rs`.
+
+pub mod backend;
+pub mod chunked;
+pub mod ho;
+pub mod linear;
+
+pub use self::backend::{Evaluation, NativeBackend};
+pub use self::chunked::chunked_forward;
+pub use self::ho::HoState;
+pub use self::linear::LinearState;
+
+/// Denominator clamp, identical to the `mathref` oracles: row weights are
+/// positive by construction (order-2 Taylor ≥ ½, elu+1 > 0), so this only
+/// guards the empty-history edge of step-0 decode.
+pub const DEN_FLOOR: f64 = 1e-6;
+
+/// A linear-time attention kernel kept as running prefix-sum state.
+///
+/// The contract tying the three forms together: after `absorb`ing keys
+/// k₁..kₘ with values v₁..vₘ,
+///
+/// ```text
+/// query_raw(q, num) == ( Σⱼ pair_weight(q, kⱼ) · vⱼ ,  Σⱼ pair_weight(q, kⱼ) )
+/// ```
+///
+/// up to floating-point reassociation — which is exactly what lets
+/// `chunked_forward` mix recurrent inter-chunk state with direct
+/// intra-chunk weights, and what the property tests pin against the
+/// O(n²) oracle.
+pub trait RecurrentAttention {
+    /// Key/query feature dimension.
+    fn d(&self) -> usize;
+
+    /// Value dimension.
+    fn dv(&self) -> usize;
+
+    /// Forget all absorbed history (state back to empty).
+    fn reset(&mut self);
+
+    /// Fold one (key, value) row into the state. `k` has length `d()`,
+    /// `v` length `dv()`.
+    fn absorb(&mut self, k: &[f32], v: &[f32]);
+
+    /// Unnormalized read: writes the weighted value sum into `num`
+    /// (length `dv()`) and returns the weight sum (denominator).
+    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64;
+
+    /// The pairwise weight w(q, k) this kernel's state accumulates —
+    /// the direct form used for intra-chunk blocks and oracle checks.
+    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64;
+
+    /// Apply the kernel's per-row preprocessing (LayerNorm, feature map)
+    /// to `n` rows at once, so blocked paths pay it once per row instead
+    /// of once per pair. Default: identity copy.
+    fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
+        rows.to_vec()
+    }
+
+    /// [`Self::pair_weight`] over rows already passed through
+    /// [`Self::prep_rows`]. Default assumes prep is the identity.
+    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
+        self.pair_weight(q, k)
+    }
+
+    /// [`Self::query_raw`] for a query row already passed through
+    /// [`Self::prep_rows`] — lets blocked paths reuse the prepped row
+    /// for both the state read and the pairwise triangle instead of
+    /// re-running the per-row preprocessing. Default assumes prep is
+    /// the identity.
+    fn query_raw_prepped(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        self.query_raw(q, num)
+    }
+
+    /// Number of f64 elements in the state — constant in sequence
+    /// length, which is the O(1)-decode claim in one number.
+    fn state_elements(&self) -> usize;
+
+    /// Normalized attention output for `q` over everything absorbed so
+    /// far. `out` has length `dv()`.
+    fn query(&self, q: &[f32], out: &mut [f32]) {
+        let mut num = vec![0.0f64; self.dv()];
+        let den = self.query_raw(q, &mut num).max(DEN_FLOOR);
+        for (o, x) in out.iter_mut().zip(&num) {
+            *o = (x / den) as f32;
+        }
+    }
+
+    /// One autoregressive decode step: absorb (k, v), then read q —
+    /// position i attends to 1..=i, matching the causal oracles.
+    fn step(&mut self, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        self.absorb(k, v);
+        self.query(q, out);
+    }
+}
+
+/// Full-sequence forward driven one token at a time. `q`/`k` are (n, d)
+/// row-major, `v` is (n, dv); resets the kernel first. Causal runs the
+/// decode recurrence; non-causal absorbs everything, then queries.
+pub fn streaming_forward<K: RecurrentAttention + ?Sized>(
+    kernel: &mut K,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    causal: bool,
+) -> Vec<f32> {
+    let (d, dv) = (kernel.d(), kernel.dv());
+    assert_eq!(q.len(), n * d, "q shape");
+    assert_eq!(k.len(), n * d, "k shape");
+    assert_eq!(v.len(), n * dv, "v shape");
+    kernel.reset();
+    let mut out = vec![0.0f32; n * dv];
+    // one numerator scratch for the whole sequence (the per-token `step`
+    // convenience allocates; the bulk driver must not)
+    let mut num = vec![0.0f64; dv];
+    if !causal {
+        for j in 0..n {
+            kernel.absorb(&k[j * d..(j + 1) * d], &v[j * dv..(j + 1) * dv]);
+        }
+    }
+    for i in 0..n {
+        if causal {
+            kernel.absorb(&k[i * d..(i + 1) * d], &v[i * dv..(i + 1) * dv]);
+        }
+        let den = kernel.query_raw(&q[i * d..(i + 1) * d], &mut num).max(DEN_FLOOR);
+        for (o, &x) in out[i * dv..(i + 1) * dv].iter_mut().zip(num.iter()) {
+            *o = (x / den) as f32;
+        }
+    }
+    out
+}

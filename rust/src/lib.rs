@@ -1,21 +1,36 @@
 //! # HOLT — Higher Order Linear Transformer
 //!
-//! Reproduction of Mercat 2020, *Higher Order Linear Transformer*: linear-
-//! complexity attention through a 2nd-order Taylor expansion of the softmax,
-//! built as a three-layer rust + JAX + Pallas stack:
+//! Reproduction of Mercat 2020, *Higher Order Linear Transformer*:
+//! softmax attention replaced by its 2nd-order Taylor expansion, which
+//! factorizes into running-sum state — O(n) time over a sequence and O(1)
+//! state per token while decoding.
 //!
-//! * **L1** (`python/compile/kernels/`): Pallas kernels for the factorized
-//!   higher-order attention + baselines, with pure-jnp oracles.
-//! * **L2** (`python/compile/model.py`): jax transformer LM (fwd / fused
-//!   AdamW train step / O(1)-state recurrent decode), AOT-lowered to HLO
-//!   text once by `python/compile/aot.py`.
-//! * **L3** (this crate): the runtime coordinator — loads the artifacts via
-//!   PJRT and runs training, serving and every paper experiment with no
-//!   python on any hot path.
+//! The crate has **two execution paths**:
 //!
-//! Entry points: the `holt` binary (see `main.rs` for the CLI), the
-//! examples (`examples/`), and the benches (`benches/`, one per paper
-//! table/figure — see DESIGN.md §4 for the experiment index).
+//! * **Native (default, zero setup)** — [`kernels`] implements the
+//!   factorized recurrence directly in Rust: a streaming [`kernels::HoState`]
+//!   with `step(q, k, v)` for autoregressive decode, a cache-blocked
+//!   [`kernels::chunked_forward`] for full sequences, the elu+1 first-order
+//!   baseline behind the same [`kernels::RecurrentAttention`] trait, and
+//!   [`kernels::NativeBackend`] tying them into the batched `(b·h, n, d)`
+//!   layout. [`mathref`] keeps the direct O(n²) evaluations as independent
+//!   oracles; the property tests pin recurrent ≡ chunked ≡ oracle.
+//!   `cargo test`, `cargo run --example quickstart` and
+//!   `cargo bench --bench native_scaling` all run on this path with no
+//!   artifacts, no PJRT and no Python.
+//!
+//! * **PJRT artifacts (optional)** — the original three-layer stack:
+//!   Pallas kernels (`python/compile/kernels/`), a jax transformer LM
+//!   AOT-lowered to HLO text (`python/compile/aot.py`), and [`runtime`]
+//!   executing those artifacts through a PJRT client, driven by the
+//!   [`coordinator`] (training, O(1)-state serving, every paper
+//!   experiment). Offline builds link a vendored stub `xla` crate that
+//!   reports itself unavailable at `Runtime::new`; swap in a real PJRT
+//!   `xla` crate and build with `--features artifacts` to enable the
+//!   integration tests (see README.md).
+//!
+//! Entry points: the `holt` binary (`main.rs` CLI), `examples/`, and
+//! `benches/` (one per paper table/figure).
 
 pub mod bench;
 pub mod checkpoint;
@@ -24,6 +39,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod json;
+pub mod kernels;
 pub mod mathref;
 pub mod metrics;
 pub mod params;
@@ -32,20 +48,53 @@ pub mod rng;
 pub mod runtime;
 pub mod tokenizer;
 
-/// Locate the artifacts directory: `$HOLT_ARTIFACTS`, else the first
-/// `artifacts/manifest.json` found walking up from the current directory.
-pub fn default_artifacts_dir() -> std::path::PathBuf {
+/// Locate the artifacts directory: `$HOLT_ARTIFACTS` if set (validated),
+/// else the first `artifacts/manifest.json` found walking up from the
+/// current directory.
+///
+/// Errors instead of guessing: callers used to receive a relative
+/// `"artifacts"` path that might not exist and fail later with a confusing
+/// manifest error. Artifact-path entry points want the actionable message
+/// up front — and the native kernels ([`kernels`]) never need this at all.
+pub fn default_artifacts_dir() -> anyhow::Result<std::path::PathBuf> {
     if let Ok(dir) = std::env::var("HOLT_ARTIFACTS") {
-        return dir.into();
+        let path = std::path::PathBuf::from(&dir);
+        if !path.join("manifest.json").exists() {
+            anyhow::bail!(
+                "$HOLT_ARTIFACTS points at '{dir}' but there is no manifest.json there \
+                 (run `make artifacts` to build them)"
+            );
+        }
+        return Ok(path);
     }
-    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let start = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut cur = start.clone();
     loop {
         let cand = cur.join("artifacts");
         if cand.join("manifest.json").exists() {
-            return cand;
+            return Ok(cand);
         }
         if !cur.pop() {
-            return "artifacts".into();
+            anyhow::bail!(
+                "no artifacts directory found walking up from {start:?}: set $HOLT_ARTIFACTS \
+                 or run `make artifacts`. (The native kernel path — holt::kernels, the \
+                 quickstart example, `holt crosscheck --native` — needs no artifacts.)"
+            );
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn missing_artifacts_dir_is_an_error_not_a_guess() {
+        // run from a temp cwd with no artifacts anywhere up the tree is not
+        // something a unit test can guarantee, but the env-var path is:
+        // point HOLT_ARTIFACTS at a bogus dir and expect a clear error.
+        // (env vars are process-global; keep this the only test touching it)
+        std::env::set_var("HOLT_ARTIFACTS", "/definitely/not/a/real/artifacts/dir");
+        let err = super::default_artifacts_dir().unwrap_err().to_string();
+        std::env::remove_var("HOLT_ARTIFACTS");
+        assert!(err.contains("manifest.json"), "{err}");
     }
 }

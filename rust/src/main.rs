@@ -97,9 +97,11 @@ COMMANDS
               --gap-ms MS]
   client     --addr HOST:PORT [--requests N --concurrency C
              --prompt STR --max-tokens N]
-  approx     [--seed S --out DIR]          E1 approximation table
+  approx     [--seed S --out DIR --native] E1 approximation table
+                                           (--native: O(n) kernels, no artifacts)
   fig1       [--points N --out DIR]        Figure 1 data
-  crosscheck [--artifact NAME]             artifact vs rust reference
+  crosscheck [--artifact NAME | --native]  artifact (or native O(n) kernel)
+                                           vs the O(n^2) rust reference
   ablation   [--steps N --task T]          E6 alpha/order training grid
   eval       --model M --ckpt FILE [--task T --batches N]
                                            held-out loss/ppl/accuracy
@@ -153,7 +155,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
 }
 
 fn runtime() -> Result<Runtime> {
-    Runtime::new(&holt::default_artifacts_dir())
+    Runtime::new(&holt::default_artifacts_dir()?)
 }
 
 fn cmd_info(_args: &Args) -> Result<()> {
@@ -348,9 +350,12 @@ fn cmd_client(args: &Args) -> Result<()> {
 }
 
 fn cmd_approx(args: &Args) -> Result<()> {
-    let rt = runtime()?;
     let seed = args.get_usize("seed", 0)? as u64;
-    let rows = experiments::approx_quality(&rt, seed)?;
+    let rows = if args.has("native") {
+        experiments::approx_quality_native(seed, 256, 64)?
+    } else {
+        experiments::approx_quality(&runtime()?, seed)?
+    };
     println!("E1 — approximation quality (rel L2 error vs its softmax target)");
     println!("{:>6} {:>6} {:>16} {:>16}", "alpha", "order", "err_vs_target", "err_vs_std");
     for r in &rows {
@@ -376,6 +381,16 @@ fn cmd_fig1(args: &Args) -> Result<()> {
 }
 
 fn cmd_crosscheck(args: &Args) -> Result<()> {
+    if args.has("native") {
+        for kind in ["ho2", "linear"] {
+            let err = experiments::crosscheck_native(kind, 7, 1e-4)?;
+            println!(
+                "native {kind:<10} (streaming + chunked, causal + non-causal) \
+                 max|diff| vs O(n^2) oracle = {err:.2e}  OK"
+            );
+        }
+        return Ok(());
+    }
     let rt = runtime()?;
     let names: Vec<String> = match args.get("artifact") {
         Some(a) => vec![a.to_string()],

@@ -1,8 +1,10 @@
 //! Pure-rust reference math: Taylor expansion (Figure 1), exact softmax
 //! attention, the paper's higher-order linear attention, and the elu+1
-//! baseline — all direct, readable implementations used to cross-check the
-//! AOT artifacts from a second, independently-written codebase, and to
-//! regenerate the paper's Figure 1 without touching python.
+//! baseline — all direct, readable O(n²) implementations. These are the
+//! *oracles*: the native O(n) kernels in `crate::kernels` and the AOT
+//! artifacts are both cross-checked against this independently-written
+//! code (see `rust/tests/proptests.rs`), and Figure 1 regenerates from
+//! here without touching python.
 //!
 //! Shapes: attention functions take flat row-major buffers with explicit
 //! (n, d) sizes for a single head; callers loop heads/batches.
@@ -214,6 +216,33 @@ mod tests {
     }
 
     #[test]
+    fn taylor_order2_is_exactly_the_quadratic() {
+        // order 2 must be literally 1 + x + x²/2, not merely close
+        for i in -60..=60 {
+            let x = i as f64 * 0.1;
+            let want = 1.0 + x + x * x / 2.0;
+            assert!((taylor_exp(x, 2) - want).abs() < 1e-12, "x={x}");
+        }
+        // and the low orders degenerate as they should
+        assert_eq!(taylor_exp(7.5, 0), 1.0);
+        assert!((taylor_exp(7.5, 1) - 8.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn taylor_converges_to_exp_as_order_grows() {
+        for &x in &[-2.0, -0.5, 0.3, 1.0, 2.0] {
+            let mut prev = f64::INFINITY;
+            for order in [2, 4, 6, 8, 12] {
+                let err = (taylor_exp(x, order) - x.exp()).abs();
+                assert!(err <= prev + 1e-15, "x={x} order={order}: {err} > {prev}");
+                prev = err;
+            }
+            // order 12 on |x| <= 2 is accurate to ~1e-6 (worst case x = ±2)
+            assert!(prev < 1e-5, "x={x}: residual {prev}");
+        }
+    }
+
+    #[test]
     fn taylor_order2_is_positive() {
         // 1 + x + x^2/2 >= 1/2 — the denominator-safety property
         for i in -100..=100 {
@@ -233,6 +262,21 @@ mod tests {
             let var = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
             assert!(mean.abs() < 1e-5);
             assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_constant_rows_stay_finite() {
+        // zero variance: eps must keep the result finite (and exactly 0,
+        // since every deviation from the mean is 0)
+        let (n, d) = (3, 16);
+        for c in [0.0f32, 1.0, -4.5, 1e6] {
+            let mut x = vec![c; n * d];
+            layernorm_noaffine(&mut x, n, d, 1e-5);
+            for &v in &x {
+                assert!(v.is_finite(), "c={c}");
+                assert_eq!(v, 0.0, "c={c}");
+            }
         }
     }
 

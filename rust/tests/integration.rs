@@ -3,6 +3,14 @@
 //! These exercise the full L3 path: manifest -> PJRT compile -> execute,
 //! trainer steps, checkpoint resume, decode/forward equivalence and the
 //! continuous-batching engine — everything a user touches.
+//!
+//! Gated behind the `artifacts` feature (Cargo.toml `required-features`):
+//! plain `cargo test` skips this whole target so tier-1 stays green with
+//! no artifacts, no PJRT and no Python. Running it for real needs a
+//! PJRT-backed `xla` crate in place of the vendored stub, plus
+//! `make artifacts` — see README.md.
+
+#![cfg(feature = "artifacts")]
 
 use holt::checkpoint::Checkpoint;
 use holt::coordinator::generation::{decode_step, CachedParams, Generator, SampleOpts};
@@ -19,7 +27,8 @@ use holt::runtime::{Runtime, Tensor};
 // builds its own runtime; compiles are per-test but the tiny artifacts
 // compile in well under a second.
 fn runtime() -> Runtime {
-    Runtime::new(&holt::default_artifacts_dir()).expect("run `make artifacts` first")
+    let dir = holt::default_artifacts_dir().expect("run `make artifacts` first");
+    Runtime::new(&dir).expect("run `make artifacts` first")
 }
 
 #[test]

@@ -6,6 +6,9 @@
 use holt::checkpoint::Checkpoint;
 use holt::coordinator::state::StateManager;
 use holt::json::Json;
+use holt::kernels::{
+    chunked_forward, streaming_forward, HoState, LinearState, RecurrentAttention,
+};
 use holt::mathref;
 use holt::params::ParamStore;
 use holt::rng::Rng;
@@ -147,6 +150,109 @@ fn prop_attention_permutation_equivariance_noncausal() {
         let b = mathref::ho_attention(&q, &k2, &v2, n, n, d, d, 2, 3.0, false, true);
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+#[test]
+fn prop_ho_recurrent_and_chunked_match_oracle() {
+    // the paper's core identity: the factorized O(n) recurrence (both the
+    // streaming decode form and the cache-blocked chunked form) computes
+    // the same function as the direct O(n^2) oracle — across random
+    // shapes, Taylor orders, alphas, causality and LN settings
+    let mut rng = Rng::new(51);
+    for case in 0..24 {
+        let n = rng.uniform_int(1, 65) as usize;
+        let d = rng.uniform_int(1, 17) as usize;
+        let dv = rng.uniform_int(1, 17) as usize;
+        let order = rng.uniform_int(0, 3) as usize;
+        let alpha = [1.0, 2.0, 3.0][rng.uniform_int(0, 3) as usize];
+        let causal = rng.uniform() < 0.5;
+        let normalize = rng.uniform() < 0.5;
+        let chunk = rng.uniform_int(1, 33) as usize;
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let oracle =
+            mathref::ho_attention(&q, &k, &v, n, n, d, dv, order, alpha, causal, normalize);
+        let mut st = HoState::new(d, dv, order, alpha, normalize);
+        let stream = streaming_forward(&mut st, &q, &k, &v, n, causal);
+        let chunked = chunked_forward(&mut st, &q, &k, &v, n, chunk, causal);
+        let es = max_abs_diff(&stream, &oracle);
+        let ec = max_abs_diff(&chunked, &oracle);
+        assert!(
+            es <= 1e-4 && ec <= 1e-4,
+            "case {case} (n={n} d={d} dv={dv} order={order} alpha={alpha} causal={causal} \
+             ln={normalize} chunk={chunk}): stream {es}, chunked {ec}"
+        );
+    }
+}
+
+#[test]
+fn prop_linear_recurrent_matches_oracle() {
+    // elu+1 recurrent state == direct first-order linear attention
+    let mut rng = Rng::new(52);
+    for case in 0..16 {
+        let n = rng.uniform_int(1, 65) as usize;
+        let d = rng.uniform_int(1, 17) as usize;
+        let dv = rng.uniform_int(1, 17) as usize;
+        let causal = rng.uniform() < 0.5;
+        let chunk = rng.uniform_int(1, 33) as usize;
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let oracle = mathref::linear_attention(&q, &k, &v, n, n, d, dv, causal);
+        let mut st = LinearState::new(d, dv);
+        let stream = streaming_forward(&mut st, &q, &k, &v, n, causal);
+        let chunked = chunked_forward(&mut st, &q, &k, &v, n, chunk, causal);
+        assert!(
+            max_abs_diff(&stream, &oracle) <= 1e-4
+                && max_abs_diff(&chunked, &oracle) <= 1e-4,
+            "case {case} (n={n} d={d} dv={dv} causal={causal} chunk={chunk})"
+        );
+    }
+}
+
+#[test]
+fn prop_ho_chunk_size_invariance() {
+    // the chunk length is a throughput knob, never a semantics knob
+    let mut rng = Rng::new(53);
+    let (n, d, dv) = (37, 8, 8);
+    let q = rng.normal_vec_f32(n * d, 1.0);
+    let k = rng.normal_vec_f32(n * d, 1.0);
+    let v = rng.normal_vec_f32(n * dv, 1.0);
+    let mut st = HoState::paper(d, dv);
+    let want = chunked_forward(&mut st, &q, &k, &v, n, 1, true);
+    for chunk in [2, 3, 5, 8, 16, 37, 64, 1000] {
+        let got = chunked_forward(&mut st, &q, &k, &v, n, chunk, true);
+        let err = max_abs_diff(&want, &got);
+        assert!(err <= 1e-5, "chunk {chunk}: {err}");
+    }
+}
+
+#[test]
+fn prop_ho_decode_steps_match_full_forward() {
+    // O(1)-per-token decode must reproduce the training-time causal
+    // forward column by column — the serving-path guarantee
+    let mut rng = Rng::new(54);
+    for _ in 0..8 {
+        let n = rng.uniform_int(2, 48) as usize;
+        let d = rng.uniform_int(2, 12) as usize;
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * d, 1.0);
+        let full = mathref::ho_attention(&q, &k, &v, n, n, d, d, 2, 3.0, true, true);
+        let mut st = HoState::paper(d, d);
+        let mut out = vec![0.0f32; d];
+        for i in 0..n {
+            st.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * d..(i + 1) * d], &mut out);
+            let err = max_abs_diff(&out, &full[i * d..(i + 1) * d]);
+            assert!(err <= 1e-4, "pos {i}: {err}");
         }
     }
 }

@@ -1,6 +1,11 @@
 //! End-to-end TCP serving test: spin up `serve_tcp` on a loopback port,
 //! drive it with JSON-lines requests over real sockets (sequential and
 //! concurrent), and validate the responses.
+//!
+//! Gated behind the `artifacts` feature (Cargo.toml `required-features`),
+//! like rust/tests/integration.rs — plain `cargo test` skips this target.
+
+#![cfg(feature = "artifacts")]
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -35,7 +40,7 @@ fn request(stream: &mut TcpStream, prompt: &str, max_tokens: usize) -> Json {
 fn tcp_roundtrip_and_concurrent_clients() {
     // server thread owns its runtime (PJRT client is !Send)
     std::thread::spawn(|| {
-        let rt = Runtime::new(&holt::default_artifacts_dir()).unwrap();
+        let rt = Runtime::new(&holt::default_artifacts_dir().unwrap()).unwrap();
         let m = rt.manifest.model("ho2_tiny").unwrap();
         let params = ParamStore::init(&m.param_spec, &mut Rng::new(1));
         serve_tcp(&rt, "ho2_tiny", params, ADDR, 7).unwrap();
