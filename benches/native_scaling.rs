@@ -107,7 +107,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     holt::bench::write_csv(std::path::Path::new("results/native_scaling.csv"), &rows)?;
-    println!("\nwrote results/native_scaling.csv");
+    holt::bench::write_json(std::path::Path::new("results/bench_scaling.json"), &rows)?;
+    println!("\nwrote results/native_scaling.csv + results/bench_scaling.json");
     println!(
         "expected shape: the three recurrent columns -> ~2x per doubling (O(n));\n\
          the oracle -> ~4x (O(n^2)). ho2 carries a (1+d+d(d+1)/2)-feature state\n\

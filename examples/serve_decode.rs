@@ -1,49 +1,45 @@
-//! Serving demo: continuous batching over the O(1)-state decode artifact,
-//! with the softmax KV-cache model as the baseline — the paper's
-//! "transformers are RNNs" serving story, measured.
+//! Serving demo: continuous batching with O(1)-per-sequence state, pure
+//! Rust — the paper's "transformers are RNNs" serving story with **zero
+//! setup** (no artifacts, no PJRT, no Python).
 //!
 //!   cargo run --release --example serve_decode [-- n_requests max_tokens]
 //!
 //! Drives the same synthetic load (corpus prompts, staggered arrivals)
-//! through `ho2_tiny` and `softmax_tiny` engines and prints throughput,
-//! TTFT and per-request latency, plus the per-slot state footprint.
+//! through `ho2_tiny` and `linear_tiny` native engines and prints
+//! throughput, TTFT and per-request latency, plus the per-slot state
+//! footprint.  (The softmax baseline has no constant-size recurrent
+//! state — its decode needs the artifact backend's KV cache, which is the
+//! comparison's whole point.)
 
 use holt::coordinator::server::run_synthetic;
+use holt::model::{native_model_entry, Executor, NativeExecutor};
 use holt::params::ParamStore;
 use holt::rng::Rng;
-use holt::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
     let max_tokens: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
 
-    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
-    println!("== continuous-batching serve demo ==");
+    println!("== continuous-batching serve demo (native backend) ==");
     println!("load: {n_requests} requests, 24-byte prompts, {max_tokens} max tokens\n");
 
-    for model in ["ho2_tiny", "linear_tiny", "softmax_tiny"] {
-        let entry = rt.manifest.model(model)?;
+    for model in ["ho2_tiny", "linear_tiny"] {
+        let entry = native_model_entry(model)?;
         let params = ParamStore::init(&entry.param_spec, &mut Rng::new(1));
-        let state_per_slot: usize = entry
-            .state_spec
-            .iter()
-            .map(|s| s.shape[1..].iter().product::<usize>())
-            .sum();
-        let stats =
-            run_synthetic(&rt, model, params, n_requests, 24, max_tokens, 2, 7)?;
+        let exec = NativeExecutor::new(entry, params)?;
+        let state = exec.state_bytes_per_slot();
+        let stats = run_synthetic(Box::new(exec), n_requests, 24, max_tokens, 2, 7)?;
         println!("--- {model} ---");
         println!(
-            "  state/slot: {state_per_slot} f32 ({:.1} KiB){}",
-            state_per_slot as f64 * 4.0 / 1024.0,
-            if entry.config.attn == "softmax" {
-                format!("  (KV cache, grows with ctx {})", entry.config.max_len)
-            } else {
-                "  (constant in context length)".to_string()
-            }
+            "  state/slot: {state} bytes ({:.1} KiB)  (constant in context length)",
+            state as f64 / 1024.0
         );
         println!("  {}\n", stats.report().replace('\n', "\n  "));
     }
-    println!("note: tiny models on CPU PJRT — compare shapes, not absolutes.");
+    println!(
+        "note: tiny random-weight models on CPU — compare shapes, not absolutes.\n\
+         softmax has no O(1) recurrent state; serve it via --backend artifact."
+    );
     Ok(())
 }

@@ -61,6 +61,30 @@ pub fn bench_budget<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchRes
     bench(name, 1, iters, f)
 }
 
+/// Write results as a machine-readable JSON array — one object per case
+/// (name, mean_ms, std_ms, min_ms, iters) — so the perf trajectory can be
+/// diffed across PRs (results/bench_*.json).
+pub fn write_json(path: &std::path::Path, results: &[BenchResult]) -> anyhow::Result<()> {
+    use crate::json::{obj, Json};
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("name", r.name.as_str().into()),
+                ("mean_ms", (r.mean_s * 1e3).into()),
+                ("std_ms", (r.std_s * 1e3).into()),
+                ("min_ms", (r.min_s * 1e3).into()),
+                ("iters", r.iters.into()),
+            ])
+        })
+        .collect();
+    std::fs::write(path, format!("{}\n", Json::Arr(rows)))?;
+    Ok(())
+}
+
 /// Write results as CSV (name, mean_ms, std_ms, min_ms, iters).
 pub fn write_csv(path: &std::path::Path, results: &[BenchResult]) -> anyhow::Result<()> {
     if let Some(dir) = path.parent() {

@@ -1,18 +1,21 @@
-//! Autoregressive generation over the decode artifact.
+//! Autoregressive generation over an [`Executor`].
 //!
-//! Drives the recurrent `decode_*` entry point token by token for a single
-//! prompt (the `holt generate` path).  Batched multi-request decoding
-//! lives in [`server`](crate::coordinator::server); this module also hosts
-//! the shared decode-step plumbing both use.
+//! Drives one decode slot token by token for a single prompt (the
+//! `holt generate` path) — backend-agnostic: hand it a
+//! [`NativeExecutor`](crate::model::NativeExecutor) for the zero-setup
+//! pure-Rust path or an [`ArtifactExecutor`](crate::model::ArtifactExecutor)
+//! for PJRT.  Batched multi-request decoding lives in
+//! [`server`](crate::coordinator::server); this module also hosts the raw
+//! artifact decode-step plumbing the artifact executor and the E4 bench
+//! share.
 
-use std::sync::Arc;
-
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::state::StateManager;
+use crate::model::Executor;
 use crate::params::ParamStore;
 use crate::rng::Rng;
-use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
+use crate::runtime::{Executable, ModelEntry, Tensor};
 use crate::tokenizer::{ByteTokenizer, EOS, PAD};
 
 /// Sampling parameters.
@@ -49,8 +52,10 @@ impl CachedParams {
     }
 }
 
-/// Run one batched decode step: feeds `token[b]` at `pos[b]` for every
-/// slot, updates the state manager, returns logits (B, V).
+/// Run one batched decode step through the decode artifact: feeds
+/// `token[b]` at `pos[b]` for every slot, updates the state manager,
+/// returns logits (B, V).  (Position advancement is the caller's business
+/// — [`crate::model::ArtifactExecutor`] advances active slots only.)
 pub fn decode_step(
     exe: &Executable,
     params: &CachedParams,
@@ -81,61 +86,92 @@ pub fn decode_step(
     Ok(logits)
 }
 
-/// A loaded generation stack: model + decode executable + cached params.
-pub struct Generator<'rt> {
-    pub model: ModelEntry,
-    params: CachedParams,
-    exe: Arc<Executable>,
-    pub vocab: usize,
-    _rt: &'rt Runtime,
+/// A loaded generation stack: any [`Executor`] plus sampling.
+pub struct Generator<'a> {
+    exec: Box<dyn Executor + 'a>,
+    vocab: usize,
+    max_len: usize,
 }
 
-impl<'rt> Generator<'rt> {
-    pub fn new(runtime: &'rt Runtime, model_name: &str, params: ParamStore) -> Result<Self> {
-        let model = runtime.manifest.model(model_name)?.clone();
-        params.check_spec(&model.param_spec)?;
-        let name = model
-            .artifacts
-            .get("decode")
-            .ok_or_else(|| anyhow::anyhow!("model '{}' has no decode artifact", model.name))?;
-        let exe = runtime.load(name)?;
-        let vocab = model.config.vocab_size;
-        let params = CachedParams::new(&params)?;
-        Ok(Generator { model, params, exe, vocab, _rt: runtime })
+impl<'a> Generator<'a> {
+    pub fn new(exec: Box<dyn Executor + 'a>) -> Result<Self> {
+        anyhow::ensure!(
+            exec.supports_decode(),
+            "model '{}' cannot decode on the {} backend \
+             (softmax needs the artifact KV cache; artifact models need a decode artifact)",
+            exec.model().name,
+            exec.backend_name()
+        );
+        let vocab = exec.model().config.vocab_size;
+        let max_len = exec.model().config.max_len;
+        Ok(Generator { exec, vocab, max_len })
     }
 
-    /// Generate a completion for one prompt (slot 0 does the work; other
-    /// slots idle on PAD).  Returns (token ids, text).
+    pub fn model(&self) -> &ModelEntry {
+        self.exec.model()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.exec.backend_name()
+    }
+
+    /// Per-slot decode state footprint (bytes) — for the CLI report.
+    pub fn state_bytes_per_slot(&self) -> usize {
+        self.exec.state_bytes_per_slot()
+    }
+
+    /// Generate a completion for one prompt (one slot does the work;
+    /// other slots stay free).  Returns (token ids, text).
     pub fn generate(
-        &self,
+        &mut self,
         prompt: &str,
         opts: SampleOpts,
         rng: &mut Rng,
     ) -> Result<(Vec<i32>, String)> {
         let tok = ByteTokenizer::new();
         let prompt_ids = tok.encode_with_specials(prompt, false);
-        let max_len = self.model.config.max_len;
-        if prompt_ids.len() + opts.max_tokens > max_len {
+        if prompt_ids.len() + opts.max_tokens > self.max_len {
             bail!(
-                "prompt ({}) + max_tokens ({}) exceeds model max_len ({max_len})",
+                "prompt ({}) + max_tokens ({}) exceeds model max_len ({})",
                 prompt_ids.len(),
-                opts.max_tokens
+                opts.max_tokens,
+                self.max_len
             );
         }
-        let mut sm = StateManager::new(&self.model.state_spec)?;
-        let slot = sm.alloc().unwrap();
-        let b = sm.n_slots();
-        let mut feed = vec![PAD; b];
+        let slot = self
+            .exec
+            .alloc_slot()
+            .ok_or_else(|| anyhow!("no free decode slot"))?;
+        // release the slot even when a decode step errors — a long-lived
+        // Generator must not leak slots on transient failures
+        let result = self.decode_in_slot(slot, &prompt_ids, opts, rng);
+        self.exec.release_slot(slot);
+        let out_ids = result?;
+        let text = tok.decode(&out_ids);
+        Ok((out_ids, text))
+    }
 
-        // prefill: teacher-force the prompt through the recurrence
+    /// Prefill + sampling loop over an already-allocated slot.
+    fn decode_in_slot(
+        &mut self,
+        slot: usize,
+        prompt_ids: &[i32],
+        opts: SampleOpts,
+        rng: &mut Rng,
+    ) -> Result<Vec<i32>> {
+        let b = self.exec.n_slots();
+        let mut feed = vec![PAD; b];
+        let v = self.vocab;
+
+        // prefill: teacher-force the prompt through the recurrence; only
+        // the final prompt position's logits row is ever sampled from
         let mut last_logits: Option<Vec<f32>> = None;
-        for &t in &prompt_ids {
+        for (i, &t) in prompt_ids.iter().enumerate() {
             feed[slot] = t;
-            let logits = decode_step(&self.exe, &self.params, &mut sm, &feed)?;
-            sm.advance(slot);
-            let v = self.vocab;
-            last_logits =
-                Some(logits.as_f32()?[slot * v..(slot + 1) * v].to_vec());
+            let logits = self.exec.decode_step(&feed)?;
+            if i + 1 == prompt_ids.len() {
+                last_logits = Some(logits.as_f32()?[slot * v..(slot + 1) * v].to_vec());
+            }
         }
 
         let mut out_ids = Vec::with_capacity(opts.max_tokens);
@@ -147,12 +183,9 @@ impl<'rt> Generator<'rt> {
             }
             out_ids.push(next);
             feed[slot] = next;
-            let l = decode_step(&self.exe, &self.params, &mut sm, &feed)?;
-            sm.advance(slot);
-            let v = self.vocab;
+            let l = self.exec.decode_step(&feed)?;
             logits = l.as_f32()?[slot * v..(slot + 1) * v].to_vec();
         }
-        let text = tok.decode(&out_ids);
-        Ok((out_ids, text))
+        Ok(out_ids)
     }
 }

@@ -1,13 +1,13 @@
 //! Continuous-batching serve loop (the vLLM-style coordinator, for a model
 //! whose "KV cache" is O(1) per sequence).
 //!
-//! The engine owns the decode executable, the parameters and the
-//! [`StateManager`].  Scheduling is at **token granularity**: every engine
-//! step runs the decode artifact once over all B slots; requests join the
-//! batch the moment a slot is free (mid-flight of everyone else) and leave
-//! on EOS/limit.  Prefill is streamed through the same recurrence — a
-//! prompt token per step — so a long prompt never head-of-line-blocks
-//! other slots' decoding.
+//! The engine owns an [`Executor`] — native pure-Rust or PJRT artifact —
+//! and schedules at **token granularity**: every engine step runs one
+//! decode step over all B slots; requests join the batch the moment a
+//! slot is free (mid-flight of everyone else) and leave on EOS/limit.
+//! Prefill is streamed through the same recurrence — a prompt token per
+//! step — so a long prompt never head-of-line-blocks other slots'
+//! decoding.
 //!
 //! Front ends:
 //! * [`serve_tcp`] — JSON-lines-over-TCP: `{"prompt": ..., "max_tokens":
@@ -22,13 +22,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::generation::{decode_step, CachedParams};
-use crate::coordinator::state::StateManager;
 use crate::json::{obj, Json};
 use crate::metrics::Latencies;
-use crate::params::ParamStore;
+use crate::model::Executor;
 use crate::rng::Rng;
-use crate::runtime::{Executable, ModelEntry, Runtime};
 use crate::tokenizer::{ByteTokenizer, EOS, PAD};
 
 /// One inbound generation request.
@@ -63,7 +60,9 @@ struct Active {
     first_token_at: Option<Instant>,
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics — everything the perf trajectory needs,
+/// JSON-serializable via [`ServeStats::to_json`] so benches land in
+/// `results/bench_serve.json`.
 #[derive(Debug, Default)]
 pub struct ServeStats {
     pub completed: u64,
@@ -72,6 +71,13 @@ pub struct ServeStats {
     pub ttft: Latencies,
     pub per_request: Latencies,
     pub wall_s: f64,
+    /// which executor ran ("native" / "artifact")
+    pub backend: String,
+    pub model: String,
+    pub n_slots: usize,
+    /// per-slot decode state footprint (bytes) — O(1) in context for
+    /// ho2/linear, max_len-sized KV cache for softmax
+    pub state_bytes_per_slot: usize,
 }
 
 impl ServeStats {
@@ -85,7 +91,13 @@ impl ServeStats {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} steps={} wall={:.2}s throughput={:.1} tok/s\n  ttft: {}\n  request latency: {}",
+            "backend={} model={} slots={} state/slot={:.1}KiB\n\
+             requests={} tokens={} steps={} wall={:.2}s throughput={:.1} tok/s\n  \
+             ttft: {}\n  request latency: {}",
+            self.backend,
+            self.model,
+            self.n_slots,
+            self.state_bytes_per_slot as f64 / 1024.0,
             self.completed,
             self.generated_tokens,
             self.engine_steps,
@@ -95,47 +107,53 @@ impl ServeStats {
             self.per_request.summary(),
         )
     }
+
+    /// Machine-readable record for `results/bench_serve.json`.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("backend", self.backend.as_str().into()),
+            ("model", self.model.as_str().into()),
+            ("n_slots", self.n_slots.into()),
+            ("state_bytes_per_slot", self.state_bytes_per_slot.into()),
+            ("requests_completed", (self.completed as i64).into()),
+            ("generated_tokens", (self.generated_tokens as i64).into()),
+            ("engine_steps", (self.engine_steps as i64).into()),
+            ("wall_s", self.wall_s.into()),
+            ("tok_per_s", self.tokens_per_sec().into()),
+            ("ttft_p50_ms", (self.ttft.percentile_us(50.0) as f64 / 1e3).into()),
+            ("ttft_p95_ms", (self.ttft.percentile_us(95.0) as f64 / 1e3).into()),
+            ("latency_p50_ms", (self.per_request.percentile_us(50.0) as f64 / 1e3).into()),
+            ("latency_p95_ms", (self.per_request.percentile_us(95.0) as f64 / 1e3).into()),
+        ])
+    }
 }
 
-/// The continuous-batching engine.
-pub struct Engine<'rt> {
-    pub model: ModelEntry,
-    params: CachedParams,
-    exe: std::sync::Arc<Executable>,
-    sm: StateManager,
+/// The continuous-batching engine over any [`Executor`].
+pub struct Engine<'a> {
+    exec: Box<dyn Executor + 'a>,
     slots: Vec<Option<Active>>,
     rng: Rng,
     vocab: usize,
-    _rt: &'rt Runtime,
+    max_len: usize,
 }
 
-impl<'rt> Engine<'rt> {
-    pub fn new(
-        runtime: &'rt Runtime,
-        model_name: &str,
-        params: ParamStore,
-        seed: u64,
-    ) -> Result<Self> {
-        let model = runtime.manifest.model(model_name)?.clone();
-        params.check_spec(&model.param_spec)?;
-        let exe_name = model
-            .artifacts
-            .get("decode")
-            .ok_or_else(|| anyhow::anyhow!("model '{}' has no decode artifact", model.name))?;
-        let exe = runtime.load(exe_name)?;
-        let sm = StateManager::new(&model.state_spec)?;
-        let n = sm.n_slots();
-        let vocab = model.config.vocab_size;
-        let params = CachedParams::new(&params)?;
+impl<'a> Engine<'a> {
+    pub fn new(exec: Box<dyn Executor + 'a>, seed: u64) -> Result<Self> {
+        anyhow::ensure!(
+            exec.supports_decode(),
+            "model '{}' cannot decode on the {} backend",
+            exec.model().name,
+            exec.backend_name()
+        );
+        let n = exec.n_slots();
+        let vocab = exec.model().config.vocab_size;
+        let max_len = exec.model().config.max_len;
         Ok(Engine {
-            model,
-            params,
-            exe,
-            sm,
+            exec,
             slots: (0..n).map(|_| None).collect(),
             rng: Rng::new(seed),
             vocab,
-            _rt: runtime,
+            max_len,
         })
     }
 
@@ -150,7 +168,7 @@ impl<'rt> Engine<'rt> {
     /// Try to admit one request; gives the request back when no slot is
     /// free.  Oversized prompts are rejected immediately (error response).
     fn admit(&mut self, req: Request) -> Option<Request> {
-        if req.prompt_ids.len() + req.max_tokens > self.model.config.max_len {
+        if req.prompt_ids.len() + req.max_tokens > self.max_len {
             // reject oversized requests right away
             let _ = req.respond.send(Response {
                 id: req.id,
@@ -161,7 +179,7 @@ impl<'rt> Engine<'rt> {
             });
             return None; // consumed
         }
-        let Some(slot) = self.sm.alloc() else {
+        let Some(slot) = self.exec.alloc_slot() else {
             return Some(req);
         };
         self.slots[slot] = Some(Active {
@@ -175,8 +193,9 @@ impl<'rt> Engine<'rt> {
         None
     }
 
-    /// One engine step: build the feed vector, run the artifact, advance
-    /// every active slot.  Returns finished responses.
+    /// One engine step: build the feed vector, run the executor's decode
+    /// step (which advances every active slot), sample/advance request
+    /// state.  Returns finished responses.
     fn step(&mut self, stats: &mut ServeStats) -> Result<Vec<Response>> {
         let b = self.n_slots();
         let mut feed = vec![PAD; b];
@@ -187,7 +206,7 @@ impl<'rt> Engine<'rt> {
                 s.last_token
             };
         }
-        let logits = decode_step(&self.exe, &self.params, &mut self.sm, &feed)?;
+        let logits = self.exec.decode_step(&feed)?;
         stats.engine_steps += 1;
         let lf = logits.as_f32()?;
 
@@ -196,7 +215,6 @@ impl<'rt> Engine<'rt> {
             let Some(mut a) = self.slots[slot_idx].take() else {
                 continue;
             };
-            self.sm.advance(slot_idx);
             if a.prompt_pos < a.req.prompt_ids.len() {
                 a.prompt_pos += 1;
                 if a.prompt_pos < a.req.prompt_ids.len() {
@@ -217,7 +235,7 @@ impl<'rt> Engine<'rt> {
                 a.last_token = next;
             }
             let over_budget = a.generated.len() >= a.req.max_tokens
-                || (self.sm.pos[slot_idx] as usize) >= self.model.config.max_len - 1;
+                || self.exec.pos(slot_idx) >= self.max_len - 1;
             if hit_eos || over_budget {
                 let now = Instant::now();
                 let ttft = a
@@ -236,7 +254,7 @@ impl<'rt> Engine<'rt> {
                     total_s: now.duration_since(a.req.enqueued).as_secs_f64(),
                 };
                 let _ = a.req.respond.send(resp.clone());
-                self.sm.release(slot_idx);
+                self.exec.release_slot(slot_idx);
                 done.push(resp);
             } else {
                 self.slots[slot_idx] = Some(a);
@@ -248,7 +266,13 @@ impl<'rt> Engine<'rt> {
     /// Main loop: admit from `rx`, step while anything is active, block
     /// when idle.  Exits when `rx` disconnects and all slots drain.
     pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
-        let mut stats = ServeStats::default();
+        let mut stats = ServeStats {
+            backend: self.exec.backend_name().to_string(),
+            model: self.exec.model().name.clone(),
+            n_slots: self.n_slots(),
+            state_bytes_per_slot: self.exec.state_bytes_per_slot(),
+            ..ServeStats::default()
+        };
         let t0 = Instant::now();
         let mut pending: Vec<Request> = Vec::new();
         let mut disconnected = false;
@@ -290,16 +314,14 @@ impl<'rt> Engine<'rt> {
 }
 
 /// Serve over TCP with JSON-lines framing.  Blocks forever.
-pub fn serve_tcp(
-    runtime: &Runtime,
-    model_name: &str,
-    params: ParamStore,
-    addr: &str,
-    seed: u64,
-) -> Result<()> {
+pub fn serve_tcp(exec: Box<dyn Executor + '_>, addr: &str, seed: u64) -> Result<()> {
     let (tx, rx) = channel::<Request>();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("[serve] listening on {addr} (JSON lines: {{\"prompt\": ..}})");
+    eprintln!(
+        "[serve] {} backend, model {} — listening on {addr} (JSON lines: {{\"prompt\": ..}})",
+        exec.backend_name(),
+        exec.model().name
+    );
 
     // acceptor threads feed the engine channel
     let accept_tx = tx.clone();
@@ -316,7 +338,7 @@ pub fn serve_tcp(
     });
     drop(tx);
 
-    let mut engine = Engine::new(runtime, model_name, params, seed)?;
+    let mut engine = Engine::new(exec, seed)?;
     let stats = engine.run(rx)?;
     eprintln!("[serve] engine exited\n{}", stats.report());
     Ok(())
@@ -382,11 +404,10 @@ fn handle_conn(conn: TcpStream, tx: Sender<Request>, base_id: u64) -> Result<()>
 
 /// Synthetic load: `n_requests` prompts drawn from the embedded corpus,
 /// arrivals spaced `gap_ms` apart, all through the continuous-batching
-/// engine.  Returns aggregate stats (E4 bench / serve example).
+/// engine.  Returns aggregate stats (E4 bench / serve example /
+/// `results/bench_serve.json`).
 pub fn run_synthetic(
-    runtime: &Runtime,
-    model_name: &str,
-    params: ParamStore,
+    exec: Box<dyn Executor + '_>,
     n_requests: usize,
     prompt_len: usize,
     max_tokens: usize,
@@ -396,6 +417,7 @@ pub fn run_synthetic(
     let (tx, rx) = channel::<Request>();
     let (rtx, _rrx) = channel::<Response>();
     let corpus = crate::data::charlm::CORPUS.as_bytes();
+    let prompt_len = prompt_len.min(corpus.len().saturating_sub(1));
     let mut rng = Rng::new(seed ^ 0x10ad);
     std::thread::spawn(move || {
         for i in 0..n_requests {
@@ -422,6 +444,6 @@ pub fn run_synthetic(
             }
         }
     });
-    let mut engine = Engine::new(runtime, model_name, params, seed)?;
+    let mut engine = Engine::new(exec, seed)?;
     engine.run(rx)
 }

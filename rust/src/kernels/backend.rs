@@ -58,7 +58,13 @@ impl NativeBackend {
 
     /// Fresh recurrent state for one head — the O(1)-per-token decode
     /// object. Errors for `"softmax"`, which has no recurrent form.
-    pub fn state(&self, kind: &str, d: usize, dv: usize) -> Result<Box<dyn RecurrentAttention>> {
+    /// `Send` so per-slot decode sessions can run on scoped threads.
+    pub fn state(
+        &self,
+        kind: &str,
+        d: usize,
+        dv: usize,
+    ) -> Result<Box<dyn RecurrentAttention + Send>> {
         match kind {
             "ho2" | "ho" => Ok(Box::new(HoState::new(
                 d,

@@ -216,6 +216,31 @@ impl RecurrentAttention for HoState {
     fn state_elements(&self) -> usize {
         1 + self.s0v.len() + self.s1.len() + self.s1v.len() + self.s2.len() + self.s2v.len()
     }
+
+    fn save_state(&self, out: &mut Vec<f64>) {
+        out.reserve(self.state_elements());
+        out.push(self.s0);
+        out.extend_from_slice(&self.s0v);
+        out.extend_from_slice(&self.s1);
+        out.extend_from_slice(&self.s1v);
+        out.extend_from_slice(&self.s2);
+        out.extend_from_slice(&self.s2v);
+    }
+
+    fn load_state(&mut self, data: &[f64]) {
+        assert_eq!(data.len(), self.state_elements(), "HoState snapshot size");
+        let (head, rest) = data.split_at(1);
+        self.s0 = head[0];
+        let (a, rest) = rest.split_at(self.s0v.len());
+        self.s0v.copy_from_slice(a);
+        let (a, rest) = rest.split_at(self.s1.len());
+        self.s1.copy_from_slice(a);
+        let (a, rest) = rest.split_at(self.s1v.len());
+        self.s1v.copy_from_slice(a);
+        let (a, rest) = rest.split_at(self.s2.len());
+        self.s2.copy_from_slice(a);
+        self.s2v.copy_from_slice(rest);
+    }
 }
 
 #[cfg(test)]

@@ -99,6 +99,19 @@ impl RecurrentAttention for LinearState {
     fn state_elements(&self) -> usize {
         self.z.len() + self.m.len()
     }
+
+    fn save_state(&self, out: &mut Vec<f64>) {
+        out.reserve(self.state_elements());
+        out.extend_from_slice(&self.z);
+        out.extend_from_slice(&self.m);
+    }
+
+    fn load_state(&mut self, data: &[f64]) {
+        assert_eq!(data.len(), self.state_elements(), "LinearState snapshot size");
+        let (z, m) = data.split_at(self.z.len());
+        self.z.copy_from_slice(z);
+        self.m.copy_from_slice(m);
+    }
 }
 
 #[cfg(test)]

@@ -108,6 +108,18 @@ pub trait RecurrentAttention {
     /// length, which is the O(1)-decode claim in one number.
     fn state_elements(&self) -> usize;
 
+    /// Append the full state to `out` as exactly [`Self::state_elements`]
+    /// f64 values.  This is the serialization used by
+    /// `model::DecodeSession::snapshot` for slot preemption; the layout is
+    /// kernel-private but stable within a process.
+    fn save_state(&self, out: &mut Vec<f64>);
+
+    /// Restore state previously written by [`Self::save_state`].  `data`
+    /// must be exactly [`Self::state_elements`] values long (panics
+    /// otherwise — a length mismatch means the snapshot belongs to a
+    /// different kernel configuration, which is a caller bug).
+    fn load_state(&mut self, data: &[f64]);
+
     /// Normalized attention output for `q` over everything absorbed so
     /// far. `out` has length `dv()`.
     fn query(&self, q: &[f32], out: &mut [f32]) {

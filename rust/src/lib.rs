@@ -15,9 +15,13 @@
 //!   [`kernels::NativeBackend`] tying them into the batched `(b·h, n, d)`
 //!   layout. [`mathref`] keeps the direct O(n²) evaluations as independent
 //!   oracles; the property tests pin recurrent ≡ chunked ≡ oracle.
+//!   On top of the kernels, [`model`] is a full pure-Rust transformer —
+//!   chunked prefill, O(1)-state [`model::DecodeSession`] decoding, and
+//!   the [`model::Executor`] trait the coordinator serves through — so
+//!   `holt generate --backend native` and `holt serve --backend native`
+//!   work end to end with no artifacts, no PJRT and no Python, as do
 //!   `cargo test`, `cargo run --example quickstart` and
-//!   `cargo bench --bench native_scaling` all run on this path with no
-//!   artifacts, no PJRT and no Python.
+//!   `cargo bench --bench native_scaling`.
 //!
 //! * **PJRT artifacts (optional)** — the original three-layer stack:
 //!   Pallas kernels (`python/compile/kernels/`), a jax transformer LM
@@ -42,6 +46,7 @@ pub mod json;
 pub mod kernels;
 pub mod mathref;
 pub mod metrics;
+pub mod model;
 pub mod params;
 pub mod plot;
 pub mod rng;

@@ -1,13 +1,19 @@
 //! `holt` — the CLI front end of the coordinator.
 //!
 //! Subcommands:
-//!   info                     list models + artifacts from the manifest
-//!   train                    run a training job (E3 / E6)
-//!   generate                 sample a completion from a checkpoint
+//!   info                     list models (+ artifacts when present)
+//!   train                    run a training job (E3 / E6, artifact path)
+//!   generate                 sample a completion (native or artifact)
 //!   serve                    continuous-batching server (TCP or synthetic)
 //!   client                   load generator against a running server
 //!   approx                   E1 approximation-quality table
 //!   fig1                     regenerate the paper's Figure 1 data
+//!
+//! `generate`, `serve` and `eval` take `--backend native|artifact`
+//! (default: native).  The native backend is the pure-Rust model executor
+//! (`holt::model`) — no artifacts, no PJRT, no Python, works on a clean
+//! checkout.  The artifact backend is the original PJRT path and needs
+//! `make artifacts` plus a real `xla` crate.
 //!
 //! Argument parsing is hand-rolled (clap is not in the offline vendor
 //! set): `--key value` flags after the subcommand, `--help` anywhere.
@@ -26,9 +32,10 @@ use holt::coordinator::server;
 use holt::coordinator::trainer::{run_training, Trainer};
 use holt::experiments;
 use holt::json::{obj, Json};
+use holt::model::{native_model_entry, ArtifactExecutor, Executor, NativeExecutor};
 use holt::params::ParamStore;
 use holt::rng::Rng;
-use holt::runtime::Runtime;
+use holt::runtime::{ModelEntry, Runtime};
 
 /// Parsed `--key value` flags (plus bare `--flag` booleans).
 struct Args {
@@ -85,16 +92,24 @@ holt — Higher Order Linear Transformer coordinator
 
 USAGE: holt <command> [--key value ...]
 
+ARTIFACT-FREE QUICKSTART (pure-Rust executor; no artifacts, no Python):
+  holt generate --backend native --prompt \"Call me \"
+  holt serve    --backend native --synthetic --requests 8
+  holt serve    --backend native --model ho2_tiny       # TCP on :8490
+  holt eval     --backend native --model ho2_tiny --task charlm
+  holt crosscheck --native
+
 COMMANDS
-  info                         list models and artifacts
+  info       [--backend native|artifact] list models (and artifacts)
   train      --model M --task T --steps N [--lr X --seed S --warmup W
              --log-every K --eval-every K --ckpt-every K --out DIR
-             --config FILE]
-  generate   --model M --ckpt FILE [--prompt STR --max-tokens N
-             --temperature X --top-k K --seed S]
-  serve      --model M [--ckpt FILE --addr HOST:PORT --seed S]
+             --config FILE]               (artifact path)
+  generate   --model M [--backend native|artifact --ckpt FILE --prompt STR
+             --max-tokens N --temperature X --top-k K --seed S]
+  serve      --model M [--backend native|artifact --ckpt FILE
+             --addr HOST:PORT --seed S]
              [--synthetic --requests N --prompt-len L --max-tokens N
-              --gap-ms MS]
+              --gap-ms MS --out DIR]     (synthetic writes bench_serve.json)
   client     --addr HOST:PORT [--requests N --concurrency C
              --prompt STR --max-tokens N]
   approx     [--seed S --out DIR --native] E1 approximation table
@@ -103,13 +118,16 @@ COMMANDS
   crosscheck [--artifact NAME | --native]  artifact (or native O(n) kernel)
                                            vs the O(n^2) rust reference
   ablation   [--steps N --task T]          E6 alpha/order training grid
-  eval       --model M --ckpt FILE [--task T --batches N]
-                                           held-out loss/ppl/accuracy
+  eval       --model M [--backend native|artifact --ckpt FILE --task T
+             --batches N]                 held-out loss/ppl/accuracy
   plot       --files a.jsonl,b.jsonl [--y loss --event step --x step]
                                            terminal chart of metric curves
   ckpt-info  --ckpt FILE                   inspect a checkpoint
 
-Artifacts are located via $HOLT_ARTIFACTS or ./artifacts.
+Native model names: {attn}_{preset} with attn in {ho2, linear, softmax}
+and preset in {tiny, small, base, large}, e.g. ho2_small, linear_tiny,
+plus ablation variants like ho2_tiny_a1_o1.  The artifact path locates
+artifacts via $HOLT_ARTIFACTS or ./artifacts.
 ";
 
 fn main() {
@@ -158,7 +176,88 @@ fn runtime() -> Result<Runtime> {
     Runtime::new(&holt::default_artifacts_dir()?)
 }
 
-fn cmd_info(_args: &Args) -> Result<()> {
+/// Which executor family a command should build.
+fn backend_of<'a>(args: &'a Args) -> Result<&'a str> {
+    let b = args.get("backend").unwrap_or("native");
+    if b == "native" || b == "artifact" {
+        Ok(b)
+    } else {
+        bail!("--backend must be 'native' or 'artifact', got '{b}'")
+    }
+}
+
+/// Parameters for a native model entry: checkpoint if given, else init.
+fn load_params_native(entry: &ModelEntry, ckpt: Option<&str>, seed: u64) -> Result<ParamStore> {
+    match ckpt {
+        Some(path) => {
+            let ck = Checkpoint::load(std::path::Path::new(path))?;
+            let p = ck.section("params")?.clone();
+            p.check_spec(&entry.param_spec)
+                .context("checkpoint does not match this model")?;
+            println!("loaded checkpoint at step {}", ck.step);
+            Ok(p)
+        }
+        None => {
+            eprintln!("note: no --ckpt given, using random init");
+            Ok(ParamStore::init(&entry.param_spec, &mut Rng::new(seed)))
+        }
+    }
+}
+
+fn load_params(rt: &Runtime, model: &str, ckpt: Option<&str>, seed: u64) -> Result<ParamStore> {
+    load_params_native(rt.manifest.model(model)?, ckpt, seed)
+}
+
+/// One executor construction path for every backend-aware command
+/// (generate / serve / eval).  Both executor types own their resources,
+/// so the boxed trait object is `'static` and the artifact `Runtime` can
+/// be dropped here.
+fn build_executor(
+    backend: &str,
+    model: &str,
+    ckpt: Option<&str>,
+    seed: u64,
+) -> Result<Box<dyn Executor>> {
+    match backend {
+        "native" => {
+            let entry = native_model_entry(model)?;
+            let params = load_params_native(&entry, ckpt, seed)?;
+            Ok(Box::new(NativeExecutor::new(entry, params)?))
+        }
+        _ => {
+            let rt = runtime()?;
+            let params = load_params(&rt, model, ckpt, seed)?;
+            Ok(Box::new(ArtifactExecutor::new(&rt, model, params)?))
+        }
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    if backend_of(args)? == "native" {
+        println!("native backend (pure-Rust executor, no artifacts)\n\nmodels:");
+        for preset in holt::model::PRESET_NAMES {
+            for attn in holt::model::ATTN_KINDS {
+                let m = native_model_entry(&format!("{attn}_{preset}"))?;
+                println!(
+                    "  {:<28} {:>10} params  attn={} order={} alpha={} d={} L={} ctx={}{}",
+                    m.name,
+                    m.n_params,
+                    m.config.attn,
+                    m.config.order,
+                    m.config.alpha,
+                    m.config.d_model,
+                    m.config.n_layers,
+                    m.config.max_len,
+                    if attn == "softmax" { "  (forward/eval only)" } else { "" },
+                );
+            }
+        }
+        println!(
+            "\n(+ ablation variants like ho2_tiny_a1_o1; \
+             `holt info --backend artifact` lists lowered artifacts)"
+        );
+        return Ok(());
+    }
     let rt = runtime()?;
     println!("platform: {}", rt.platform());
     println!("\nmodels:");
@@ -224,47 +323,58 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_params(rt: &Runtime, model: &str, ckpt: Option<&str>, seed: u64) -> Result<ParamStore> {
-    match ckpt {
-        Some(path) => {
-            let ck = Checkpoint::load(std::path::Path::new(path))?;
-            let p = ck.section("params")?.clone();
-            p.check_spec(&rt.manifest.model(model)?.param_spec)?;
-            println!("loaded checkpoint at step {}", ck.step);
-            Ok(p)
-        }
-        None => {
-            eprintln!("note: no --ckpt given, using random init");
-            let spec = &rt.manifest.model(model)?.param_spec;
-            Ok(ParamStore::init(spec, &mut Rng::new(seed)))
-        }
-    }
-}
-
-fn cmd_generate(args: &Args) -> Result<()> {
-    let model = args.get("model").unwrap_or("ho2_small").to_string();
-    let rt = runtime()?;
-    let seed = args.get_usize("seed", 0)? as u64;
-    let params = load_params(&rt, &model, args.get("ckpt"), seed)?;
-    let gen = Generator::new(&rt, &model, params)?;
+fn run_generate(exec: Box<dyn Executor + '_>, args: &Args, seed: u64) -> Result<()> {
     let opts = SampleOpts {
         temperature: args.get_f64("temperature", 0.8)? as f32,
         top_k: args.get_usize("top-k", 40)?,
         max_tokens: args.get_usize("max-tokens", 64)?,
     };
     let prompt = args.get("prompt").unwrap_or("The ").to_string();
+    let mut gen = Generator::new(exec)?;
     let mut rng = Rng::new(seed ^ 0x9e37);
     let t0 = Instant::now();
     let (ids, text) = gen.generate(&prompt, opts, &mut rng)?;
     let dt = t0.elapsed().as_secs_f64();
     println!("{prompt}{text}");
     eprintln!(
-        "[{} tokens in {:.2}s = {:.1} tok/s, O(1) state]",
+        "[{} backend: {} tokens in {:.2}s = {:.1} tok/s, {:.1} KiB O(1) state/slot]",
+        gen.backend_name(),
         ids.len(),
         dt,
-        ids.len() as f64 / dt
+        ids.len() as f64 / dt,
+        gen.state_bytes_per_slot() as f64 / 1024.0,
     );
     Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("ho2_small").to_string();
+    let seed = args.get_usize("seed", 0)? as u64;
+    let exec = build_executor(backend_of(args)?, &model, args.get("ckpt"), seed)?;
+    run_generate(exec, args, seed)
+}
+
+fn run_serve(exec: Box<dyn Executor + '_>, args: &Args, cfg: &ServeConfig) -> Result<()> {
+    if args.has("synthetic") {
+        let stats = server::run_synthetic(
+            exec,
+            args.get_usize("requests", 32)?,
+            args.get_usize("prompt-len", 32)?,
+            args.get_usize("max-tokens", 32)?,
+            args.get_usize("gap-ms", 0)? as u64,
+            cfg.seed,
+        )?;
+        println!("{}", stats.report());
+        let out = PathBuf::from(args.get("out").unwrap_or("results"));
+        let path = experiments::write_results(
+            &out,
+            "bench_serve.json",
+            &format!("{}\n", stats.to_json()),
+        )?;
+        println!("wrote {path:?}");
+        return Ok(());
+    }
+    server::serve_tcp(exec, &cfg.addr, cfg.seed)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -275,24 +385,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 0)? as u64,
         ..Default::default()
     };
-    let rt = runtime()?;
-    let params = load_params(&rt, &cfg.model, cfg.ckpt.as_deref(), cfg.seed)?;
-
-    if args.has("synthetic") {
-        let stats = server::run_synthetic(
-            &rt,
-            &cfg.model,
-            params,
-            args.get_usize("requests", 32)?,
-            args.get_usize("prompt-len", 32)?,
-            args.get_usize("max-tokens", 32)?,
-            args.get_usize("gap-ms", 0)? as u64,
-            cfg.seed,
-        )?;
-        println!("{}", stats.report());
-        return Ok(());
-    }
-    server::serve_tcp(&rt, &cfg.model, params, &cfg.addr, cfg.seed)
+    let exec = build_executor(backend_of(args)?, &cfg.model, cfg.ckpt.as_deref(), cfg.seed)?;
+    run_serve(exec, args, &cfg)
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
@@ -305,9 +399,14 @@ fn cmd_client(args: &Args) -> Result<()> {
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for w in 0..conc {
+        let reqs = n / conc + usize::from(w < n % conc);
+        if reqs == 0 {
+            // more workers than requests: an idle worker would still open
+            // a connection and fold a bogus 0-latency sample into the mean
+            continue;
+        }
         let addr = addr.clone();
         let prompt = prompt.clone();
-        let reqs = n / conc + usize::from(w < n % conc);
         handles.push(std::thread::spawn(move || -> Result<(u64, f64)> {
             let mut tokens = 0u64;
             let mut lat = 0.0;
@@ -327,20 +426,24 @@ fn cmd_client(args: &Args) -> Result<()> {
                 let resp = Json::parse(&line)?;
                 tokens += resp.get("n_tokens").and_then(|j| j.as_i64()).unwrap_or(0) as u64;
             }
-            Ok((tokens, lat / reqs.max(1) as f64))
+            Ok((tokens, lat / reqs as f64))
         }));
     }
+    let active = handles.len().max(1);
     let mut total_tokens = 0u64;
-    let mut mean_lat = 0.0;
+    let mut lat_sum = 0.0;
     for h in handles {
         let (t, l) = h.join().unwrap()?;
         total_tokens += t;
-        mean_lat += l / conc as f64;
+        lat_sum += l;
     }
+    let mean_lat = lat_sum / active as f64;
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "{} requests, {} tokens in {:.2}s — {:.1} tok/s, mean request latency {:.3}s",
+        "{} requests over {} workers, {} tokens in {:.2}s — {:.1} tok/s, \
+         mean request latency {:.3}s",
         n,
+        active,
         total_tokens,
         wall,
         total_tokens as f64 / wall,
@@ -465,41 +568,37 @@ fn cmd_ablation(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(args: &Args) -> Result<()> {
-    let model = args.get("model").unwrap_or("ho2_small").to_string();
-    let task = args.get("task").unwrap_or("charlm").to_string();
-    let batches = args.get_usize("batches", 8)?;
-    let seed = args.get_usize("seed", 1234)? as u64;
-    let rt = runtime()?;
-    let entry = rt.manifest.model(&model)?.clone();
-    let params = load_params(&rt, &model, args.get("ckpt"), seed)?;
-
-    // evaluate through the fwd artifact with a held-out generator seed
-    let fwd = rt.load(
-        entry
-            .artifacts
-            .get("fwd")
-            .ok_or_else(|| anyhow::anyhow!("model '{model}' has no fwd artifact"))?,
-    )?;
-    let (b, t) = (entry.config.train_batch, entry.config.train_len);
-    let mut gen = holt::data::make(&task, seed)?;
+fn run_eval(exec: &dyn Executor, task: &str, batches: usize, seed: u64) -> Result<()> {
+    let cfg = &exec.model().config;
+    let (b, t) = (cfg.train_batch, cfg.train_len);
+    let mut gen = holt::data::make(task, seed)?;
     let mut loss_sum = 0.0;
     let mut acc_sum = 0.0;
     for _ in 0..batches {
         let batch = gen.batch(b, t);
-        let mut inputs = params.leaves.clone();
-        inputs.push(batch.tokens.clone());
-        let logits = fwd.run(&inputs)?.remove(0);
+        let logits = exec.forward_logits(&batch.tokens)?;
         loss_sum += batch.cross_entropy(&logits)?;
         acc_sum += batch.accuracy(&logits)?;
     }
     let loss = loss_sum / batches as f64;
     let acc = acc_sum / batches as f64;
     println!(
-        "{model} on {task}: loss {loss:.4}  ppl {:.2}  accuracy {acc:.3}  ({batches} batches of {b}x{t})",
+        "{} [{}] on {task}: loss {loss:.4}  ppl {:.2}  accuracy {acc:.3}  \
+         ({batches} batches of {b}x{t})",
+        exec.model().name,
+        exec.backend_name(),
         loss.exp()
     );
     Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("ho2_small").to_string();
+    let task = args.get("task").unwrap_or("charlm").to_string();
+    let batches = args.get_usize("batches", 8)?.max(1);
+    let seed = args.get_usize("seed", 1234)? as u64;
+    let exec = build_executor(backend_of(args)?, &model, args.get("ckpt"), seed)?;
+    run_eval(&*exec, &task, batches, seed)
 }
 
 fn cmd_plot(args: &Args) -> Result<()> {
@@ -578,5 +677,17 @@ mod tests {
         let a = parse(&["--steps", "abc"]);
         assert!(a.get_usize("steps", 0).is_err());
         assert!(a.get_f64("steps", 0.0).is_err());
+    }
+
+    #[test]
+    fn backend_flag_is_validated() {
+        let a = parse(&["--backend", "native"]);
+        assert_eq!(super::backend_of(&a).unwrap(), "native");
+        let b = parse(&["--backend", "artifact"]);
+        assert_eq!(super::backend_of(&b).unwrap(), "artifact");
+        let c = parse(&["--backend", "tpu"]);
+        assert!(super::backend_of(&c).is_err());
+        let d = parse(&[]);
+        assert_eq!(super::backend_of(&d).unwrap(), "native");
     }
 }

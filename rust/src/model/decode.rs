@@ -1,0 +1,191 @@
+//! `DecodeSession` — one sequence's O(1)-per-token decode state over a
+//! [`NativeModel`].
+//!
+//! The linear transformer *is* an RNN (Katharopoulos et al. 2020, lifted
+//! to order 2 by the source paper): a decoding sequence needs only one
+//! boxed kernel state per (layer, head) — **constant in generated
+//! length** — instead of a growing KV cache.  `snapshot`/`restore`
+//! serialize that state so a serving coordinator can preempt a slot and
+//! resume it later (or migrate it) without replaying the prefix.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::kernels::RecurrentAttention;
+use crate::model::forward::{block_finish, block_qkv, NativeModel};
+use crate::model::nn;
+
+/// Per-sequence decode state: `n_layers · n_heads` kernel states + the
+/// next position.  Create with [`DecodeSession::new`], drive with
+/// [`DecodeSession::decode_step`].
+pub struct DecodeSession {
+    /// layer-major: `states[layer * n_heads + head]`
+    states: Vec<Box<dyn RecurrentAttention + Send>>,
+    n_heads: usize,
+    pos: usize,
+}
+
+/// A serialized [`DecodeSession`] state (slot preemption / migration).
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    pos: usize,
+    state: Vec<f64>,
+}
+
+impl SessionSnapshot {
+    /// Position the snapshot resumes from.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Serialized size in bytes (f64 state + position).
+    pub fn bytes(&self) -> usize {
+        self.state.len() * std::mem::size_of::<f64>() + std::mem::size_of::<usize>()
+    }
+}
+
+impl DecodeSession {
+    /// Fresh session at position 0.  Errors for `"softmax"` models —
+    /// exact attention has no constant-size recurrent state (serve those
+    /// through the artifact backend's KV cache).
+    pub fn new(model: &NativeModel) -> Result<DecodeSession> {
+        let cfg = model.config();
+        let n = cfg.n_layers * cfg.n_heads;
+        let mut states = Vec::with_capacity(n);
+        for _ in 0..n {
+            states.push(model.kernel_state()?);
+        }
+        Ok(DecodeSession { states, n_heads: cfg.n_heads, pos: 0 })
+    }
+
+    /// Next position to be consumed (= tokens absorbed so far).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Total f64 state elements across all (layer, head) kernels —
+    /// constant in generated length, the O(1)-decode claim in one number.
+    pub fn state_elements(&self) -> usize {
+        self.states.iter().map(|s| s.state_elements()).sum()
+    }
+
+    /// Decode-state footprint in bytes.
+    pub fn state_bytes(&self) -> usize {
+        self.state_elements() * std::mem::size_of::<f64>()
+    }
+
+    /// Serialize the full session state.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        let mut state = Vec::with_capacity(self.state_elements());
+        for s in &self.states {
+            s.save_state(&mut state);
+        }
+        SessionSnapshot { pos: self.pos, state }
+    }
+
+    /// Restore a snapshot taken from a session of the same model shape.
+    pub fn restore(&mut self, snap: &SessionSnapshot) -> Result<()> {
+        ensure!(
+            snap.state.len() == self.state_elements(),
+            "snapshot has {} state elements, session expects {} \
+             (snapshot from a different model?)",
+            snap.state.len(),
+            self.state_elements()
+        );
+        let mut off = 0;
+        for s in &mut self.states {
+            let n = s.state_elements();
+            s.load_state(&snap.state[off..off + n]);
+            off += n;
+        }
+        self.pos = snap.pos;
+        Ok(())
+    }
+
+    /// Absorb one token, return next-token logits (vocab,).  Exactly
+    /// column `pos` of [`NativeModel::forward`] run on the same prefix
+    /// (pinned ≤ 1e-4 in rust/tests/model_native.rs).
+    pub fn decode_step(&mut self, model: &NativeModel, token: i32) -> Result<Vec<f32>> {
+        let cfg = model.config();
+        let (d, v, nh, ff) = (cfg.d_model, cfg.vocab_size, cfg.n_heads, cfg.d_ff);
+        let dh = d / nh;
+        ensure!(nh == self.n_heads, "session/model head mismatch");
+        ensure!((0..v as i32).contains(&token), "token {token} out of vocab {v}");
+        if self.pos >= cfg.max_len {
+            bail!("context exhausted: position {} at max_len {}", self.pos, cfg.max_len);
+        }
+
+        let embed = model.embed();
+        let e = &embed[token as usize * d..(token as usize + 1) * d];
+        let p = &model.pos_embed()[self.pos * d..(self.pos + 1) * d];
+        let mut x: Vec<f32> = e.iter().zip(p).map(|(&ev, &pv)| ev + pv).collect();
+
+        let mut a = vec![0.0f32; d];
+        for li in 0..cfg.n_layers {
+            let lw = model.layer(li);
+            // same pre/post-attention halves as NativeModel::forward — only
+            // the attention evaluation differs (stateful step vs chunked)
+            let (q, k, vv) = block_qkv(&lw, &x, 1, d);
+            for hd in 0..nh {
+                let st = &mut self.states[li * nh + hd];
+                st.step(
+                    &q[hd * dh..(hd + 1) * dh],
+                    &k[hd * dh..(hd + 1) * dh],
+                    &vv[hd * dh..(hd + 1) * dh],
+                    &mut a[hd * dh..(hd + 1) * dh],
+                );
+            }
+            block_finish(&lw, &mut x, &a, 1, d, ff);
+        }
+
+        let xf = nn::layernorm_affine(&x, 1, d, model.lnf_g(), model.lnf_b());
+        self.pos += 1;
+        Ok(nn::tied_logits(&xf, 1, d, embed, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::native_model_entry;
+    use crate::params::ParamStore;
+    use crate::rng::Rng;
+
+    fn model(name: &str) -> NativeModel {
+        let entry = native_model_entry(name).unwrap();
+        let params = ParamStore::init(&entry.param_spec, &mut Rng::new(5));
+        NativeModel::new(entry, params).unwrap()
+    }
+
+    #[test]
+    fn softmax_has_no_decode_session() {
+        assert!(DecodeSession::new(&model("softmax_tiny")).is_err());
+    }
+
+    #[test]
+    fn context_exhaustion_is_an_error() {
+        let m = model("ho2_tiny");
+        let mut s = DecodeSession::new(&m).unwrap();
+        for i in 0..m.config().max_len {
+            s.decode_step(&m, (i % 256) as i32).unwrap();
+        }
+        assert!(s.decode_step(&m, 0).is_err());
+    }
+
+    #[test]
+    fn snapshot_reports_size() {
+        let m = model("ho2_tiny");
+        let s = DecodeSession::new(&m).unwrap();
+        let snap = s.snapshot();
+        assert_eq!(snap.pos(), 0);
+        assert!(snap.bytes() >= s.state_bytes());
+    }
+
+    #[test]
+    fn restore_rejects_wrong_shape() {
+        let m2 = model("ho2_tiny");
+        let m1 = model("ho2_tiny_a3_o1"); // smaller per-head state
+        let mut s2 = DecodeSession::new(&m2).unwrap();
+        let s1 = DecodeSession::new(&m1).unwrap();
+        assert!(s2.restore(&s1.snapshot()).is_err());
+    }
+}

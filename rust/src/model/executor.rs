@@ -1,0 +1,372 @@
+//! The [`Executor`] trait — one execution surface for the coordinator,
+//! two engines behind it.
+//!
+//! The coordinator (generation, continuous-batching server, eval) is
+//! written against this trait only; *how* logits get computed is an
+//! implementation detail:
+//!
+//! * [`NativeExecutor`] — pure-Rust [`NativeModel`] forward + per-slot
+//!   [`DecodeSession`]s on the O(n) kernels.  Zero setup: no artifacts,
+//!   no PJRT, no Python.  The decode batch loop fans active slots out
+//!   over scoped threads (each session is independent).
+//! * [`ArtifactExecutor`] — the original PJRT path: AOT-lowered decode /
+//!   fwd artifacts driven through [`Runtime`], state slots managed by
+//!   [`StateManager`].  Behavior is unchanged from the pre-trait
+//!   coordinator.
+//!
+//! Future scaling work (batching policy, sharding, quantized state)
+//! lands as new trait impls or wrappers, not coordinator rewrites.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::generation::{decode_step, CachedParams};
+use crate::coordinator::state::StateManager;
+use crate::kernels::RecurrentAttention;
+use crate::model::decode::{DecodeSession, SessionSnapshot};
+use crate::model::forward::{fan_out, NativeModel};
+use crate::params::ParamStore;
+use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
+
+/// A model execution engine with slot-based O(1)-state decoding.
+///
+/// Slots are the unit of continuous batching: every [`Executor::decode_step`]
+/// consumes one token for *every allocated* slot (callers pad the feed
+/// vector with `PAD` for free slots) and advances their positions.
+pub trait Executor {
+    /// The model being executed (config, specs, parameter counts).
+    fn model(&self) -> &ModelEntry;
+
+    /// `"native"` or `"artifact"` — for logs and bench records.
+    fn backend_name(&self) -> &'static str;
+
+    /// Whether this executor can decode (native softmax models and
+    /// models lowered without a decode artifact cannot).
+    fn supports_decode(&self) -> bool;
+
+    /// Full-sequence forward: `tokens` (B, T) i32 → logits (B, T, V) f32.
+    /// The prefill / eval form — no slot state involved.
+    fn forward_logits(&self, tokens: &Tensor) -> Result<Tensor>;
+
+    /// Fixed slot count of the decode batch.
+    fn n_slots(&self) -> usize;
+
+    fn free_slots(&self) -> usize;
+
+    /// Claim a fresh slot (state zeroed, position 0), if any is free.
+    fn alloc_slot(&mut self) -> Option<usize>;
+
+    /// Return a slot to the pool.
+    fn release_slot(&mut self, slot: usize);
+
+    /// Tokens consumed so far by `slot` (0 for free slots).
+    fn pos(&self, slot: usize) -> usize;
+
+    /// One decode step over all slots: `feed[slot]` is the token for each
+    /// allocated slot (free slots' entries are ignored).  Returns logits
+    /// (B, V); rows of free slots are zero.  Advances every allocated
+    /// slot's position.
+    fn decode_step(&mut self, feed: &[i32]) -> Result<Tensor>;
+
+    /// Decode-state footprint per slot in bytes — the paper's O(1) vs
+    /// O(n) serving comparison in one number.
+    fn state_bytes_per_slot(&self) -> usize;
+
+    /// Serialize a slot's decode state for preemption.  Only the native
+    /// backend supports this today.
+    fn snapshot_slot(&self, slot: usize) -> Result<SessionSnapshot> {
+        let _ = slot;
+        bail!("state snapshot is only supported on the native backend")
+    }
+
+    /// Restore a slot from a [`SessionSnapshot`].
+    fn restore_slot(&mut self, slot: usize, snap: &SessionSnapshot) -> Result<()> {
+        let _ = (slot, snap);
+        bail!("state restore is only supported on the native backend")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust executor: [`NativeModel`] + per-slot [`DecodeSession`]s.
+pub struct NativeExecutor {
+    model: NativeModel,
+    sessions: Vec<Option<DecodeSession>>,
+    /// per-slot state elements, probed once (0 ⇒ decode unsupported)
+    state_elems: usize,
+}
+
+impl NativeExecutor {
+    /// Build from a native [`ModelEntry`] (see
+    /// [`crate::model::native_model_entry`]) and its parameters.
+    pub fn new(entry: ModelEntry, params: ParamStore) -> Result<NativeExecutor> {
+        let n_slots = entry.config.decode_batch.max(1);
+        let model = NativeModel::new(entry, params)?;
+        let state_elems = if model.config().attn == "softmax" {
+            0 // exact attention has no recurrent state; forward-only
+        } else {
+            // all (layer, head) kernel states are identical — probe one
+            let cfg = model.config();
+            model.kernel_state()?.state_elements() * cfg.n_layers * cfg.n_heads
+        };
+        Ok(NativeExecutor {
+            model,
+            sessions: (0..n_slots).map(|_| None).collect(),
+            state_elems,
+        })
+    }
+
+    /// The underlying model (weights + forward).
+    pub fn native_model(&self) -> &NativeModel {
+        &self.model
+    }
+}
+
+impl Executor for NativeExecutor {
+    fn model(&self) -> &ModelEntry {
+        self.model.entry()
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_decode(&self) -> bool {
+        self.state_elems > 0
+    }
+
+    fn forward_logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        ensure!(tokens.shape.len() == 2, "tokens must be (B, T), got {:?}", tokens.shape);
+        let (b, t) = (tokens.shape[0], tokens.shape[1]);
+        let logits = self.model.forward(tokens.as_i32()?, b, t)?;
+        Ok(Tensor::f32(vec![b, t, self.model.config().vocab_size], logits))
+    }
+
+    fn n_slots(&self) -> usize {
+        self.sessions.len()
+    }
+
+    fn free_slots(&self) -> usize {
+        if !self.supports_decode() {
+            return 0;
+        }
+        self.sessions.iter().filter(|s| s.is_none()).count()
+    }
+
+    fn alloc_slot(&mut self) -> Option<usize> {
+        if !self.supports_decode() {
+            return None;
+        }
+        let slot = self.sessions.iter().position(|s| s.is_none())?;
+        // state shape was validated at construction; new() cannot fail here
+        self.sessions[slot] = Some(DecodeSession::new(&self.model).ok()?);
+        Some(slot)
+    }
+
+    fn release_slot(&mut self, slot: usize) {
+        self.sessions[slot] = None;
+    }
+
+    fn pos(&self, slot: usize) -> usize {
+        self.sessions[slot].as_ref().map(|s| s.pos()).unwrap_or(0)
+    }
+
+    fn decode_step(&mut self, feed: &[i32]) -> Result<Tensor> {
+        let b = self.sessions.len();
+        ensure!(feed.len() == b, "feed length {} != slots {b}", feed.len());
+        ensure!(self.supports_decode(), "model '{}' has no native decode", self.model().name);
+        let v = self.model.config().vocab_size;
+        let model = &self.model;
+        let mut rows: Vec<Option<Result<Vec<f32>>>> = feed.iter().map(|_| None).collect();
+        // the parallel batch loop: active (token, session, result) triples,
+        // chunked over at most `available_parallelism` scoped threads —
+        // sessions are disjoint &mut, the model is a shared &.
+        let mut work: Vec<(i32, &mut DecodeSession, &mut Option<Result<Vec<f32>>>)> = self
+            .sessions
+            .iter_mut()
+            .zip(rows.iter_mut())
+            .enumerate()
+            .filter_map(|(slot, (sess, row))| sess.as_mut().map(|s| (feed[slot], s, row)))
+            .collect();
+        // sub-128-dim models do so little per token that a thread spawn
+        // per slot costs as much as the step itself — keep those serial
+        if work.len() < 2 || self.model.config().d_model < 128 {
+            for (tok, sess, row) in work.iter_mut() {
+                **row = Some(sess.decode_step(model, *tok));
+            }
+        } else {
+            fan_out(&mut work, |(tok, sess, row)| {
+                **row = Some(sess.decode_step(model, *tok));
+            });
+        }
+        let mut out = vec![0.0f32; b * v];
+        for (slot, row) in rows.into_iter().enumerate() {
+            if let Some(r) = row {
+                out[slot * v..(slot + 1) * v].copy_from_slice(&r?);
+            }
+        }
+        Ok(Tensor::f32(vec![b, v], out))
+    }
+
+    fn state_bytes_per_slot(&self) -> usize {
+        self.state_elems * std::mem::size_of::<f64>()
+    }
+
+    fn snapshot_slot(&self, slot: usize) -> Result<SessionSnapshot> {
+        self.sessions
+            .get(slot)
+            .and_then(|s| s.as_ref())
+            .map(|s| s.snapshot())
+            .ok_or_else(|| anyhow!("slot {slot} is not active"))
+    }
+
+    fn restore_slot(&mut self, slot: usize, snap: &SessionSnapshot) -> Result<()> {
+        match self.sessions.get_mut(slot).and_then(|s| s.as_mut()) {
+            Some(s) => s.restore(snap),
+            None => bail!("slot {slot} is not active"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact (PJRT)
+// ---------------------------------------------------------------------------
+
+/// PJRT executor over AOT-lowered artifacts — the pre-trait coordinator
+/// behavior, unchanged: decode runs the `decode_*` artifact over all B
+/// slots per step, state lives in a [`StateManager`].  Compiled
+/// executables are `Arc`-shared with the [`Runtime`]'s cache, so the
+/// executor does not borrow the runtime.
+pub struct ArtifactExecutor {
+    entry: ModelEntry,
+    params: ParamStore,
+    /// parameter literals for the decode hot path — built only when a
+    /// decode artifact exists (forward-only eval skips the copy)
+    cached: Option<CachedParams>,
+    decode_exe: Option<Arc<Executable>>,
+    fwd_exe: Option<Arc<Executable>>,
+    sm: Option<StateManager>,
+    active: Vec<bool>,
+}
+
+impl ArtifactExecutor {
+    /// Loads whichever of the decode/fwd artifacts the model declares up
+    /// front (the executor does not keep the runtime, so it cannot load
+    /// lazily).  A declared artifact that fails to load only disables its
+    /// path — decoding still works with a broken fwd artifact and vice
+    /// versa, exactly as when the coordinator loaded per-path; the error
+    /// surfaces (with the load failure already logged) when the disabled
+    /// path is actually used.
+    pub fn new(runtime: &Runtime, model_name: &str, params: ParamStore) -> Result<Self> {
+        let entry = runtime.manifest.model(model_name)?.clone();
+        params.check_spec(&entry.param_spec)?;
+        let try_load = |kind: &str| match entry.artifacts.get(kind) {
+            Some(name) => match runtime.load(name) {
+                Ok(exe) => Some(exe),
+                Err(err) => {
+                    eprintln!("[executor] {kind} artifact '{name}' unavailable: {err:#}");
+                    None
+                }
+            },
+            None => None,
+        };
+        let decode_exe = try_load("decode");
+        let fwd_exe = try_load("fwd");
+        let cached = if decode_exe.is_some() {
+            Some(CachedParams::new(&params)?)
+        } else {
+            None
+        };
+        let sm = if decode_exe.is_some() && !entry.state_spec.is_empty() {
+            Some(StateManager::new(&entry.state_spec)?)
+        } else {
+            None
+        };
+        let n = sm.as_ref().map(|s| s.n_slots()).unwrap_or(0);
+        let active = vec![false; n];
+        Ok(ArtifactExecutor { entry, params, cached, decode_exe, fwd_exe, sm, active })
+    }
+}
+
+impl Executor for ArtifactExecutor {
+    fn model(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "artifact"
+    }
+
+    fn supports_decode(&self) -> bool {
+        self.decode_exe.is_some() && self.sm.is_some()
+    }
+
+    fn forward_logits(&self, tokens: &Tensor) -> Result<Tensor> {
+        let fwd = self
+            .fwd_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("model '{}' has no fwd artifact", self.entry.name))?;
+        let mut inputs = self.params.leaves.clone();
+        inputs.push(tokens.clone());
+        Ok(fwd.run(&inputs)?.remove(0))
+    }
+
+    fn n_slots(&self) -> usize {
+        self.active.len()
+    }
+
+    fn free_slots(&self) -> usize {
+        self.sm.as_ref().map(|s| s.free_slots()).unwrap_or(0)
+    }
+
+    fn alloc_slot(&mut self) -> Option<usize> {
+        let slot = self.sm.as_mut()?.alloc()?;
+        self.active[slot] = true;
+        Some(slot)
+    }
+
+    fn release_slot(&mut self, slot: usize) {
+        if self.active[slot] {
+            self.active[slot] = false;
+            if let Some(sm) = self.sm.as_mut() {
+                sm.release(slot);
+            }
+        }
+    }
+
+    fn pos(&self, slot: usize) -> usize {
+        self.sm.as_ref().map(|s| s.pos[slot] as usize).unwrap_or(0)
+    }
+
+    fn decode_step(&mut self, feed: &[i32]) -> Result<Tensor> {
+        let exe = self
+            .decode_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("model '{}' has no decode artifact", self.entry.name))?;
+        let cached = self
+            .cached
+            .as_ref()
+            .ok_or_else(|| anyhow!("model '{}' has no cached decode params", self.entry.name))?;
+        let sm = self
+            .sm
+            .as_mut()
+            .ok_or_else(|| anyhow!("model '{}' has no decode state spec", self.entry.name))?;
+        let logits = decode_step(exe, cached, sm, feed)?;
+        for (slot, is_active) in self.active.iter().enumerate() {
+            if *is_active {
+                sm.advance(slot);
+            }
+        }
+        Ok(logits)
+    }
+
+    fn state_bytes_per_slot(&self) -> usize {
+        self.sm
+            .as_ref()
+            .map(|s| s.state_elements_per_slot() * std::mem::size_of::<f32>())
+            .unwrap_or(0)
+    }
+}

@@ -1,0 +1,377 @@
+//! `NativeModel` — the pure-Rust transformer forward over a
+//! [`ParamStore`], running attention through the native O(n) kernels.
+//!
+//! Architecture (exact mirror of `python/compile/model.py::forward`):
+//! token embedding + learned absolute positions, pre-LN blocks
+//! (LN → multi-head attention → residual, LN → GELU FFN → residual),
+//! final LN, logits tied to the embedding.  Attention is dispatched per
+//! (sequence, head) through [`NativeBackend`] — chunked evaluation for
+//! the full-sequence form here, streaming `step` in
+//! [`DecodeSession`](crate::model::DecodeSession).
+//!
+//! The per-(sequence, head) attention calls are independent, so the
+//! forward fans them out over scoped threads — the same parallelism shape
+//! as the decode batch loop in `NativeExecutor`.
+
+use anyhow::{ensure, Result};
+
+use crate::kernels::{Evaluation, NativeBackend, RecurrentAttention};
+use crate::model::nn;
+use crate::params::ParamStore;
+use crate::runtime::{ModelConfig, ModelEntry};
+
+/// Leaf offsets inside one block, in `param_spec` order.
+const L_LN1_G: usize = 0;
+const L_LN1_B: usize = 1;
+const L_WQ: usize = 2;
+const L_WK: usize = 3;
+const L_WV: usize = 4;
+const L_WO: usize = 5;
+const L_LN2_G: usize = 6;
+const L_LN2_B: usize = 7;
+const L_W1: usize = 8;
+const L_B1: usize = 9;
+const L_W2: usize = 10;
+const L_B2: usize = 11;
+/// Leaves per block.
+const L_PER_BLOCK: usize = 12;
+
+/// Borrowed weight view of one transformer block.
+pub struct LayerView<'a> {
+    pub ln1_g: &'a [f32],
+    pub ln1_b: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub ln2_g: &'a [f32],
+    pub ln2_b: &'a [f32],
+    pub w1: &'a [f32],
+    pub b1: &'a [f32],
+    pub w2: &'a [f32],
+    pub b2: &'a [f32],
+}
+
+/// A model: config + parameters + the native attention backend.
+/// Immutable and `Sync` — one instance serves every decode slot and every
+/// prefill thread concurrently.
+pub struct NativeModel {
+    entry: ModelEntry,
+    params: ParamStore,
+    backend: NativeBackend,
+}
+
+impl NativeModel {
+    /// Wrap a parameter store for `entry`, validating names/shapes/dtypes
+    /// against `entry.param_spec` up front so weight accessors are
+    /// infallible afterwards.
+    pub fn new(entry: ModelEntry, params: ParamStore) -> Result<NativeModel> {
+        params.check_spec(&entry.param_spec)?;
+        for (name, t) in params.names.iter().zip(&params.leaves) {
+            ensure!(t.as_f32().is_ok(), "parameter leaf '{name}' is not f32");
+        }
+        let cfg = &entry.config;
+        ensure!(cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0, "bad head split");
+        ensure!(
+            entry.param_spec.len() == 2 + L_PER_BLOCK * cfg.n_layers + 2,
+            "param spec does not look like the transformer layout"
+        );
+        let backend = NativeBackend {
+            order: cfg.order,
+            alpha: cfg.alpha,
+            normalize_qk: true,
+            chunk: 64,
+            evaluation: Evaluation::Chunked,
+        };
+        Ok(NativeModel { entry, params, backend })
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.entry.config
+    }
+
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    fn leaf(&self, i: usize) -> &[f32] {
+        self.params.leaves[i].as_f32().expect("validated f32 in new()")
+    }
+
+    /// (vocab, d_model) token embedding — also the tied LM head.
+    pub fn embed(&self) -> &[f32] {
+        self.leaf(0)
+    }
+
+    /// (max_len, d_model) learned positions.
+    pub fn pos_embed(&self) -> &[f32] {
+        self.leaf(1)
+    }
+
+    pub fn lnf_g(&self) -> &[f32] {
+        self.leaf(2 + L_PER_BLOCK * self.entry.config.n_layers)
+    }
+
+    pub fn lnf_b(&self) -> &[f32] {
+        self.leaf(2 + L_PER_BLOCK * self.entry.config.n_layers + 1)
+    }
+
+    /// Weight view of block `li`.
+    pub fn layer(&self, li: usize) -> LayerView<'_> {
+        let base = 2 + li * L_PER_BLOCK;
+        LayerView {
+            ln1_g: self.leaf(base + L_LN1_G),
+            ln1_b: self.leaf(base + L_LN1_B),
+            wq: self.leaf(base + L_WQ),
+            wk: self.leaf(base + L_WK),
+            wv: self.leaf(base + L_WV),
+            wo: self.leaf(base + L_WO),
+            ln2_g: self.leaf(base + L_LN2_G),
+            ln2_b: self.leaf(base + L_LN2_B),
+            w1: self.leaf(base + L_W1),
+            b1: self.leaf(base + L_B1),
+            w2: self.leaf(base + L_W2),
+            b2: self.leaf(base + L_B2),
+        }
+    }
+
+    /// Fresh recurrent attention state for one head — errors for
+    /// `"softmax"` (no O(1) recurrent form).
+    pub fn kernel_state(&self) -> Result<Box<dyn RecurrentAttention + Send>> {
+        let dh = self.entry.config.d_model / self.entry.config.n_heads;
+        self.backend.state(&self.entry.config.attn, dh, dh)
+    }
+
+    /// Full-sequence forward: `tokens` (b·t, row-major (b, t)) → logits
+    /// (b, t, vocab) flat.  Causal; attention runs in the chunked O(n)
+    /// evaluation (exact softmax for the `"softmax"` baseline).
+    pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Vec<f32>> {
+        let cfg = &self.entry.config;
+        let (d, v, nh, ff) = (cfg.d_model, cfg.vocab_size, cfg.n_heads, cfg.d_ff);
+        let dh = d / nh;
+        ensure!(tokens.len() == b * t && b > 0 && t > 0, "tokens shape ({b}, {t})");
+        ensure!(
+            t <= cfg.max_len,
+            "sequence length {t} exceeds model max_len {}",
+            cfg.max_len
+        );
+
+        // embedding + positions
+        let embed = self.embed();
+        let pose = self.pos_embed();
+        let mut x = vec![0.0f32; b * t * d];
+        for (row, &tok) in tokens.iter().enumerate() {
+            ensure!(
+                (0..v as i32).contains(&tok),
+                "token {tok} out of vocab {v}"
+            );
+            let ti = row % t;
+            let e = &embed[tok as usize * d..(tok as usize + 1) * d];
+            let p = &pose[ti * d..(ti + 1) * d];
+            for (o, (&ev, &pv)) in x[row * d..(row + 1) * d].iter_mut().zip(e.iter().zip(p)) {
+                *o = ev + pv;
+            }
+        }
+
+        for li in 0..cfg.n_layers {
+            let lw = self.layer(li);
+            // attention sublayer
+            let (q, k, vv) = block_qkv(&lw, &x, b * t, d);
+            let mut units = Vec::with_capacity(b * nh);
+            for bi in 0..b {
+                for hd in 0..nh {
+                    units.push((
+                        gather_head(&q, bi, t, d, hd, dh),
+                        gather_head(&k, bi, t, d, hd, dh),
+                        gather_head(&vv, bi, t, d, hd, dh),
+                    ));
+                }
+            }
+            let outs = self.attend_units(&units, t, dh)?;
+            let mut a = vec![0.0f32; b * t * d];
+            for (u, o) in outs.iter().enumerate() {
+                scatter_head(&mut a, o, u / nh, t, d, u % nh, dh);
+            }
+            block_finish(&lw, &mut x, &a, b * t, d, ff);
+        }
+
+        let xf = nn::layernorm_affine(&x, b * t, d, self.lnf_g(), self.lnf_b());
+        Ok(nn::tied_logits(&xf, b * t, d, embed, v))
+    }
+
+    /// Run one attention call per (sequence, head) unit, fanned out over
+    /// scoped threads (each unit is independent).
+    fn attend_units(
+        &self,
+        units: &[(Vec<f32>, Vec<f32>, Vec<f32>)],
+        t: usize,
+        dh: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let kind = self.entry.config.attn.as_str();
+        let backend = &self.backend;
+        let mut work: Vec<(&(Vec<f32>, Vec<f32>, Vec<f32>), Option<Result<Vec<f32>>>)> =
+            units.iter().map(|u| (u, None)).collect();
+        fan_out(&mut work, |item| {
+            let (q, k, v) = item.0;
+            item.1 = Some(backend.forward(kind, q, k, v, t, dh, dh, true));
+        });
+        work.into_iter()
+            .map(|(_, o)| o.expect("every attention unit is computed"))
+            .collect()
+    }
+}
+
+/// Run `f` over every item, chunked across at most
+/// `available_parallelism` scoped threads (serially when one thread is
+/// enough).  The one fan-out used by both the prefill head loop and the
+/// executor's decode batch loop.
+pub(crate) fn fan_out<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], f: F) {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items.len())
+        .max(1);
+    if threads <= 1 {
+        for item in items.iter_mut() {
+            f(item);
+        }
+    } else {
+        let per = items.len().div_ceil(threads);
+        let f = &f;
+        std::thread::scope(|s| {
+            for chunk in items.chunks_mut(per) {
+                s.spawn(move || {
+                    for item in chunk.iter_mut() {
+                        f(item);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// ln1 → q/k/v projections for `rows` rows of `x` — the pre-attention
+/// half of a block, shared verbatim by the chunked prefill and the
+/// per-token decode so the two paths cannot drift apart.
+pub(crate) fn block_qkv(
+    lw: &LayerView<'_>,
+    x: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let h = nn::layernorm_affine(x, rows, d, lw.ln1_g, lw.ln1_b);
+    (
+        nn::matmul(&h, lw.wq, rows, d, d),
+        nn::matmul(&h, lw.wk, rows, d, d),
+        nn::matmul(&h, lw.wv, rows, d, d),
+    )
+}
+
+/// Attention output projection + residual, then the FFN sublayer (`b2`
+/// lands outside the matmul, as in the jax model) — the post-attention
+/// half of a block, shared by prefill and decode.
+pub(crate) fn block_finish(
+    lw: &LayerView<'_>,
+    x: &mut [f32],
+    a: &[f32],
+    rows: usize,
+    d: usize,
+    ff: usize,
+) {
+    let ao = nn::matmul(a, lw.wo, rows, d, d);
+    nn::add_inplace(x, &ao);
+    let h = nn::layernorm_affine(x, rows, d, lw.ln2_g, lw.ln2_b);
+    let mut f = nn::matmul(&h, lw.w1, rows, d, ff);
+    nn::add_bias(&mut f, rows, ff, lw.b1);
+    nn::gelu_inplace(&mut f);
+    let g = nn::matmul(&f, lw.w2, rows, ff, d);
+    nn::add_inplace(x, &g);
+    nn::add_bias(x, rows, d, lw.b2);
+}
+
+/// Copy head `hd`'s (t, dh) slice out of a (t, d) row-major buffer for
+/// sequence `bi` of a (b, t, d) stack.
+fn gather_head(src: &[f32], bi: usize, t: usize, d: usize, hd: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * dh];
+    for (ti, orow) in out.chunks_mut(dh).enumerate() {
+        let base = (bi * t + ti) * d + hd * dh;
+        orow.copy_from_slice(&src[base..base + dh]);
+    }
+    out
+}
+
+/// Inverse of [`gather_head`].
+fn scatter_head(dst: &mut [f32], src: &[f32], bi: usize, t: usize, d: usize, hd: usize, dh: usize) {
+    for (ti, srow) in src.chunks(dh).enumerate() {
+        let base = (bi * t + ti) * d + hd * dh;
+        dst[base..base + dh].copy_from_slice(srow);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::native_model_entry;
+    use crate::rng::Rng;
+
+    fn tiny_model(name: &str, seed: u64) -> NativeModel {
+        let entry = native_model_entry(name).unwrap();
+        let params = ParamStore::init(&entry.param_spec, &mut Rng::new(seed));
+        NativeModel::new(entry, params).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let m = tiny_model("ho2_tiny", 0);
+        let (b, t) = (2, 12);
+        let toks: Vec<i32> = (0..(b * t) as i32).map(|i| i % 256).collect();
+        let logits = m.forward(&toks, b, t).unwrap();
+        assert_eq!(logits.len(), b * t * m.config().vocab_size);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forward_is_deterministic_across_thread_schedules() {
+        // the parallel fan-out must not change results run to run
+        let m = tiny_model("ho2_tiny", 1);
+        let toks: Vec<i32> = (0..24).map(|i| (i * 7) % 256).collect();
+        let a = m.forward(&toks, 2, 12).unwrap();
+        let b = m.forward(&toks, 2, 12).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn causality_suffix_changes_do_not_leak_backward() {
+        let m = tiny_model("ho2_tiny", 2);
+        let t = 16;
+        let mut toks: Vec<i32> = (0..t as i32).map(|i| (i * 11) % 256).collect();
+        let base = m.forward(&toks, 1, t).unwrap();
+        let v = m.config().vocab_size;
+        toks[t - 1] = (toks[t - 1] + 1) % 256; // perturb only the last token
+        let got = m.forward(&toks, 1, t).unwrap();
+        for i in 0..(t - 1) * v {
+            assert_eq!(base[i], got[i], "position {} leaked the future", i / v);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_tokens_and_lengths() {
+        let m = tiny_model("ho2_tiny", 3);
+        assert!(m.forward(&[99999], 1, 1).is_err());
+        assert!(m.forward(&[-1], 1, 1).is_err());
+        let long = vec![0i32; 129];
+        assert!(m.forward(&long, 1, 129).is_err(), "tiny max_len is 128");
+    }
+
+    #[test]
+    fn softmax_baseline_forward_works_natively() {
+        let m = tiny_model("softmax_tiny", 4);
+        let toks: Vec<i32> = (0..10).collect();
+        let logits = m.forward(&toks, 1, 10).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,65 @@
+//! Native model executor — the full transformer, served from pure Rust.
+//!
+//! PR 1 proved the O(n) attention kernels against the O(n²) oracles; this
+//! subsystem turns them into **a model that serves**: an artifact-free
+//! multi-layer transformer forward plus an O(1)-per-token decode object,
+//! behind one execution trait the whole coordinator is written against.
+//!
+//! # The `Executor` trait
+//!
+//! [`Executor`] is the contract between models and the coordinator
+//! (generation, the continuous-batching server, eval).  Its surface is
+//! three execution calls plus slot management:
+//!
+//! * [`Executor::forward_logits`] — full-sequence `(B, T) → (B, T, V)`
+//!   teacher-forced forward (prefill / eval).  On the native path this is
+//!   [`NativeModel::forward`]: cache-blocked chunked attention, heads
+//!   fanned out over scoped threads.
+//! * [`Executor::decode_step`] — one token for every allocated slot,
+//!   `(B,) → (B, V)`, advancing each slot's recurrent state in place.
+//!   O(1) work and O(1) state per token per slot — the paper's serving
+//!   claim.  The native impl runs active slots on scoped threads.
+//! * [`Executor::state_bytes_per_slot`] — the size of one slot's decode
+//!   state in bytes, constant in context length for ho2/linear (vs a
+//!   KV cache that grows with `max_len` for the softmax baseline).
+//! * slots — [`Executor::alloc_slot`] / [`Executor::release_slot`] /
+//!   [`Executor::pos`]: continuous batching admits a request the moment a
+//!   slot frees up, mid-flight of everyone else.
+//! * preemption — [`Executor::snapshot_slot`] /
+//!   [`Executor::restore_slot`] serialize one slot's state
+//!   ([`SessionSnapshot`]) so a scheduler can evict and resume sequences
+//!   (native backend only).
+//!
+//! Two implementations ship today: [`NativeExecutor`] (no artifacts, no
+//! PJRT, no Python — `holt serve --backend native` runs anywhere the
+//! crate compiles) and [`ArtifactExecutor`] (the original PJRT path,
+//! behavior unchanged).  Future scaling PRs — batching policy, sharding,
+//! quantized state — land as new impls or wrappers of this trait, not as
+//! coordinator rewrites.
+//!
+//! # Model registry
+//!
+//! [`native_model_entry`] builds a [`crate::runtime::ModelEntry`] from a
+//! manifest-style name (`ho2_small`, `linear_tiny`, `ho2_tiny_a1_o2`, …)
+//! with the *same* parameter leaf order, shapes and init spec as the
+//! python lowering — checkpoints are interchangeable between backends.
+//!
+//! # Consistency
+//!
+//! The non-attention ops ([`nn`]) use a fixed accumulation order so
+//! prefill and decode differ only by the attention evaluation strategy
+//! (chunked vs streaming — the same recurrence, reassociated);
+//! `rust/tests/model_native.rs` pins full-model prefill ≡ decode logits
+//! to ≤ 1e-4 across attention kinds, Taylor orders and shapes, and
+//! snapshot → decode → restore → decode to bit-equality.
+
+pub mod decode;
+pub mod executor;
+pub mod forward;
+pub mod nn;
+pub mod presets;
+
+pub use self::decode::{DecodeSession, SessionSnapshot};
+pub use self::executor::{ArtifactExecutor, Executor, NativeExecutor};
+pub use self::forward::{LayerView, NativeModel};
+pub use self::presets::{native_model_entry, ho_feature_dim, ATTN_KINDS, PRESET_NAMES};

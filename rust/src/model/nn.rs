@@ -1,0 +1,166 @@
+//! Dense f32 building blocks for the native transformer forward.
+//!
+//! Everything here is deliberately written with a **fixed accumulation
+//! order** (ascending inner index, f32 accumulator): the chunked prefill
+//! and the token-by-token decode run the *same* functions over the same
+//! rows, so outside the attention kernels the two execution forms are
+//! bit-identical — the prefill/decode cross-check in
+//! `rust/tests/model_native.rs` only has to absorb the (tiny, f64)
+//! reassociation inside the attention state itself.
+
+use crate::mathref::layernorm_noaffine;
+
+/// LayerNorm epsilon — matches `python/compile/kernels/ref.py`.
+const LN_EPS: f32 = 1e-5;
+
+/// Row-major matmul: `x` (n, d) @ `w` (d, m) -> (n, m).
+///
+/// Loop order (row, inner, col) keeps `w` rows contiguous in cache and —
+/// more importantly — gives every output element the same summation order
+/// whether `n` is a full sequence (prefill) or 1 (decode).
+pub fn matmul(x: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * d, "matmul lhs shape");
+    assert_eq!(w.len(), d * m, "matmul rhs shape");
+    let mut out = vec![0.0f32; n * m];
+    for (xr, or) in x.chunks(d).zip(out.chunks_mut(m)) {
+        for (&xi, wr) in xr.iter().zip(w.chunks(m)) {
+            for (o, &wv) in or.iter_mut().zip(wr) {
+                *o += xi * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise `x += y`.
+pub fn add_inplace(x: &mut [f32], y: &[f32]) {
+    assert_eq!(x.len(), y.len(), "add shape");
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
+/// Broadcast-add a (m,) bias onto every row of `x` (n, m).
+pub fn add_bias(x: &mut [f32], n: usize, m: usize, bias: &[f32]) {
+    assert_eq!(x.len(), n * m, "bias target shape");
+    assert_eq!(bias.len(), m, "bias shape");
+    for row in x.chunks_mut(m) {
+        for (a, &b) in row.iter_mut().zip(bias) {
+            *a += b;
+        }
+    }
+}
+
+/// tanh-approximated GELU, in place — the `jax.nn.gelu` default the
+/// artifact models are lowered with.
+pub fn gelu_inplace(x: &mut [f32]) {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    for v in x.iter_mut() {
+        let t = *v;
+        *v = 0.5 * t * (1.0 + (C * (t + 0.044715 * t * t * t)).tanh());
+    }
+}
+
+/// Affine LayerNorm over rows of `x` (n, d): `LN(x) * g + b`, returned as
+/// a new buffer (the residual stream stays untouched).
+pub fn layernorm_affine(x: &[f32], n: usize, d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), n * d, "layernorm shape");
+    assert_eq!(g.len(), d, "layernorm gain shape");
+    assert_eq!(b.len(), d, "layernorm bias shape");
+    let mut out = x.to_vec();
+    layernorm_noaffine(&mut out, n, d, LN_EPS);
+    for row in out.chunks_mut(d) {
+        for ((v, &gc), &bc) in row.iter_mut().zip(g).zip(b) {
+            *v = *v * gc + bc;
+        }
+    }
+    out
+}
+
+/// Tied LM head: `x` (n, d) @ `embed`ᵀ (d, v) -> logits (n, v), with
+/// `embed` stored row-major (v, d) as in the parameter store.
+pub fn tied_logits(x: &[f32], n: usize, d: usize, embed: &[f32], v: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * d, "logits input shape");
+    assert_eq!(embed.len(), v * d, "embedding shape");
+    let mut out = vec![0.0f32; n * v];
+    for (xr, or) in x.chunks(d).zip(out.chunks_mut(v)) {
+        for (o, er) in or.iter_mut().zip(embed.chunks(d)) {
+            let mut acc = 0.0f32;
+            for (xi, ei) in xr.iter().zip(er) {
+                acc += xi * ei;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known_case() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let out = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_row_batching_is_bit_identical() {
+        // computing rows one at a time (the decode path) must give bitwise
+        // the same result as the batched call (the prefill path)
+        let mut rng = crate::rng::Rng::new(9);
+        let (n, d, m) = (5, 7, 6);
+        let x = rng.normal_vec_f32(n * d, 1.0);
+        let w = rng.normal_vec_f32(d * m, 1.0);
+        let full = matmul(&x, &w, n, d, m);
+        for r in 0..n {
+            let row = matmul(&x[r * d..(r + 1) * d], &w, 1, d, m);
+            assert_eq!(row, full[r * m..(r + 1) * m].to_vec(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn gelu_anchor_values() {
+        let mut x = vec![0.0f32, 1.0, -1.0, 3.0];
+        gelu_inplace(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 0.841192).abs() < 1e-4, "{}", x[1]);
+        assert!((x[2] + 0.158808).abs() < 1e-4, "{}", x[2]);
+        assert!((x[3] - 2.9964).abs() < 1e-3, "{}", x[3]);
+    }
+
+    #[test]
+    fn layernorm_affine_identity_gain() {
+        let mut rng = crate::rng::Rng::new(1);
+        let (n, d) = (3, 16);
+        let x = rng.normal_vec_f32(n * d, 2.0);
+        let g = vec![1.0f32; d];
+        let b = vec![0.0f32; d];
+        let out = layernorm_affine(&x, n, d, &g, &b);
+        for row in out.chunks(d) {
+            let mean: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+        // and the residual input is untouched (fresh buffer returned)
+        assert_eq!(x.len(), n * d);
+    }
+
+    #[test]
+    fn tied_logits_matches_explicit_dot() {
+        let mut rng = crate::rng::Rng::new(2);
+        let (n, d, v) = (2, 4, 3);
+        let x = rng.normal_vec_f32(n * d, 1.0);
+        let e = rng.normal_vec_f32(v * d, 1.0);
+        let out = tied_logits(&x, n, d, &e, v);
+        for r in 0..n {
+            for w in 0..v {
+                let want: f32 = (0..d).map(|i| x[r * d + i] * e[w * d + i]).sum();
+                assert!((out[r * v + w] - want).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Native model registry — [`ModelEntry`] construction **without a
+//! manifest**, so the whole serving stack runs with no artifacts, no PJRT
+//! and no Python.
+//!
+//! The presets, leaf order and shapes mirror `python/compile/configs.py`
+//! and `python/compile/model.py::param_spec`/`state_spec` exactly: a
+//! checkpoint trained through the artifact path loads into the native
+//! executor (same names, same shapes, same order) and vice versa.
+//!
+//! Model names follow the manifest convention:
+//!
+//! ```text
+//! {attn}_{preset}[_a{alpha}][_o{order}]
+//! ```
+//!
+//! e.g. `ho2_small`, `linear_tiny`, `softmax_base`, `ho2_tiny_a1_o2`
+//! (the E6 ablation grid).  `attn` ∈ {ho2, linear, softmax}; `preset` ∈
+//! {tiny, small, base, large}.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Init, LeafSpec, ModelConfig, ModelEntry};
+use crate::tokenizer::VOCAB_SIZE;
+
+/// Preset names, in size order (mirror of python PRESETS).
+pub const PRESET_NAMES: [&str; 4] = ["tiny", "small", "base", "large"];
+
+/// Attention kinds a model can be built with.
+pub const ATTN_KINDS: [&str; 3] = ["ho2", "linear", "softmax"];
+
+/// Base [`ModelConfig`] for a preset (attention defaults: ho2, order 2,
+/// α = 3 — overridden by the name's suffixes) — mirror of configs.py:
+/// (d_model, n_heads, n_layers, d_ff, max_len, train_batch, train_len,
+/// decode_batch, vocab).
+fn base_config(preset: &str) -> Option<ModelConfig> {
+    let cfg = |d, h, l, ff, ctx, tb, tl, db, v| ModelConfig {
+        preset: preset.to_string(),
+        vocab_size: v,
+        d_model: d,
+        n_heads: h,
+        n_layers: l,
+        d_ff: ff,
+        max_len: ctx,
+        attn: "ho2".to_string(),
+        order: 2,
+        alpha: 3.0,
+        impl_: "native".to_string(),
+        train_batch: tb,
+        train_len: tl,
+        decode_batch: db,
+    };
+    match preset {
+        "tiny" => Some(cfg(64, 2, 2, 256, 128, 8, 64, 4, VOCAB_SIZE)),
+        "small" => Some(cfg(256, 8, 4, 1024, 256, 16, 128, 8, VOCAB_SIZE)),
+        "base" => Some(cfg(512, 16, 8, 2048, 512, 8, 256, 8, VOCAB_SIZE)),
+        "large" => Some(cfg(768, 12, 12, 3072, 1024, 4, 512, 4, 32768)),
+        _ => None,
+    }
+}
+
+/// Feature dimension of the (unpacked) HO feature map for head dim `d` —
+/// mirror of python `ref.ho_feature_dim`; used only for the informational
+/// `state_spec` (the native kernels store the packed d(d+1)/2 form).
+pub fn ho_feature_dim(d: usize, order: usize) -> usize {
+    1 + if order >= 1 { d } else { 0 } + if order >= 2 { d * d } else { 0 }
+}
+
+/// Parse a manifest-style model name into a [`ModelConfig`].
+fn parse_name(name: &str) -> Result<ModelConfig> {
+    let mut parts = name.split('_');
+    let attn = parts.next().unwrap_or_default();
+    if !ATTN_KINDS.contains(&attn) {
+        bail!(
+            "unknown model '{name}': want {{attn}}_{{preset}}[_a{{alpha}}][_o{{order}}] \
+             with attn in {ATTN_KINDS:?} and preset in {PRESET_NAMES:?}"
+        );
+    }
+    let preset = parts.next().unwrap_or_default();
+    let Some(mut cfg) = base_config(preset) else {
+        bail!("unknown preset '{preset}' in model '{name}' (want one of {PRESET_NAMES:?})");
+    };
+    cfg.attn = attn.to_string();
+    for part in parts {
+        if let Some(a) = part.strip_prefix('a') {
+            cfg.alpha = match a.parse() {
+                Ok(x) if x > 0.0 => x,
+                _ => bail!("bad alpha suffix '{part}' in model '{name}'"),
+            };
+        } else if let Some(o) = part.strip_prefix('o') {
+            cfg.order = match o.parse() {
+                Ok(x) if x <= 2 => x,
+                _ => bail!("bad order suffix '{part}' in model '{name}' (orders 0..=2)"),
+            };
+        } else {
+            bail!("unrecognized suffix '{part}' in model '{name}'");
+        }
+    }
+    Ok(cfg)
+}
+
+/// Ordered parameter leaf spec — the exact mirror of python
+/// `model.param_spec` (names, shapes, init kinds and order).  This order
+/// is the checkpoint / train-artifact calling convention.
+pub fn param_spec(cfg: &ModelConfig) -> Vec<LeafSpec> {
+    let (d, v, ff) = (cfg.d_model, cfg.vocab_size, cfg.d_ff);
+    let std = 0.02f32;
+    // residual-branch output projections: GPT-2 depth-scaled init
+    let std_res = std / (2.0 * cfg.n_layers as f32).sqrt();
+    let mut spec = vec![
+        LeafSpec { name: "embed".into(), shape: vec![v, d], init: Init::Normal { std } },
+        LeafSpec { name: "pos".into(), shape: vec![cfg.max_len, d], init: Init::Normal { std } },
+    ];
+    let normal = |name: String, shape: Vec<usize>, std: f32| LeafSpec {
+        name,
+        shape,
+        init: Init::Normal { std },
+    };
+    for i in 0..cfg.n_layers {
+        let p = format!("blocks.{i}.");
+        spec.push(LeafSpec { name: format!("{p}ln1_g"), shape: vec![d], init: Init::Ones });
+        spec.push(LeafSpec { name: format!("{p}ln1_b"), shape: vec![d], init: Init::Zeros });
+        spec.push(normal(format!("{p}wq"), vec![d, d], std));
+        spec.push(normal(format!("{p}wk"), vec![d, d], std));
+        spec.push(normal(format!("{p}wv"), vec![d, d], std));
+        spec.push(normal(format!("{p}wo"), vec![d, d], std_res));
+        spec.push(LeafSpec { name: format!("{p}ln2_g"), shape: vec![d], init: Init::Ones });
+        spec.push(LeafSpec { name: format!("{p}ln2_b"), shape: vec![d], init: Init::Zeros });
+        spec.push(normal(format!("{p}w1"), vec![d, ff], std));
+        spec.push(LeafSpec { name: format!("{p}b1"), shape: vec![ff], init: Init::Zeros });
+        spec.push(normal(format!("{p}w2"), vec![ff, d], std_res));
+        spec.push(LeafSpec { name: format!("{p}b2"), shape: vec![d], init: Init::Zeros });
+    }
+    spec.push(LeafSpec { name: "lnf_g".into(), shape: vec![d], init: Init::Ones });
+    spec.push(LeafSpec { name: "lnf_b".into(), shape: vec![d], init: Init::Zeros });
+    spec
+}
+
+/// Ordered decode-state leaf spec — mirror of python `model.state_spec`.
+/// Informational for the native path (the [`crate::model::DecodeSession`]
+/// keeps its own packed state); the artifact path's `StateManager` owns
+/// tensors of exactly these shapes.
+pub fn state_spec(cfg: &ModelConfig) -> Vec<LeafSpec> {
+    let (b, h) = (cfg.decode_batch, cfg.n_heads);
+    let dh = cfg.d_model / cfg.n_heads;
+    let mut spec = Vec::new();
+    for i in 0..cfg.n_layers {
+        if cfg.attn == "softmax" {
+            spec.push(LeafSpec {
+                name: format!("layer{i}.kcache"),
+                shape: vec![b, h, cfg.max_len, dh],
+                init: Init::Zeros,
+            });
+            spec.push(LeafSpec {
+                name: format!("layer{i}.vcache"),
+                shape: vec![b, h, cfg.max_len, dh],
+                init: Init::Zeros,
+            });
+        } else {
+            let f = if cfg.attn == "ho2" { ho_feature_dim(dh, cfg.order) } else { dh };
+            spec.push(LeafSpec {
+                name: format!("layer{i}.S"),
+                shape: vec![b, h, f, dh],
+                init: Init::Zeros,
+            });
+            spec.push(LeafSpec {
+                name: format!("layer{i}.z"),
+                shape: vec![b, h, f],
+                init: Init::Zeros,
+            });
+        }
+    }
+    spec
+}
+
+/// Build a complete, manifest-free [`ModelEntry`] for a model name.
+pub fn native_model_entry(name: &str) -> Result<ModelEntry> {
+    let config = parse_name(name)?;
+    if config.d_model % config.n_heads != 0 {
+        bail!("d_model {} not divisible by n_heads {}", config.d_model, config.n_heads);
+    }
+    let param_spec = param_spec(&config);
+    let state_spec = state_spec(&config);
+    let n_params = param_spec
+        .iter()
+        .map(|l| l.shape.iter().product::<usize>())
+        .sum();
+    Ok(ModelEntry {
+        name: name.to_string(),
+        config,
+        n_params,
+        param_spec,
+        state_spec,
+        artifacts: std::collections::HashMap::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_style_names() {
+        let e = native_model_entry("ho2_small").unwrap();
+        assert_eq!(e.config.d_model, 256);
+        assert_eq!(e.config.attn, "ho2");
+        assert_eq!(e.config.order, 2);
+        assert!((e.config.alpha - 3.0).abs() < 1e-12);
+
+        let e = native_model_entry("ho2_tiny_a1_o1").unwrap();
+        assert_eq!(e.config.preset, "tiny");
+        assert!((e.config.alpha - 1.0).abs() < 1e-12);
+        assert_eq!(e.config.order, 1);
+
+        assert!(native_model_entry("ho3_small").is_err());
+        assert!(native_model_entry("ho2_giant").is_err());
+        assert!(native_model_entry("ho2_tiny_x9").is_err());
+        assert!(native_model_entry("ho2_tiny_o3").is_err());
+    }
+
+    #[test]
+    fn n_params_matches_closed_form() {
+        // mirror of configs.py ModelConfig.n_params()
+        for name in ["ho2_tiny", "linear_small", "softmax_base"] {
+            let e = native_model_entry(name).unwrap();
+            let c = &e.config;
+            let (d, v, l, f) = (c.d_model, c.vocab_size, c.n_layers, c.d_ff);
+            let per_block = 4 * d * d + 2 * d * f + f + d + 4 * d;
+            let want = v * d + c.max_len * d + l * per_block + 2 * d;
+            assert_eq!(e.n_params, want, "{name}");
+            assert_eq!(e.param_elements(), e.n_params, "{name}");
+        }
+    }
+
+    #[test]
+    fn leaf_order_is_the_python_contract() {
+        let e = native_model_entry("ho2_tiny").unwrap();
+        let names: Vec<&str> = e.param_spec.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "pos");
+        assert_eq!(names[2], "blocks.0.ln1_g");
+        assert_eq!(names[13], "blocks.0.b2");
+        assert_eq!(names[14], "blocks.1.ln1_g");
+        assert_eq!(*names.last().unwrap(), "lnf_b");
+        assert_eq!(names.len(), 2 + 12 * 2 + 2);
+    }
+
+    #[test]
+    fn state_spec_shapes_per_attention_kind() {
+        let e = native_model_entry("ho2_tiny").unwrap();
+        let dh = 64 / 2;
+        let f = ho_feature_dim(dh, 2);
+        assert_eq!(e.state_spec[0].shape, vec![4, 2, f, dh]);
+        assert_eq!(e.state_spec[1].shape, vec![4, 2, f]);
+
+        let e = native_model_entry("softmax_tiny").unwrap();
+        assert_eq!(e.state_spec[0].shape, vec![4, 2, 128, dh]);
+
+        let e = native_model_entry("linear_tiny").unwrap();
+        assert_eq!(e.state_spec[0].shape, vec![4, 2, dh, dh]);
+    }
+}

@@ -19,6 +19,7 @@ use holt::coordinator::state::StateManager;
 use holt::coordinator::trainer::Trainer;
 use holt::data;
 use holt::experiments;
+use holt::model::ArtifactExecutor;
 use holt::params::ParamStore;
 use holt::rng::Rng;
 use holt::runtime::{Runtime, Tensor};
@@ -191,7 +192,8 @@ fn generator_produces_tokens() {
     let rt = &runtime();
     let m = rt.manifest.model("ho2_tiny").unwrap();
     let params = ParamStore::init(&m.param_spec, &mut Rng::new(5));
-    let gen = Generator::new(rt, "ho2_tiny", params).unwrap();
+    let exec = ArtifactExecutor::new(rt, "ho2_tiny", params).unwrap();
+    let mut gen = Generator::new(Box::new(exec)).unwrap();
     let mut rng = Rng::new(9);
     let opts = SampleOpts { temperature: 1.0, top_k: 0, max_tokens: 12 };
     let (ids, text) = gen.generate("ab", opts, &mut rng).unwrap();
@@ -209,13 +211,15 @@ fn engine_serves_synthetic_load() {
     let rt = &runtime();
     let m = rt.manifest.model("ho2_tiny").unwrap();
     let params = ParamStore::init(&m.param_spec, &mut Rng::new(5));
-    let stats =
-        server::run_synthetic(rt, "ho2_tiny", params, 9, 12, 8, 0, 42).unwrap();
+    let exec = ArtifactExecutor::new(rt, "ho2_tiny", params).unwrap();
+    let stats = server::run_synthetic(Box::new(exec), 9, 12, 8, 0, 42).unwrap();
     assert_eq!(stats.completed, 9);
     assert!(stats.generated_tokens > 0);
     // more requests than slots (4) forces queueing + slot reuse
     assert!(stats.engine_steps as usize >= 12 + 8);
     assert!(stats.tokens_per_sec() > 0.0);
+    assert_eq!(stats.backend, "artifact");
+    assert!(stats.state_bytes_per_slot > 0);
 }
 
 #[test]

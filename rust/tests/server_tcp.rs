@@ -13,6 +13,7 @@ use std::time::Duration;
 
 use holt::coordinator::server::serve_tcp;
 use holt::json::{obj, Json};
+use holt::model::ArtifactExecutor;
 use holt::params::ParamStore;
 use holt::rng::Rng;
 use holt::runtime::Runtime;
@@ -43,7 +44,8 @@ fn tcp_roundtrip_and_concurrent_clients() {
         let rt = Runtime::new(&holt::default_artifacts_dir().unwrap()).unwrap();
         let m = rt.manifest.model("ho2_tiny").unwrap();
         let params = ParamStore::init(&m.param_spec, &mut Rng::new(1));
-        serve_tcp(&rt, "ho2_tiny", params, ADDR, 7).unwrap();
+        let exec = ArtifactExecutor::new(&rt, "ho2_tiny", params).unwrap();
+        serve_tcp(Box::new(exec), ADDR, 7).unwrap();
     });
 
     // wait for the listener (compile included), up to ~30 s
