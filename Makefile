@@ -1,7 +1,7 @@
 # Build-time entry points. Only the artifact path needs python/jax;
 # tier-1 (`cargo build --release && cargo test -q`) never touches this.
 
-.PHONY: artifacts tier1
+.PHONY: artifacts tier1 train-smoke
 
 # AOT-lower the jax model + attention kernels to HLO-text artifacts
 # under ./artifacts (manifest.json + *.hlo). Requires python3 + jax.
@@ -10,3 +10,9 @@ artifacts:
 
 tier1:
 	cargo build --release && cargo test -q
+
+# native training smoke (no artifacts): 40 AdamW steps through the
+# hand-derived backward must drop the loss to <= 85% of its start
+train-smoke:
+	cargo run --release -- train --backend native --model ho2_tiny \
+	  --task copy --steps 40 --log-every 10 --eval-every 0 --min-loss-ratio 0.85

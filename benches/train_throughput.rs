@@ -1,44 +1,97 @@
-//! E5 — train-step throughput by attention type (tokens/sec through the
-//! fused AdamW artifact, the whole L3 hot path included).
+//! E5 — train-step throughput by attention type: tokens/sec through one
+//! full AdamW step (forward + hand-derived backward + optimizer on the
+//! native path; the fused artifact on the PJRT path).
 //!
-//!   cargo bench --bench train_throughput [-- preset]
+//!   cargo bench --bench train_throughput [-- preset] [-- --artifact]
 //!
-//! Writes results/e5_train_throughput.csv.
+//! The native case needs nothing (no artifacts, no Python) and writes
+//! results/bench_train.json next to the serve/scaling bench artifacts;
+//! pass `--artifact` to additionally bench the fused PJRT step (skipped
+//! with a note when artifacts are unavailable).  CSV lands in
+//! results/e5_train_throughput.csv.
 
 use holt::bench::{bench, write_csv, BenchResult};
-use holt::coordinator::trainer::Trainer;
+use holt::coordinator::trainer::{ArtifactTrainer, NativeTrainer, TrainBackend};
 use holt::data;
+use holt::json::{obj, Json};
 use holt::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
-    let preset = std::env::args()
-        .skip(1)
-        .find(|a| !a.starts_with("--"))
-        .unwrap_or_else(|| "tiny".into());
-    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
-    let mut rows: Vec<BenchResult> = Vec::new();
+fn bench_backend(
+    trainer: &mut dyn TrainBackend,
+    label: &str,
+    rows: &mut Vec<BenchResult>,
+    json_rows: &mut Vec<Json>,
+) -> anyhow::Result<()> {
+    let (b, t) = trainer.train_shape();
+    let mut gen = data::make("charlm", 1)?;
+    let batch = gen.batch(b, t);
+    let tokens = (b * t) as f64;
+    let r = bench(label, 1, 5, || {
+        trainer.train_step(&batch, 3e-4).unwrap();
+    });
+    let tok_per_s = tokens / r.mean_s;
+    println!("{}   ({:.0} tok/s, batch {}x{})", r.report(), tok_per_s, b, t);
+    json_rows.push(obj(vec![
+        ("name", r.name.as_str().into()),
+        ("mean_ms", (r.mean_s * 1e3).into()),
+        ("std_ms", (r.std_s * 1e3).into()),
+        ("min_ms", (r.min_s * 1e3).into()),
+        ("iters", r.iters.into()),
+        ("tok_per_s", tok_per_s.into()),
+        ("batch", b.into()),
+        ("seq_len", t.into()),
+    ]));
+    rows.push(r);
+    Ok(())
+}
 
-    println!("E5 — fused train-step throughput ({preset} preset)\n");
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "tiny".into());
+    let with_artifact = args.iter().any(|a| a == "--artifact");
+
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    println!("E5 — train-step throughput ({preset} preset)\n");
     for attn in ["softmax", "linear", "ho2"] {
         let model = format!("{attn}_{preset}");
-        let mut trainer = Trainer::new(&rt, &model, 1)?;
-        let (b, t) = trainer.train_shape();
-        let mut gen = data::make("charlm", 1)?;
-        let batch = gen.batch(b, t);
-        let tokens = (b * t) as f64;
-        let r = bench(&model, 2, 8, || {
-            trainer.train_step(&batch, 3e-4).unwrap();
-        });
-        println!(
-            "{}   ({:.0} tok/s, batch {}x{})",
-            r.report(),
-            tokens / r.mean_s,
-            b,
-            t
-        );
-        rows.push(r);
+        let mut trainer = NativeTrainer::new(&model, 1)?;
+        bench_backend(&mut trainer, &format!("native_train_{model}"), &mut rows, &mut json_rows)?;
     }
+
+    if with_artifact {
+        match holt::default_artifacts_dir().and_then(|d| Runtime::new(&d)) {
+            Ok(rt) => {
+                for attn in ["softmax", "linear", "ho2"] {
+                    let model = format!("{attn}_{preset}");
+                    // a single missing/stale artifact must not discard
+                    // the native results already collected
+                    match ArtifactTrainer::new(&rt, &model, 1) {
+                        Ok(mut trainer) => bench_backend(
+                            &mut trainer,
+                            &format!("artifact_train_{model}"),
+                            &mut rows,
+                            &mut json_rows,
+                        )?,
+                        Err(e) => println!("(artifact {model} skipped: {e})"),
+                    }
+                }
+            }
+            Err(e) => println!("(artifact path skipped: {e})"),
+        }
+    }
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write(
+        "results/bench_train.json",
+        format!("{}\n", Json::Arr(json_rows)),
+    )?;
     write_csv(std::path::Path::new("results/e5_train_throughput.csv"), &rows)?;
-    println!("\nwrote results/e5_train_throughput.csv");
+    println!("\nwrote results/bench_train.json and results/e5_train_throughput.csv");
     Ok(())
 }

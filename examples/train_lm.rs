@@ -2,14 +2,17 @@
 //! the paper's ho2 attention and both baselines on a real small workload,
 //! logging loss curves for EXPERIMENTS.md.
 //!
-//!   cargo run --release --example train_lm [-- steps task model1,model2,..]
+//!   cargo run --release --example train_lm [-- steps task model1,model2,.. backend]
 //!
 //! Defaults: 300 steps of the char-LM task on ho2_small + softmax_small +
-//! linear_small (~3.3M params each).  Loss histories land in
-//! results/e3_loss_<model>_<task>.jsonl, a summary table on stdout.
+//! linear_small (~3.3M params each), on the native backend (hand-derived
+//! O(n) backward — no artifacts, no Python).  Pass `artifact` as the 4th
+//! argument to run through the fused PJRT train step instead.  Loss
+//! histories land in results/e3_loss_<model>_<task>.jsonl, a summary
+//! table on stdout.
 
 use holt::config::TrainConfig;
-use holt::coordinator::trainer::run_training;
+use holt::coordinator::trainer::{run_training, ArtifactTrainer, NativeTrainer, TrainBackend};
 use holt::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -22,8 +25,13 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or_else(|| {
             vec!["ho2_small".into(), "softmax_small".into(), "linear_small".into()]
         });
+    let backend = args.get(3).map(|s| s.as_str()).unwrap_or("native").to_string();
 
-    let rt = Runtime::new(&holt::default_artifacts_dir()?)?;
+    let rt = if backend == "artifact" {
+        Some(Runtime::new(&holt::default_artifacts_dir()?)?)
+    } else {
+        None
+    };
     let mut summary = Vec::new();
     for model in &models {
         let cfg = TrainConfig {
@@ -39,9 +47,13 @@ fn main() -> anyhow::Result<()> {
             out_dir: "results".into(),
             ..Default::default()
         };
-        println!("\n=== {model} on {task} for {steps} steps ===");
+        println!("\n=== {model} [{backend}] on {task} for {steps} steps ===");
+        let mut trainer: Box<dyn TrainBackend> = match &rt {
+            None => Box::new(NativeTrainer::new(model, cfg.seed)?),
+            Some(rt) => Box::new(ArtifactTrainer::new(rt, model, cfg.seed)?),
+        };
         let t0 = std::time::Instant::now();
-        let hist = run_training(&rt, &cfg, false)?;
+        let hist = run_training(trainer.as_mut(), &cfg, false)?;
         let wall = t0.elapsed().as_secs_f64();
         let first = hist.first().map(|s| s.loss).unwrap_or(f32::NAN);
         let last10: f32 = hist.iter().rev().take(10).map(|s| s.loss).sum::<f32>()
@@ -53,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         std::fs::rename(&src, &dst).ok();
     }
 
-    println!("\n=== E3 summary ({task}, {steps} steps) ===");
+    println!("\n=== E3 summary ({task}, {steps} steps, {backend}) ===");
     println!("{:<16} {:>12} {:>14} {:>10}", "model", "first loss", "last-10 loss", "wall (s)");
     for (m, f, l, w) in &summary {
         println!("{m:<16} {f:>12.4} {l:>14.4} {w:>10.1}");

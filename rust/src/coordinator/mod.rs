@@ -3,8 +3,10 @@
 //! The paper's contribution is numeric (L1/L2), so the coordinator is the
 //! production harness a user would actually run:
 //!
-//! * [`trainer`] — training orchestrator: data feed, fused-AdamW artifact
-//!   execution, lr schedule, eval, metrics (JSONL), checkpointing.
+//! * [`trainer`] — training orchestrator behind the `TrainBackend`
+//!   trait: native hand-derived backward + AdamW, or the fused-AdamW
+//!   artifact; data feed, lr schedule, eval, metrics (JSONL),
+//!   checkpointing.
 //! * [`state`] — the recurrent decode-state manager.  Because HO linear
 //!   attention is an RNN with O(1) state, the serving "KV cache" is a
 //!   fixed set of slots; this module owns slot allocation/reset and

@@ -1,10 +1,21 @@
-//! Training orchestrator.
+//! Training orchestrator — one run loop, two engines behind a trait.
 //!
-//! Owns parameters + AdamW moments (as host tensors), feeds batches from a
-//! [`DataGen`](crate::data::DataGen) into the fused `train_*` artifact, and
-//! handles the run loop: lr schedule, periodic eval through the `fwd_*`
-//! artifact, JSONL metrics, and checkpointing.  Python is never involved —
-//! one artifact call per step.
+//! [`TrainBackend`] is the training-side sibling of the serving
+//! [`Executor`](crate::model::Executor) trait: the run loop
+//! ([`run_training`] — lr schedule, periodic eval, JSONL metrics,
+//! checkpointing) is written against it only, and *how* a step happens
+//! is an implementation detail:
+//!
+//! * [`NativeTrainer`] — pure Rust: `model::grad::loss_and_grad` (the
+//!   hand-derived backward through the O(n) recurrence) plus a native
+//!   AdamW step over [`ParamStore`] moments.  No artifacts, no PJRT, no
+//!   Python — `holt train --backend native` works on a clean checkout.
+//! * [`ArtifactTrainer`] — the original PJRT path, behavior unchanged:
+//!   one fused `train_*` artifact call per step.
+//!
+//! Checkpoints (params + m + v + step) are identical between the two —
+//! same leaf names, shapes and order — so a run can move between
+//! backends across restarts.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -16,21 +27,10 @@ use crate::config::TrainConfig;
 use crate::data::{self, Batch};
 use crate::json::{obj, JsonlWriter};
 use crate::metrics::{Throughput, Timer};
-use crate::params::ParamStore;
+use crate::model::{grad, native_model_entry};
+use crate::params::{self, ParamStore};
 use crate::rng::Rng;
 use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
-
-/// Everything a live training run needs.
-pub struct Trainer<'rt> {
-    pub runtime: &'rt Runtime,
-    pub model: ModelEntry,
-    pub params: ParamStore,
-    pub m: ParamStore,
-    pub v: ParamStore,
-    pub step: u64,
-    train_exe: Arc<Executable>,
-    fwd_exe: Option<Arc<Executable>>,
-}
 
 /// One step's scalar outputs.
 #[derive(Debug, Clone, Copy)]
@@ -40,9 +40,188 @@ pub struct StepStats {
     pub step_time_s: f64,
 }
 
-impl<'rt> Trainer<'rt> {
+/// A training engine: owns parameters + AdamW moments, advances one
+/// fused step at a time, and can evaluate and checkpoint itself.
+pub trait TrainBackend {
+    /// The model being trained (config, specs, parameter counts).
+    fn model(&self) -> &ModelEntry;
+
+    /// `"native"` or `"artifact"` — for logs and bench records.
+    fn backend_name(&self) -> &'static str;
+
+    /// Steps taken so far.
+    fn step(&self) -> u64;
+
+    /// Execute one AdamW step on a batch; updates state in place.
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats>;
+
+    /// Teacher-forced logits (B, T, V) on a batch — the eval path.
+    fn forward(&self, batch: &Batch) -> Result<Tensor>;
+
+    /// Whether [`TrainBackend::forward`] can run (the artifact path
+    /// needs a `fwd` artifact; native always can).
+    fn supports_eval(&self) -> bool;
+
+    /// Weighted accuracy on an eval batch.
+    fn eval_accuracy(&self, batch: &Batch) -> Result<f64> {
+        batch.accuracy(&self.forward(batch)?)
+    }
+
+    /// Snapshot params + moments + step.
+    fn checkpoint(&self) -> Checkpoint;
+
+    /// Batch shape to train with (from the model config).
+    fn train_shape(&self) -> (usize, usize) {
+        let cfg = &self.model().config;
+        (cfg.train_batch, cfg.train_len)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust trainer: hand-derived backward + native AdamW.
+pub struct NativeTrainer {
+    pub model: ModelEntry,
+    pub params: ParamStore,
+    pub m: ParamStore,
+    pub v: ParamStore,
+    pub step: u64,
+    /// per-leaf weight decay (GPT-2 convention: matrix leaves only,
+    /// embeddings exempt) — precomputed from the param spec
+    decay: Vec<f32>,
+}
+
+impl NativeTrainer {
+    /// Fresh parameters for a native model name (`ho2_tiny`,
+    /// `linear_small`, `ho2_tiny_a1_o1`, …).
+    pub fn new(model_name: &str, seed: u64) -> Result<Self> {
+        Self::from_entry(native_model_entry(model_name)?, seed)
+    }
+
+    /// Fresh parameters for an explicit entry (tests use custom tiny
+    /// configs).
+    pub fn from_entry(model: ModelEntry, seed: u64) -> Result<Self> {
+        let mut rng = Rng::new(seed);
+        let params = ParamStore::init(&model.param_spec, &mut rng);
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        Self::with_state(model, params, m, v, 0)
+    }
+
+    /// Resume from a checkpoint written by either backend.
+    pub fn from_checkpoint(model_name: &str, ckpt: &Checkpoint) -> Result<Self> {
+        let model = native_model_entry(model_name)?;
+        let params = ckpt.section("params")?.clone();
+        params
+            .check_spec(&model.param_spec)
+            .context("checkpoint/model mismatch")?;
+        let m = ckpt.section("m")?.clone();
+        let v = ckpt.section("v")?.clone();
+        Self::with_state(model, params, m, v, ckpt.step)
+    }
+
+    fn with_state(
+        model: ModelEntry,
+        params: ParamStore,
+        m: ParamStore,
+        v: ParamStore,
+        step: u64,
+    ) -> Result<Self> {
+        params.check_spec(&model.param_spec)?;
+        for (name, t) in params.names.iter().zip(&params.leaves) {
+            anyhow::ensure!(t.as_f32().is_ok(), "parameter leaf '{name}' is not f32");
+        }
+        let cfg = &model.config;
+        anyhow::ensure!(
+            cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
+            "bad head split: d_model {} / n_heads {}",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        let decay = params::adamw_decay_mask(&model.param_spec);
+        Ok(NativeTrainer { model, params, m, v, step, decay })
+    }
+}
+
+impl TrainBackend for NativeTrainer {
+    fn model(&self) -> &ModelEntry {
+        &self.model
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn step(&self) -> u64 {
+        self.step
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+        let timer = Timer::start();
+        let (loss, grads) = grad::loss_and_grad(&self.model.config, &self.params, batch)?;
+        self.step += 1;
+        params::adamw_step(
+            &mut self.params,
+            &grads,
+            &mut self.m,
+            &mut self.v,
+            self.step,
+            lr,
+            &self.decay,
+        )?;
+        Ok(StepStats { step: self.step, loss: loss as f32, step_time_s: timer.secs() })
+    }
+
+    fn forward(&self, batch: &Batch) -> Result<Tensor> {
+        let (b, t) = (batch.batch_size(), batch.seq_len());
+        let logits = grad::forward_logits(
+            &self.model.config,
+            &self.params,
+            batch.tokens.as_i32()?,
+            b,
+            t,
+        )?;
+        Ok(Tensor::f32(vec![b, t, self.model.config.vocab_size], logits))
+    }
+
+    fn supports_eval(&self) -> bool {
+        true
+    }
+
+    fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            step: self.step,
+            sections: vec![
+                ("params".into(), self.params.clone()),
+                ("m".into(), self.m.clone()),
+                ("v".into(), self.v.clone()),
+            ],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact (PJRT)
+// ---------------------------------------------------------------------------
+
+/// PJRT trainer over the fused `train_*` artifact — the pre-trait
+/// behavior, unchanged.  Compiled executables are `Arc`-shared with the
+/// [`Runtime`]'s cache, so the trainer does not borrow the runtime.
+pub struct ArtifactTrainer {
+    pub model: ModelEntry,
+    pub params: ParamStore,
+    pub m: ParamStore,
+    pub v: ParamStore,
+    pub step: u64,
+    train_exe: Arc<Executable>,
+    fwd_exe: Option<Arc<Executable>>,
+}
+
+impl ArtifactTrainer {
     /// Initialize fresh parameters for `model_name` (manifest init spec).
-    pub fn new(runtime: &'rt Runtime, model_name: &str, seed: u64) -> Result<Self> {
+    pub fn new(runtime: &Runtime, model_name: &str, seed: u64) -> Result<Self> {
         let model = runtime.manifest.model(model_name)?.clone();
         let mut rng = Rng::new(seed);
         let params = ParamStore::init(&model.param_spec, &mut rng);
@@ -53,7 +232,7 @@ impl<'rt> Trainer<'rt> {
 
     /// Resume from a checkpoint.
     pub fn from_checkpoint(
-        runtime: &'rt Runtime,
+        runtime: &Runtime,
         model_name: &str,
         ckpt: &Checkpoint,
     ) -> Result<Self> {
@@ -66,7 +245,7 @@ impl<'rt> Trainer<'rt> {
     }
 
     fn with_state(
-        runtime: &'rt Runtime,
+        runtime: &Runtime,
         model: ModelEntry,
         params: ParamStore,
         m: ParamStore,
@@ -82,11 +261,25 @@ impl<'rt> Trainer<'rt> {
             Some(n) => Some(runtime.load(n)?),
             None => None,
         };
-        Ok(Trainer { runtime, model, params, m, v, step, train_exe, fwd_exe })
+        Ok(ArtifactTrainer { model, params, m, v, step, train_exe, fwd_exe })
+    }
+}
+
+impl TrainBackend for ArtifactTrainer {
+    fn model(&self) -> &ModelEntry {
+        &self.model
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "artifact"
+    }
+
+    fn step(&self) -> u64 {
+        self.step
     }
 
     /// Execute one fused train step on a batch; updates state in place.
-    pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
         let timer = Timer::start();
         let np = self.params.len();
         let mut inputs: Vec<Tensor> = Vec::with_capacity(3 * np + 5);
@@ -116,7 +309,7 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Forward pass on a batch (eval): returns logits (B, T, V).
-    pub fn forward(&self, batch: &Batch) -> Result<Tensor> {
+    fn forward(&self, batch: &Batch) -> Result<Tensor> {
         let fwd = self
             .fwd_exe
             .as_ref()
@@ -126,12 +319,11 @@ impl<'rt> Trainer<'rt> {
         Ok(fwd.run(&inputs)?.remove(0))
     }
 
-    /// Weighted accuracy on an eval batch.
-    pub fn eval_accuracy(&self, batch: &Batch) -> Result<f64> {
-        batch.accuracy(&self.forward(batch)?)
+    fn supports_eval(&self) -> bool {
+        self.fwd_exe.is_some()
     }
 
-    pub fn checkpoint(&self) -> Checkpoint {
+    fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             step: self.step,
             sections: vec![
@@ -141,33 +333,50 @@ impl<'rt> Trainer<'rt> {
             ],
         }
     }
-
-    /// Batch shape the train artifact was lowered with.
-    pub fn train_shape(&self) -> (usize, usize) {
-        (self.model.config.train_batch, self.model.config.train_len)
-    }
 }
 
-/// Full training run per a [`TrainConfig`]: the `holt train` command and
-/// the train_lm example both call this.  Returns the loss history.
+/// Full training run per a [`TrainConfig`] over any [`TrainBackend`]:
+/// the `holt train` command and the train_lm example both call this.
+/// Returns the loss history (of this invocation's `cfg.steps` steps).
+///
+/// A trainer resumed from a checkpoint (`trainer.step() > 0`) continues
+/// the run it left: the deterministic data stream is fast-forwarded past
+/// the batches already consumed, the lr schedule picks up at the global
+/// step, and the JSONL log is appended to instead of truncated — so
+/// "train 200 then resume for 200" walks the same trajectory as one
+/// 400-step run.
 pub fn run_training(
-    runtime: &Runtime,
+    trainer: &mut dyn TrainBackend,
     cfg: &TrainConfig,
     quiet: bool,
 ) -> Result<Vec<StepStats>> {
-    let mut trainer = Trainer::new(runtime, &cfg.model, cfg.seed)?;
     let (b, t) = trainer.train_shape();
+    let start = trainer.step() as usize;
     let mut gen = data::make(&cfg.task, cfg.seed ^ 0x5eed)?;
     let mut eval_gen = data::make(&cfg.task, cfg.seed ^ 0xe7a1)?;
+    for _ in 0..start {
+        gen.batch(b, t);
+    }
+    if cfg.eval_every > 0 {
+        for _ in 0..start / cfg.eval_every {
+            eval_gen.batch(b, t);
+        }
+    }
 
     let out_dir = PathBuf::from(&cfg.out_dir);
     let log_path = out_dir.join(format!("train_{}_{}.jsonl", cfg.model, cfg.task));
-    let mut log = JsonlWriter::create(&log_path)?;
+    let mut log = if start > 0 {
+        JsonlWriter::append(&log_path)?
+    } else {
+        JsonlWriter::create(&log_path)?
+    };
     log.write(&obj(vec![
         ("event", "start".into()),
+        ("backend", trainer.backend_name().into()),
         ("model", cfg.model.as_str().into()),
         ("task", cfg.task.as_str().into()),
-        ("n_params", trainer.model.n_params.into()),
+        ("n_params", trainer.model().n_params.into()),
+        ("start_step", (start as i64).into()),
         ("steps", cfg.steps.into()),
         ("lr", cfg.lr.into()),
         ("seed", (cfg.seed as i64).into()),
@@ -179,12 +388,12 @@ pub fn run_training(
     let mut tput = Throughput::new();
     for i in 0..cfg.steps {
         let batch = gen.batch(b, t);
-        let lr = cfg.lr_at(i) as f32;
+        let lr = cfg.lr_at(start + i) as f32;
         let stats = trainer.train_step(&batch, lr)?;
         tput.add((b * t) as u64);
         history.push(stats);
 
-        if cfg.log_every > 0 && (i + 1) % cfg.log_every == 0 {
+        if cfg.log_every > 0 && (start + i + 1) % cfg.log_every == 0 {
             let recent: f64 = history[history.len().saturating_sub(cfg.log_every)..]
                 .iter()
                 .map(|s| s.loss as f64)
@@ -209,7 +418,7 @@ pub fn run_training(
             ]))?;
         }
 
-        if cfg.eval_every > 0 && (i + 1) % cfg.eval_every == 0 {
+        if cfg.eval_every > 0 && (start + i + 1) % cfg.eval_every == 0 && trainer.supports_eval() {
             let eb = eval_gen.batch(b, t);
             let acc = trainer.eval_accuracy(&eb)?;
             if !quiet {
@@ -222,7 +431,7 @@ pub fn run_training(
             ]))?;
         }
 
-        if cfg.ckpt_every > 0 && (i + 1) % cfg.ckpt_every == 0 {
+        if cfg.ckpt_every > 0 && (start + i + 1) % cfg.ckpt_every == 0 {
             let path = out_dir.join(format!("{}_{}.ckpt", cfg.model, cfg.task));
             trainer.checkpoint().save(&path)?;
             log.write(&obj(vec![

@@ -391,6 +391,18 @@ impl JsonlWriter {
         })
     }
 
+    /// Open for appending (resumed training runs keep their history).
+    pub fn append(path: &std::path::Path) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(Self {
+            w: std::io::BufWriter::new(
+                std::fs::OpenOptions::new().create(true).append(true).open(path)?,
+            ),
+        })
+    }
+
     pub fn write(&mut self, v: &Json) -> anyhow::Result<()> {
         use std::io::Write;
         writeln!(self.w, "{}", v.to_string())?;

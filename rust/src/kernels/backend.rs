@@ -5,7 +5,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::kernels::{chunked_forward, streaming_forward, HoState, LinearState, RecurrentAttention};
+use crate::kernels::{
+    chunked_forward, streaming_forward, AttentionGrad, HoState, LinearState, RecurrentAttention,
+};
 use crate::mathref;
 
 /// How to evaluate the recurrence over a full sequence.
@@ -75,6 +77,33 @@ impl NativeBackend {
             ))),
             "linear" => Ok(Box::new(LinearState::new(d, dv))),
             "softmax" => bail!("softmax attention has no O(1) recurrent state"),
+            _ => bail!("unknown attention kind '{kind}' (want ho2 | linear | softmax)"),
+        }
+    }
+
+    /// Like [`Self::state`], but with the backward hooks
+    /// ([`AttentionGrad`]) — the training path's kernel constructor.
+    /// `"softmax"` errors here too: its backward is the direct
+    /// [`crate::kernels::softmax_attention_vjp`], no state involved.
+    pub fn grad_state(
+        &self,
+        kind: &str,
+        d: usize,
+        dv: usize,
+    ) -> Result<Box<dyn AttentionGrad + Send>> {
+        match kind {
+            "ho2" | "ho" => Ok(Box::new(HoState::new(
+                d,
+                dv,
+                self.order,
+                self.alpha,
+                self.normalize_qk,
+            ))),
+            "linear" => Ok(Box::new(LinearState::new(d, dv))),
+            "softmax" => bail!(
+                "softmax attention has no recurrent state; its backward is \
+                 kernels::softmax_attention_vjp"
+            ),
             _ => bail!("unknown attention kind '{kind}' (want ho2 | linear | softmax)"),
         }
     }

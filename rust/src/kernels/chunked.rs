@@ -64,9 +64,13 @@ pub fn chunked_forward<K: RecurrentAttention + ?Sized>(
                 *o = (x / den) as f32;
             }
         }
-        // state pass: fold the whole chunk into the recurrence
+        // state pass: fold the whole chunk into the recurrence, reusing
+        // the rows prepped for the triangle (no second LayerNorm/φ pass)
         for j in c0..c1 {
-            kernel.absorb(&k[j * d..(j + 1) * d], &v[j * dv..(j + 1) * dv]);
+            kernel.absorb_prepped(
+                &kp[(j - c0) * d..(j - c0 + 1) * d],
+                &v[j * dv..(j + 1) * dv],
+            );
         }
         c0 = c1;
     }

@@ -1,0 +1,362 @@
+//! Hand-derived backward through the O(n) attention recurrence.
+//!
+//! Katharopoulos et al. 2020 observe that the gradient of causal linear
+//! attention factorizes through the same prefix-sum states as the
+//! forward; this module is that observation made concrete for the
+//! paper's order-0/1/2 Taylor kernel (and the elu+1 baseline), in the
+//! same cache-blocked shape as [`chunked_forward`]:
+//!
+//! * **inside a chunk** the O(c²) pairwise weights are differentiated
+//!   directly — `w = f(uᵢ·κⱼ)` with `f' ` supplied by the kernel
+//!   ([`AttentionGrad::pair_weight_dot_grad`]; for Taylor order r the
+//!   derivative is the order r−1 series, `Tᵣ'(s) = Tᵣ₋₁(s)`),
+//! * **across chunks** a single *state gradient* vector (the loss
+//!   gradient w.r.t. every moment in the kernel state, in the
+//!   [`RecurrentAttention::save_state`] layout) is carried backward.
+//!   Absorbing is additive, so the state gradient passes through
+//!   untouched and each chunk contributes its reads' gradients on the
+//!   way back — the mirror image of the forward prefix sums.
+//!
+//! The reverse sweep needs the state each chunk's queries actually read
+//! (the state *before* that chunk was absorbed), so the forward replay
+//! snapshots the state at every chunk boundary — O(n/c · S) extra
+//! memory, nothing recomputed twice.
+//!
+//! Processing order per chunk (reversed) matters: the chunk's absorbs
+//! feed only *later* reads, so [`AttentionGrad::absorb_vjp`] must run
+//! against the state gradient **before** this chunk's own reads are
+//! folded in via [`AttentionGrad::query_vjp`].
+//!
+//! Everything is checked against finite differences of the O(n²)
+//! oracles in `rust/tests/grad_check.rs` (all kinds × orders 0–2,
+//! several chunk sizes, rel. err ≤ 1e-3).
+
+use crate::kernels::{RecurrentAttention, DEN_FLOOR};
+
+/// A [`RecurrentAttention`] kernel that can run backward: the vector-
+/// Jacobian products of its three primitive operations (state read,
+/// absorb, per-row prep), plus the scalar derivative of the pair weight.
+///
+/// Gradients flow in f64 (they accumulate across whole sequences, like
+/// the forward states); the *state gradient* buffers use exactly the
+/// [`RecurrentAttention::save_state`] layout.
+pub trait AttentionGrad: RecurrentAttention {
+    /// The pair weight as a function of the prepped-row dot product
+    /// (every kernel here is one): `w = f(qp·kp)`.
+    fn pair_weight_from_dot(&self, dot: f64) -> f64;
+
+    /// `df/d(dot)` at the given dot product.
+    fn pair_weight_dot_grad(&self, dot: f64) -> f64;
+
+    /// VJP of [`RecurrentAttention::query_raw_prepped`] against the
+    /// *current* state: given upstream gradients `dnum` (length `dv`)
+    /// and `dden` for the raw read of prepped query `qp`, accumulate
+    /// the gradient w.r.t. the state into `gstate` (save_state layout,
+    /// length `state_elements`) and w.r.t. `qp` into `gqp`.
+    fn query_vjp(&self, qp: &[f32], dnum: &[f64], dden: f64, gstate: &mut [f64], gqp: &mut [f64]);
+
+    /// VJP of [`RecurrentAttention::absorb_prepped`]: given the loss
+    /// gradient w.r.t. the state (absorbing is additive, so this is the
+    /// same before and after the absorb), accumulate the gradient
+    /// w.r.t. the prepped key row into `gkp` and w.r.t. the value row
+    /// into `gv`.  Independent of the current state values.
+    fn absorb_vjp(&self, kp: &[f32], v: &[f32], gstate: &[f64], gkp: &mut [f64], gv: &mut [f64]);
+
+    /// VJP of [`RecurrentAttention::prep_rows`]: `rows` are the raw
+    /// q/k rows, `g` the gradient w.r.t. the prepped rows; returns the
+    /// gradient w.r.t. `rows`.
+    fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64>;
+}
+
+/// Backward of [`chunked_forward`] (causal): given `go = dL/d out`,
+/// returns `(gq, gk, gv)`.  Replays the forward internally (storing the
+/// per-position numerator/denominator, the prepped rows, and a state
+/// snapshot per chunk), then runs the reverse chunk sweep described in
+/// the module docs.  O(n·c·d·dv + (n/c)·S) time, linear in `n` like the
+/// forward.
+///
+/// The replay means a training step evaluates each head's attention
+/// forward twice (once in the model forward for the residual stream,
+/// once here) — deliberate for now: it keeps this function
+/// self-contained and the model-side activation cache free of
+/// kernel-private state.  Threading (nums, dens, snaps) out of the
+/// model forward to skip the replay is a known follow-up optimization.
+///
+/// [`chunked_forward`]: crate::kernels::chunked_forward
+#[allow(clippy::too_many_arguments)]
+pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
+    kernel: &mut K,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    chunk: usize,
+    go: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (d, dv) = (kernel.d(), kernel.dv());
+    assert_eq!(q.len(), n * d, "q shape");
+    assert_eq!(k.len(), n * d, "k shape");
+    assert_eq!(v.len(), n * dv, "v shape");
+    assert_eq!(go.len(), n * dv, "go shape");
+    let chunk = chunk.max(1);
+    let n_chunks = n.div_ceil(chunk);
+
+    // ---- forward replay: raw denominators, f64 numerators, snapshots,
+    // and the prepped rows (reused verbatim by the reverse sweep) ----
+    kernel.reset();
+    let mut dens = vec![0.0f64; n];
+    let mut nums = vec![0.0f64; n * dv];
+    let mut snaps: Vec<Vec<f64>> = Vec::with_capacity(n_chunks);
+    let mut preps: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_chunks);
+    let mut c0 = 0;
+    while c0 < n {
+        let c1 = (c0 + chunk).min(n);
+        let qp = kernel.prep_rows(&q[c0 * d..c1 * d], c1 - c0);
+        let kp = kernel.prep_rows(&k[c0 * d..c1 * d], c1 - c0);
+        let mut snap = Vec::new();
+        kernel.save_state(&mut snap);
+        snaps.push(snap);
+        for i in c0..c1 {
+            let qi = &qp[(i - c0) * d..(i - c0 + 1) * d];
+            let num = &mut nums[i * dv..(i + 1) * dv];
+            let mut den = kernel.query_raw_prepped(qi, num);
+            for j in c0..=i {
+                let kj = &kp[(j - c0) * d..(j - c0 + 1) * d];
+                let dot = dot_f64(qi, kj);
+                let w = kernel.pair_weight_from_dot(dot);
+                den += w;
+                for (acc, &x) in num.iter_mut().zip(&v[j * dv..(j + 1) * dv]) {
+                    *acc += w * x as f64;
+                }
+            }
+            dens[i] = den;
+        }
+        for j in c0..c1 {
+            kernel.absorb_prepped(&kp[(j - c0) * d..(j - c0 + 1) * d], &v[j * dv..(j + 1) * dv]);
+        }
+        preps.push((qp, kp));
+        c0 = c1;
+    }
+
+    // ---- reverse sweep ----
+    let mut gqp = vec![0.0f64; n * d];
+    let mut gkp = vec![0.0f64; n * d];
+    let mut gv = vec![0.0f64; n * dv];
+    let mut gstate = vec![0.0f64; kernel.state_elements()];
+    for ci in (0..n_chunks).rev() {
+        let c0 = ci * chunk;
+        let c1 = (c0 + chunk).min(n);
+        let (qp, kp) = &preps[ci];
+        // 1. this chunk's absorbs feed every later read: gstate is
+        //    currently dL/d(state after this chunk) — use it first
+        for j in c0..c1 {
+            kernel.absorb_vjp(
+                &kp[(j - c0) * d..(j - c0 + 1) * d],
+                &v[j * dv..(j + 1) * dv],
+                &gstate,
+                &mut gkp[j * d..(j + 1) * d],
+                &mut gv[j * dv..(j + 1) * dv],
+            );
+        }
+        // 2. this chunk's reads saw the state *before* the absorbs
+        kernel.load_state(&snaps[ci]);
+        for i in c0..c1 {
+            let qi = &qp[(i - c0) * d..(i - c0 + 1) * d];
+            let den = dens[i].max(DEN_FLOOR);
+            let num = &nums[i * dv..(i + 1) * dv];
+            let g = &go[i * dv..(i + 1) * dv];
+            // o = num/den: dnum = g/den, dden = −(g·o)/den (0 if clamped)
+            let mut dnum = vec![0.0f64; dv];
+            let mut gdoto = 0.0f64;
+            for ((dn, &gc), &nc) in dnum.iter_mut().zip(g).zip(num) {
+                *dn = gc as f64 / den;
+                gdoto += gc as f64 * (nc / den);
+            }
+            let dden = if dens[i] > DEN_FLOOR { -gdoto / den } else { 0.0 };
+            kernel.query_vjp(qi, &dnum, dden, &mut gstate, &mut gqp[i * d..(i + 1) * d]);
+            // intra-chunk triangle, differentiated directly
+            for j in c0..=i {
+                let kj = &kp[(j - c0) * d..(j - c0 + 1) * d];
+                let dot = dot_f64(qi, kj);
+                let w = kernel.pair_weight_from_dot(dot);
+                let mut a_ij = dden;
+                for (dn, &x) in dnum.iter().zip(&v[j * dv..(j + 1) * dv]) {
+                    a_ij += dn * x as f64;
+                }
+                for (gvc, dn) in gv[j * dv..(j + 1) * dv].iter_mut().zip(&dnum) {
+                    *gvc += w * dn;
+                }
+                let s = kernel.pair_weight_dot_grad(dot) * a_ij;
+                for ((gq, &kc), (gk, &qc)) in gqp[i * d..(i + 1) * d]
+                    .iter_mut()
+                    .zip(kj)
+                    .zip(gkp[j * d..(j + 1) * d].iter_mut().zip(qi))
+                {
+                    *gq += s * kc as f64;
+                    *gk += s * qc as f64;
+                }
+            }
+        }
+    }
+
+    // ---- prep backward on whole arrays (row-wise) ----
+    let gq = kernel.prep_rows_vjp(q, n, &gqp);
+    let gk = kernel.prep_rows_vjp(k, n, &gkp);
+    (to_f32(&gq), to_f32(&gk), to_f32(&gv))
+}
+
+/// Backward of the exact softmax attention baseline
+/// ([`crate::mathref::softmax_attention`], causal): standard softmax
+/// VJP, direct O(n²) — the baseline has no linear-time form in either
+/// direction, which is the comparison the paper is making.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_attention_vjp(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    dv: usize,
+    causal: bool,
+    go: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(q.len(), n * d, "q shape");
+    assert_eq!(k.len(), n * d, "k shape");
+    assert_eq!(v.len(), n * dv, "v shape");
+    assert_eq!(go.len(), n * dv, "go shape");
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut gq = vec![0.0f64; n * d];
+    let mut gk = vec![0.0f64; n * d];
+    let mut gv = vec![0.0f64; n * dv];
+    let mut w = vec![0.0f64; n];
+    let mut dw = vec![0.0f64; n];
+    for i in 0..n {
+        let limit = if causal { i + 1 } else { n };
+        let qi = &q[i * d..(i + 1) * d];
+        // recompute row i's softmax weights in f64
+        let mut maxv = f64::NEG_INFINITY;
+        for j in 0..limit {
+            let dot = dot_f64(qi, &k[j * d..(j + 1) * d]);
+            w[j] = dot * scale;
+            maxv = maxv.max(w[j]);
+        }
+        let mut den = 0.0f64;
+        for wj in w.iter_mut().take(limit) {
+            *wj = (*wj - maxv).exp();
+            den += *wj;
+        }
+        for wj in w.iter_mut().take(limit) {
+            *wj /= den;
+        }
+        // dL/dw_ij = go_i · v_j, then softmax jacobian
+        let g = &go[i * dv..(i + 1) * dv];
+        let mut wdw = 0.0f64;
+        for j in 0..limit {
+            let mut acc = 0.0f64;
+            for (&gc, &vc) in g.iter().zip(&v[j * dv..(j + 1) * dv]) {
+                acc += gc as f64 * vc as f64;
+            }
+            dw[j] = acc;
+            wdw += w[j] * acc;
+            for (gvc, &gc) in gv[j * dv..(j + 1) * dv].iter_mut().zip(g) {
+                *gvc += w[j] * gc as f64;
+            }
+        }
+        for j in 0..limit {
+            let ds = w[j] * (dw[j] - wdw) * scale;
+            for ((gqc, &kc), (gkc, &qc)) in gq[i * d..(i + 1) * d]
+                .iter_mut()
+                .zip(&k[j * d..(j + 1) * d])
+                .zip(gk[j * d..(j + 1) * d].iter_mut().zip(qi))
+            {
+                *gqc += ds * kc as f64;
+                *gkc += ds * qc as f64;
+            }
+        }
+    }
+    (to_f32(&gq), to_f32(&gk), to_f32(&gv))
+}
+
+fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as f64 * y as f64;
+    }
+    acc
+}
+
+fn to_f32(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{chunked_forward, HoState, LinearState};
+    use crate::rng::Rng;
+
+    /// The vjp's internal forward replay must agree with chunked_forward
+    /// (same arithmetic); cheap sanity before the FD suite in
+    /// rust/tests/grad_check.rs does the heavy lifting.
+    #[test]
+    fn vjp_is_chunk_size_invariant() {
+        let mut rng = Rng::new(91);
+        let (n, d, dv) = (17, 4, 3);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let go = rng.normal_vec_f32(n * dv, 1.0);
+        let mut st = HoState::paper(d, dv);
+        let (gq1, gk1, gv1) = chunked_attention_vjp(&mut st, &q, &k, &v, n, 1, &go);
+        for chunk in [2, 5, 17, 64] {
+            let (gq, gk, gv) = chunked_attention_vjp(&mut st, &q, &k, &v, n, chunk, &go);
+            for (a, b) in gq.iter().zip(&gq1).chain(gk.iter().zip(&gk1)).chain(gv.iter().zip(&gv1))
+            {
+                assert!((a - b).abs() < 1e-4, "chunk {chunk}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_kernel_vjp_runs_and_is_finite() {
+        let mut rng = Rng::new(92);
+        let (n, d, dv) = (9, 4, 4);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let go = rng.normal_vec_f32(n * dv, 1.0);
+        let mut st = LinearState::new(d, dv);
+        let (gq, gk, gv) = chunked_attention_vjp(&mut st, &q, &k, &v, n, 3, &go);
+        assert!(gq.iter().chain(&gk).chain(&gv).all(|x| x.is_finite()));
+        // the forward state must be unharmed as an invariant: a fresh
+        // forward still matches the oracle
+        let out = chunked_forward(&mut st, &q, &k, &v, n, 3, true);
+        let want = crate::mathref::linear_attention(&q, &k, &v, n, n, d, dv, true);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_vjp_rows_sum_consistency() {
+        // constant v ⇒ out is constant ⇒ gq = gk = 0 exactly (softmax
+        // rows are convex combinations), gv gets the full weight mass
+        let mut rng = Rng::new(93);
+        let (n, d, dv) = (8, 5, 3);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = vec![2.0f32; n * dv];
+        let go = rng.normal_vec_f32(n * dv, 1.0);
+        let (gq, gk, gv) = softmax_attention_vjp(&q, &k, &v, n, d, dv, true, &go);
+        for x in gq.iter().chain(&gk) {
+            assert!(x.abs() < 1e-5, "{x}");
+        }
+        // per value column, the gv mass over keys equals the go mass
+        // over queries (weights are row-stochastic)
+        for c in 0..dv {
+            let gv_sum: f32 = (0..n).map(|j| gv[j * dv + c]).sum();
+            let go_sum: f32 = (0..n).map(|i| go[i * dv + c]).sum();
+            assert!((gv_sum - go_sum).abs() < 1e-4, "col {c}");
+        }
+    }
+}

@@ -10,8 +10,8 @@
 //! running sums live across an entire sequence, where f32 cancellation
 //! would show up long before the 1e-4 cross-check tolerance.
 
-use crate::kernels::RecurrentAttention;
-use crate::mathref::{layernorm_noaffine, taylor_exp};
+use crate::kernels::{AttentionGrad, RecurrentAttention};
+use crate::mathref::{layernorm_noaffine, layernorm_noaffine_vjp, taylor_exp};
 
 /// LayerNorm epsilon — must match `mathref::ho_attention` exactly for the
 /// oracle cross-checks to be meaningful.
@@ -147,10 +147,16 @@ impl RecurrentAttention for HoState {
     }
 
     fn absorb(&mut self, k: &[f32], v: &[f32]) {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(k.len(), d, "k row");
-        assert_eq!(v.len(), dv, "v row");
         let kn = self.normalized(k);
+        self.absorb_prepped(&kn, v);
+    }
+
+    /// Absorb a key row that already went through [`Self::prep_rows`] —
+    /// the blocked path pays the LayerNorm once per row instead of twice.
+    fn absorb_prepped(&mut self, kn: &[f32], v: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(kn.len(), d, "k row");
+        assert_eq!(v.len(), dv, "v row");
         self.s0 += 1.0;
         for (acc, &x) in self.s0v.iter_mut().zip(v) {
             *acc += x as f64;
@@ -243,12 +249,173 @@ impl RecurrentAttention for HoState {
     }
 }
 
+impl AttentionGrad for HoState {
+    fn pair_weight_from_dot(&self, dot: f64) -> f64 {
+        taylor_exp(dot * self.scale, self.order)
+    }
+
+    fn pair_weight_dot_grad(&self, dot: f64) -> f64 {
+        // d/ds Tᵣ(s·scale) = scale · Tᵣ₋₁(s·scale); order 0 is constant
+        if self.order == 0 {
+            0.0
+        } else {
+            self.scale * taylor_exp(dot * self.scale, self.order - 1)
+        }
+    }
+
+    fn query_vjp(&self, qp: &[f32], dnum: &[f64], dden: f64, gstate: &mut [f64], gqp: &mut [f64]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(qp.len(), d, "q row");
+        assert_eq!(dnum.len(), dv, "dnum row");
+        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
+        let u: Vec<f64> = qp.iter().map(|&x| self.scale * x as f64).collect();
+        let mut du = vec![0.0f64; d];
+        // gstate layout == save_state: [s0, s0v, s1, s1v, s2, s2v]
+        gstate[0] += dden;
+        let mut off = 1;
+        for (g, &x) in gstate[off..off + dv].iter_mut().zip(dnum) {
+            *g += x;
+        }
+        off += dv;
+        if self.order >= 1 {
+            for a in 0..d {
+                gstate[off + a] += dden * u[a];
+                du[a] += dden * self.s1[a];
+            }
+            off += d;
+            for a in 0..d {
+                let srow = &self.s1v[a * dv..(a + 1) * dv];
+                let grow = &mut gstate[off + a * dv..off + (a + 1) * dv];
+                let mut acc = 0.0f64;
+                for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
+                    *g += u[a] * x;
+                    acc += x * s;
+                }
+                du[a] += acc;
+            }
+            off += d * dv;
+        }
+        if self.order >= 2 {
+            let off2v = off + self.s2.len();
+            let mut p = 0;
+            for a in 0..d {
+                for b in a..d {
+                    // f_p = ½u_a² (a = b) or u_a·u_b (a < b)
+                    let f = if a == b { 0.5 * u[a] * u[a] } else { u[a] * u[b] };
+                    gstate[off + p] += dden * f;
+                    let srow = &self.s2v[p * dv..(p + 1) * dv];
+                    let grow = &mut gstate[off2v + p * dv..off2v + (p + 1) * dv];
+                    let mut dfp = dden * self.s2[p];
+                    for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
+                        *g += f * x;
+                        dfp += x * s;
+                    }
+                    if a == b {
+                        du[a] += dfp * u[a];
+                    } else {
+                        du[a] += dfp * u[b];
+                        du[b] += dfp * u[a];
+                    }
+                    p += 1;
+                }
+            }
+        }
+        for (g, &x) in gqp.iter_mut().zip(&du) {
+            *g += self.scale * x;
+        }
+    }
+
+    fn absorb_vjp(&self, kp: &[f32], v: &[f32], gstate: &[f64], gkp: &mut [f64], gv: &mut [f64]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(kp.len(), d, "k row");
+        assert_eq!(v.len(), dv, "v row");
+        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
+        let kn: Vec<f64> = kp.iter().map(|&x| x as f64).collect();
+        // s0 += 1 carries no input gradient
+        let mut off = 1;
+        for (g, &gs) in gv.iter_mut().zip(&gstate[off..off + dv]) {
+            *g += gs;
+        }
+        off += dv;
+        if self.order >= 1 {
+            for a in 0..d {
+                gkp[a] += gstate[off + a];
+            }
+            off += d;
+            for a in 0..d {
+                let grow = &gstate[off + a * dv..off + (a + 1) * dv];
+                let mut acc = 0.0f64;
+                for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
+                    *gvc += kn[a] * gs;
+                    acc += gs * vc as f64;
+                }
+                gkp[a] += acc;
+            }
+            off += d * dv;
+        }
+        if self.order >= 2 {
+            let off2v = off + self.s2.len();
+            let mut p = 0;
+            for a in 0..d {
+                for b in a..d {
+                    let g2 = gstate[off + p];
+                    let grow = &gstate[off2v + p * dv..off2v + (p + 1) * dv];
+                    let kk = kn[a] * kn[b];
+                    let mut gvdot = 0.0f64;
+                    for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
+                        *gvc += kk * gs;
+                        gvdot += gs * vc as f64;
+                    }
+                    let s = g2 + gvdot;
+                    if a == b {
+                        // d(k_a²)/dk_a = 2k_a
+                        gkp[a] += 2.0 * kn[a] * s;
+                    } else {
+                        gkp[a] += kn[b] * s;
+                        gkp[b] += kn[a] * s;
+                    }
+                    p += 1;
+                }
+            }
+        }
+    }
+
+    fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64> {
+        if self.normalize_qk {
+            layernorm_noaffine_vjp(rows, n, self.d, LN_EPS, g)
+        } else {
+            g.to_vec()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kernels::streaming_forward;
     use crate::mathref;
     use crate::rng::Rng;
+
+    #[test]
+    fn absorb_prepped_equals_absorb_on_raw_rows() {
+        // the blocked state pass reuses prepped rows; it must land on the
+        // exact same state as the streaming absorb of raw rows
+        let mut rng = Rng::new(6);
+        let (d, dv) = (6, 5);
+        let mut a = HoState::paper(d, dv);
+        let mut b = HoState::paper(d, dv);
+        for _ in 0..7 {
+            let k = rng.normal_vec_f32(d, 1.0);
+            let v = rng.normal_vec_f32(dv, 1.0);
+            a.absorb(&k, &v);
+            let kp = b.prep_rows(&k, 1);
+            b.absorb_prepped(&kp, &v);
+        }
+        let (mut sa, mut sb) = (Vec::new(), Vec::new());
+        a.save_state(&mut sa);
+        b.save_state(&mut sb);
+        assert_eq!(sa, sb);
+    }
 
     #[test]
     fn matches_oracle_on_small_case() {

@@ -3,7 +3,7 @@
 //! [`RecurrentAttention`] contract as the higher-order kernel, O(d·dv)
 //! state, and the exact counterpart of `mathref::linear_attention`.
 
-use crate::kernels::RecurrentAttention;
+use crate::kernels::{AttentionGrad, RecurrentAttention};
 use crate::mathref::elu1;
 
 /// Recurrent state for elu+1 linear attention over one head.
@@ -55,11 +55,19 @@ impl RecurrentAttention for LinearState {
     }
 
     fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d, "k row");
+        let kp: Vec<f32> = k.iter().map(|&x| elu1(x)).collect();
+        self.absorb_prepped(&kp, v);
+    }
+
+    /// Absorb a key row with φ already applied ([`Self::prep_rows`]) —
+    /// the blocked path pays the feature map once per row.
+    fn absorb_prepped(&mut self, kp: &[f32], v: &[f32]) {
         let (d, dv) = (self.d, self.dv);
-        assert_eq!(k.len(), d, "k row");
+        assert_eq!(kp.len(), d, "k row");
         assert_eq!(v.len(), dv, "v row");
         for a in 0..d {
-            let phi = elu1(k[a]) as f64;
+            let phi = kp[a] as f64;
             self.z[a] += phi;
             let row = &mut self.m[a * dv..(a + 1) * dv];
             for (acc, &x) in row.iter_mut().zip(v) {
@@ -114,12 +122,83 @@ impl RecurrentAttention for LinearState {
     }
 }
 
+impl AttentionGrad for LinearState {
+    fn pair_weight_from_dot(&self, dot: f64) -> f64 {
+        dot
+    }
+
+    fn pair_weight_dot_grad(&self, _dot: f64) -> f64 {
+        1.0
+    }
+
+    fn query_vjp(&self, qp: &[f32], dnum: &[f64], dden: f64, gstate: &mut [f64], gqp: &mut [f64]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(qp.len(), d, "q row");
+        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
+        // gstate layout == save_state: [z (d), m (d·dv)]
+        for a in 0..d {
+            let u = qp[a] as f64;
+            gstate[a] += dden * u;
+            let srow = &self.m[a * dv..(a + 1) * dv];
+            let grow = &mut gstate[d + a * dv..d + (a + 1) * dv];
+            let mut acc = dden * self.z[a];
+            for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
+                *g += u * x;
+                acc += x * s;
+            }
+            gqp[a] += acc;
+        }
+    }
+
+    fn absorb_vjp(&self, kp: &[f32], v: &[f32], gstate: &[f64], gkp: &mut [f64], gv: &mut [f64]) {
+        let (d, dv) = (self.d, self.dv);
+        assert_eq!(kp.len(), d, "k row");
+        assert_eq!(v.len(), dv, "v row");
+        for a in 0..d {
+            let grow = &gstate[d + a * dv..d + (a + 1) * dv];
+            let mut acc = gstate[a];
+            for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
+                *gvc += kp[a] as f64 * gs;
+                acc += gs * vc as f64;
+            }
+            gkp[a] += acc;
+        }
+    }
+
+    fn prep_rows_vjp(&self, rows: &[f32], _n: usize, g: &[f64]) -> Vec<f64> {
+        // φ = elu+1: φ'(x) = 1 for x > 0, eˣ otherwise
+        rows.iter()
+            .zip(g)
+            .map(|(&x, &gp)| gp * if x > 0.0 { 1.0 } else { (x as f64).exp() })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kernels::streaming_forward;
     use crate::mathref;
     use crate::rng::Rng;
+
+    #[test]
+    fn absorb_prepped_equals_absorb_on_raw_rows() {
+        let mut rng = Rng::new(13);
+        let (d, dv) = (5, 4);
+        let mut a = LinearState::new(d, dv);
+        let mut b = LinearState::new(d, dv);
+        for _ in 0..6 {
+            let k = rng.normal_vec_f32(d, 1.0);
+            let v = rng.normal_vec_f32(dv, 1.0);
+            a.absorb(&k, &v);
+            let kp = b.prep_rows(&k, 1);
+            b.absorb_prepped(&kp, &v);
+        }
+        let (mut sa, mut sb) = (Vec::new(), Vec::new());
+        a.save_state(&mut sa);
+        b.save_state(&mut sb);
+        assert_eq!(sa, sb);
+    }
 
     #[test]
     fn matches_oracle_on_small_case() {

@@ -31,14 +31,21 @@
 //! examples, benches and tests run end-to-end with no PJRT artifacts and
 //! no Python.  Everything here is checked against the `mathref` oracles
 //! in `rust/tests/proptests.rs`.
+//!
+//! Training runs backward through the same recurrence: [`grad`] carries
+//! a state-*gradient* across chunks (mirroring the forward's prefix
+//! sums) and differentiates the intra-chunk triangle directly —
+//! finite-difference-checked in `rust/tests/grad_check.rs`.
 
 pub mod backend;
 pub mod chunked;
+pub mod grad;
 pub mod ho;
 pub mod linear;
 
 pub use self::backend::{Evaluation, NativeBackend};
 pub use self::chunked::chunked_forward;
+pub use self::grad::{chunked_attention_vjp, softmax_attention_vjp, AttentionGrad};
 pub use self::ho::HoState;
 pub use self::linear::LinearState;
 
@@ -73,6 +80,14 @@ pub trait RecurrentAttention {
     /// Fold one (key, value) row into the state. `k` has length `d()`,
     /// `v` length `dv()`.
     fn absorb(&mut self, k: &[f32], v: &[f32]);
+
+    /// [`Self::absorb`] for a key row already passed through
+    /// [`Self::prep_rows`] — blocked paths reuse the prepped rows they
+    /// just computed for the pairwise triangle instead of re-running the
+    /// per-row preprocessing. Default assumes prep is the identity.
+    fn absorb_prepped(&mut self, kp: &[f32], v: &[f32]) {
+        self.absorb(kp, v);
+    }
 
     /// Unnormalized read: writes the weighted value sum into `num`
     /// (length `dv()`) and returns the weight sum (denominator).

@@ -16,11 +16,14 @@
 //!   layout. [`mathref`] keeps the direct O(n²) evaluations as independent
 //!   oracles; the property tests pin recurrent ≡ chunked ≡ oracle.
 //!   On top of the kernels, [`model`] is a full pure-Rust transformer —
-//!   chunked prefill, O(1)-state [`model::DecodeSession`] decoding, and
-//!   the [`model::Executor`] trait the coordinator serves through — so
-//!   `holt generate --backend native` and `holt serve --backend native`
-//!   work end to end with no artifacts, no PJRT and no Python, as do
-//!   `cargo test`, `cargo run --example quickstart` and
+//!   chunked prefill, O(1)-state [`model::DecodeSession`] decoding, the
+//!   [`model::Executor`] trait the coordinator serves through, and
+//!   [`model::grad`]: a hand-derived backward through the same chunked
+//!   recurrence plus native AdamW, behind the
+//!   [`coordinator::trainer::TrainBackend`] trait — so `holt train`,
+//!   `holt ablation`, `holt generate` and `holt serve` (all `--backend
+//!   native`) work end to end with no artifacts, no PJRT and no Python,
+//!   as do `cargo test`, `cargo run --example quickstart` and
 //!   `cargo bench --bench native_scaling`.
 //!
 //! * **PJRT artifacts (optional)** — the original three-layer stack:

@@ -2,16 +2,17 @@
 //!
 //! Subcommands:
 //!   info                     list models (+ artifacts when present)
-//!   train                    run a training job (E3 / E6, artifact path)
+//!   train                    run a training job (E3 / E6)
 //!   generate                 sample a completion (native or artifact)
 //!   serve                    continuous-batching server (TCP or synthetic)
 //!   client                   load generator against a running server
 //!   approx                   E1 approximation-quality table
 //!   fig1                     regenerate the paper's Figure 1 data
 //!
-//! `generate`, `serve` and `eval` take `--backend native|artifact`
-//! (default: native).  The native backend is the pure-Rust model executor
-//! (`holt::model`) — no artifacts, no PJRT, no Python, works on a clean
+//! `train`, `ablation`, `generate`, `serve` and `eval` take `--backend
+//! native|artifact` (default: native).  The native backend is the
+//! pure-Rust model executor + trainer (`holt::model`, hand-derived O(n)
+//! backward) — no artifacts, no PJRT, no Python, works on a clean
 //! checkout.  The artifact backend is the original PJRT path and needs
 //! `make artifacts` plus a real `xla` crate.
 //!
@@ -29,7 +30,9 @@ use holt::checkpoint::Checkpoint;
 use holt::config::{ServeConfig, Toml, TrainConfig};
 use holt::coordinator::generation::{Generator, SampleOpts};
 use holt::coordinator::server;
-use holt::coordinator::trainer::{run_training, Trainer};
+use holt::coordinator::trainer::{
+    run_training, ArtifactTrainer, NativeTrainer, TrainBackend,
+};
 use holt::experiments;
 use holt::json::{obj, Json};
 use holt::model::{native_model_entry, ArtifactExecutor, Executor, NativeExecutor};
@@ -93,6 +96,8 @@ holt — Higher Order Linear Transformer coordinator
 USAGE: holt <command> [--key value ...]
 
 ARTIFACT-FREE QUICKSTART (pure-Rust executor; no artifacts, no Python):
+  holt train    --backend native --model ho2_tiny --task copy --steps 200
+  holt ablation --backend native --steps 120        # E6 alpha/order grid
   holt generate --backend native --prompt \"Call me \"
   holt serve    --backend native --synthetic --requests 8
   holt serve    --backend native --model ho2_tiny       # TCP on :8490
@@ -101,9 +106,12 @@ ARTIFACT-FREE QUICKSTART (pure-Rust executor; no artifacts, no Python):
 
 COMMANDS
   info       [--backend native|artifact] list models (and artifacts)
-  train      --model M --task T --steps N [--lr X --seed S --warmup W
-             --log-every K --eval-every K --ckpt-every K --out DIR
-             --config FILE]               (artifact path)
+  train      --model M --task T --steps N [--backend native|artifact
+             --lr X --seed S --warmup W --log-every K --eval-every K
+             --ckpt-every K --out DIR --config FILE --resume CKPT
+             --min-loss-ratio R]
+             (native: hand-derived O(n) backward + AdamW, no artifacts;
+              --min-loss-ratio fails the run unless final/first <= R)
   generate   --model M [--backend native|artifact --ckpt FILE --prompt STR
              --max-tokens N --temperature X --top-k K --seed S]
   serve      --model M [--backend native|artifact --ckpt FILE
@@ -117,7 +125,8 @@ COMMANDS
   fig1       [--points N --out DIR]        Figure 1 data
   crosscheck [--artifact NAME | --native]  artifact (or native O(n) kernel)
                                            vs the O(n^2) rust reference
-  ablation   [--steps N --task T]          E6 alpha/order training grid
+  ablation   [--backend native|artifact --steps N --task T]
+                                           E6 alpha/order training grid
   eval       --model M [--backend native|artifact --ckpt FILE --task T
              --batches N]                 held-out loss/ppl/accuracy
   plot       --files a.jsonl,b.jsonl [--y loss --event step --x step]
@@ -284,6 +293,39 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One trainer construction path for both training backends, with
+/// optional checkpoint resume.  Both trainer types own their resources,
+/// so the boxed trait object is `'static` (the artifact `Runtime` is
+/// dropped here, its executables `Arc`-shared).
+fn build_trainer(
+    backend: &str,
+    model: &str,
+    seed: u64,
+    resume: Option<&str>,
+) -> Result<Box<dyn TrainBackend>> {
+    let ckpt = match resume {
+        Some(path) => {
+            let ck = Checkpoint::load(std::path::Path::new(path))?;
+            println!("resuming from checkpoint at step {}", ck.step);
+            Some(ck)
+        }
+        None => None,
+    };
+    match backend {
+        "native" => Ok(match ckpt {
+            Some(ck) => Box::new(NativeTrainer::from_checkpoint(model, &ck)?),
+            None => Box::new(NativeTrainer::new(model, seed)?),
+        }),
+        _ => {
+            let rt = runtime()?;
+            Ok(match ckpt {
+                Some(ck) => Box::new(ArtifactTrainer::from_checkpoint(&rt, model, &ck)?),
+                None => Box::new(ArtifactTrainer::new(&rt, model, seed)?),
+            })
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = TrainConfig::default();
     if let Some(path) = args.get("config") {
@@ -306,20 +348,40 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.out_dir = o.into();
     }
 
-    let rt = runtime()?;
+    let backend = backend_of(args)?;
+    let mut trainer = build_trainer(backend, &cfg.model, cfg.seed, args.get("resume"))?;
     println!(
-        "training {} on task '{}' for {} steps (lr {:.2e}, seed {})",
-        cfg.model, cfg.task, cfg.steps, cfg.lr, cfg.seed
+        "training {} [{}] on task '{}' for {} steps (lr {:.2e}, seed {})",
+        cfg.model, backend, cfg.task, cfg.steps, cfg.lr, cfg.seed
     );
     let t0 = Instant::now();
-    let history = run_training(&rt, &cfg, false)?;
+    let history = run_training(trainer.as_mut(), &cfg, false)?;
+    let first_loss = history.first().map(|s| s.loss).unwrap_or(f32::NAN);
     let final_loss = history.last().map(|s| s.loss).unwrap_or(f32::NAN);
     println!(
-        "done: {} steps in {:.1}s, final loss {:.4}",
+        "done: {} steps in {:.1}s, loss {:.4} -> {:.4} (ratio {:.3})",
         history.len(),
         t0.elapsed().as_secs_f64(),
-        final_loss
+        first_loss,
+        final_loss,
+        final_loss / first_loss
     );
+    // CI / acceptance hook: fail loudly when training didn't train
+    if let Some(max_ratio) = args.get("min-loss-ratio") {
+        let max_ratio: f32 = max_ratio
+            .parse()
+            .context("--min-loss-ratio must be a number in (0, 1]")?;
+        if max_ratio <= 0.0 || max_ratio > 1.0 || max_ratio.is_nan() {
+            bail!("--min-loss-ratio must be in (0, 1], got {max_ratio}");
+        }
+        let ratio = final_loss / first_loss;
+        if !ratio.is_finite() || ratio > max_ratio {
+            bail!(
+                "loss ratio {ratio:.3} exceeds --min-loss-ratio {max_ratio} \
+                 (loss {first_loss:.4} -> {final_loss:.4})"
+            );
+        }
+    }
     Ok(())
 }
 
@@ -517,8 +579,13 @@ fn cmd_ablation(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps", 120)?;
     let lr = args.get_f64("lr", 2e-3)?;
     let task = args.get("task").unwrap_or("copy").to_string();
-    let rt = runtime()?;
-    // the ho2 (alpha, order) grid lowered by aot.py, plus both baselines
+    let backend = backend_of(args)?;
+    // the artifact runtime is shared across the grid (executable cache);
+    // the native path needs nothing
+    let rt = if backend == "native" { None } else { Some(runtime()?) };
+    // the ho2 (alpha, order) grid, plus both baselines — the E6
+    // experiment: does order 2 close the gap to softmax that order 1
+    // leaves open (Mercat 2020)?
     let models = [
         "ho2_tiny",        // alpha=3, order=2 (the paper's setting)
         "ho2_tiny_a1_o2",
@@ -529,15 +596,17 @@ fn cmd_ablation(args: &Args) -> Result<()> {
         "linear_tiny",
         "softmax_tiny",
     ];
-    println!("E6 — alpha/order ablation: task '{task}', {steps} steps each\n");
+    println!("E6 — alpha/order ablation [{backend}]: task '{task}', {steps} steps each\n");
     println!(
         "{:<16} {:>6} {:>6} {:>12} {:>12} {:>10}",
         "model", "alpha", "order", "final loss", "eval acc", "wall (s)"
     );
     let mut csv = String::from("model,alpha,order,final_loss,eval_acc,wall_s\n");
     for model in models {
-        let entry = rt.manifest.model(model)?.clone();
-        let mut trainer = Trainer::new(&rt, model, 42)?;
+        let mut trainer: Box<dyn TrainBackend> = match &rt {
+            None => Box::new(NativeTrainer::new(model, 42)?),
+            Some(rt) => Box::new(ArtifactTrainer::new(rt, model, 42)?),
+        };
         let (b, t) = trainer.train_shape();
         let mut gen = holt::data::make(&task, 42)?;
         let mut eval_gen = holt::data::make(&task, 77)?;
@@ -547,13 +616,14 @@ fn cmd_ablation(args: &Args) -> Result<()> {
             let lr_i = if i < 20 { lr * (i + 1) as f64 / 20.0 } else { lr };
             last = trainer.train_step(&gen.batch(b, t), lr_i as f32)?.loss;
         }
-        let acc = if entry.artifacts.contains_key("fwd") {
+        let acc = if trainer.supports_eval() {
             trainer.eval_accuracy(&eval_gen.batch(b, t))?
         } else {
             f64::NAN
         };
         let wall = t0.elapsed().as_secs_f64();
-        let (alpha, order) = (entry.config.alpha, entry.config.order);
+        let cfg = &trainer.model().config;
+        let (alpha, order) = (cfg.alpha, cfg.order);
         println!(
             "{model:<16} {alpha:>6} {order:>6} {last:>12.4} {acc:>12.3} {wall:>10.1}"
         );

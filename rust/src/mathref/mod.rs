@@ -34,6 +34,46 @@ pub fn layernorm_noaffine(x: &mut [f32], n: usize, d: usize, eps: f32) {
     }
 }
 
+/// VJP of [`layernorm_noaffine`]: given the raw rows `x` (n, d) and the
+/// upstream gradient `g` w.r.t. the normalized rows, return the gradient
+/// w.r.t. `x`.  With y = (x − μ)/σ, σ = √(var + ε):
+///
+/// ```text
+/// dx = (g − mean(g) − y · mean(g ⊙ y)) / σ
+/// ```
+///
+/// Math in f64 (the backward pass accumulates over whole sequences).
+pub fn layernorm_noaffine_vjp(x: &[f32], n: usize, d: usize, eps: f32, g: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), n * d, "ln vjp x shape");
+    assert_eq!(g.len(), n * d, "ln vjp g shape");
+    let mut out = vec![0.0f64; n * d];
+    for r in 0..n {
+        let row = &x[r * d..(r + 1) * d];
+        let grow = &g[r * d..(r + 1) * d];
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var = row
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / d as f64;
+        let sigma = (var + eps as f64).sqrt();
+        let mut gm = 0.0f64;
+        let mut gym = 0.0f64;
+        for (&xv, &gv) in row.iter().zip(grow) {
+            let y = (xv as f64 - mean) / sigma;
+            gm += gv;
+            gym += gv * y;
+        }
+        gm /= d as f64;
+        gym /= d as f64;
+        for ((o, &xv), &gv) in out[r * d..(r + 1) * d].iter_mut().zip(row).zip(grow) {
+            let y = (xv as f64 - mean) / sigma;
+            *o = (gv - gm - y * gym) / sigma;
+        }
+    }
+    out
+}
+
 /// Exact softmax attention for one head: q (n,d), k (m,d), v (m,dv).
 pub fn softmax_attention(
     q: &[f32],

@@ -5,13 +5,22 @@
 use std::time::{Duration, Instant};
 
 /// Online mean/min/max/std over f64 samples (Welford).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Stats {
     pub n: u64,
     mean: f64,
     m2: f64,
     pub min: f64,
     pub max: f64,
+}
+
+/// Must agree with [`Stats::new`]: a derived `Default` would start
+/// `min`/`max` at 0.0, silently reporting `min = 0` for all-positive
+/// samples.
+impl Default for Stats {
+    fn default() -> Self {
+        Stats::new()
+    }
 }
 
 impl Stats {
@@ -41,7 +50,10 @@ impl Stats {
     }
 }
 
-/// Fixed-capacity latency recorder with exact percentiles.
+/// Growable latency recorder with exact percentiles.  Percentile reads
+/// sort a copy of the samples; batch the reads through
+/// [`Latencies::percentiles_us`] so hot paths (serve summaries) pay for
+/// one sort, not one per percentile.
 #[derive(Debug, Clone, Default)]
 pub struct Latencies {
     samples_us: Vec<u64>,
@@ -64,16 +76,28 @@ impl Latencies {
         self.samples_us.is_empty()
     }
 
-    /// Exact percentile (p in [0,100]) in microseconds.
-    pub fn percentile_us(&self, p: f64) -> u64 {
+    /// Nearest-rank percentile in a sorted sample: ceil(p/100·n) − 1,
+    /// clamped.
+    fn rank(sorted: &[u64], p: f64) -> u64 {
+        let rank = ((p / 100.0 * sorted.len() as f64).ceil() as isize - 1).max(0) as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    /// Exact percentiles (each p in [0,100]) in microseconds, one sort
+    /// for the whole batch.  Empty recorder reads as all zeros.
+    pub fn percentiles_us(&self, ps: &[f64]) -> Vec<u64> {
         if self.samples_us.is_empty() {
-            return 0;
+            return vec![0; ps.len()];
         }
         let mut v = self.samples_us.clone();
         v.sort_unstable();
-        // nearest-rank: ceil(p/100 * n) - 1, clamped
-        let rank = ((p / 100.0 * v.len() as f64).ceil() as isize - 1).max(0) as usize;
-        v[rank.min(v.len() - 1)]
+        ps.iter().map(|&p| Self::rank(&v, p)).collect()
+    }
+
+    /// Exact percentile (p in [0,100]) in microseconds.  For several
+    /// reads use [`Latencies::percentiles_us`].
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.percentiles_us(&[p])[0]
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -84,14 +108,15 @@ impl Latencies {
     }
 
     pub fn summary(&self) -> String {
+        let q = self.percentiles_us(&[50.0, 95.0, 99.0, 100.0]);
         format!(
             "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
             self.len(),
             self.mean_us(),
-            self.percentile_us(50.0),
-            self.percentile_us(95.0),
-            self.percentile_us(99.0),
-            self.percentile_us(100.0),
+            q[0],
+            q[1],
+            q[2],
+            q[3],
         )
     }
 }
@@ -171,5 +196,22 @@ mod tests {
         assert_eq!(l.percentile_us(0.0), 1);
         assert_eq!(l.percentile_us(50.0), 50);
         assert_eq!(l.percentile_us(100.0), 100);
+        // batch reads agree with single reads (one sort either way)
+        assert_eq!(l.percentiles_us(&[0.0, 50.0, 95.0, 100.0]), vec![1, 50, 95, 100]);
+        assert_eq!(Latencies::new().percentiles_us(&[50.0, 99.0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn default_stats_matches_new() {
+        // regression: a derived Default used to start min/max at 0.0, so
+        // all-positive samples reported min = 0
+        let mut s = Stats::default();
+        s.push(3.0);
+        s.push(5.0);
+        assert_eq!(s.min, 3.0);
+        assert_eq!(s.max, 5.0);
+        let empty = Stats::default();
+        assert!(empty.min.is_infinite() && empty.min > 0.0);
+        assert!(empty.max.is_infinite() && empty.max < 0.0);
     }
 }

@@ -20,21 +20,27 @@ use crate::model::nn;
 use crate::params::ParamStore;
 use crate::runtime::{ModelConfig, ModelEntry};
 
-/// Leaf offsets inside one block, in `param_spec` order.
-const L_LN1_G: usize = 0;
-const L_LN1_B: usize = 1;
-const L_WQ: usize = 2;
-const L_WK: usize = 3;
-const L_WV: usize = 4;
-const L_WO: usize = 5;
-const L_LN2_G: usize = 6;
-const L_LN2_B: usize = 7;
-const L_W1: usize = 8;
-const L_B1: usize = 9;
-const L_W2: usize = 10;
-const L_B2: usize = 11;
+/// Leaf offsets inside one block, in `param_spec` order (shared with the
+/// training backward in `model::grad`).
+pub(crate) const L_LN1_G: usize = 0;
+pub(crate) const L_LN1_B: usize = 1;
+pub(crate) const L_WQ: usize = 2;
+pub(crate) const L_WK: usize = 3;
+pub(crate) const L_WV: usize = 4;
+pub(crate) const L_WO: usize = 5;
+pub(crate) const L_LN2_G: usize = 6;
+pub(crate) const L_LN2_B: usize = 7;
+pub(crate) const L_W1: usize = 8;
+pub(crate) const L_B1: usize = 9;
+pub(crate) const L_W2: usize = 10;
+pub(crate) const L_B2: usize = 11;
 /// Leaves per block.
-const L_PER_BLOCK: usize = 12;
+pub(crate) const L_PER_BLOCK: usize = 12;
+
+/// Leaf index of `lnf_g` (with `lnf_b` right after it).
+pub(crate) fn lnf_index(n_layers: usize) -> usize {
+    2 + L_PER_BLOCK * n_layers
+}
 
 /// Borrowed weight view of one transformer block.
 pub struct LayerView<'a> {
@@ -113,30 +119,16 @@ impl NativeModel {
     }
 
     pub fn lnf_g(&self) -> &[f32] {
-        self.leaf(2 + L_PER_BLOCK * self.entry.config.n_layers)
+        self.leaf(lnf_index(self.entry.config.n_layers))
     }
 
     pub fn lnf_b(&self) -> &[f32] {
-        self.leaf(2 + L_PER_BLOCK * self.entry.config.n_layers + 1)
+        self.leaf(lnf_index(self.entry.config.n_layers) + 1)
     }
 
     /// Weight view of block `li`.
     pub fn layer(&self, li: usize) -> LayerView<'_> {
-        let base = 2 + li * L_PER_BLOCK;
-        LayerView {
-            ln1_g: self.leaf(base + L_LN1_G),
-            ln1_b: self.leaf(base + L_LN1_B),
-            wq: self.leaf(base + L_WQ),
-            wk: self.leaf(base + L_WK),
-            wv: self.leaf(base + L_WV),
-            wo: self.leaf(base + L_WO),
-            ln2_g: self.leaf(base + L_LN2_G),
-            ln2_b: self.leaf(base + L_LN2_B),
-            w1: self.leaf(base + L_W1),
-            b1: self.leaf(base + L_B1),
-            w2: self.leaf(base + L_W2),
-            b2: self.leaf(base + L_B2),
-        }
+        layer_view(&self.params, li)
     }
 
     /// Fresh recurrent attention state for one head — errors for
@@ -254,6 +246,28 @@ pub(crate) fn fan_out<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], f: F) {
     }
 }
 
+/// Weight view of block `li` over a [`ParamStore`] whose leaves were
+/// validated f32 (see [`NativeModel::new`] / `NativeTrainer`) — shared
+/// by the serving forward and the training backward.
+pub(crate) fn layer_view(params: &ParamStore, li: usize) -> LayerView<'_> {
+    let leaf = |i: usize| params.leaves[i].as_f32().expect("validated f32 leaves");
+    let base = 2 + li * L_PER_BLOCK;
+    LayerView {
+        ln1_g: leaf(base + L_LN1_G),
+        ln1_b: leaf(base + L_LN1_B),
+        wq: leaf(base + L_WQ),
+        wk: leaf(base + L_WK),
+        wv: leaf(base + L_WV),
+        wo: leaf(base + L_WO),
+        ln2_g: leaf(base + L_LN2_G),
+        ln2_b: leaf(base + L_LN2_B),
+        w1: leaf(base + L_W1),
+        b1: leaf(base + L_B1),
+        w2: leaf(base + L_W2),
+        b2: leaf(base + L_B2),
+    }
+}
+
 /// ln1 → q/k/v projections for `rows` rows of `x` — the pre-attention
 /// half of a block, shared verbatim by the chunked prefill and the
 /// per-token decode so the two paths cannot drift apart.
@@ -295,7 +309,14 @@ pub(crate) fn block_finish(
 
 /// Copy head `hd`'s (t, dh) slice out of a (t, d) row-major buffer for
 /// sequence `bi` of a (b, t, d) stack.
-fn gather_head(src: &[f32], bi: usize, t: usize, d: usize, hd: usize, dh: usize) -> Vec<f32> {
+pub(crate) fn gather_head(
+    src: &[f32],
+    bi: usize,
+    t: usize,
+    d: usize,
+    hd: usize,
+    dh: usize,
+) -> Vec<f32> {
     let mut out = vec![0.0f32; t * dh];
     for (ti, orow) in out.chunks_mut(dh).enumerate() {
         let base = (bi * t + ti) * d + hd * dh;
@@ -305,7 +326,15 @@ fn gather_head(src: &[f32], bi: usize, t: usize, d: usize, hd: usize, dh: usize)
 }
 
 /// Inverse of [`gather_head`].
-fn scatter_head(dst: &mut [f32], src: &[f32], bi: usize, t: usize, d: usize, hd: usize, dh: usize) {
+pub(crate) fn scatter_head(
+    dst: &mut [f32],
+    src: &[f32],
+    bi: usize,
+    t: usize,
+    d: usize,
+    hd: usize,
+    dh: usize,
+) {
     for (ti, srow) in src.chunks(dh).enumerate() {
         let base = (bi * t + ti) * d + hd * dh;
         dst[base..base + dh].copy_from_slice(srow);

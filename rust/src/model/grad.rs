@@ -1,0 +1,609 @@
+//! Native training: the hand-derived backward pass through the full
+//! transformer, gradient-checked against finite differences.
+//!
+//! # The backward recurrence
+//!
+//! The forward is `model::forward`'s exact arithmetic (same `nn` ops,
+//! same chunked attention evaluation), run once with activations cached.
+//! The backward walks it in reverse:
+//!
+//! * **loss** — weighted softmax cross-entropy: `dlogits = (p − 1ₜ)·w/W`
+//!   per scored position, `W = max(Σw, 1)` (mirror of
+//!   `python/compile/model.py::loss_fn`).
+//! * **dense ops** (`matmul`, LayerNorm, GELU, tied logits, embedding
+//!   gather) — standard VJPs, written with the same fixed accumulation
+//!   order discipline as the forward in [`crate::model::nn`].
+//! * **attention** — the interesting part: the causal O(n) recurrence is
+//!   differentiated *as the recurrence*, not as an unrolled n² graph.
+//!   [`chunked_attention_vjp`] mirrors `kernels::chunked_forward`
+//!   chunk for chunk: pairwise weights inside a chunk are
+//!   differentiated directly (`Tᵣ'(s) = Tᵣ₋₁(s)` for Taylor order r),
+//!   while a single *state-gradient* vector — the loss gradient w.r.t.
+//!   each prefix-sum moment (Σ1, Σk, Σk⊗v, Σk⊗k, Σ(k⊗k)⊗v) — flows
+//!   backward across chunks, exactly as Katharopoulos et al. 2020
+//!   describe for first-order linear attention.  Cost stays O(n), and
+//!   decode-time state and train-time gradient share one layout.
+//!   The softmax baseline has no linear-time form in either direction
+//!   and uses the direct [`softmax_attention_vjp`].
+//!
+//! `rust/tests/grad_check.rs` pins every kernel kind × order against
+//! finite differences of f64 oracles (rel. err ≤ 1e-3) and the full
+//! model against numeric directional derivatives.
+
+use anyhow::{ensure, Result};
+
+use crate::data::Batch;
+use crate::kernels::{
+    chunked_attention_vjp, softmax_attention_vjp, Evaluation, NativeBackend,
+};
+use crate::model::forward::{
+    block_finish, block_qkv, fan_out, gather_head, layer_view, lnf_index, scatter_head, L_B1,
+    L_B2, L_LN1_B, L_LN1_G, L_LN2_B, L_LN2_G, L_PER_BLOCK, L_W1, L_W2, L_WK, L_WO, L_WQ, L_WV,
+};
+use crate::model::nn::{self, LN_EPS};
+use crate::params::ParamStore;
+use crate::runtime::ModelConfig;
+
+/// Chunk length of the training-time attention evaluation — the same
+/// value `NativeModel` serves with, so train/eval/serve forwards agree
+/// bit for bit outside the f64 state reassociation.
+const TRAIN_CHUNK: usize = 64;
+
+fn backend_for(cfg: &ModelConfig) -> NativeBackend {
+    NativeBackend {
+        order: cfg.order,
+        alpha: cfg.alpha,
+        normalize_qk: true,
+        chunk: TRAIN_CHUNK,
+        evaluation: Evaluation::Chunked,
+    }
+}
+
+/// Cached activations of one block, in forward order.
+struct LayerCache {
+    /// residual stream entering the block (rows, d)
+    x_in: Vec<f32>,
+    /// ln1 output (rows, d)
+    h1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// concatenated attention output (rows, d)
+    a: Vec<f32>,
+    /// residual stream after the attention sublayer (rows, d)
+    x_mid: Vec<f32>,
+    /// ln2 output (rows, d)
+    h2: Vec<f32>,
+    /// pre-GELU FFN activation (rows, ff)
+    f_pre: Vec<f32>,
+    /// post-GELU FFN activation (rows, ff)
+    f_post: Vec<f32>,
+}
+
+/// Everything the backward needs from one forward pass.
+struct Cache {
+    layers: Vec<LayerCache>,
+    /// residual stream entering the final LayerNorm (rows, d)
+    x_out: Vec<f32>,
+    /// final LayerNorm output — the tied-head input (rows, d)
+    xf: Vec<f32>,
+}
+
+/// One attention unit (sequence × head) of the parallel fan-out.
+struct AttnUnit {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    out: Vec<f32>,
+}
+
+/// (gq, gk, gv) of one attention unit.
+type UnitGrads = (Vec<f32>, Vec<f32>, Vec<f32>);
+
+/// Run the attention forward for every (sequence, head) unit — the same
+/// dispatch `NativeModel::forward` uses, so logits agree exactly.
+fn attend_forward(cfg: &ModelConfig, units: &mut [AttnUnit], t: usize, dh: usize) -> Result<()> {
+    let backend = backend_for(cfg);
+    let kind = cfg.attn.as_str();
+    let mut work: Vec<(&mut AttnUnit, Option<Result<Vec<f32>>>)> =
+        units.iter_mut().map(|u| (u, None)).collect();
+    fan_out(&mut work, |(u, out)| {
+        *out = Some(backend.forward(kind, &u.q, &u.k, &u.v, t, dh, dh, true));
+    });
+    for (u, out) in work {
+        u.out = out.expect("every unit computed")?;
+    }
+    Ok(())
+}
+
+/// Token embedding + learned positions into a fresh residual stream —
+/// shared by the cached (train) and lean (eval) forwards.
+fn embed_tokens(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+) -> Result<Vec<f32>> {
+    let (d, v) = (cfg.d_model, cfg.vocab_size);
+    let rows = b * t;
+    ensure!(tokens.len() == rows && b > 0 && t > 0, "tokens shape ({b}, {t})");
+    ensure!(t <= cfg.max_len, "sequence length {t} exceeds max_len {}", cfg.max_len);
+    let embed = params.leaves[0].as_f32()?;
+    let pose = params.leaves[1].as_f32()?;
+    let mut x = vec![0.0f32; rows * d];
+    for (row, &tok) in tokens.iter().enumerate() {
+        ensure!((0..v as i32).contains(&tok), "token {tok} out of vocab {v}");
+        let ti = row % t;
+        let e = &embed[tok as usize * d..(tok as usize + 1) * d];
+        let p = &pose[ti * d..(ti + 1) * d];
+        for (o, (&ev, &pv)) in x[row * d..(row + 1) * d].iter_mut().zip(e.iter().zip(p)) {
+            *o = ev + pv;
+        }
+    }
+    Ok(x)
+}
+
+/// Attention sublayer over the whole batch: gather heads, fan out, and
+/// scatter back into a (rows, d) buffer.
+fn attend_batched(
+    cfg: &ModelConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    t: usize,
+) -> Result<Vec<f32>> {
+    let d = cfg.d_model;
+    let nh = cfg.n_heads;
+    let dh = d / nh;
+    let mut units = Vec::with_capacity(b * nh);
+    for bi in 0..b {
+        for hd in 0..nh {
+            units.push(AttnUnit {
+                q: gather_head(q, bi, t, d, hd, dh),
+                k: gather_head(k, bi, t, d, hd, dh),
+                v: gather_head(v, bi, t, d, hd, dh),
+                out: Vec::new(),
+            });
+        }
+    }
+    attend_forward(cfg, &mut units, t, dh)?;
+    let mut a = vec![0.0f32; b * t * d];
+    for (u, unit) in units.iter().enumerate() {
+        scatter_head(&mut a, &unit.out, u / nh, t, d, u % nh, dh);
+    }
+    Ok(a)
+}
+
+/// Full-sequence forward with activation caching.  Identical arithmetic
+/// to [`crate::model::NativeModel::forward`] (same `nn` ops in the same
+/// order, same chunked attention) — pinned by a test in
+/// `rust/tests/grad_check.rs`.
+fn forward_cached(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+) -> Result<(Vec<f32>, Cache)> {
+    let (d, v, ff) = (cfg.d_model, cfg.vocab_size, cfg.d_ff);
+    let rows = b * t;
+    let mut x = embed_tokens(cfg, params, tokens, b, t)?;
+    let embed = params.leaves[0].as_f32()?;
+
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for li in 0..cfg.n_layers {
+        let lw = layer_view(params, li);
+        let x_in = x.clone();
+        let h1 = nn::layernorm_affine(&x, rows, d, lw.ln1_g, lw.ln1_b);
+        let q = nn::matmul(&h1, lw.wq, rows, d, d);
+        let k = nn::matmul(&h1, lw.wk, rows, d, d);
+        let vv = nn::matmul(&h1, lw.wv, rows, d, d);
+        let a = attend_batched(cfg, &q, &k, &vv, b, t)?;
+
+        let ao = nn::matmul(&a, lw.wo, rows, d, d);
+        nn::add_inplace(&mut x, &ao);
+        let x_mid = x.clone();
+        let h2 = nn::layernorm_affine(&x, rows, d, lw.ln2_g, lw.ln2_b);
+        let mut f_pre = nn::matmul(&h2, lw.w1, rows, d, ff);
+        nn::add_bias(&mut f_pre, rows, ff, lw.b1);
+        let mut f_post = f_pre.clone();
+        nn::gelu_inplace(&mut f_post);
+        let g = nn::matmul(&f_post, lw.w2, rows, ff, d);
+        nn::add_inplace(&mut x, &g);
+        nn::add_bias(&mut x, rows, d, lw.b2);
+
+        layers.push(LayerCache { x_in, h1, q, k, v: vv, a, x_mid, h2, f_pre, f_post });
+    }
+
+    let x_out = x;
+    let lnf = lnf_index(cfg.n_layers);
+    let xf = nn::layernorm_affine(
+        &x_out,
+        rows,
+        d,
+        params.leaves[lnf].as_f32()?,
+        params.leaves[lnf + 1].as_f32()?,
+    );
+    let logits = nn::tied_logits(&xf, rows, d, embed, v);
+    Ok((logits, Cache { layers, x_out, xf }))
+}
+
+/// Teacher-forced logits only — the eval path of `NativeTrainer`.
+/// Cache-free: runs the same shared block helpers
+/// ([`block_qkv`]/[`block_finish`]) as `NativeModel::forward`, so eval
+/// pays no activation-cache allocations and stays bit-identical to both
+/// the serving forward and the cached training forward.
+pub fn forward_logits(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+) -> Result<Vec<f32>> {
+    let (d, v, ff) = (cfg.d_model, cfg.vocab_size, cfg.d_ff);
+    let rows = b * t;
+    let mut x = embed_tokens(cfg, params, tokens, b, t)?;
+    for li in 0..cfg.n_layers {
+        let lw = layer_view(params, li);
+        let (q, k, vv) = block_qkv(&lw, &x, rows, d);
+        let a = attend_batched(cfg, &q, &k, &vv, b, t)?;
+        block_finish(&lw, &mut x, &a, rows, d, ff);
+    }
+    let lnf = lnf_index(cfg.n_layers);
+    let xf = nn::layernorm_affine(
+        &x,
+        rows,
+        d,
+        params.leaves[lnf].as_f32()?,
+        params.leaves[lnf + 1].as_f32()?,
+    );
+    Ok(nn::tied_logits(&xf, rows, d, params.leaves[0].as_f32()?, v))
+}
+
+/// Weighted-CE loss and its gradient w.r.t. every parameter leaf, as a
+/// [`ParamStore`] with the same names/shapes as `params`.
+pub fn loss_and_grad(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<(f64, ParamStore)> {
+    let (b, t) = (batch.batch_size(), batch.seq_len());
+    let tokens = batch.tokens.as_i32()?;
+    let targets = batch.targets.as_i32()?;
+    let weights = batch.weights.as_f32()?;
+    let (d, v, nh, ff) = (cfg.d_model, cfg.vocab_size, cfg.n_heads, cfg.d_ff);
+    let dh = d / nh;
+    let rows = b * t;
+    ensure!(targets.len() == rows && weights.len() == rows, "batch shapes");
+
+    let (logits, cache) = forward_cached(cfg, params, tokens, b, t)?;
+
+    // ---- loss + dlogits (softmax CE, weighted, /max(Σw, 1)) ----
+    let wsum: f64 = weights.iter().map(|&w| w as f64).sum();
+    let wnorm = wsum.max(1.0);
+    let mut loss = 0.0f64;
+    let mut dlogits = vec![0.0f32; rows * v];
+    for i in 0..rows {
+        let w = weights[i] as f64;
+        if w == 0.0 {
+            continue;
+        }
+        ensure!((0..v as i32).contains(&targets[i]), "target out of vocab");
+        let row = &logits[i * v..(i + 1) * v];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x)) as f64;
+        let z: f64 = row.iter().map(|&x| (x as f64 - maxv).exp()).sum();
+        let logz = maxv + z.ln();
+        loss += w * (logz - row[targets[i] as usize] as f64);
+        let drow = &mut dlogits[i * v..(i + 1) * v];
+        let scale = w / wnorm;
+        for (dc, &x) in drow.iter_mut().zip(row) {
+            *dc = (((x as f64 - maxv).exp() / z) * scale) as f32;
+        }
+        drow[targets[i] as usize] -= scale as f32;
+    }
+    loss /= wnorm;
+
+    // ---- backward ----
+    let mut grads = params.zeros_like();
+    let embed = params.leaves[0].as_f32()?;
+    let lnf = lnf_index(cfg.n_layers);
+
+    // tied head: logits = xf · embedᵀ
+    // dembed += dlogitsᵀ · xf ; dxf = dlogits · embed
+    matmul_gw(&dlogits, &cache.xf, rows, v, d, grads.leaves[0].as_f32_mut()?);
+    let dxf = nn::matmul(&dlogits, embed, rows, v, d);
+
+    // final LayerNorm
+    let lnf_g = params.leaves[lnf].as_f32()?;
+    let mut dx = {
+        let (dx, dg, db) = layernorm_affine_vjp(&cache.x_out, rows, d, lnf_g, &dxf);
+        nn::add_inplace(grads.leaves[lnf].as_f32_mut()?, &dg);
+        nn::add_inplace(grads.leaves[lnf + 1].as_f32_mut()?, &db);
+        dx
+    };
+
+    for li in (0..cfg.n_layers).rev() {
+        let lw = layer_view(params, li);
+        let lc = &cache.layers[li];
+        let base = 2 + li * L_PER_BLOCK;
+
+        // x_out = x_mid + f_post·w2 + b2
+        add_rows_into(grads.leaves[base + L_B2].as_f32_mut()?, &dx, rows, d);
+        matmul_gw(&lc.f_post, &dx, rows, ff, d, grads.leaves[base + L_W2].as_f32_mut()?);
+        let df_post = matmul_gx(&dx, lw.w2, rows, ff, d);
+        let df_pre = gelu_vjp(&lc.f_pre, &df_post);
+        add_rows_into(grads.leaves[base + L_B1].as_f32_mut()?, &df_pre, rows, ff);
+        matmul_gw(&lc.h2, &df_pre, rows, d, ff, grads.leaves[base + L_W1].as_f32_mut()?);
+        let dh2 = matmul_gx(&df_pre, lw.w1, rows, d, ff);
+        let (dx_ln2, dg2, db2) = layernorm_affine_vjp(&lc.x_mid, rows, d, lw.ln2_g, &dh2);
+        nn::add_inplace(grads.leaves[base + L_LN2_G].as_f32_mut()?, &dg2);
+        nn::add_inplace(grads.leaves[base + L_LN2_B].as_f32_mut()?, &db2);
+        // residual join: x_mid feeds both the FFN sublayer and x_out
+        let mut dx_mid = dx;
+        nn::add_inplace(&mut dx_mid, &dx_ln2);
+
+        // attention output projection
+        matmul_gw(&lc.a, &dx_mid, rows, d, d, grads.leaves[base + L_WO].as_f32_mut()?);
+        let da = matmul_gx(&dx_mid, lw.wo, rows, d, d);
+
+        // per-(sequence, head) attention backward, fanned out like the
+        // forward — each unit replays its chunked forward and runs the
+        // reverse state-gradient sweep
+        let mut units: Vec<(AttnUnit, Vec<f32>, Option<UnitGrads>)> =
+            Vec::with_capacity(b * nh);
+        for bi in 0..b {
+            for hd in 0..nh {
+                units.push((
+                    AttnUnit {
+                        q: gather_head(&lc.q, bi, t, d, hd, dh),
+                        k: gather_head(&lc.k, bi, t, d, hd, dh),
+                        v: gather_head(&lc.v, bi, t, d, hd, dh),
+                        out: Vec::new(),
+                    },
+                    gather_head(&da, bi, t, d, hd, dh),
+                    None,
+                ));
+            }
+        }
+        let backend = backend_for(cfg);
+        let kind = cfg.attn.as_str();
+        fan_out(&mut units, |(u, go, out)| {
+            *out = Some(if kind == "softmax" {
+                softmax_attention_vjp(&u.q, &u.k, &u.v, t, dh, dh, true, go)
+            } else {
+                let mut st = backend
+                    .grad_state(kind, dh, dh)
+                    .expect("attention kind validated at model construction");
+                chunked_attention_vjp(st.as_mut(), &u.q, &u.k, &u.v, t, TRAIN_CHUNK, go)
+            });
+        });
+        let mut dq = vec![0.0f32; rows * d];
+        let mut dk = vec![0.0f32; rows * d];
+        let mut dv = vec![0.0f32; rows * d];
+        for (u, (_, _, out)) in units.iter().enumerate() {
+            let (gq, gk, gv) = out.as_ref().expect("every unit computed");
+            scatter_head(&mut dq, gq, u / nh, t, d, u % nh, dh);
+            scatter_head(&mut dk, gk, u / nh, t, d, u % nh, dh);
+            scatter_head(&mut dv, gv, u / nh, t, d, u % nh, dh);
+        }
+
+        // q/k/v projections share the ln1 output
+        matmul_gw(&lc.h1, &dq, rows, d, d, grads.leaves[base + L_WQ].as_f32_mut()?);
+        matmul_gw(&lc.h1, &dk, rows, d, d, grads.leaves[base + L_WK].as_f32_mut()?);
+        matmul_gw(&lc.h1, &dv, rows, d, d, grads.leaves[base + L_WV].as_f32_mut()?);
+        let mut dh1 = matmul_gx(&dq, lw.wq, rows, d, d);
+        nn::add_inplace(&mut dh1, &matmul_gx(&dk, lw.wk, rows, d, d));
+        nn::add_inplace(&mut dh1, &matmul_gx(&dv, lw.wv, rows, d, d));
+        let (dx_ln1, dg1, db1) = layernorm_affine_vjp(&lc.x_in, rows, d, lw.ln1_g, &dh1);
+        nn::add_inplace(grads.leaves[base + L_LN1_G].as_f32_mut()?, &dg1);
+        nn::add_inplace(grads.leaves[base + L_LN1_B].as_f32_mut()?, &db1);
+        // residual join: x_in feeds both ln1 and x_mid
+        dx = dx_mid;
+        nn::add_inplace(&mut dx, &dx_ln1);
+    }
+
+    // embedding gather + learned positions
+    {
+        let gembed = grads.leaves[0].as_f32_mut()?;
+        for (row, &tok) in tokens.iter().enumerate() {
+            let dst = &mut gembed[tok as usize * d..(tok as usize + 1) * d];
+            for (g, &x) in dst.iter_mut().zip(&dx[row * d..(row + 1) * d]) {
+                *g += x;
+            }
+        }
+    }
+    {
+        let gpos = grads.leaves[1].as_f32_mut()?;
+        for row in 0..rows {
+            let ti = row % t;
+            let dst = &mut gpos[ti * d..(ti + 1) * d];
+            for (g, &x) in dst.iter_mut().zip(&dx[row * d..(row + 1) * d]) {
+                *g += x;
+            }
+        }
+    }
+
+    Ok((loss, grads))
+}
+
+// ---------------------------------------------------------------------------
+// dense VJPs
+// ---------------------------------------------------------------------------
+
+/// dX of `Y = X·W`: `dX = dY·Wᵀ`.  `dy` is (n, m), `w` is (d, m).
+fn matmul_gx(dy: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    assert_eq!(dy.len(), n * m, "matmul_gx dy shape");
+    assert_eq!(w.len(), d * m, "matmul_gx w shape");
+    let mut dx = vec![0.0f32; n * d];
+    for (dyr, dxr) in dy.chunks(m).zip(dx.chunks_mut(d)) {
+        for (o, wr) in dxr.iter_mut().zip(w.chunks(m)) {
+            let mut acc = 0.0f32;
+            for (&wv, &dv) in wr.iter().zip(dyr) {
+                acc += wv * dv;
+            }
+            *o = acc;
+        }
+    }
+    dx
+}
+
+/// dW of `Y = X·W`, accumulated: `dW += Xᵀ·dY`.  `x` is (n, d), `dy`
+/// (n, m), `dw` (d, m).
+fn matmul_gw(x: &[f32], dy: &[f32], n: usize, d: usize, m: usize, dw: &mut [f32]) {
+    assert_eq!(x.len(), n * d, "matmul_gw x shape");
+    assert_eq!(dy.len(), n * m, "matmul_gw dy shape");
+    assert_eq!(dw.len(), d * m, "matmul_gw dw shape");
+    for (xr, dyr) in x.chunks(d).zip(dy.chunks(m)) {
+        for (&xi, dwr) in xr.iter().zip(dw.chunks_mut(m)) {
+            for (o, &dv) in dwr.iter_mut().zip(dyr) {
+                *o += xi * dv;
+            }
+        }
+    }
+}
+
+/// VJP of [`nn::layernorm_affine`]: returns (dx, dgain, dbias).  One
+/// statistics pass per row — with ŷ = (x − μ)/σ and g = dy ⊙ gain:
+///
+/// ```text
+/// dgain += Σᵣ dy ⊙ ŷ     dbias += Σᵣ dy
+/// dx = (g − mean(g) − ŷ · mean(g ⊙ ŷ)) / σ
+/// ```
+fn layernorm_affine_vjp(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    gain: &[f32],
+    dy: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), n * d, "ln vjp x shape");
+    assert_eq!(dy.len(), n * d, "ln vjp dy shape");
+    assert_eq!(gain.len(), d, "ln vjp gain shape");
+    let mut dgain = vec![0.0f64; d];
+    let mut dbias = vec![0.0f64; d];
+    let mut dx = vec![0.0f32; n * d];
+    let mut y = vec![0.0f64; d];
+    let mut g = vec![0.0f64; d];
+    for r in 0..n {
+        let row = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var = row
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / d as f64;
+        let sigma = (var + LN_EPS as f64).sqrt();
+        let mut gm = 0.0f64;
+        let mut gym = 0.0f64;
+        for c in 0..d {
+            y[c] = (row[c] as f64 - mean) / sigma;
+            let dyv = dyr[c] as f64;
+            dgain[c] += dyv * y[c];
+            dbias[c] += dyv;
+            g[c] = dyv * gain[c] as f64;
+            gm += g[c];
+            gym += g[c] * y[c];
+        }
+        gm /= d as f64;
+        gym /= d as f64;
+        for c in 0..d {
+            dx[r * d + c] = ((g[c] - gm - y[c] * gym) / sigma) as f32;
+        }
+    }
+    (
+        dx,
+        dgain.iter().map(|&v| v as f32).collect(),
+        dbias.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// VJP of the tanh-approximated GELU in [`nn::gelu_inplace`], from the
+/// *pre*-activation values.
+fn gelu_vjp(x_pre: &[f32], dy: &[f32]) -> Vec<f32> {
+    const C: f64 = 0.797_884_56;
+    assert_eq!(x_pre.len(), dy.len(), "gelu vjp shape");
+    x_pre
+        .iter()
+        .zip(dy)
+        .map(|(&x, &g)| {
+            let x = x as f64;
+            let t = (C * (x + 0.044715 * x * x * x)).tanh();
+            let d = 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * C * (1.0 + 3.0 * 0.044715 * x * x);
+            (g as f64 * d) as f32
+        })
+        .collect()
+}
+
+/// Column-sum a (n, m) gradient into a (m,) bias gradient: `acc += Σ rows`.
+fn add_rows_into(acc: &mut [f32], dy: &[f32], n: usize, m: usize) {
+    assert_eq!(acc.len(), m, "bias grad shape");
+    assert_eq!(dy.len(), n * m, "bias grad rows shape");
+    for row in dy.chunks(m) {
+        for (a, &b) in acc.iter_mut().zip(row) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::presets::native_model_entry;
+    use crate::rng::Rng;
+
+    #[test]
+    fn matmul_vjps_match_explicit_sums() {
+        let mut rng = Rng::new(41);
+        let (n, d, m) = (3, 4, 5);
+        let x = rng.normal_vec_f32(n * d, 1.0);
+        let w = rng.normal_vec_f32(d * m, 1.0);
+        let dy = rng.normal_vec_f32(n * m, 1.0);
+        let dx = matmul_gx(&dy, &w, n, d, m);
+        for r in 0..n {
+            for i in 0..d {
+                let want: f32 = (0..m).map(|j| dy[r * m + j] * w[i * m + j]).sum();
+                assert!((dx[r * d + i] - want).abs() < 1e-5);
+            }
+        }
+        let mut dw = vec![0.0f32; d * m];
+        matmul_gw(&x, &dy, n, d, m, &mut dw);
+        for i in 0..d {
+            for j in 0..m {
+                let want: f32 = (0..n).map(|r| x[r * d + i] * dy[r * m + j]).sum();
+                assert!((dw[i * m + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn loss_and_grad_shapes_and_finiteness() {
+        let entry = native_model_entry("ho2_tiny").unwrap();
+        let params = ParamStore::init(&entry.param_spec, &mut Rng::new(5));
+        let mut gen = crate::data::make("copy", 7).unwrap();
+        let batch = gen.batch(2, 16);
+        let (loss, grads) = loss_and_grad(&entry.config, &params, &batch).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        assert_eq!(grads.len(), params.len());
+        for (n_, (gt, pt)) in grads
+            .names
+            .iter()
+            .zip(grads.leaves.iter().zip(&params.leaves))
+        {
+            assert_eq!(gt.shape, pt.shape, "{n_}");
+            assert!(gt.as_f32().unwrap().iter().all(|x| x.is_finite()), "{n_}");
+        }
+        // something flowed everywhere: at least the embedding and every
+        // matrix leaf have nonzero gradient
+        for (n_, gt) in grads.names.iter().zip(&grads.leaves) {
+            if gt.shape.len() == 2 {
+                assert!(
+                    gt.as_f32().unwrap().iter().any(|&x| x != 0.0),
+                    "no gradient reached '{n_}'"
+                );
+            }
+        }
+    }
+}

@@ -53,9 +53,20 @@
 //! to ≤ 1e-4 across attention kinds, Taylor orders and shapes, and
 //! snapshot → decode → restore → decode to bit-equality.
 
+//! # Training
+//!
+//! [`grad`] closes the loop natively: a hand-derived backward through
+//! the same chunked O(n) recurrence the forward runs (state gradients
+//! across chunks, direct pairwise gradients inside — see the module
+//! docs), gradient-checked against finite differences.  The
+//! [`crate::coordinator::trainer::TrainBackend`] trait puts it behind
+//! the same two-engine split as serving: `NativeTrainer` (this path)
+//! and `ArtifactTrainer` (fused PJRT train step, unchanged).
+
 pub mod decode;
 pub mod executor;
 pub mod forward;
+pub mod grad;
 pub mod nn;
 pub mod presets;
 

@@ -10,8 +10,9 @@
 
 use crate::mathref::layernorm_noaffine;
 
-/// LayerNorm epsilon — matches `python/compile/kernels/ref.py`.
-const LN_EPS: f32 = 1e-5;
+/// LayerNorm epsilon — matches `python/compile/kernels/ref.py` (shared
+/// with the backward in `model::grad`).
+pub(crate) const LN_EPS: f32 = 1e-5;
 
 /// Row-major matmul: `x` (n, d) @ `w` (d, m) -> (n, m).
 ///

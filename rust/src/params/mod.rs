@@ -105,6 +105,86 @@ impl ParamStore {
     }
 }
 
+/// AdamW hyper-parameters — exactly the constants the fused train
+/// artifact was lowered with (`python/compile/model.py`), so the native
+/// and artifact paths walk the same optimizer trajectory.
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const WEIGHT_DECAY: f32 = 0.01;
+
+/// Per-leaf weight-decay coefficients from a param spec: decay applies
+/// to matrix leaves only, with the (tied) embedding and the learned
+/// positions exempt — the GPT-2 convention, mirror of python
+/// `train_step`'s `decays` list.
+pub fn adamw_decay_mask(spec: &[LeafSpec]) -> Vec<f32> {
+    spec.iter()
+        .map(|s| {
+            if s.shape.len() == 2 && s.name != "embed" && s.name != "pos" {
+                WEIGHT_DECAY
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// One AdamW update over every leaf, in place.  `step` is the
+/// *incremented* step count (≥ 1, used for bias correction), matching
+/// python `train_step` which bumps the counter before correcting.  All
+/// arithmetic in f32, like the lowered artifact.
+pub fn adamw_step(
+    params: &mut ParamStore,
+    grads: &ParamStore,
+    m: &mut ParamStore,
+    v: &mut ParamStore,
+    step: u64,
+    lr: f32,
+    decay: &[f32],
+) -> Result<()> {
+    let np = params.len();
+    if grads.len() != np || m.len() != np || v.len() != np || decay.len() != np {
+        bail!(
+            "adamw state mismatch: {np} params, {} grads, {} m, {} v, {} decay",
+            grads.len(),
+            m.len(),
+            v.len(),
+            decay.len()
+        );
+    }
+    if step == 0 {
+        bail!("adamw_step takes the incremented step count (>= 1)");
+    }
+    let b1t = ADAM_B1.powi(step.min(i32::MAX as u64) as i32);
+    let b2t = ADAM_B2.powi(step.min(i32::MAX as u64) as i32);
+    for i in 0..np {
+        let g = grads.leaves[i].as_f32()?;
+        let n = params.leaves[i].len();
+        if g.len() != n || m.leaves[i].len() != n || v.leaves[i].len() != n {
+            bail!(
+                "leaf '{}' size mismatch: {} params, {} grad, {} m, {} v",
+                params.names[i],
+                n,
+                g.len(),
+                m.leaves[i].len(),
+                v.leaves[i].len()
+            );
+        }
+        let wd = decay[i];
+        let p = params.leaves[i].as_f32_mut()?;
+        let mm = m.leaves[i].as_f32_mut()?;
+        let vv = v.leaves[i].as_f32_mut()?;
+        for j in 0..p.len() {
+            mm[j] = ADAM_B1 * mm[j] + (1.0 - ADAM_B1) * g[j];
+            vv[j] = ADAM_B2 * vv[j] + (1.0 - ADAM_B2) * g[j] * g[j];
+            let mhat = mm[j] / (1.0 - b1t);
+            let vhat = vv[j] / (1.0 - b2t);
+            p[j] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + wd * p[j]);
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +226,50 @@ mod tests {
         assert!(p.replace_from(bad).is_err());
         let good = p.leaves.clone();
         p.replace_from(good).unwrap();
+    }
+
+    #[test]
+    fn adamw_first_step_is_signed_unit_step() {
+        // with zero moments, step 1 gives p -= lr * sign(g) (bias
+        // correction cancels the (1-β) factors; eps is negligible here)
+        let mut p = ParamStore::init(&spec(), &mut Rng::new(1));
+        let before = p.leaves[0].as_f32().unwrap().to_vec();
+        let mut g = p.zeros_like();
+        g.leaves[0].as_f32_mut().unwrap().fill(0.5);
+        let mut m = p.zeros_like();
+        let mut v = p.zeros_like();
+        let decay = vec![0.0; p.len()];
+        adamw_step(&mut p, &g, &mut m, &mut v, 1, 0.1, &decay).unwrap();
+        for (a, b) in p.leaves[0].as_f32().unwrap().iter().zip(&before) {
+            assert!((a - (b - 0.1)).abs() < 1e-5, "{a} vs {b}");
+        }
+        // leaves with zero grad are untouched when decay is off
+        assert_eq!(p.leaves[1].as_f32().unwrap(), &vec![1.0f32; 8][..]);
+    }
+
+    #[test]
+    fn adamw_decay_mask_follows_gpt2_convention() {
+        let mut s = spec();
+        s.push(LeafSpec {
+            name: "embed".into(),
+            shape: vec![4, 8],
+            init: Init::Normal { std: 0.5 },
+        });
+        let mask = adamw_decay_mask(&s);
+        assert_eq!(mask[0], WEIGHT_DECAY, "matrix leaf decays");
+        assert_eq!(mask[1], 0.0, "vector leaf exempt");
+        assert_eq!(mask[3], 0.0, "embedding exempt despite rank 2");
+    }
+
+    #[test]
+    fn adamw_rejects_mismatched_state() {
+        let mut p = ParamStore::init(&spec(), &mut Rng::new(2));
+        let g = p.zeros_like();
+        let mut m = p.zeros_like();
+        let mut v = p.zeros_like();
+        assert!(adamw_step(&mut p, &g, &mut m, &mut v, 1, 0.1, &[0.0]).is_err());
+        let decay = vec![0.0; p.len()];
+        assert!(adamw_step(&mut p, &g, &mut m, &mut v, 0, 0.1, &decay).is_err());
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Finite-difference gradient checks for the native training backward.
+//!
+//! Kernel level: `chunked_attention_vjp` / `softmax_attention_vjp` are
+//! checked against central differences of *all-f64* direct oracles
+//! (independently written here, LayerNorm included), for every kernel
+//! kind × Taylor order 0/1/2 × several alphas and chunk sizes.  The f64
+//! oracle makes the FD noise floor ~1e-10, so the 1e-3 tolerance is
+//! testing the derivation, not the step size.
+//!
+//! Model level: the full tiny-transformer `loss_and_grad` is checked
+//! against numeric directional derivatives of the f32 loss along the
+//! normalized analytic gradient (the standard f32 gradcheck — single
+//! coordinates drown in f32 forward noise, the aligned directional
+//! derivative does not).
+
+use holt::data::Batch;
+use holt::kernels::{chunked_attention_vjp, softmax_attention_vjp, NativeBackend};
+use holt::model::grad::{forward_logits, loss_and_grad};
+use holt::model::presets::param_spec;
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::{ModelConfig, ModelEntry, Tensor};
+
+const LN_EPS: f64 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// f64 oracles (independent of the kernel code under test)
+// ---------------------------------------------------------------------------
+
+fn taylor64(x: f64, order: usize) -> f64 {
+    let mut acc = 1.0;
+    let mut term = 1.0;
+    for i in 1..=order {
+        term *= x / i as f64;
+        acc += term;
+    }
+    acc
+}
+
+fn ln64(rows: &[f64], d: usize) -> Vec<f64> {
+    let mut out = rows.to_vec();
+    for row in out.chunks_mut(d) {
+        let mean = row.iter().sum::<f64>() / d as f64;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / d as f64;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+    out
+}
+
+fn elu1_64(x: f64) -> f64 {
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp()
+    }
+}
+
+/// Direct causal oracle for kind ∈ {ho2, linear, softmax}, all f64.
+#[allow(clippy::too_many_arguments)]
+fn oracle(
+    kind: &str,
+    q: &[f64],
+    k: &[f64],
+    v: &[f64],
+    n: usize,
+    d: usize,
+    dv: usize,
+    order: usize,
+    alpha: f64,
+) -> Vec<f64> {
+    let mut out = vec![0.0f64; n * dv];
+    match kind {
+        "ho2" => {
+            let qn = ln64(q, d);
+            let kn = ln64(k, d);
+            let scale = 1.0 / (alpha * (d as f64).sqrt());
+            for i in 0..n {
+                let mut den = 0.0;
+                let mut acc = vec![0.0f64; dv];
+                for j in 0..=i {
+                    let dot: f64 = (0..d).map(|c| qn[i * d + c] * kn[j * d + c]).sum();
+                    let w = taylor64(dot * scale, order);
+                    den += w;
+                    for c in 0..dv {
+                        acc[c] += w * v[j * dv + c];
+                    }
+                }
+                let den = den.max(1e-6);
+                for c in 0..dv {
+                    out[i * dv + c] = acc[c] / den;
+                }
+            }
+        }
+        "linear" => {
+            for i in 0..n {
+                let mut den = 0.0;
+                let mut acc = vec![0.0f64; dv];
+                for j in 0..=i {
+                    let w: f64 = (0..d)
+                        .map(|c| elu1_64(q[i * d + c]) * elu1_64(k[j * d + c]))
+                        .sum();
+                    den += w;
+                    for c in 0..dv {
+                        acc[c] += w * v[j * dv + c];
+                    }
+                }
+                let den = den.max(1e-6);
+                for c in 0..dv {
+                    out[i * dv + c] = acc[c] / den;
+                }
+            }
+        }
+        "softmax" => {
+            let scale = 1.0 / (d as f64).sqrt();
+            for i in 0..n {
+                let logits: Vec<f64> = (0..=i)
+                    .map(|j| scale * (0..d).map(|c| q[i * d + c] * k[j * d + c]).sum::<f64>())
+                    .collect();
+                let maxv = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let exps: Vec<f64> = logits.iter().map(|&x| (x - maxv).exp()).collect();
+                let den: f64 = exps.iter().sum();
+                for (j, &e) in exps.iter().enumerate() {
+                    for c in 0..dv {
+                        out[i * dv + c] += (e / den) * v[j * dv + c];
+                    }
+                }
+            }
+        }
+        _ => panic!("unknown kind"),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// kernel-level FD harness
+// ---------------------------------------------------------------------------
+
+struct Case {
+    kind: &'static str,
+    order: usize,
+    alpha: f64,
+    chunk: usize,
+}
+
+fn rel_l2(a: &[f32], b: &[f64]) -> f64 {
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as f64 - y) * (x as f64 - y))
+        .sum();
+    let den: f64 = b.iter().map(|&y| y * y).sum();
+    (num / den.max(1e-24)).sqrt()
+}
+
+fn check_kernel_case(case: &Case, seed: u64) {
+    let (n, d, dv) = (11, 5, 4);
+    let mut rng = Rng::new(seed);
+    let q = rng.normal_vec_f32(n * d, 1.0);
+    let k = rng.normal_vec_f32(n * d, 1.0);
+    let v = rng.normal_vec_f32(n * dv, 1.0);
+    let go = rng.normal_vec_f32(n * dv, 1.0);
+
+    // analytic gradients from the implementation under test
+    let (gq, gk, gv) = if case.kind == "softmax" {
+        softmax_attention_vjp(&q, &k, &v, n, d, dv, true, &go)
+    } else {
+        let backend = NativeBackend {
+            order: case.order,
+            alpha: case.alpha,
+            normalize_qk: true,
+            chunk: case.chunk,
+            evaluation: holt::kernels::Evaluation::Chunked,
+        };
+        let mut st = backend.grad_state(case.kind, d, dv).unwrap();
+        chunked_attention_vjp(st.as_mut(), &q, &k, &v, n, case.chunk, &go)
+    };
+
+    // numeric gradients from the f64 oracle: L = Σ go ⊙ oracle(q, k, v)
+    let q64: Vec<f64> = q.iter().map(|&x| x as f64).collect();
+    let k64: Vec<f64> = k.iter().map(|&x| x as f64).collect();
+    let v64: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+    let loss = |q_: &[f64], k_: &[f64], v_: &[f64]| -> f64 {
+        let out = oracle(case.kind, q_, k_, v_, n, d, dv, case.order, case.alpha);
+        out.iter().zip(&go).map(|(&o, &c)| o * c as f64).sum()
+    };
+    let eps = 1e-5;
+    let fd = |x: &[f64], which: usize| -> Vec<f64> {
+        let mut g = vec![0.0f64; x.len()];
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            xp[i] += eps;
+            xm[i] -= eps;
+            let (lp, lm) = match which {
+                0 => (loss(&xp, &k64, &v64), loss(&xm, &k64, &v64)),
+                1 => (loss(&q64, &xp, &v64), loss(&q64, &xm, &v64)),
+                _ => (loss(&q64, &k64, &xp), loss(&q64, &k64, &xm)),
+            };
+            g[i] = (lp - lm) / (2.0 * eps);
+        }
+        g
+    };
+    let label = format!(
+        "{} order={} alpha={} chunk={}",
+        case.kind, case.order, case.alpha, case.chunk
+    );
+    let eq = rel_l2(&gq, &fd(&q64, 0));
+    let ek = rel_l2(&gk, &fd(&k64, 1));
+    let ev = rel_l2(&gv, &fd(&v64, 2));
+    assert!(eq <= 1e-3, "{label}: dq rel err {eq:.2e}");
+    assert!(ek <= 1e-3, "{label}: dk rel err {ek:.2e}");
+    assert!(ev <= 1e-3, "{label}: dv rel err {ev:.2e}");
+}
+
+#[test]
+fn ho_kernel_gradients_match_fd_all_orders() {
+    // the acceptance grid: orders 0, 1 and 2, two alphas, chunk sizes
+    // spanning pure-recurrent (1) to single-chunk (64 > n)
+    let mut seed = 100;
+    for order in [0, 1, 2] {
+        for alpha in [1.0, 3.0] {
+            for chunk in [1, 3, 64] {
+                check_kernel_case(&Case { kind: "ho2", order, alpha, chunk }, seed);
+                seed += 1;
+            }
+        }
+    }
+}
+
+#[test]
+fn linear_kernel_gradients_match_fd() {
+    for (i, chunk) in [1, 4, 64].into_iter().enumerate() {
+        check_kernel_case(
+            &Case { kind: "linear", order: 0, alpha: 1.0, chunk },
+            200 + i as u64,
+        );
+    }
+}
+
+#[test]
+fn softmax_gradients_match_fd() {
+    check_kernel_case(&Case { kind: "softmax", order: 0, alpha: 1.0, chunk: 0 }, 300);
+}
+
+// ---------------------------------------------------------------------------
+// model-level directional FD
+// ---------------------------------------------------------------------------
+
+fn tiny_entry(attn: &str, order: usize) -> ModelEntry {
+    let config = ModelConfig {
+        preset: "fdtest".into(),
+        vocab_size: 48,
+        d_model: 16,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 32,
+        max_len: 32,
+        attn: attn.into(),
+        order,
+        alpha: 3.0,
+        impl_: "native".into(),
+        train_batch: 2,
+        train_len: 8,
+        decode_batch: 2,
+    };
+    let spec = param_spec(&config);
+    let n_params = spec.iter().map(|l| l.shape.iter().product::<usize>()).sum();
+    ModelEntry {
+        name: format!("{attn}_fdtest_o{order}"),
+        config,
+        n_params,
+        param_spec: spec,
+        state_spec: Vec::new(),
+        artifacts: std::collections::HashMap::new(),
+    }
+}
+
+fn fd_batch(rng: &mut Rng, b: usize, t: usize, vocab: usize) -> Batch {
+    let tokens: Vec<i32> = (0..b * t)
+        .map(|_| rng.uniform_int(0, vocab as u64) as i32)
+        .collect();
+    let targets: Vec<i32> = (0..b * t)
+        .map(|_| rng.uniform_int(0, vocab as u64) as i32)
+        .collect();
+    let weights: Vec<f32> = (0..b * t)
+        .map(|_| if rng.uniform() > 0.3 { 1.0 } else { 0.0 })
+        .collect();
+    Batch {
+        tokens: Tensor::i32(vec![b, t], tokens),
+        targets: Tensor::i32(vec![b, t], targets),
+        weights: Tensor::f32(vec![b, t], weights),
+    }
+}
+
+fn batch_loss(entry: &ModelEntry, params: &ParamStore, batch: &Batch) -> f64 {
+    let cfg = &entry.config;
+    let (b, t) = (batch.batch_size(), batch.seq_len());
+    let logits = forward_logits(cfg, params, batch.tokens.as_i32().unwrap(), b, t).unwrap();
+    let targets = batch.targets.as_i32().unwrap();
+    let weights = batch.weights.as_f32().unwrap();
+    let v = cfg.vocab_size;
+    let mut wsum = 0.0f64;
+    let mut loss = 0.0f64;
+    for i in 0..b * t {
+        let w = weights[i] as f64;
+        if w == 0.0 {
+            continue;
+        }
+        let row = &logits[i * v..(i + 1) * v];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x)) as f64;
+        let z: f64 = row.iter().map(|&x| (x as f64 - maxv).exp()).sum();
+        loss += w * (maxv + z.ln() - row[targets[i] as usize] as f64);
+        wsum += w;
+    }
+    loss / wsum.max(1.0)
+}
+
+fn check_model_directional(attn: &str, order: usize, seed: u64) {
+    let entry = tiny_entry(attn, order);
+    let mut rng = Rng::new(seed);
+    let params = ParamStore::init(&entry.param_spec, &mut rng);
+    let batch = fd_batch(&mut rng, entry.config.train_batch, entry.config.train_len, 48);
+
+    let (loss, grads) = loss_and_grad(&entry.config, &params, &batch).unwrap();
+    let re_loss = batch_loss(&entry, &params, &batch);
+    assert!(
+        (loss - re_loss).abs() < 1e-6,
+        "{attn} o{order}: loss_and_grad loss {loss} vs recomputed {re_loss}"
+    );
+
+    // direction u = g / ||g||; analytic directional derivative = ||g||
+    let gnorm: f64 = grads
+        .leaves
+        .iter()
+        .map(|l| l.as_f32().unwrap().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt();
+    assert!(gnorm > 1e-3, "{attn} o{order}: degenerate gradient {gnorm}");
+    let eps = 1e-3;
+    let perturb = |sign: f64| -> ParamStore {
+        let mut p = params.clone();
+        for (leaf, g) in p.leaves.iter_mut().zip(&grads.leaves) {
+            let dst = leaf.as_f32_mut().unwrap();
+            for (x, &gv) in dst.iter_mut().zip(g.as_f32().unwrap()) {
+                *x += (sign * eps * (gv as f64) / gnorm) as f32;
+            }
+        }
+        p
+    };
+    let lp = batch_loss(&entry, &perturb(1.0), &batch);
+    let lm = batch_loss(&entry, &perturb(-1.0), &batch);
+    let numeric = (lp - lm) / (2.0 * eps);
+    let rel = (numeric - gnorm).abs() / numeric.abs().max(1e-12);
+    assert!(
+        rel <= 1e-3,
+        "{attn} o{order}: directional derivative {numeric:.6} vs ||g|| {gnorm:.6} (rel {rel:.2e})"
+    );
+}
+
+#[test]
+fn model_gradients_match_directional_fd_ho2_all_orders() {
+    for order in [0, 1, 2] {
+        check_model_directional("ho2", order, 7 + order as u64);
+    }
+}
+
+#[test]
+fn model_gradients_match_directional_fd_linear_and_softmax() {
+    check_model_directional("linear", 2, 21);
+    check_model_directional("softmax", 2, 22);
+}

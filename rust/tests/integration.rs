@@ -16,7 +16,7 @@ use holt::checkpoint::Checkpoint;
 use holt::coordinator::generation::{decode_step, CachedParams, Generator, SampleOpts};
 use holt::coordinator::server;
 use holt::coordinator::state::StateManager;
-use holt::coordinator::trainer::Trainer;
+use holt::coordinator::trainer::{ArtifactTrainer, TrainBackend};
 use holt::data;
 use holt::experiments;
 use holt::model::ArtifactExecutor;
@@ -91,7 +91,7 @@ fn run_rejects_wrong_arity_and_shapes() {
 #[test]
 fn trainer_reduces_loss_on_copy_task() {
     let rt = &runtime();
-    let mut trainer = Trainer::new(rt, "ho2_tiny", 7).unwrap();
+    let mut trainer = ArtifactTrainer::new(rt, "ho2_tiny", 7).unwrap();
     let (b, t) = trainer.train_shape();
     let mut gen = data::make("copy", 7).unwrap();
     let mut first = None;
@@ -115,7 +115,7 @@ fn checkpoint_resume_is_bit_exact() {
     let dir = std::env::temp_dir().join("holt_it_ckpt");
     let path = dir.join("t.ckpt");
 
-    let mut a = Trainer::new(rt, "ho2_tiny", 3).unwrap();
+    let mut a = ArtifactTrainer::new(rt, "ho2_tiny", 3).unwrap();
     let (b, t) = a.train_shape();
     let mut gen = data::make("assoc", 3).unwrap();
     let batches: Vec<_> = (0..6).map(|_| gen.batch(b, t)).collect();
@@ -131,7 +131,7 @@ fn checkpoint_resume_is_bit_exact() {
     // resume copy
     let ck = Checkpoint::load(&path).unwrap();
     assert_eq!(ck.step, 3);
-    let mut b2 = Trainer::from_checkpoint(rt, "ho2_tiny", &ck).unwrap();
+    let mut b2 = ArtifactTrainer::from_checkpoint(rt, "ho2_tiny", &ck).unwrap();
     let mut losses_b = Vec::new();
     for batch in &batches[3..] {
         losses_b.push(b2.train_step(batch, 5e-4).unwrap().loss);
@@ -227,7 +227,7 @@ fn rust_cross_entropy_matches_in_graph_loss() {
     // the rust-side loss (data::Batch::cross_entropy over fwd logits) must
     // agree with the loss the fused train artifact computes in-graph
     let rt = &runtime();
-    let mut trainer = Trainer::new(rt, "ho2_tiny", 9).unwrap();
+    let mut trainer = ArtifactTrainer::new(rt, "ho2_tiny", 9).unwrap();
     let (b, t) = trainer.train_shape();
     let mut gen = data::make("charlm", 9).unwrap();
     let batch = gen.batch(b, t);

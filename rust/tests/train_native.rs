@@ -1,0 +1,166 @@
+//! Native training end-to-end: AdamW actually learns, checkpoints
+//! round-trip bit-exactly, and the training forward is the serving
+//! forward (same arithmetic, same logits).
+
+use holt::checkpoint::Checkpoint;
+use holt::coordinator::trainer::{NativeTrainer, TrainBackend};
+use holt::data;
+use holt::model::grad::forward_logits;
+use holt::model::presets::param_spec;
+use holt::model::{native_model_entry, NativeModel};
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::{ModelConfig, ModelEntry};
+
+/// A model small enough for 50 debug-mode train steps but with the full
+/// architecture (2 layers, 2 heads, real vocab so every task fits).
+fn smoke_entry(attn: &str) -> ModelEntry {
+    let config = ModelConfig {
+        preset: "smoke".into(),
+        vocab_size: holt::tokenizer::VOCAB_SIZE,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        max_len: 64,
+        attn: attn.into(),
+        order: 2,
+        alpha: 3.0,
+        impl_: "native".into(),
+        train_batch: 4,
+        train_len: 32,
+        decode_batch: 2,
+    };
+    let spec = param_spec(&config);
+    let n_params = spec.iter().map(|l| l.shape.iter().product::<usize>()).sum();
+    ModelEntry {
+        name: format!("{attn}_smoke"),
+        config,
+        n_params,
+        param_spec: spec,
+        state_spec: Vec::new(),
+        artifacts: std::collections::HashMap::new(),
+    }
+}
+
+#[test]
+fn fifty_adamw_steps_on_copy_reduce_loss() {
+    let mut trainer = NativeTrainer::from_entry(smoke_entry("ho2"), 11).unwrap();
+    let (b, t) = trainer.train_shape();
+    let mut gen = data::make("copy", 11).unwrap();
+    let mut losses = Vec::new();
+    for i in 0..50 {
+        let lr = if i < 10 { 1e-3 * (i + 1) as f32 / 10.0 } else { 1e-3 };
+        losses.push(trainer.train_step(&gen.batch(b, t), lr).unwrap().loss);
+    }
+    assert_eq!(trainer.step, 50);
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(
+        last < 0.85 * first,
+        "50 AdamW steps did not reduce loss enough: {first} -> {last}"
+    );
+    // strictly below the start for the whole final stretch (not a lucky
+    // last batch)
+    for (i, &l) in losses[40..].iter().enumerate() {
+        assert!(l < first, "loss regressed above start at step {}: {l}", 41 + i);
+    }
+}
+
+#[test]
+fn training_forward_is_the_serving_forward() {
+    // grad::forward_logits and NativeModel::forward run the same ops in
+    // the same order — logits must agree exactly, so a trained
+    // checkpoint serves exactly what it evaluated during training
+    let entry = native_model_entry("ho2_tiny").unwrap();
+    let params = ParamStore::init(&entry.param_spec, &mut Rng::new(3));
+    let toks: Vec<i32> = (0..2 * 12).map(|i| (i * 13 % 256) as i32).collect();
+    let train_logits = forward_logits(&entry.config, &params, &toks, 2, 12).unwrap();
+    let model = NativeModel::new(entry, params).unwrap();
+    let serve_logits = model.forward(&toks, 2, 12).unwrap();
+    assert_eq!(train_logits, serve_logits);
+}
+
+#[test]
+fn native_checkpoint_roundtrip_is_bit_exact() {
+    let dir = std::env::temp_dir().join("holt_native_ckpt_test");
+    let path = dir.join("t.ckpt");
+    let entry = smoke_entry("ho2");
+    let mut a = NativeTrainer::from_entry(entry.clone(), 5).unwrap();
+    let (b, t) = a.train_shape();
+    let mut gen = data::make("assoc", 5).unwrap();
+    let batches: Vec<_> = (0..6).map(|_| gen.batch(b, t)).collect();
+    for batch in &batches[..3] {
+        a.train_step(batch, 5e-4).unwrap();
+    }
+    a.checkpoint().save(&path).unwrap();
+    let mut losses_a = Vec::new();
+    for batch in &batches[3..] {
+        losses_a.push(a.train_step(batch, 5e-4).unwrap().loss);
+    }
+    // resume: from_checkpoint wants a registry name; reuse the entry
+    // by constructing the trainer manually through the same path the
+    // CLI uses for preset models, then replacing state — instead just
+    // verify the checkpoint sections restore an identical trainer
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.step, 3);
+    let mut b2 = NativeTrainer::from_entry(entry, 999).unwrap(); // different init
+    b2.params = ck.section("params").unwrap().clone();
+    b2.m = ck.section("m").unwrap().clone();
+    b2.v = ck.section("v").unwrap().clone();
+    b2.step = ck.step;
+    let mut losses_b = Vec::new();
+    for batch in &batches[3..] {
+        losses_b.push(b2.train_step(batch, 5e-4).unwrap().loss);
+    }
+    assert_eq!(losses_a, losses_b, "resume must be bit-exact");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn from_checkpoint_restores_preset_models() {
+    // the CLI resume path: preset model name + checkpoint sections
+    let mut a = NativeTrainer::new("ho2_tiny", 4).unwrap();
+    let (b, t) = a.train_shape();
+    let mut gen = data::make("copy", 4).unwrap();
+    a.train_step(&gen.batch(b, t), 1e-3).unwrap();
+    let ck = a.checkpoint();
+    let b2 = NativeTrainer::from_checkpoint("ho2_tiny", &ck).unwrap();
+    assert_eq!(b2.step, 1);
+    assert_eq!(b2.params.leaves, a.params.leaves);
+    assert_eq!(b2.m.leaves, a.m.leaves);
+    // and a wrong model rejects the checkpoint
+    assert!(NativeTrainer::from_checkpoint("ho2_small", &ck).is_err());
+}
+
+#[test]
+fn ablation_variants_and_baselines_train_natively() {
+    // one step each across the E6 grid axes: orders, alphas, both
+    // baselines — every kind must produce finite loss and step
+    for name in ["ho2_tiny_a1_o1", "ho2_tiny_a3_o0", "linear_tiny"] {
+        let mut tr = NativeTrainer::new(name, 8).unwrap();
+        let mut gen = data::make("copy", 8).unwrap();
+        let (b, t) = tr.train_shape();
+        // small batch to keep debug-mode time down
+        let batch = gen.batch(b.min(2), t.min(16));
+        let stats = tr.train_step(&batch, 1e-3).unwrap();
+        assert!(stats.loss.is_finite(), "{name}");
+        assert_eq!(stats.step, 1, "{name}");
+    }
+    // softmax baseline trains through the direct O(n²) backward
+    let mut tr = NativeTrainer::from_entry(smoke_entry("softmax"), 8).unwrap();
+    let mut gen = data::make("copy", 8).unwrap();
+    let s1 = tr.train_step(&gen.batch(2, 16), 1e-3).unwrap();
+    let s2 = tr.train_step(&gen.batch(2, 16), 1e-3).unwrap();
+    assert!(s1.loss.is_finite() && s2.loss.is_finite());
+    assert_eq!(s2.step, 2);
+}
+
+#[test]
+fn eval_accuracy_runs_on_native_trainer() {
+    let trainer = NativeTrainer::from_entry(smoke_entry("ho2"), 9).unwrap();
+    let mut gen = data::make("copy", 9).unwrap();
+    let acc = trainer.eval_accuracy(&gen.batch(2, 16)).unwrap();
+    assert!((0.0..=1.0).contains(&acc), "{acc}");
+    assert!(trainer.supports_eval());
+}
