@@ -1,7 +1,7 @@
 # Build-time entry points. Only the artifact path needs python/jax;
 # tier-1 (`cargo build --release && cargo test -q`) never touches this.
 
-.PHONY: artifacts tier1 train-smoke
+.PHONY: artifacts tier1 train-smoke serve-smoke
 
 # AOT-lower the jax model + attention kernels to HLO-text artifacts
 # under ./artifacts (manifest.json + *.hlo). Requires python3 + jax.
@@ -16,3 +16,11 @@ tier1:
 train-smoke:
 	cargo run --release -- train --backend native --model ho2_tiny \
 	  --task copy --steps 40 --log-every 10 --eval-every 0 --min-loss-ratio 0.85
+
+# serve-scheduler smoke (no artifacts): synthetic overload through the
+# fair-share policy with preemption and 2-turn session reuse; writes the
+# chunked-vs-token-at-a-time comparison to results/bench_serve.json
+serve-smoke:
+	cargo run --release -- serve --backend native --model ho2_tiny \
+	  --synthetic --requests 12 --prompt-len 24 --max-tokens 8 \
+	  --policy fair --preempt-tokens 4 --turns 2

@@ -11,10 +11,11 @@
 //! state — its decode needs the artifact backend's KV cache, which is the
 //! comparison's whole point.)
 
-use holt::coordinator::server::run_synthetic;
+use holt::coordinator::server::run_synthetic_opts;
 use holt::model::{native_model_entry, Executor, NativeExecutor};
 use holt::params::ParamStore;
 use holt::rng::Rng;
+use holt::serve::ServeOpts;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -25,17 +26,37 @@ fn main() -> anyhow::Result<()> {
     println!("load: {n_requests} requests, 24-byte prompts, {max_tokens} max tokens\n");
 
     for model in ["ho2_tiny", "linear_tiny"] {
-        let entry = native_model_entry(model)?;
-        let params = ParamStore::init(&entry.param_spec, &mut Rng::new(1));
-        let exec = NativeExecutor::new(entry, params)?;
+        let mk = || -> anyhow::Result<NativeExecutor> {
+            let entry = native_model_entry(model)?;
+            let params = ParamStore::init(&entry.param_spec, &mut Rng::new(1));
+            Ok(NativeExecutor::new(entry, params)?)
+        };
+        let exec = mk()?;
         let state = exec.state_bytes_per_slot();
-        let stats = run_synthetic(Box::new(exec), n_requests, 24, max_tokens, 2, 7)?;
+        let stats =
+            run_synthetic_opts(Box::new(exec), n_requests, 24, max_tokens, 2, 7, ServeOpts::default())?;
+        // the same load with prompts streamed one token per engine step —
+        // what serving cost before the chunked-prefill scheduler
+        let tat = run_synthetic_opts(
+            Box::new(mk()?),
+            n_requests,
+            24,
+            max_tokens,
+            2,
+            7,
+            ServeOpts { prefill_chunk: 1, ..ServeOpts::default() },
+        )?;
         println!("--- {model} ---");
         println!(
             "  state/slot: {state} bytes ({:.1} KiB)  (constant in context length)",
             state as f64 / 1024.0
         );
-        println!("  {}\n", stats.report().replace('\n', "\n  "));
+        println!("  {}", stats.report().replace('\n', "\n  "));
+        println!(
+            "  vs token-at-a-time prefill: {:.1} tok/s over {} engine steps\n",
+            tat.tokens_per_sec(),
+            tat.engine_steps
+        );
     }
     println!(
         "note: tiny random-weight models on CPU — compare shapes, not absolutes.\n\

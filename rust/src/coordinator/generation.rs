@@ -16,6 +16,7 @@ use crate::model::Executor;
 use crate::params::ParamStore;
 use crate::rng::Rng;
 use crate::runtime::{Executable, ModelEntry, Tensor};
+use crate::serve::{Prefiller, DEFAULT_PREFILL_CHUNK};
 use crate::tokenizer::{ByteTokenizer, EOS, PAD};
 
 /// Sampling parameters.
@@ -166,11 +167,25 @@ impl<'a> Generator<'a> {
         // prefill: teacher-force the prompt through the recurrence; only
         // the final prompt position's logits row is ever sampled from
         let mut last_logits: Option<Vec<f32>> = None;
-        for (i, &t) in prompt_ids.iter().enumerate() {
-            feed[slot] = t;
-            let logits = self.exec.decode_step(&feed)?;
-            if i + 1 == prompt_ids.len() {
-                last_logits = Some(logits.as_f32()?[slot * v..(slot + 1) * v].to_vec());
+        if self.exec.supports_chunked_prefill() {
+            // absorb the prompt in blocks (bit-identical to the token
+            // loop), through the same Prefiller the serve engine uses
+            let prefiller = Prefiller::new(DEFAULT_PREFILL_CHUNK);
+            let mut pos = 0;
+            while pos < prompt_ids.len() {
+                if let Some(logits) =
+                    prefiller.absorb_block(self.exec.as_mut(), slot, prompt_ids, &mut pos, None)?
+                {
+                    last_logits = Some(logits);
+                }
+            }
+        } else {
+            for (i, &t) in prompt_ids.iter().enumerate() {
+                feed[slot] = t;
+                let logits = self.exec.decode_step(&feed)?;
+                if i + 1 == prompt_ids.len() {
+                    last_logits = Some(logits.as_f32()?[slot * v..(slot + 1) * v].to_vec());
+                }
             }
         }
 

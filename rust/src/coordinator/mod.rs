@@ -14,8 +14,11 @@
 //! * [`generation`] — autoregressive sampling driver over the decode
 //!   artifact (greedy / temperature / top-k).
 //! * [`server`] — continuous-batching serve loop (vLLM-style, at token
-//!   granularity) with a JSON-lines TCP front end and a synthetic
-//!   load-driver mode for benches.
+//!   granularity) with a JSON-lines TCP front end and synthetic
+//!   load-driver modes for benches.  Scheduling (policy admission,
+//!   chunked prefill, O(1)-state preemption, the session cache,
+//!   streaming) lives in [`crate::serve`]; the engine here keeps only
+//!   the step loop.
 
 pub mod generation;
 pub mod server;

@@ -2,18 +2,33 @@
 //! whose "KV cache" is O(1) per sequence).
 //!
 //! The engine owns an [`Executor`] — native pure-Rust or PJRT artifact —
-//! and schedules at **token granularity**: every engine step runs one
-//! decode step over all B slots; requests join the batch the moment a
-//! slot is free (mid-flight of everyone else) and leave on EOS/limit.
-//! Prefill is streamed through the same recurrence — a prompt token per
-//! step — so a long prompt never head-of-line-blocks other slots'
-//! decoding.
+//! and keeps only the **token-granularity step loop**; scheduling lives
+//! in the [`crate::serve`] subsystem it is built on:
+//!
+//! * admission/preemption — [`Scheduler`] (FIFO / priority / fair-share,
+//!   per-request deadlines).  When the queue has waiters and a running
+//!   request exceeds its token/time budget, the engine snapshots the
+//!   slot's O(1) state (a few KiB — the paper-specific win; a KV cache
+//!   would pay O(context)) and parks it for later bit-exact resumption.
+//! * prefill — [`Prefiller`]: prompts absorb in chunks (default 64
+//!   tokens per engine step) through [`Executor::absorb_slot`] instead
+//!   of one token per step, so a P-token prompt costs ⌈P/64⌉ steps.
+//! * sessions — [`SessionCache`]: a finished request's final snapshot is
+//!   retained under its `session_id`; a follow-up whose prompt extends
+//!   the absorbed history restores it and skips re-prefilling.
+//! * streaming — requests with `"stream": true` get one
+//!   [`ServeEvent::Delta`] per generated token before the final line.
 //!
 //! Front ends:
 //! * [`serve_tcp`] — JSON-lines-over-TCP: `{"prompt": ..., "max_tokens":
-//!   ..}` per line, one JSON response line per request.
-//! * [`run_synthetic`] — in-process load driver used by `holt serve
-//!   --synthetic`, the E4 bench and the serve_decode example.
+//!   ..}` per line, one JSON response line per request (see
+//!   [`crate::serve::stream`] for the full wire protocol).  Requests on
+//!   one connection pipeline: the reader hands every parsed line to the
+//!   engine immediately and a writer thread delivers responses as they
+//!   finish.
+//! * [`run_synthetic`] / [`run_synthetic_sessions`] — in-process load
+//!   drivers used by `holt serve --synthetic`, the E4 bench and the
+//!   serve_decode example.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,40 +39,36 @@ use anyhow::{Context, Result};
 
 use crate::json::{obj, Json};
 use crate::metrics::Latencies;
-use crate::model::Executor;
+use crate::model::{Executor, SKIP};
 use crate::rng::Rng;
+use crate::serve::{
+    stream, ParkedWork, Prefiller, QueueEntry, Scheduler, ServeEvent, SessionCache,
+    SessionEntry,
+};
+pub use crate::serve::{Policy, Request, Response, ServeOpts};
 use crate::tokenizer::{ByteTokenizer, EOS, PAD};
 
-/// One inbound generation request.
-pub struct Request {
-    pub id: u64,
-    pub prompt_ids: Vec<i32>,
-    pub max_tokens: usize,
-    pub temperature: f32,
-    pub top_k: usize,
-    pub enqueued: Instant,
-    pub respond: Sender<Response>,
-}
-
-/// The engine's answer.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub id: u64,
-    pub token_ids: Vec<i32>,
-    pub text: String,
-    /// queue + prefill time until the first generated token
-    pub ttft_s: f64,
-    pub total_s: f64,
-}
-
+/// One in-flight request bound to a decode slot.
 struct Active {
     req: Request,
     slot: usize,
-    /// next prompt index to feed (prefill cursor)
+    /// next prompt index to absorb (prefill cursor)
     prompt_pos: usize,
+    /// every token fed into the slot's state so far, in order — the
+    /// session cache stores this next to the final snapshot
+    absorbed: Vec<i32>,
     generated: Vec<i32>,
     last_token: i32,
     first_token_at: Option<Instant>,
+    admitted_at: Instant,
+    /// decode tokens since (re)admission — the preemption quantum clock
+    decoded_since_admit: usize,
+    /// next-token logits produced by chunked prefill this step, sampled
+    /// without a decode_step
+    pending_logits: Option<Vec<f32>>,
+    /// streamed bytes awaiting a complete UTF-8 character (see
+    /// [`stream::utf8_delta`])
+    utf8_buf: Vec<u8>,
 }
 
 /// Aggregate serving statistics — everything the perf trajectory needs,
@@ -66,8 +77,24 @@ struct Active {
 #[derive(Debug, Default)]
 pub struct ServeStats {
     pub completed: u64,
+    /// requests refused at arrival (bad budget / queue full) — offered
+    /// load = completed + rejected, so overload benches stay honest
+    pub rejected: u64,
     pub generated_tokens: u64,
     pub engine_steps: u64,
+    /// prompt tokens absorbed through chunked prefill (0 ⇒ the
+    /// token-at-a-time path served every prompt)
+    pub prefill_tokens: u64,
+    /// effective prefill chunk (1 = token-at-a-time)
+    pub prefill_chunk: usize,
+    /// slots snapshotted + parked for waiters
+    pub preemptions: u64,
+    /// parked requests restored into a fresh slot
+    pub resumes: u64,
+    /// admissions that restored a cached session (prefix prefill skipped)
+    pub session_hits: u64,
+    /// requests that carried a session_id but found no reusable entry
+    pub session_misses: u64,
     pub ttft: Latencies,
     pub per_request: Latencies,
     pub wall_s: f64,
@@ -75,6 +102,8 @@ pub struct ServeStats {
     pub backend: String,
     pub model: String,
     pub n_slots: usize,
+    /// scheduler policy name ("fifo" / "priority" / "fair")
+    pub policy: String,
     /// per-slot decode state footprint (bytes) — O(1) in context for
     /// ho2/linear, max_len-sized KV cache for softmax
     pub state_bytes_per_slot: usize,
@@ -91,18 +120,27 @@ impl ServeStats {
 
     pub fn report(&self) -> String {
         format!(
-            "backend={} model={} slots={} state/slot={:.1}KiB\n\
-             requests={} tokens={} steps={} wall={:.2}s throughput={:.1} tok/s\n  \
+            "backend={} model={} slots={} policy={} state/slot={:.1}KiB\n\
+             requests={} (+{} rejected) tokens={} steps={} wall={:.2}s throughput={:.1} tok/s\n\
+             prefill: chunk={} tokens={}  preempt/resume={}/{}  sessions hit/miss={}/{}\n  \
              ttft: {}\n  request latency: {}",
             self.backend,
             self.model,
             self.n_slots,
+            self.policy,
             self.state_bytes_per_slot as f64 / 1024.0,
             self.completed,
+            self.rejected,
             self.generated_tokens,
             self.engine_steps,
             self.wall_s,
             self.tokens_per_sec(),
+            self.prefill_chunk,
+            self.prefill_tokens,
+            self.preemptions,
+            self.resumes,
+            self.session_hits,
+            self.session_misses,
             self.ttft.summary(),
             self.per_request.summary(),
         )
@@ -117,10 +155,18 @@ impl ServeStats {
             ("backend", self.backend.as_str().into()),
             ("model", self.model.as_str().into()),
             ("n_slots", self.n_slots.into()),
+            ("policy", self.policy.as_str().into()),
             ("state_bytes_per_slot", self.state_bytes_per_slot.into()),
             ("requests_completed", (self.completed as i64).into()),
+            ("requests_rejected", (self.rejected as i64).into()),
             ("generated_tokens", (self.generated_tokens as i64).into()),
             ("engine_steps", (self.engine_steps as i64).into()),
+            ("prefill_chunk", self.prefill_chunk.into()),
+            ("prefill_tokens", (self.prefill_tokens as i64).into()),
+            ("preemptions", (self.preemptions as i64).into()),
+            ("resumes", (self.resumes as i64).into()),
+            ("session_hits", (self.session_hits as i64).into()),
+            ("session_misses", (self.session_misses as i64).into()),
             ("wall_s", self.wall_s.into()),
             ("tok_per_s", self.tokens_per_sec().into()),
             ("ttft_p50_ms", (ttft[0] as f64 / 1e3).into()),
@@ -131,17 +177,31 @@ impl ServeStats {
     }
 }
 
-/// The continuous-batching engine over any [`Executor`].
+/// The continuous-batching engine over any [`Executor`], scheduled by
+/// the [`crate::serve`] subsystem.
 pub struct Engine<'a> {
     exec: Box<dyn Executor + 'a>,
     slots: Vec<Option<Active>>,
     rng: Rng,
     vocab: usize,
     max_len: usize,
+    opts: ServeOpts,
+    scheduler: Scheduler,
+    prefiller: Prefiller,
+    sessions: SessionCache,
+    /// chunked prefill active (opts allow it AND the executor supports it)
+    chunked: bool,
+    /// snapshot/restore available (preemption + session cache gate)
+    snapshots: bool,
 }
 
 impl<'a> Engine<'a> {
+    /// Engine with default scheduling ([`ServeOpts::default`]).
     pub fn new(exec: Box<dyn Executor + 'a>, seed: u64) -> Result<Self> {
+        Engine::with_opts(exec, seed, ServeOpts::default())
+    }
+
+    pub fn with_opts(exec: Box<dyn Executor + 'a>, seed: u64, opts: ServeOpts) -> Result<Self> {
         anyhow::ensure!(
             exec.supports_decode(),
             "model '{}' cannot decode on the {} backend",
@@ -151,12 +211,20 @@ impl<'a> Engine<'a> {
         let n = exec.n_slots();
         let vocab = exec.model().config.vocab_size;
         let max_len = exec.model().config.max_len;
+        let chunked = opts.prefill_chunk >= 2 && exec.supports_chunked_prefill();
+        let snapshots = exec.supports_snapshot();
         Ok(Engine {
             exec,
             slots: (0..n).map(|_| None).collect(),
             rng: Rng::new(seed),
             vocab,
             max_len,
+            scheduler: Scheduler::new(opts.policy),
+            prefiller: Prefiller::new(opts.prefill_chunk),
+            sessions: SessionCache::new(if snapshots { opts.session_capacity } else { 0 }),
+            chunked,
+            snapshots,
+            opts,
         })
     }
 
@@ -164,61 +232,187 @@ impl<'a> Engine<'a> {
         self.slots.len()
     }
 
+    pub fn opts(&self) -> &ServeOpts {
+        &self.opts
+    }
+
     fn has_active(&self) -> bool {
         self.slots.iter().any(Option::is_some)
     }
 
-    /// Try to admit one request; gives the request back when no slot is
-    /// free.  Oversized prompts are rejected immediately (error response).
-    fn admit(&mut self, req: Request) -> Option<Request> {
-        if req.prompt_ids.len() + req.max_tokens > self.max_len {
-            // reject oversized requests right away
-            let _ = req.respond.send(Response {
-                id: req.id,
-                token_ids: vec![],
-                text: String::new(),
-                ttft_s: -1.0,
-                total_s: -1.0,
-            });
-            return None; // consumed
-        }
-        let Some(slot) = self.exec.alloc_slot() else {
-            return Some(req);
+    /// Accept one inbound request: invalid budgets and queue overflow
+    /// are rejected on arrival — producing the error needs no slot, so a
+    /// saturated server must not make a doomed request wait in the queue
+    /// for one — everything else goes to the scheduler.
+    fn accept(&mut self, req: Request, stats: &mut ServeStats) {
+        // the sampling loop always produces at least one token, so a
+        // 0-token budget cannot be honored (it used to be silently
+        // over-served; clamped negatives land here too)
+        let msg = if req.max_tokens == 0 {
+            Some("max_tokens must be at least 1".to_string())
+        } else if req.prompt_ids.len() + req.max_tokens > self.max_len {
+            Some(format!(
+                "prompt ({}) + max_tokens ({}) exceeds model max_len ({})",
+                req.prompt_ids.len(),
+                req.max_tokens,
+                self.max_len
+            ))
+        } else if self.scheduler.fresh_waiters() >= self.opts.queue_capacity {
+            // pipelined connections submit without per-request blocking,
+            // so the waiting queue itself enforces the backpressure
+            // (parked preempted work is exempt from the bound)
+            Some(format!(
+                "server overloaded: {} requests already waiting",
+                self.scheduler.fresh_waiters()
+            ))
+        } else {
+            None
         };
-        self.slots[slot] = Some(Active {
-            slot,
-            prompt_pos: 0,
-            generated: Vec::with_capacity(req.max_tokens),
-            last_token: PAD,
-            first_token_at: None,
-            req,
-        });
-        None
+        match msg {
+            Some(msg) => {
+                stats.rejected += 1;
+                let _ = req.respond.send(ServeEvent::Done(Response::error(req.id, msg)));
+            }
+            None => self.scheduler.enqueue(req),
+        }
     }
 
-    /// One engine step: build the feed vector, run the executor's decode
-    /// step (which advances every active slot), sample/advance request
-    /// state.  Returns finished responses.
-    fn step(&mut self, stats: &mut ServeStats) -> Result<Vec<Response>> {
-        let b = self.n_slots();
-        let mut feed = vec![PAD; b];
-        for s in self.slots.iter().flatten() {
-            feed[s.slot] = if s.prompt_pos < s.req.prompt_ids.len() {
-                s.req.prompt_ids[s.prompt_pos]
-            } else {
-                s.last_token
-            };
+    /// Admit the scheduler's next pick into a free slot, skipping the
+    /// entry with sequence `exclude` (a just-parked evictee — see
+    /// [`Engine::preempt_for_waiters`]).  Returns whether an entry was
+    /// admitted; `false` means no eligible waiter or no free slot.
+    fn admit_next(&mut self, stats: &mut ServeStats, exclude: Option<u64>) -> Result<bool> {
+        if self.exec.free_slots() == 0 {
+            return Ok(false);
         }
-        let logits = self.exec.decode_step(&feed)?;
-        stats.engine_steps += 1;
-        let lf = logits.as_f32()?;
+        let Some(entry) = self.scheduler.pop_next_excluding(exclude) else {
+            return Ok(false);
+        };
+        let Some(slot) = self.exec.alloc_slot() else {
+            // free_slots raced — put the pick back at its arrival position
+            self.scheduler.requeue_front(entry);
+            return Ok(false);
+        };
+        let QueueEntry { req, resume, .. } = entry;
+        let mut a = Active {
+            req,
+            slot,
+            prompt_pos: 0,
+            absorbed: Vec::new(),
+            generated: Vec::new(),
+            last_token: PAD,
+            first_token_at: None,
+            admitted_at: Instant::now(),
+            decoded_since_admit: 0,
+            pending_logits: None,
+            utf8_buf: Vec::new(),
+        };
+        if let Some(w) = resume {
+            // parked preempted work: restore the snapshot and continue
+            // decoding exactly where it stopped — no prefix replay
+            self.exec.restore_slot(slot, &w.snapshot)?;
+            a.prompt_pos = a.req.prompt_ids.len();
+            a.absorbed = w.absorbed;
+            a.generated = w.generated;
+            a.last_token = w.last_token;
+            a.first_token_at = w.first_token_at;
+            a.utf8_buf = w.utf8_buf;
+            stats.resumes += 1;
+        } else if let Some(sid) = a.req.session_id.clone() {
+            // multi-turn follow-up: restore the cached final state and
+            // prefill only the new suffix of the conversation
+            if let Some(e) = self.sessions.lookup(&sid, &a.req.prompt_ids) {
+                let snap = e.snapshot.clone();
+                let tokens = e.tokens.clone();
+                self.exec.restore_slot(slot, &snap)?;
+                a.prompt_pos = tokens.len();
+                a.absorbed = tokens;
+                stats.session_hits += 1;
+            } else {
+                stats.session_misses += 1;
+            }
+        }
+        self.slots[slot] = Some(a);
+        Ok(true)
+    }
 
-        let mut done = Vec::new();
+    /// One engine step, three phases: (1) chunked prefill absorbs up to
+    /// `prefill_chunk` prompt tokens per prefilling slot; (2) one batched
+    /// decode step feeds every slot that needs a token (prompt
+    /// token-at-a-time on backends without absorb, last sampled token in
+    /// decode phase); (3) sample / advance / finish per slot.
+    fn step(&mut self, stats: &mut ServeStats) -> Result<()> {
+        let b = self.n_slots();
+        stats.engine_steps += 1;
+
+        if self.chunked {
+            for slot_idx in 0..b {
+                let Some(a) = self.slots[slot_idx].as_mut() else {
+                    continue;
+                };
+                if a.prompt_pos >= a.req.prompt_ids.len() {
+                    continue;
+                }
+                let before = a.prompt_pos;
+                let done = self.prefiller.absorb_block(
+                    self.exec.as_mut(),
+                    slot_idx,
+                    &a.req.prompt_ids,
+                    &mut a.prompt_pos,
+                    Some(&mut a.absorbed),
+                )?;
+                stats.prefill_tokens += (a.prompt_pos - before) as u64;
+                if let Some(logits) = done {
+                    a.pending_logits = Some(logits);
+                }
+            }
+        }
+
+        let mut feed = vec![PAD; b];
+        let mut fed: Vec<Option<i32>> = vec![None; b];
+        let mut any = false;
+        for a in self.slots.iter().flatten() {
+            let tok = if a.prompt_pos < a.req.prompt_ids.len() {
+                if self.chunked {
+                    // mid chunked prefill — this slot sits the decode out
+                    feed[a.slot] = SKIP;
+                    continue;
+                }
+                a.req.prompt_ids[a.prompt_pos]
+            } else if a.pending_logits.is_some() {
+                // prompt finished via absorb this step; sample below
+                feed[a.slot] = SKIP;
+                continue;
+            } else {
+                a.last_token
+            };
+            feed[a.slot] = tok;
+            fed[a.slot] = Some(tok);
+            any = true;
+        }
+        // borrow the batched logits in place — no per-step or per-slot
+        // copies on the decode hot path
+        let logits = if any { Some(self.exec.decode_step(&feed)?) } else { None };
+        let lf = match &logits {
+            Some(t) => Some(t.as_f32()?),
+            None => None,
+        };
+
+        let v = self.vocab;
+        let tok = ByteTokenizer::new();
         for slot_idx in 0..b {
             let Some(mut a) = self.slots[slot_idx].take() else {
                 continue;
             };
+            if let Some(t) = fed[slot_idx] {
+                a.absorbed.push(t);
+            }
             if a.prompt_pos < a.req.prompt_ids.len() {
+                if fed[slot_idx].is_none() {
+                    // mid chunked prefill — more blocks next step
+                    self.slots[slot_idx] = Some(a);
+                    continue;
+                }
                 a.prompt_pos += 1;
                 if a.prompt_pos < a.req.prompt_ids.len() {
                     self.slots[slot_idx] = Some(a);
@@ -226,9 +420,15 @@ impl<'a> Engine<'a> {
                 }
                 // prompt fully consumed this step: fall through to sample
             }
-            let row = &lf[slot_idx * self.vocab..(slot_idx + 1) * self.vocab];
-            let next =
-                self.rng.sample_logits(row, a.req.temperature, a.req.top_k) as i32;
+            let pending = a.pending_logits.take();
+            let row: &[f32] = match &pending {
+                Some(r) => r,
+                None => {
+                    let lf = lf.expect("decode ran for this slot");
+                    &lf[slot_idx * v..(slot_idx + 1) * v]
+                }
+            };
+            let next = self.rng.sample_logits(row, a.req.temperature, a.req.top_k) as i32;
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(Instant::now());
             }
@@ -236,98 +436,207 @@ impl<'a> Engine<'a> {
             if !hit_eos {
                 a.generated.push(next);
                 a.last_token = next;
+                a.decoded_since_admit += 1;
+                self.scheduler.charge(&a.req.client, 1);
+                if a.req.stream {
+                    // buffer bytes until a UTF-8 character completes —
+                    // decoding each byte alone would stream U+FFFD for
+                    // every multi-byte character (specials add no bytes)
+                    if (0..256).contains(&next) {
+                        a.utf8_buf.push(next as u8);
+                    }
+                    let _ = a.req.respond.send(ServeEvent::Delta {
+                        id: a.req.id,
+                        index: a.generated.len() - 1,
+                        token_id: next,
+                        text: stream::utf8_delta(&mut a.utf8_buf),
+                    });
+                }
             }
             let over_budget = a.generated.len() >= a.req.max_tokens
                 || self.exec.pos(slot_idx) >= self.max_len - 1;
             if hit_eos || over_budget {
-                let now = Instant::now();
-                let ttft = a
-                    .first_token_at
-                    .map(|t| t.duration_since(a.req.enqueued))
-                    .unwrap_or_default();
-                stats.completed += 1;
-                stats.generated_tokens += a.generated.len() as u64;
-                stats.ttft.push(ttft);
-                stats.per_request.push(now.duration_since(a.req.enqueued));
-                let resp = Response {
-                    id: a.req.id,
-                    text: ByteTokenizer::new().decode(&a.generated),
-                    token_ids: a.generated,
-                    ttft_s: ttft.as_secs_f64(),
-                    total_s: now.duration_since(a.req.enqueued).as_secs_f64(),
-                };
-                let _ = a.req.respond.send(resp.clone());
-                self.exec.release_slot(slot_idx);
-                done.push(resp);
+                self.finish(slot_idx, a, stats, &tok);
             } else {
                 self.slots[slot_idx] = Some(a);
             }
         }
-        Ok(done)
+        Ok(())
     }
 
-    /// Main loop: admit from `rx`, step while anything is active, block
-    /// when idle.  Exits when `rx` disconnects and all slots drain.
+    /// Complete one request: retain its session state, deliver the
+    /// response, free the slot.
+    fn finish(&mut self, slot_idx: usize, a: Active, stats: &mut ServeStats, tok: &ByteTokenizer) {
+        let Active { req, absorbed, generated, first_token_at, .. } = a;
+        let now = Instant::now();
+        let ttft = first_token_at
+            .map(|t| t.duration_since(req.enqueued))
+            .unwrap_or_default();
+        stats.completed += 1;
+        stats.generated_tokens += generated.len() as u64;
+        stats.ttft.push(ttft);
+        stats.per_request.push(now.duration_since(req.enqueued));
+        if self.snapshots && self.sessions.capacity() > 0 {
+            if let Some(sid) = req.session_id.clone() {
+                // the final O(1) state costs a few KiB to keep — a
+                // follow-up extending `absorbed` skips this whole prefix
+                if let Ok(snapshot) = self.exec.snapshot_slot(slot_idx) {
+                    self.sessions.insert(sid, SessionEntry { snapshot, tokens: absorbed });
+                }
+            }
+        }
+        let resp = Response {
+            id: req.id,
+            text: tok.decode(&generated),
+            token_ids: generated,
+            ttft_s: ttft.as_secs_f64(),
+            total_s: now.duration_since(req.enqueued).as_secs_f64(),
+            error: None,
+        };
+        let _ = req.respond.send(ServeEvent::Done(resp));
+        self.exec.release_slot(slot_idx);
+    }
+
+    /// Preemptive scheduling: while waiters queue and slots are over
+    /// budget (the `--preempt-tokens` decode quantum, or the request's
+    /// own `deadline_ms` — deadlines work even with the quantum
+    /// disabled), snapshot the O(1) state, park the work at the queue
+    /// tail and hand the slot to the scheduler's next pick.  Bounded to
+    /// one sweep of the slots per engine step, and a slot must have
+    /// decoded at least one token since admission — both prevent
+    /// park/admit livelock.
+    fn preempt_for_waiters(&mut self, stats: &mut ServeStats) -> Result<()> {
+        if !self.snapshots {
+            return Ok(());
+        }
+        for _ in 0..self.n_slots() {
+            if !self.scheduler.has_waiters() {
+                break;
+            }
+            // the slot deepest into its quantum yields first
+            let mut pick: Option<(usize, usize)> = None;
+            for (i, s) in self.slots.iter().enumerate() {
+                let Some(a) = s else { continue };
+                if a.prompt_pos < a.req.prompt_ids.len()
+                    || a.pending_logits.is_some()
+                    || a.decoded_since_admit == 0
+                {
+                    continue; // still prefilling / hasn't run yet
+                }
+                let over_quantum = self.opts.preempt_tokens > 0
+                    && a.decoded_since_admit >= self.opts.preempt_tokens;
+                let over_deadline = a
+                    .req
+                    .deadline_ms
+                    .is_some_and(|d| a.admitted_at.elapsed().as_millis() as u64 > d);
+                if (over_quantum || over_deadline)
+                    && pick.is_none_or(|(_, n)| a.decoded_since_admit > n)
+                {
+                    pick = Some((i, a.decoded_since_admit));
+                }
+            }
+            let Some((slot_idx, _)) = pick else { break };
+            let snapshot = self.exec.snapshot_slot(slot_idx)?;
+            let a = self.slots[slot_idx].take().expect("picked an active slot");
+            self.exec.release_slot(slot_idx);
+            stats.preemptions += 1;
+            let parked_seq = self.scheduler.park(
+                a.req,
+                ParkedWork {
+                    snapshot,
+                    absorbed: a.absorbed,
+                    generated: a.generated,
+                    last_token: a.last_token,
+                    first_token_at: a.first_token_at,
+                    utf8_buf: a.utf8_buf,
+                },
+            );
+            // hand the freed slot to an actual waiter: the evictee is
+            // excluded so a non-FIFO policy can't pick it right back
+            // (it becomes eligible again at the next admission)
+            if !self.admit_next(stats, Some(parked_seq))? {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Main loop: drain `rx` into the scheduler, admit per policy, step
+    /// while anything is active, preempt for waiters, block when idle.
+    /// Exits when `rx` disconnects and all work drains.
     pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
         let mut stats = ServeStats {
             backend: self.exec.backend_name().to_string(),
             model: self.exec.model().name.clone(),
             n_slots: self.n_slots(),
+            policy: self.scheduler.policy().name().to_string(),
+            prefill_chunk: if self.chunked { self.prefiller.chunk() } else { 1 },
             state_bytes_per_slot: self.exec.state_bytes_per_slot(),
             ..ServeStats::default()
         };
         let t0 = Instant::now();
-        let mut pending: Vec<Request> = Vec::new();
         let mut disconnected = false;
         loop {
-            // admit as many queued requests as possible
             loop {
-                if pending.is_empty() {
-                    match rx.try_recv() {
-                        Ok(r) => pending.push(r),
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            disconnected = true;
-                            break;
-                        }
+                match rx.try_recv() {
+                    Ok(r) => self.accept(r, &mut stats),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
                     }
                 }
-                let Some(r) = pending.pop() else { break };
-                if let Some(back) = self.admit(r) {
-                    pending.push(back); // no free slot — retry next step
-                    break;
-                }
             }
+            while self.admit_next(&mut stats, None)? {}
             if !self.has_active() {
                 if disconnected {
                     break;
                 }
                 // idle: block for the next request
                 match rx.recv() {
-                    Ok(r) => pending.push(r),
-                    Err(_) => break,
+                    Ok(r) => self.accept(r, &mut stats),
+                    Err(_) => disconnected = true,
                 }
                 continue;
             }
             self.step(&mut stats)?;
+            self.preempt_for_waiters(&mut stats)?;
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         Ok(stats)
     }
 }
 
-/// Serve over TCP with JSON-lines framing.  Blocks forever.
+/// Serve over TCP with JSON-lines framing (default scheduling).  Blocks
+/// forever.
 pub fn serve_tcp(exec: Box<dyn Executor + '_>, addr: &str, seed: u64) -> Result<()> {
+    serve_tcp_opts(exec, addr, seed, ServeOpts::default())
+}
+
+/// [`serve_tcp`] with explicit [`ServeOpts`] (scheduler policy, prefill
+/// chunk, session cache, preemption quantum, stream default).
+pub fn serve_tcp_opts(
+    exec: Box<dyn Executor + '_>,
+    addr: &str,
+    seed: u64,
+    opts: ServeOpts,
+) -> Result<()> {
     let (tx, rx) = channel::<Request>();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "[serve] {} backend, model {} — listening on {addr} (JSON lines: {{\"prompt\": ..}})",
+        "[serve] {} backend, model {} — listening on {addr} \
+         (JSON lines: {{\"prompt\": ..}}; policy={} chunk={} sessions={} preempt={})",
         exec.backend_name(),
-        exec.model().name
+        exec.model().name,
+        opts.policy.name(),
+        opts.prefill_chunk,
+        opts.session_capacity,
+        opts.preempt_tokens,
     );
 
     // acceptor threads feed the engine channel
     let accept_tx = tx.clone();
+    let stream_default = opts.stream_default;
     std::thread::spawn(move || {
         let mut next_id = 0u64;
         for conn in listener.incoming().flatten() {
@@ -335,80 +644,105 @@ pub fn serve_tcp(exec: Box<dyn Executor + '_>, addr: &str, seed: u64) -> Result<
             let tx = accept_tx.clone();
             let base_id = next_id * 1_000_000;
             std::thread::spawn(move || {
-                let _ = handle_conn(conn, tx, base_id);
+                let _ = handle_conn(conn, tx, base_id, stream_default);
             });
         }
     });
     drop(tx);
 
-    let mut engine = Engine::new(exec, seed)?;
+    let mut engine = Engine::with_opts(exec, seed, opts)?;
     let stats = engine.run(rx)?;
     eprintln!("[serve] engine exited\n{}", stats.report());
     Ok(())
 }
 
-fn handle_conn(conn: TcpStream, tx: Sender<Request>, base_id: u64) -> Result<()> {
-    let peer = conn.peer_addr()?;
+/// One TCP connection: a reader loop that hands every parsed request to
+/// the engine immediately (so pipelined JSON lines batch together — no
+/// per-request blocking recv) and a writer thread that serializes engine
+/// events back in completion order.  The writer exits when the reader is
+/// done *and* every in-flight request has delivered its final event
+/// (each request holds a clone of the event sender until then).
+fn handle_conn(
+    conn: TcpStream,
+    tx: Sender<Request>,
+    base_id: u64,
+    stream_default: bool,
+) -> Result<()> {
     let mut writer = conn.try_clone()?;
     let reader = BufReader::new(conn);
+    let (etx, erx) = channel::<ServeEvent>();
+    // once a write fails the client is gone: the writer stops and the
+    // reader must stop submitting its remaining pipelined lines, or the
+    // engine decodes completions nobody will receive
+    let client_gone = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer_gone = client_gone.clone();
+    let writer_handle = std::thread::spawn(move || {
+        for ev in erx {
+            if writeln!(writer, "{}", stream::event_json(&ev)).is_err() {
+                writer_gone.store(true, std::sync::atomic::Ordering::Relaxed);
+                break;
+            }
+        }
+    });
     let tok = ByteTokenizer::new();
     let mut n = 0u64;
     for line in reader.lines() {
         let line = line?;
+        if client_gone.load(std::sync::atomic::Ordering::Relaxed) {
+            break;
+        }
         if line.trim().is_empty() {
             continue;
         }
+        // every line — parseable or not — consumes an id, so pipelined
+        // clients can correlate an error line to the request it answers
+        n += 1;
         let req_json = match Json::parse(&line) {
             Ok(j) => j,
             Err(e) => {
-                writeln!(writer, "{}", obj(vec![("error", format!("{e}").into())]))?;
+                let _ =
+                    etx.send(ServeEvent::Done(Response::error(base_id + n, format!("{e}"))));
                 continue;
             }
         };
         let prompt = req_json.get("prompt").and_then(|j| j.as_str()).unwrap_or("");
-        let max_tokens = req_json
-            .get("max_tokens")
-            .and_then(|j| j.as_i64())
-            .unwrap_or(64) as usize;
-        let temperature = req_json
-            .get("temperature")
-            .and_then(|j| j.as_f64())
-            .unwrap_or(0.8) as f32;
-        let top_k =
-            req_json.get("top_k").and_then(|j| j.as_i64()).unwrap_or(40) as usize;
-        n += 1;
-        let (rtx, rrx) = channel();
-        tx.send(Request {
-            id: base_id + n,
-            prompt_ids: tok.encode_with_specials(prompt, false),
-            max_tokens,
-            temperature,
-            top_k,
-            enqueued: Instant::now(),
-            respond: rtx,
-        })
-        .map_err(|_| anyhow::anyhow!("engine gone"))?;
-        let resp = rrx.recv()?;
-        writeln!(
-            writer,
-            "{}",
-            obj(vec![
-                ("id", (resp.id as i64).into()),
-                ("text", resp.text.as_str().into()),
-                ("n_tokens", resp.token_ids.len().into()),
-                ("ttft_s", resp.ttft_s.into()),
-                ("total_s", resp.total_s.into()),
-            ])
-        )?;
+        let mut req =
+            Request::new(base_id + n, tok.encode_with_specials(prompt, false), etx.clone());
+        if let Some(v) = req_json.get("max_tokens").and_then(|j| j.as_i64()) {
+            req.max_tokens = v.max(0) as usize;
+        }
+        if let Some(v) = req_json.get("temperature").and_then(|j| j.as_f64()) {
+            req.temperature = v as f32;
+        }
+        if let Some(v) = req_json.get("top_k").and_then(|j| j.as_i64()) {
+            req.top_k = v.max(0) as usize;
+        }
+        if let Some(v) = req_json.get("priority").and_then(|j| j.as_i64()) {
+            req.priority = v;
+        }
+        if let Some(v) = req_json.get("client").and_then(|j| j.as_str()) {
+            req.client = v.to_string();
+        }
+        if let Some(v) = req_json.get("deadline_ms").and_then(|j| j.as_i64()) {
+            req.deadline_ms = Some(v.max(0) as u64);
+        }
+        if let Some(v) = req_json.get("session_id").and_then(|j| j.as_str()) {
+            req.session_id = Some(v.to_string());
+        }
+        req.stream = req_json
+            .get("stream")
+            .and_then(|j| j.as_bool())
+            .unwrap_or(stream_default);
+        if tx.send(req).is_err() {
+            break; // engine gone
+        }
     }
-    let _ = peer;
+    drop(etx);
+    let _ = writer_handle.join();
     Ok(())
 }
 
-/// Synthetic load: `n_requests` prompts drawn from the embedded corpus,
-/// arrivals spaced `gap_ms` apart, all through the continuous-batching
-/// engine.  Returns aggregate stats (E4 bench / serve example /
-/// `results/bench_serve.json`).
+/// Synthetic load with default scheduling — see [`run_synthetic_opts`].
 pub fn run_synthetic(
     exec: Box<dyn Executor + '_>,
     n_requests: usize,
@@ -417,8 +751,25 @@ pub fn run_synthetic(
     gap_ms: u64,
     seed: u64,
 ) -> Result<ServeStats> {
+    run_synthetic_opts(exec, n_requests, prompt_len, max_tokens, gap_ms, seed, ServeOpts::default())
+}
+
+/// Synthetic load: `n_requests` prompts drawn from the embedded corpus,
+/// arrivals spaced `gap_ms` apart (client ids cycle over four synthetic
+/// tenants so fair-share has something to balance), all through the
+/// continuous-batching engine under `opts`.  Returns aggregate stats
+/// (E4 bench / serve example / `results/bench_serve.json`).
+pub fn run_synthetic_opts(
+    exec: Box<dyn Executor + '_>,
+    n_requests: usize,
+    prompt_len: usize,
+    max_tokens: usize,
+    gap_ms: u64,
+    seed: u64,
+    opts: ServeOpts,
+) -> Result<ServeStats> {
     let (tx, rx) = channel::<Request>();
-    let (rtx, _rrx) = channel::<Response>();
+    let (rtx, _rrx) = channel::<ServeEvent>();
     let corpus = crate::data::charlm::CORPUS.as_bytes();
     let prompt_len = prompt_len.min(corpus.len().saturating_sub(1));
     let mut rng = Rng::new(seed ^ 0x10ad);
@@ -428,18 +779,10 @@ pub fn run_synthetic(
             let prompt_ids: Vec<i32> = std::iter::once(crate::tokenizer::BOS)
                 .chain(corpus[start..start + prompt_len].iter().map(|&b| b as i32))
                 .collect();
-            if tx
-                .send(Request {
-                    id: i as u64,
-                    prompt_ids,
-                    max_tokens,
-                    temperature: 0.8,
-                    top_k: 40,
-                    enqueued: Instant::now(),
-                    respond: rtx.clone(),
-                })
-                .is_err()
-            {
+            let mut req = Request::new(i as u64, prompt_ids, rtx.clone());
+            req.max_tokens = max_tokens;
+            req.client = format!("tenant{}", i % 4);
+            if tx.send(req).is_err() {
                 return;
             }
             if gap_ms > 0 {
@@ -447,6 +790,76 @@ pub fn run_synthetic(
             }
         }
     });
-    let mut engine = Engine::new(exec, seed)?;
+    let mut engine = Engine::with_opts(exec, seed, opts)?;
+    engine.run(rx)
+}
+
+/// Multi-turn synthetic load for the session cache: `n_sessions`
+/// conversations of `turns` turns each.  Every follow-up prompt is the
+/// previous prompt + the previous completion + a little fresh corpus
+/// text, sent under the same `session_id` — so turns ≥ 2 exercise the
+/// restore-and-skip-prefix path (`stats.session_hits`).
+pub fn run_synthetic_sessions(
+    exec: Box<dyn Executor + '_>,
+    n_sessions: usize,
+    turns: usize,
+    prompt_len: usize,
+    max_tokens: usize,
+    seed: u64,
+    opts: ServeOpts,
+) -> Result<ServeStats> {
+    let max_len = exec.model().config.max_len;
+    let (tx, rx) = channel::<Request>();
+    let corpus = crate::data::charlm::CORPUS.as_bytes();
+    let prompt_len = prompt_len.min(corpus.len().saturating_sub(1));
+    let mut rng = Rng::new(seed ^ 0x5e55);
+    let starts: Vec<usize> = (0..n_sessions)
+        .map(|_| rng.uniform_int(0, (corpus.len() - prompt_len) as u64) as usize)
+        .collect();
+    std::thread::spawn(move || {
+        let mut histories: Vec<Vec<i32>> = starts
+            .iter()
+            .map(|&s| {
+                std::iter::once(crate::tokenizer::BOS)
+                    .chain(corpus[s..s + prompt_len].iter().map(|&b| b as i32))
+                    .collect()
+            })
+            .collect();
+        for turn in 0..turns {
+            let (etx, erx) = channel::<ServeEvent>();
+            let mut sent = 0usize;
+            for (s, history) in histories.iter().enumerate() {
+                if history.len() + max_tokens > max_len {
+                    continue; // conversation outgrew the context window
+                }
+                let mut req =
+                    Request::new((turn * n_sessions + s) as u64, history.clone(), etx.clone());
+                req.max_tokens = max_tokens;
+                req.client = format!("sess{s}");
+                req.session_id = Some(format!("sess{s}"));
+                if tx.send(req).is_err() {
+                    return;
+                }
+                sent += 1;
+            }
+            drop(etx);
+            let mut done = 0usize;
+            for ev in erx {
+                let ServeEvent::Done(resp) = ev else { continue };
+                let s = (resp.id as usize) % n_sessions;
+                if resp.error.is_none() {
+                    // extend the conversation: completion + 4 fresh bytes
+                    histories[s].extend(&resp.token_ids);
+                    let at = starts[s] % (corpus.len() - 4);
+                    histories[s].extend(corpus[at..at + 4].iter().map(|&b| b as i32));
+                }
+                done += 1;
+                if done == sent {
+                    break;
+                }
+            }
+        }
+    });
+    let mut engine = Engine::with_opts(exec, seed, opts)?;
     engine.run(rx)
 }

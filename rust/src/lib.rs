@@ -54,6 +54,7 @@ pub mod params;
 pub mod plot;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tokenizer;
 
 /// Locate the artifacts directory: `$HOLT_ARTIFACTS` if set (validated),

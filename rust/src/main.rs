@@ -39,6 +39,7 @@ use holt::model::{native_model_entry, ArtifactExecutor, Executor, NativeExecutor
 use holt::params::ParamStore;
 use holt::rng::Rng;
 use holt::runtime::{ModelEntry, Runtime};
+use holt::serve::{Policy, ServeOpts};
 
 /// Parsed `--key value` flags (plus bare `--flag` booleans).
 struct Args {
@@ -116,8 +117,14 @@ COMMANDS
              --max-tokens N --temperature X --top-k K --seed S]
   serve      --model M [--backend native|artifact --ckpt FILE
              --addr HOST:PORT --seed S]
+             [--policy fifo|priority|fair --prefill-chunk N
+              --session-cache N --preempt-tokens N --queue-cap N --stream]
+             (scheduler: chunked prefill, O(1)-state preemption when
+              waiters queue, LRU session cache, streamed deltas)
              [--synthetic --requests N --prompt-len L --max-tokens N
-              --gap-ms MS --out DIR]     (synthetic writes bench_serve.json)
+              --gap-ms MS --turns K --out DIR]
+             (synthetic benches chunked vs token-at-a-time prefill plus
+              session reuse -> bench_serve.json)
   client     --addr HOST:PORT [--requests N --concurrency C
              --prompt STR --max-tokens N]
   approx     [--seed S --out DIR --native] E1 approximation table
@@ -416,27 +423,18 @@ fn cmd_generate(args: &Args) -> Result<()> {
     run_generate(exec, args, seed)
 }
 
-fn run_serve(exec: Box<dyn Executor + '_>, args: &Args, cfg: &ServeConfig) -> Result<()> {
-    if args.has("synthetic") {
-        let stats = server::run_synthetic(
-            exec,
-            args.get_usize("requests", 32)?,
-            args.get_usize("prompt-len", 32)?,
-            args.get_usize("max-tokens", 32)?,
-            args.get_usize("gap-ms", 0)? as u64,
-            cfg.seed,
-        )?;
-        println!("{}", stats.report());
-        let out = PathBuf::from(args.get("out").unwrap_or("results"));
-        let path = experiments::write_results(
-            &out,
-            "bench_serve.json",
-            &format!("{}\n", stats.to_json()),
-        )?;
-        println!("wrote {path:?}");
-        return Ok(());
-    }
-    server::serve_tcp(exec, &cfg.addr, cfg.seed)
+/// `holt serve` scheduler flags → [`ServeOpts`] (defaults come from
+/// `ServeOpts::default()` so the flag defaults can't drift from it).
+fn serve_opts(args: &Args) -> Result<ServeOpts> {
+    let d = ServeOpts::default();
+    Ok(ServeOpts {
+        policy: Policy::parse(args.get("policy").unwrap_or(d.policy.name()))?,
+        prefill_chunk: args.get_usize("prefill-chunk", d.prefill_chunk)?,
+        session_capacity: args.get_usize("session-cache", d.session_capacity)?,
+        preempt_tokens: args.get_usize("preempt-tokens", d.preempt_tokens)?,
+        queue_capacity: args.get_usize("queue-cap", d.queue_capacity)?,
+        stream_default: args.has("stream") || d.stream_default,
+    })
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -447,8 +445,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 0)? as u64,
         ..Default::default()
     };
-    let exec = build_executor(backend_of(args)?, &cfg.model, cfg.ckpt.as_deref(), cfg.seed)?;
-    run_serve(exec, args, &cfg)
+    let opts = serve_opts(args)?;
+    let backend = backend_of(args)?;
+    let build = || build_executor(backend, &cfg.model, cfg.ckpt.as_deref(), cfg.seed);
+    if !args.has("synthetic") {
+        return server::serve_tcp_opts(build()?, &cfg.addr, cfg.seed, opts);
+    }
+
+    // synthetic mode is the serving bench: the same load with chunked
+    // prefill on vs off, plus a multi-turn pass through the session
+    // cache — all three records land in results/bench_serve.json
+    let requests = args.get_usize("requests", 32)?;
+    let prompt_len = args.get_usize("prompt-len", 32)?;
+    let max_tokens = args.get_usize("max-tokens", 32)?;
+    let gap_ms = args.get_usize("gap-ms", 0)? as u64;
+    let turns = args.get_usize("turns", 2)?;
+
+    let chunked = server::run_synthetic_opts(
+        build()?, requests, prompt_len, max_tokens, gap_ms, cfg.seed, opts.clone(),
+    )?;
+    println!("--- prefill chunked ({}/step) ---\n{}\n", chunked.prefill_chunk, chunked.report());
+    let token_at_a_time = server::run_synthetic_opts(
+        build()?,
+        requests,
+        prompt_len,
+        max_tokens,
+        gap_ms,
+        cfg.seed,
+        ServeOpts { prefill_chunk: 1, ..opts.clone() },
+    )?;
+    println!("--- prefill token-at-a-time ---\n{}\n", token_at_a_time.report());
+    let sessions = server::run_synthetic_sessions(
+        build()?,
+        4,
+        turns.max(1),
+        prompt_len.min(16),
+        max_tokens.min(8),
+        cfg.seed,
+        opts,
+    )?;
+    println!("--- session reuse ({turns} turns x 4 sessions) ---\n{}\n", sessions.report());
+    println!(
+        "prefill chunking: {:.1} -> {:.1} tok/s ({} -> {} engine steps); \
+         session cache: {} hits / {} misses",
+        token_at_a_time.tokens_per_sec(),
+        chunked.tokens_per_sec(),
+        token_at_a_time.engine_steps,
+        chunked.engine_steps,
+        sessions.session_hits,
+        sessions.session_misses,
+    );
+
+    let record = obj(vec![
+        ("prefill_chunked", chunked.to_json()),
+        ("token_at_a_time", token_at_a_time.to_json()),
+        ("session_reuse", sessions.to_json()),
+    ]);
+    let out = PathBuf::from(args.get("out").unwrap_or("results"));
+    let path = experiments::write_results(&out, "bench_serve.json", &format!("{record}\n"))?;
+    println!("wrote {path:?}");
+    Ok(())
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
@@ -476,9 +532,12 @@ fn cmd_client(args: &Args) -> Result<()> {
             let mut writer = stream.try_clone()?;
             let mut reader = BufReader::new(stream);
             for _ in 0..reqs {
+                // one final line per request: opt out explicitly in case
+                // the server runs with --stream as its default
                 let req = obj(vec![
                     ("prompt", prompt.as_str().into()),
                     ("max_tokens", max_tokens.into()),
+                    ("stream", false.into()),
                 ]);
                 let t = Instant::now();
                 writeln!(writer, "{req}")?;

@@ -11,7 +11,9 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::kernels::RecurrentAttention;
-use crate::model::forward::{block_finish, block_qkv, NativeModel};
+use crate::model::forward::{
+    block_finish, block_qkv, fan_out, gather_head, scatter_head, NativeModel,
+};
 use crate::model::nn;
 
 /// Per-sequence decode state: `n_layers · n_heads` kernel states + the
@@ -24,8 +26,10 @@ pub struct DecodeSession {
     pos: usize,
 }
 
-/// A serialized [`DecodeSession`] state (slot preemption / migration).
-#[derive(Debug, Clone)]
+/// A serialized [`DecodeSession`] state (slot preemption / migration /
+/// the serve session cache).  `Default` is the empty snapshot (position
+/// 0, no state) — a placeholder, restorable only into a 0-state session.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SessionSnapshot {
     pos: usize,
     state: Vec<f64>,
@@ -103,42 +107,111 @@ impl DecodeSession {
 
     /// Absorb one token, return next-token logits (vocab,).  Exactly
     /// column `pos` of [`NativeModel::forward`] run on the same prefix
-    /// (pinned ≤ 1e-4 in rust/tests/model_native.rs).
+    /// (pinned ≤ 1e-4 in rust/tests/model_native.rs).  This is the n = 1
+    /// case of [`DecodeSession::absorb_chunk`] — one transcription of
+    /// the per-token math, not two that could drift apart.
     pub fn decode_step(&mut self, model: &NativeModel, token: i32) -> Result<Vec<f32>> {
+        self.absorb_chunk(model, &[token])
+    }
+
+    /// Absorb `tokens` in order and return the next-token logits at the
+    /// final absorbed position — the chunked-prefill primitive.
+    ///
+    /// Bit-identical to calling [`DecodeSession::decode_step`] once per
+    /// token (pinned in `rust/tests/serve_sched.rs`): the block runs the
+    /// same per-row `block_qkv`/`step`/`block_finish` ops in the same
+    /// order, only batched — so interior positions skip the final
+    /// LayerNorm + tied-logits matmul their logits would have wasted,
+    /// and the dense halves run over `n` rows at once instead of one.
+    pub fn absorb_chunk(&mut self, model: &NativeModel, tokens: &[i32]) -> Result<Vec<f32>> {
         let cfg = model.config();
         let (d, v, nh, ff) = (cfg.d_model, cfg.vocab_size, cfg.n_heads, cfg.d_ff);
         let dh = d / nh;
+        let n = tokens.len();
+        ensure!(n > 0, "empty prefill chunk");
         ensure!(nh == self.n_heads, "session/model head mismatch");
-        ensure!((0..v as i32).contains(&token), "token {token} out of vocab {v}");
-        if self.pos >= cfg.max_len {
-            bail!("context exhausted: position {} at max_len {}", self.pos, cfg.max_len);
+        if self.pos + n > cfg.max_len {
+            bail!(
+                "context exhausted: position {} + {n} tokens at max_len {}",
+                self.pos,
+                cfg.max_len
+            );
         }
 
         let embed = model.embed();
-        let e = &embed[token as usize * d..(token as usize + 1) * d];
-        let p = &model.pos_embed()[self.pos * d..(self.pos + 1) * d];
-        let mut x: Vec<f32> = e.iter().zip(p).map(|(&ev, &pv)| ev + pv).collect();
-
-        let mut a = vec![0.0f32; d];
-        for li in 0..cfg.n_layers {
-            let lw = model.layer(li);
-            // same pre/post-attention halves as NativeModel::forward — only
-            // the attention evaluation differs (stateful step vs chunked)
-            let (q, k, vv) = block_qkv(&lw, &x, 1, d);
-            for hd in 0..nh {
-                let st = &mut self.states[li * nh + hd];
-                st.step(
-                    &q[hd * dh..(hd + 1) * dh],
-                    &k[hd * dh..(hd + 1) * dh],
-                    &vv[hd * dh..(hd + 1) * dh],
-                    &mut a[hd * dh..(hd + 1) * dh],
-                );
+        let pose = model.pos_embed();
+        let mut x = vec![0.0f32; n * d];
+        for (i, &t) in tokens.iter().enumerate() {
+            ensure!((0..v as i32).contains(&t), "token {t} out of vocab {v}");
+            let e = &embed[t as usize * d..(t as usize + 1) * d];
+            let p = &pose[(self.pos + i) * d..(self.pos + i + 1) * d];
+            for (o, (&ev, &pv)) in x[i * d..(i + 1) * d].iter_mut().zip(e.iter().zip(p)) {
+                *o = ev + pv;
             }
-            block_finish(&lw, &mut x, &a, 1, d, ff);
         }
 
-        let xf = nn::layernorm_affine(&x, 1, d, model.lnf_g(), model.lnf_b());
-        self.pos += 1;
+        for li in 0..cfg.n_layers {
+            let lw = model.layer(li);
+            let (q, k, vv) = block_qkv(&lw, &x, n, d);
+            let mut a = vec![0.0f32; n * d];
+            let states = &mut self.states[li * nh..(li + 1) * nh];
+            if n == 1 {
+                // the per-token decode hot path: head slices are already
+                // contiguous in the single row — no gather/scatter, no
+                // per-head buffers
+                for (hd, st) in states.iter_mut().enumerate() {
+                    st.step(
+                        &q[hd * dh..(hd + 1) * dh],
+                        &k[hd * dh..(hd + 1) * dh],
+                        &vv[hd * dh..(hd + 1) * dh],
+                        &mut a[hd * dh..(hd + 1) * dh],
+                    );
+                }
+            } else {
+                // stream the block through each head's state: heads are
+                // independent, so they fan out like the prefill head loop
+                // (serial below the same size threshold as the decode
+                // batch)
+                let mut work: Vec<(usize, &mut Box<dyn RecurrentAttention + Send>, Vec<f32>)> =
+                    states
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(hd, st)| (hd, st, vec![0.0f32; n * dh]))
+                        .collect();
+                let run = |(hd, st, out): &mut (
+                    usize,
+                    &mut Box<dyn RecurrentAttention + Send>,
+                    Vec<f32>,
+                )| {
+                    let qh = gather_head(&q, 0, n, d, *hd, dh);
+                    let kh = gather_head(&k, 0, n, d, *hd, dh);
+                    let vh = gather_head(&vv, 0, n, d, *hd, dh);
+                    for i in 0..n {
+                        st.step(
+                            &qh[i * dh..(i + 1) * dh],
+                            &kh[i * dh..(i + 1) * dh],
+                            &vh[i * dh..(i + 1) * dh],
+                            &mut out[i * dh..(i + 1) * dh],
+                        );
+                    }
+                };
+                if nh < 2 || d < 128 {
+                    for w in work.iter_mut() {
+                        run(w);
+                    }
+                } else {
+                    fan_out(&mut work, run);
+                }
+                for (hd, _, out) in &work {
+                    scatter_head(&mut a, out, 0, n, d, *hd, dh);
+                }
+            }
+            block_finish(&lw, &mut x, &a, n, d, ff);
+        }
+        self.pos += n;
+
+        let last = &x[(n - 1) * d..n * d];
+        let xf = nn::layernorm_affine(last, 1, d, model.lnf_g(), model.lnf_b());
         Ok(nn::tied_logits(&xf, 1, d, embed, v))
     }
 }
@@ -178,6 +251,45 @@ mod tests {
         let snap = s.snapshot();
         assert_eq!(snap.pos(), 0);
         assert!(snap.bytes() >= s.state_bytes());
+    }
+
+    #[test]
+    fn absorb_chunk_is_bit_identical_to_token_steps() {
+        // chunked prefill is a scheduling decision, not a numeric one:
+        // any chunking of the prompt leaves state + final logits
+        // bit-equal to the token-at-a-time decode path
+        let m = model("ho2_tiny");
+        let toks: Vec<i32> = (0..23).map(|i| (i * 13 + 7) % 256).collect();
+        let mut by_step = DecodeSession::new(&m).unwrap();
+        let mut last = Vec::new();
+        for &t in &toks {
+            last = by_step.decode_step(&m, t).unwrap();
+        }
+        for chunks in [vec![23], vec![16, 7], vec![1, 21, 1]] {
+            let mut by_chunk = DecodeSession::new(&m).unwrap();
+            let mut got = Vec::new();
+            let mut off = 0;
+            for c in chunks {
+                got = by_chunk.absorb_chunk(&m, &toks[off..off + c]).unwrap();
+                off += c;
+            }
+            assert_eq!(by_chunk.pos(), toks.len());
+            assert_eq!(got, last, "chunked logits drifted from streaming");
+            // the state itself is identical, not just the logits
+            assert_eq!(by_chunk.snapshot(), by_step.snapshot());
+        }
+    }
+
+    #[test]
+    fn absorb_chunk_rejects_overflow_and_empty() {
+        let m = model("ho2_tiny");
+        let mut s = DecodeSession::new(&m).unwrap();
+        assert!(s.absorb_chunk(&m, &[]).is_err());
+        let max = m.config().max_len;
+        let toks = vec![1i32; max];
+        s.absorb_chunk(&m, &toks).unwrap();
+        assert_eq!(s.pos(), max);
+        assert!(s.absorb_chunk(&m, &[1]).is_err(), "context exhausted");
     }
 
     #[test]

@@ -29,11 +29,21 @@ use crate::model::forward::{fan_out, NativeModel};
 use crate::params::ParamStore;
 use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
 
+/// Feed sentinel for [`Executor::decode_step`]: an *allocated* slot whose
+/// feed entry is negative sits the step out (state and position
+/// untouched).  The serve engine uses this for slots that absorbed their
+/// prompt through [`Executor::absorb_slot`] this step and are waiting to
+/// sample.  Native-backend only — the lowered decode artifact always
+/// steps every slot, so [`ArtifactExecutor`] rejects it.
+pub const SKIP: i32 = -1;
+
 /// A model execution engine with slot-based O(1)-state decoding.
 ///
 /// Slots are the unit of continuous batching: every [`Executor::decode_step`]
 /// consumes one token for *every allocated* slot (callers pad the feed
-/// vector with `PAD` for free slots) and advances their positions.
+/// vector with `PAD` for free slots, or [`SKIP`] to leave an allocated
+/// slot untouched on backends that support it) and advances their
+/// positions.
 pub trait Executor {
     /// The model being executed (config, specs, parameter counts).
     fn model(&self) -> &ModelEntry;
@@ -72,6 +82,27 @@ pub trait Executor {
     /// Decode-state footprint per slot in bytes — the paper's O(1) vs
     /// O(n) serving comparison in one number.
     fn state_bytes_per_slot(&self) -> usize;
+
+    /// Whether [`Executor::absorb_slot`] works (chunked prefill).
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Whether [`Executor::snapshot_slot`] / [`Executor::restore_slot`]
+    /// work — the gate for preemptive scheduling and the session cache.
+    fn supports_snapshot(&self) -> bool {
+        false
+    }
+
+    /// Absorb `tokens` (in order) into one slot's state in a single call
+    /// and return the next-token logits after the last one — the chunked
+    /// prefill hook.  Equivalent to feeding the tokens through
+    /// [`Executor::decode_step`] one at a time (bit-identical on the
+    /// native backend), minus the per-token logits of interior positions.
+    fn absorb_slot(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        let _ = (slot, tokens);
+        bail!("multi-token absorb is only supported on the native backend")
+    }
 
     /// Serialize a slot's decode state for preemption.  Only the native
     /// backend supports this today.
@@ -181,7 +212,8 @@ impl Executor for NativeExecutor {
         let v = self.model.config().vocab_size;
         let model = &self.model;
         let mut rows: Vec<Option<Result<Vec<f32>>>> = feed.iter().map(|_| None).collect();
-        // the parallel batch loop: active (token, session, result) triples,
+        // the parallel batch loop: active (token, session, result) triples
+        // (negative feed = SKIP: leave that slot's state untouched),
         // chunked over at most `available_parallelism` scoped threads —
         // sessions are disjoint &mut, the model is a shared &.
         let mut work: Vec<(i32, &mut DecodeSession, &mut Option<Result<Vec<f32>>>)> = self
@@ -189,6 +221,7 @@ impl Executor for NativeExecutor {
             .iter_mut()
             .zip(rows.iter_mut())
             .enumerate()
+            .filter(|(slot, _)| feed[*slot] >= 0)
             .filter_map(|(slot, (sess, row))| sess.as_mut().map(|s| (feed[slot], s, row)))
             .collect();
         // sub-128-dim models do so little per token that a thread spawn
@@ -213,6 +246,22 @@ impl Executor for NativeExecutor {
 
     fn state_bytes_per_slot(&self) -> usize {
         self.state_elems * std::mem::size_of::<f64>()
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        self.supports_decode()
+    }
+
+    fn supports_snapshot(&self) -> bool {
+        self.supports_decode()
+    }
+
+    fn absorb_slot(&mut self, slot: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        let model = &self.model;
+        match self.sessions.get_mut(slot).and_then(|s| s.as_mut()) {
+            Some(s) => s.absorb_chunk(model, tokens),
+            None => bail!("slot {slot} is not active"),
+        }
     }
 
     fn snapshot_slot(&self, slot: usize) -> Result<SessionSnapshot> {
@@ -342,6 +391,15 @@ impl Executor for ArtifactExecutor {
     }
 
     fn decode_step(&mut self, feed: &[i32]) -> Result<Tensor> {
+        // the lowered artifact steps every slot unconditionally — it has
+        // no way to honor the SKIP sentinel the native engine uses
+        for (slot, (is_active, tok)) in self.active.iter().zip(feed).enumerate() {
+            ensure!(
+                !*is_active || *tok >= 0,
+                "artifact decode cannot skip active slot {slot} \
+                 (chunked prefill / preemption are native-only)"
+            );
+        }
         let exe = self
             .decode_exe
             .as_ref()

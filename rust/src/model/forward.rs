@@ -269,8 +269,10 @@ pub(crate) fn layer_view(params: &ParamStore, li: usize) -> LayerView<'_> {
 }
 
 /// ln1 → q/k/v projections for `rows` rows of `x` — the pre-attention
-/// half of a block, shared verbatim by the chunked prefill and the
-/// per-token decode so the two paths cannot drift apart.
+/// half of a block, shared verbatim by the full-sequence forward, the
+/// serve engine's chunked prompt absorption
+/// ([`crate::model::DecodeSession::absorb_chunk`]) and the per-token
+/// decode, so the paths cannot drift apart.
 pub(crate) fn block_qkv(
     lw: &LayerView<'_>,
     x: &[f32],

@@ -28,7 +28,13 @@
 //! * preemption — [`Executor::snapshot_slot`] /
 //!   [`Executor::restore_slot`] serialize one slot's state
 //!   ([`SessionSnapshot`]) so a scheduler can evict and resume sequences
-//!   (native backend only).
+//!   (native backend only; probe with [`Executor::supports_snapshot`]).
+//!   The [`crate::serve`] scheduler builds preemptive fair scheduling
+//!   and the multi-turn session cache on exactly this surface.
+//! * chunked prefill — [`Executor::absorb_slot`] folds a whole block of
+//!   prompt tokens into one slot's state per call (bit-identical to the
+//!   token loop), so a P-token prompt costs ⌈P/chunk⌉ engine steps
+//!   instead of P (native backend only).
 //!
 //! Two implementations ship today: [`NativeExecutor`] (no artifacts, no
 //! PJRT, no Python — `holt serve --backend native` runs anywhere the
@@ -71,6 +77,6 @@ pub mod nn;
 pub mod presets;
 
 pub use self::decode::{DecodeSession, SessionSnapshot};
-pub use self::executor::{ArtifactExecutor, Executor, NativeExecutor};
+pub use self::executor::{ArtifactExecutor, Executor, NativeExecutor, SKIP};
 pub use self::forward::{LayerView, NativeModel};
 pub use self::presets::{native_model_entry, ho_feature_dim, ATTN_KINDS, PRESET_NAMES};

@@ -1,0 +1,165 @@
+//! `serve/` — the scheduling subsystem behind the continuous-batching
+//! engine.
+//!
+//! The paper's serving claim (via Katharopoulos et al., "Transformers are
+//! RNNs") is that linear/higher-order attention makes a decoding sequence
+//! an RNN with **constant per-sequence state** — a few KiB per slot
+//! instead of a KV cache that grows with context.  That changes which
+//! serving tricks are cheap:
+//!
+//! * **Preemption is ~free.**  Snapshotting a sequence costs
+//!   `state_bytes_per_slot` (`Executor::snapshot_slot`), so a scheduler
+//!   can park a long-running request mid-generation and hand its slot to
+//!   a waiter, then resume the parked work later with zero recompute.
+//!   With a KV cache this costs O(context) memory traffic per preemption.
+//! * **Multi-turn resumption is ~free.**  Retaining a finished request's
+//!   final state in a session cache costs a few KiB; a follow-up that
+//!   extends the conversation restores it and skips re-prefilling the
+//!   whole history.
+//! * **Prefill batches through the same recurrence.**  A prompt can be
+//!   absorbed in chunks (64 tokens per engine step instead of one),
+//!   cutting prefill engine-steps ~64× — `Executor::absorb_slot`.
+//!
+//! The pieces, each its own module:
+//!
+//! * [`scheduler`] — policy-driven admission (FIFO / priority /
+//!   fair-share by client id), queue bookkeeping, and the park/resume
+//!   state for preempted slots.
+//! * [`prefill`] — chunked prompt absorption over
+//!   `Executor::absorb_slot`.
+//! * [`sessions`] — a bounded LRU cache of finished requests' final
+//!   [`SessionSnapshot`]s keyed by `session_id`.
+//! * [`stream`] — the wire events (`ServeEvent`): per-token deltas for
+//!   `"stream": true` requests plus the final response line, and their
+//!   JSON framing.
+//!
+//! The [`Engine`](crate::coordinator::server::Engine) in
+//! `coordinator/server.rs` owns one of each and keeps only the
+//! token-granularity step loop.
+
+pub mod prefill;
+pub mod scheduler;
+pub mod sessions;
+pub mod stream;
+
+pub use self::prefill::{Prefiller, DEFAULT_PREFILL_CHUNK};
+pub use self::scheduler::{ParkedWork, Policy, QueueEntry, Scheduler};
+pub use self::sessions::{SessionCache, SessionEntry};
+pub use self::stream::ServeEvent;
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// One inbound generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt_ids: Vec<i32>,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    /// Larger = served sooner under [`Policy::Priority`].
+    pub priority: i64,
+    /// Fair-share accounting key under [`Policy::FairShare`] (e.g. a user
+    /// or API-key id).  Empty string = the anonymous client.
+    pub client: String,
+    /// Soft wall-clock budget (ms since admission): a running request past
+    /// its deadline becomes preemptible whenever others wait.
+    pub deadline_ms: Option<u64>,
+    /// Session key for the O(1)-state session cache: the final decode
+    /// state is retained at completion, and a follow-up with the same id
+    /// whose prompt extends the absorbed history skips re-prefilling it.
+    pub session_id: Option<String>,
+    /// Emit one [`ServeEvent::Delta`] per generated token before the
+    /// final [`ServeEvent::Done`].
+    pub stream: bool,
+    pub enqueued: Instant,
+    pub respond: Sender<ServeEvent>,
+}
+
+impl Request {
+    /// A request with default sampling and scheduling parameters.
+    pub fn new(id: u64, prompt_ids: Vec<i32>, respond: Sender<ServeEvent>) -> Request {
+        Request {
+            id,
+            prompt_ids,
+            max_tokens: 64,
+            temperature: 0.8,
+            top_k: 40,
+            priority: 0,
+            client: String::new(),
+            deadline_ms: None,
+            session_id: None,
+            stream: false,
+            enqueued: Instant::now(),
+            respond,
+        }
+    }
+}
+
+/// The engine's answer.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub token_ids: Vec<i32>,
+    pub text: String,
+    /// queue + prefill time until the first generated token (-1 when the
+    /// request was rejected — see `error`)
+    pub ttft_s: f64,
+    pub total_s: f64,
+    /// `Some` iff the request failed (oversized prompt, malformed JSON);
+    /// serialized as an `"error"` field on the wire so failures are
+    /// distinguishable from successes.
+    pub error: Option<String>,
+}
+
+impl Response {
+    /// An error response (rejection / parse failure) for request `id`.
+    pub fn error(id: u64, message: String) -> Response {
+        Response {
+            id,
+            token_ids: Vec::new(),
+            text: String::new(),
+            ttft_s: -1.0,
+            total_s: -1.0,
+            error: Some(message),
+        }
+    }
+}
+
+/// Engine scheduling knobs (`holt serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Admission policy over the waiting queue.
+    pub policy: Policy,
+    /// Prompt tokens absorbed per engine step during prefill; ≥ 2 enables
+    /// chunked prefill where the executor supports it (native backend),
+    /// 0/1 keeps the token-at-a-time path.
+    pub prefill_chunk: usize,
+    /// Session-cache capacity (finished-request snapshots, LRU-evicted);
+    /// 0 disables the cache.
+    pub session_capacity: usize,
+    /// Decode-token quantum after which a running request becomes
+    /// preemptible when the queue has waiters; 0 disables the quantum
+    /// (per-request `deadline_ms` budgets still trigger preemption).
+    pub preempt_tokens: usize,
+    /// Waiting-queue bound: arrivals beyond this many waiters are
+    /// rejected with an error response (admission-control backpressure —
+    /// pipelined connections no longer block per request, so the queue
+    /// itself must be bounded).  Parked preempted work is exempt.
+    pub queue_capacity: usize,
+    /// Stream responses (per-token deltas) for requests that don't say.
+    pub stream_default: bool,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            policy: Policy::Fifo,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            session_capacity: 16,
+            preempt_tokens: 0,
+            queue_capacity: 1024,
+            stream_default: false,
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Chunked prefill: absorb prompts through the recurrence in blocks.
+//!
+//! The old engine streamed one prompt token per engine step, so a P-token
+//! prompt cost P engine steps before the first generated token (terrible
+//! TTFT under load).  The recurrence doesn't care: absorbing k₁..kₚ is
+//! the same state no matter how the sequence is sliced, so
+//! [`Executor::absorb_slot`] folds a whole block of prompt tokens into a
+//! slot's state in one call — `⌈P/chunk⌉` engine steps instead of `P`,
+//! and the block runs through the same batched `block_qkv`/`block_finish`
+//! halves as the full-sequence forward (better cache behavior than
+//! one-row matmuls, and the per-token logits of interior prompt positions
+//! are never computed at all).
+//!
+//! Token-for-token the absorbed state is bit-identical to the
+//! token-at-a-time path (pinned in `rust/tests/serve_sched.rs`), so
+//! chunking is purely a scheduling decision.
+
+use anyhow::Result;
+
+use crate::model::Executor;
+
+/// Default prompt tokens absorbed per engine step — shared by
+/// `ServeOpts::default()`, the `--prefill-chunk` flag default and the
+/// generation path, so the three cannot drift apart.
+pub const DEFAULT_PREFILL_CHUNK: usize = 64;
+
+/// Chunked prompt absorption over an [`Executor`].
+#[derive(Debug, Clone, Copy)]
+pub struct Prefiller {
+    chunk: usize,
+}
+
+impl Prefiller {
+    /// `chunk` prompt tokens per engine step; 0/1 means token-at-a-time
+    /// (the engine then routes prompts through the batched decode step).
+    pub fn new(chunk: usize) -> Prefiller {
+        Prefiller { chunk }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Whether this configuration does chunked absorption at all.
+    pub fn chunked(&self) -> bool {
+        self.chunk >= 2
+    }
+
+    /// Engine steps needed to absorb a `p`-token prompt.
+    pub fn steps_for(&self, p: usize) -> usize {
+        if self.chunked() {
+            p.div_ceil(self.chunk)
+        } else {
+            p
+        }
+    }
+
+    /// Absorb the next block of `prompt` into `slot`, advancing `*pos`
+    /// and (when a recorder is given) appending the fed tokens to it —
+    /// the serve engine tracks absorbed tokens for its session cache,
+    /// the generation path doesn't need them.  Returns `Some(logits)` —
+    /// the next-token logits at the final prompt position — once the
+    /// prompt is fully absorbed, `None` while blocks remain.
+    pub fn absorb_block(
+        &self,
+        exec: &mut (dyn Executor + '_),
+        slot: usize,
+        prompt: &[i32],
+        pos: &mut usize,
+        absorbed: Option<&mut Vec<i32>>,
+    ) -> Result<Option<Vec<f32>>> {
+        let take = (prompt.len() - *pos).min(self.chunk.max(1));
+        let block = &prompt[*pos..*pos + take];
+        let logits = exec.absorb_slot(slot, block)?;
+        if let Some(absorbed) = absorbed {
+            absorbed.extend_from_slice(block);
+        }
+        *pos += take;
+        Ok(if *pos == prompt.len() { Some(logits) } else { None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_counts() {
+        let p = Prefiller::new(64);
+        assert!(p.chunked());
+        assert_eq!(p.steps_for(1), 1);
+        assert_eq!(p.steps_for(64), 1);
+        assert_eq!(p.steps_for(65), 2);
+        assert_eq!(p.steps_for(256), 4);
+        let t = Prefiller::new(1);
+        assert!(!t.chunked());
+        assert_eq!(t.steps_for(256), 256);
+        assert!(!Prefiller::new(0).chunked());
+    }
+}

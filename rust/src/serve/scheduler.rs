@@ -1,0 +1,381 @@
+//! Admission/preemption scheduling policy over the waiting queue.
+//!
+//! The queue holds [`QueueEntry`]s in arrival order (a `VecDeque`, fixing
+//! the LIFO starvation bug of the old `Vec::push`/`Vec::pop` pending
+//! list); [`Scheduler::pop_next`] selects which waiter gets the next free
+//! slot according to the configured [`Policy`]:
+//!
+//! * [`Policy::Fifo`] — strict arrival order.
+//! * [`Policy::Priority`] — highest [`Request::priority`] first, arrival
+//!   order within a priority level.
+//! * [`Policy::FairShare`] — least-served client id first (decode tokens
+//!   charged via [`Scheduler::charge`]), arrival order within a client.
+//!
+//! Preempted slots are *parked*: the engine snapshots the slot's O(1)
+//! state (`Executor::snapshot_slot` — a few KiB, the paper-specific win;
+//! a KV-cache model would pay O(context) per preemption) and re-queues
+//! the request at the tail with its [`ParkedWork`] attached.  When a
+//! parked entry is popped again, the engine restores the snapshot into a
+//! fresh slot and decoding continues bit-exactly where it left off — no
+//! prefix replay.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::model::SessionSnapshot;
+use crate::serve::Request;
+
+/// Waiting-queue admission policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fifo,
+    Priority,
+    FairShare,
+}
+
+impl Policy {
+    /// Parse a `--policy` flag value.
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s {
+            "fifo" => Ok(Policy::Fifo),
+            "priority" => Ok(Policy::Priority),
+            "fair" | "fair-share" => Ok(Policy::FairShare),
+            _ => bail!("--policy must be 'fifo', 'priority' or 'fair', got '{s}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Priority => "priority",
+            Policy::FairShare => "fair",
+        }
+    }
+}
+
+/// Mid-generation state of a preempted request: the slot's serialized
+/// O(1) decode state plus the sampling-loop bookkeeping the engine needs
+/// to resume exactly where it stopped.
+pub struct ParkedWork {
+    /// The slot's full decode state at preemption.
+    pub snapshot: SessionSnapshot,
+    /// Every token absorbed into the state so far (prompt + generated
+    /// tokens already fed back) — retained for the session cache.
+    pub absorbed: Vec<i32>,
+    pub generated: Vec<i32>,
+    /// Last sampled token, not yet absorbed — fed on the first resumed
+    /// decode step.
+    pub last_token: i32,
+    pub first_token_at: Option<Instant>,
+    /// Undelivered streaming bytes (an incomplete UTF-8 sequence held by
+    /// [`crate::serve::stream::utf8_delta`] at preemption time).
+    pub utf8_buf: Vec<u8>,
+}
+
+/// One waiter: a request, its arrival sequence number, and (for parked
+/// preempted work) the state to resume from.
+pub struct QueueEntry {
+    pub req: Request,
+    pub seq: u64,
+    pub resume: Option<ParkedWork>,
+}
+
+/// Fair-share accounting cap: distinct client ids tracked at once.  The
+/// `client` field is wire-controlled, so the map must be bounded like
+/// every other serve/ structure; when full, the least-served id is
+/// forgotten (it simply counts as new again).
+const MAX_TRACKED_CLIENTS: usize = 1024;
+
+/// The policy-driven waiting queue.
+pub struct Scheduler {
+    policy: Policy,
+    queue: VecDeque<QueueEntry>,
+    next_seq: u64,
+    /// queued entries that are fresh arrivals (resume is None) — kept as
+    /// a counter so the queue-capacity admission check is O(1), not a
+    /// scan per arrival
+    fresh: usize,
+    /// decode tokens served per client id (fair-share accounting),
+    /// bounded by [`MAX_TRACKED_CLIENTS`]
+    served: HashMap<String, u64>,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Scheduler {
+        Scheduler {
+            policy,
+            queue: VecDeque::new(),
+            next_seq: 0,
+            fresh: 0,
+            served: HashMap::new(),
+        }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Queue a fresh arrival (tail — FIFO arrival order).
+    pub fn enqueue(&mut self, req: Request) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.fresh += 1;
+        self.queue.push_back(QueueEntry { req, seq, resume: None });
+    }
+
+    /// Park preempted work at the tail with a *new* sequence number, so
+    /// under FIFO the waiters that triggered the preemption run first.
+    /// Returns that sequence number — the engine excludes it from the
+    /// admission that follows, so a non-FIFO policy cannot hand the freed
+    /// slot straight back to the evictee (a wasted snapshot/restore).
+    pub fn park(&mut self, req: Request, work: ParkedWork) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(QueueEntry { req, seq, resume: Some(work) });
+        seq
+    }
+
+    /// Put an entry back at the head (slot allocation raced and failed);
+    /// it keeps its original sequence number.
+    pub fn requeue_front(&mut self, entry: QueueEntry) {
+        if entry.resume.is_none() {
+            self.fresh += 1;
+        }
+        self.queue.push_front(entry);
+    }
+
+    pub fn has_waiters(&self) -> bool {
+        !self.queue.is_empty()
+    }
+
+    /// Waiters that are fresh arrivals (not parked preempted work) —
+    /// the population the queue-capacity bound applies to: parked
+    /// entries already passed admission once and must never be refused.
+    /// O(1): maintained as a counter alongside the queue.
+    pub fn fresh_waiters(&self) -> usize {
+        self.fresh
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Charge `tokens` decode tokens to `client` (fair-share accounting;
+    /// cheap no-op bookkeeping under the other policies).
+    pub fn charge(&mut self, client: &str, tokens: u64) {
+        if self.policy != Policy::FairShare {
+            return;
+        }
+        // fast path: no per-token String allocation once the id is known
+        if let Some(n) = self.served.get_mut(client) {
+            *n += tokens;
+            return;
+        }
+        if self.served.len() >= MAX_TRACKED_CLIENTS {
+            // forget the least-served id so a flood of wire-controlled
+            // unique client names cannot grow the map without bound
+            if let Some(min) = self
+                .served
+                .iter()
+                .min_by_key(|(_, &n)| n)
+                .map(|(k, _)| k.clone())
+            {
+                self.served.remove(&min);
+            }
+        }
+        *self.served.entry(client.to_string()).or_insert(0) += tokens;
+    }
+
+    /// Tokens served to `client` so far.
+    pub fn served(&self, client: &str) -> u64 {
+        self.served.get(client).copied().unwrap_or(0)
+    }
+
+    /// Pop the next entry to admit, per policy.  O(queue) for the
+    /// non-FIFO policies — queues are short relative to decode work.
+    pub fn pop_next(&mut self) -> Option<QueueEntry> {
+        self.pop_next_excluding(None)
+    }
+
+    /// [`Scheduler::pop_next`] skipping the entry with sequence number
+    /// `exclude` (the just-parked evictee during a preemption sweep).
+    /// Returns `None` when every remaining entry is excluded.
+    pub fn pop_next_excluding(&mut self, exclude: Option<u64>) -> Option<QueueEntry> {
+        let mut candidates = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| Some(e.seq) != exclude);
+        let idx = match self.policy {
+            Policy::Fifo => candidates.next()?.0,
+            Policy::Priority => {
+                candidates.max_by_key(|(_, e)| (e.req.priority, std::cmp::Reverse(e.seq)))?.0
+            }
+            Policy::FairShare => {
+                let served = &self.served;
+                candidates
+                    .min_by_key(|(_, e)| {
+                        (served.get(&e.req.client).copied().unwrap_or(0), e.seq)
+                    })?
+                    .0
+            }
+        };
+        let entry = self.queue.remove(idx);
+        if let Some(e) = &entry {
+            if e.resume.is_none() {
+                self.fresh -= 1;
+            }
+        }
+        entry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, priority: i64, client: &str) -> Request {
+        let (tx, _rx) = channel();
+        // the receiver is dropped — scheduler tests never deliver events
+        Request {
+            priority,
+            client: client.to_string(),
+            ..Request::new(id, vec![257], tx)
+        }
+    }
+
+    fn pop_ids(s: &mut Scheduler) -> Vec<u64> {
+        let mut ids = Vec::new();
+        while let Some(e) = s.pop_next() {
+            ids.push(e.req.id);
+        }
+        ids
+    }
+
+    #[test]
+    fn fifo_pops_in_arrival_order() {
+        let mut s = Scheduler::new(Policy::Fifo);
+        for id in [1, 2, 3, 4] {
+            s.enqueue(req(id, 0, ""));
+        }
+        assert_eq!(pop_ids(&mut s), vec![1, 2, 3, 4]);
+        assert!(!s.has_waiters());
+    }
+
+    #[test]
+    fn priority_pops_highest_first_fifo_within_level() {
+        let mut s = Scheduler::new(Policy::Priority);
+        s.enqueue(req(1, 0, ""));
+        s.enqueue(req(2, 5, ""));
+        s.enqueue(req(3, 5, ""));
+        s.enqueue(req(4, 1, ""));
+        assert_eq!(pop_ids(&mut s), vec![2, 3, 4, 1]);
+    }
+
+    #[test]
+    fn fair_share_prefers_least_served_client() {
+        let mut s = Scheduler::new(Policy::FairShare);
+        s.charge("a", 100);
+        s.enqueue(req(1, 0, "a"));
+        s.enqueue(req(2, 0, "b"));
+        s.enqueue(req(3, 0, "a"));
+        assert_eq!(s.served("a"), 100);
+        assert_eq!(s.served("b"), 0);
+        // b has been served least; a's two requests keep arrival order
+        assert_eq!(pop_ids(&mut s), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn charge_is_fair_share_only() {
+        let mut s = Scheduler::new(Policy::Fifo);
+        s.charge("a", 7);
+        assert_eq!(s.served("a"), 0, "non-fair policies skip the bookkeeping");
+    }
+
+    #[test]
+    fn fair_share_accounting_is_bounded() {
+        // the client id comes off the wire — the map must not grow
+        // without bound under a flood of unique names
+        let mut s = Scheduler::new(Policy::FairShare);
+        for i in 0..(MAX_TRACKED_CLIENTS + 50) {
+            s.charge(&format!("client{i}"), (i + 1) as u64);
+        }
+        let tracked = (0..MAX_TRACKED_CLIENTS + 50)
+            .filter(|&i| s.served(&format!("client{i}")) > 0)
+            .count();
+        assert!(tracked <= MAX_TRACKED_CLIENTS, "tracked {tracked} client ids");
+        // the heaviest client is still remembered
+        let last = format!("client{}", MAX_TRACKED_CLIENTS + 49);
+        assert_eq!(s.served(&last), (MAX_TRACKED_CLIENTS + 50) as u64);
+    }
+
+    fn parked(tok: i32) -> ParkedWork {
+        ParkedWork {
+            snapshot: crate::model::SessionSnapshot::default(),
+            absorbed: vec![257, tok],
+            generated: vec![tok],
+            last_token: tok,
+            first_token_at: None,
+            utf8_buf: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn parked_work_goes_to_the_tail_under_fifo() {
+        let mut s = Scheduler::new(Policy::Fifo);
+        s.enqueue(req(1, 0, ""));
+        s.park(req(2, 0, ""), parked(65));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.fresh_waiters(), 1, "parked work is not a fresh waiter");
+        let first = s.pop_next().unwrap();
+        assert_eq!(s.fresh_waiters(), 0);
+        assert_eq!(first.req.id, 1, "the waiter that triggered preemption runs first");
+        assert!(first.resume.is_none());
+        let second = s.pop_next().unwrap();
+        assert_eq!(second.req.id, 2);
+        assert!(second.resume.is_some(), "parked entries carry their snapshot");
+    }
+
+    #[test]
+    fn excluding_the_evictee_prevents_self_readmission() {
+        // under priority, a parked high-priority evictee would be the
+        // policy's next pick — the exclusion hands the slot to a real
+        // waiter instead, and the evictee is eligible again afterwards
+        let mut s = Scheduler::new(Policy::Priority);
+        s.enqueue(req(1, 0, ""));
+        let evictee_seq = s.park(req(2, 9, ""), parked(65));
+        let admitted = s.pop_next_excluding(Some(evictee_seq)).unwrap();
+        assert_eq!(admitted.req.id, 1, "the waiter wins the freed slot");
+        let next = s.pop_next_excluding(Some(evictee_seq));
+        assert!(next.is_none(), "only the excluded evictee remains");
+        assert!(s.has_waiters());
+        assert_eq!(s.pop_next().unwrap().req.id, 2, "evictee eligible without exclusion");
+    }
+
+    #[test]
+    fn requeue_front_restores_arrival_position() {
+        let mut s = Scheduler::new(Policy::Fifo);
+        s.enqueue(req(1, 0, ""));
+        s.enqueue(req(2, 0, ""));
+        let e = s.pop_next().unwrap();
+        s.requeue_front(e);
+        assert_eq!(pop_ids(&mut s), vec![1, 2]);
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!(Policy::parse("fifo").unwrap(), Policy::Fifo);
+        assert_eq!(Policy::parse("priority").unwrap(), Policy::Priority);
+        assert_eq!(Policy::parse("fair").unwrap(), Policy::FairShare);
+        assert_eq!(Policy::parse("fair-share").unwrap(), Policy::FairShare);
+        assert!(Policy::parse("lifo").is_err());
+        assert_eq!(Policy::FairShare.name(), "fair");
+    }
+}

@@ -1,0 +1,148 @@
+//! Bounded LRU session cache over O(1)-state snapshots.
+//!
+//! When a request carries a `session_id`, the engine retains its final
+//! decode state ([`SessionSnapshot`], a few KiB — constant in history
+//! length, which is what makes caching *every* finished conversation
+//! affordable) together with the exact token sequence that state has
+//! absorbed.  A follow-up request on the same session whose prompt
+//! extends that history (client sends the full conversation, as chat
+//! protocols do) restores the snapshot and prefills only the new suffix
+//! — the whole shared prefix is never recomputed.
+//!
+//! The restored path is bit-identical to a from-scratch full-history
+//! prefill (pinned ≤ 1e-4 in `rust/tests/serve_sched.rs`): the snapshot
+//! is an exact serialization of the recurrent state, not an
+//! approximation.
+//!
+//! The cache is strictly bounded: `capacity` entries, least-recently-used
+//! eviction (lookup hits and inserts both refresh recency).
+
+use std::collections::HashMap;
+
+use crate::model::SessionSnapshot;
+
+/// A finished request's resumable state.
+#[derive(Debug, Clone)]
+pub struct SessionEntry {
+    /// Final decode state (all (layer, head) kernel states + position).
+    pub snapshot: SessionSnapshot,
+    /// Exactly the tokens that state has absorbed, in order — the
+    /// reusable-prefix check compares a follow-up prompt against this.
+    pub tokens: Vec<i32>,
+}
+
+/// `session_id` → [`SessionEntry`], LRU-bounded.
+pub struct SessionCache {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<String, (u64, SessionEntry)>,
+}
+
+impl SessionCache {
+    /// `capacity` = 0 disables the cache (every lookup misses, inserts
+    /// are dropped).
+    pub fn new(capacity: usize) -> SessionCache {
+        SessionCache { capacity, tick: 0, map: HashMap::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// A usable hit: the session exists *and* its absorbed tokens are a
+    /// strict prefix of `prompt` (strict — at least one new token must be
+    /// absorbed to produce next-token logits).  Hits refresh LRU recency.
+    pub fn lookup(&mut self, id: &str, prompt: &[i32]) -> Option<&SessionEntry> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (last_use, entry) = self.map.get_mut(id)?;
+        if entry.tokens.len() < prompt.len() && prompt[..entry.tokens.len()] == entry.tokens[..] {
+            *last_use = tick;
+            Some(&*entry)
+        } else {
+            None
+        }
+    }
+
+    /// Insert/replace the session's entry, evicting the least recently
+    /// used entry when over capacity.
+    pub fn insert(&mut self, id: String, entry: SessionEntry) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        self.map.insert(id, (self.tick, entry));
+        while self.map.len() > self.capacity {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+                .expect("map is non-empty");
+            self.map.remove(&oldest);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(tokens: Vec<i32>) -> SessionEntry {
+        SessionEntry { snapshot: SessionSnapshot::default(), tokens }
+    }
+
+    #[test]
+    fn hit_requires_strict_prefix() {
+        let mut c = SessionCache::new(4);
+        c.insert("s".into(), entry(vec![257, 1, 2]));
+        assert!(c.lookup("s", &[257, 1, 2, 3]).is_some(), "strict prefix hits");
+        assert!(c.lookup("s", &[257, 1, 2]).is_none(), "identical prompt has no new token");
+        assert!(c.lookup("s", &[257, 9, 2, 3]).is_none(), "diverged history misses");
+        assert!(c.lookup("s", &[257]).is_none(), "shorter prompt misses");
+        assert!(c.lookup("t", &[257, 1, 2, 3]).is_none(), "unknown id misses");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = SessionCache::new(2);
+        c.insert("a".into(), entry(vec![1]));
+        c.insert("b".into(), entry(vec![2]));
+        // touch a so b becomes the LRU entry
+        assert!(c.lookup("a", &[1, 9]).is_some());
+        c.insert("c".into(), entry(vec![3]));
+        assert_eq!(c.len(), 2);
+        assert!(c.lookup("b", &[2, 9]).is_none(), "b was evicted");
+        assert!(c.lookup("a", &[1, 9]).is_some());
+        assert!(c.lookup("c", &[3, 9]).is_some());
+    }
+
+    #[test]
+    fn reinsert_replaces_and_refreshes() {
+        let mut c = SessionCache::new(2);
+        c.insert("a".into(), entry(vec![1]));
+        c.insert("b".into(), entry(vec![2]));
+        c.insert("a".into(), entry(vec![1, 5]));
+        assert_eq!(c.len(), 2);
+        let hit = c.lookup("a", &[1, 5, 9]).unwrap();
+        assert_eq!(hit.tokens, vec![1, 5]);
+        c.insert("d".into(), entry(vec![4]));
+        assert!(c.lookup("b", &[2, 9]).is_none(), "b was the LRU entry");
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = SessionCache::new(0);
+        c.insert("a".into(), entry(vec![1]));
+        assert!(c.is_empty());
+        assert!(c.lookup("a", &[1, 2]).is_none());
+    }
+}

@@ -1,0 +1,185 @@
+//! Wire events: streaming deltas + the final response line.
+//!
+//! Every request's `respond` channel carries [`ServeEvent`]s.  A
+//! non-streaming request receives exactly one `Done`; a `"stream": true`
+//! request receives one `Delta` per generated token first.  On the TCP
+//! front end the connection's writer thread serializes events with
+//! [`event_json`]:
+//!
+//! ```text
+//! {"id":7,"index":0,"token":104,"delta":"h"}      ← per token (stream)
+//! {"id":7,"text":"hi","n_tokens":2,"ttft_s":..,"total_s":..}   ← final
+//! {"id":8,"text":"","n_tokens":0,"ttft_s":-1,"total_s":-1,
+//!  "error":"prompt (200) + max_tokens (64) exceeds model max_len (128)"}
+//! ```
+//!
+//! The `error` field only appears on failures, so clients can
+//! distinguish a rejected request from an empty completion (the old
+//! protocol's `ttft_s: -1` sentinel is kept for compatibility).
+
+use crate::json::{obj, Json};
+use crate::serve::Response;
+
+/// One engine → client event.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// One generated token of a streaming request.
+    Delta { id: u64, index: usize, token_id: i32, text: String },
+    /// The request finished (or failed — see [`Response::error`]).
+    Done(Response),
+}
+
+/// Drain the longest cleanly-decodable UTF-8 prefix of `buf` (a
+/// per-slot byte accumulator) as a String.  Byte-level models emit
+/// multi-byte characters one byte per token; decoding each byte alone
+/// would stream U+FFFD garbage that never matches the final text, so
+/// the engine buffers bytes here and a delta's `text` stays empty until
+/// its character completes.  A genuinely invalid byte is flushed lossily
+/// rather than held forever; an incomplete trailing sequence is kept for
+/// the next token (concatenated deltas are always a prefix of the final
+/// `text`, which remains authoritative).
+pub fn utf8_delta(buf: &mut Vec<u8>) -> String {
+    let mut out = String::new();
+    loop {
+        match std::str::from_utf8(buf) {
+            Ok(s) => {
+                out.push_str(s);
+                buf.clear();
+                return out;
+            }
+            Err(e) => {
+                let valid = e.valid_up_to();
+                out.push_str(std::str::from_utf8(&buf[..valid]).expect("validated prefix"));
+                match e.error_len() {
+                    // incomplete trailing sequence: hold it for the next
+                    // token (it may still complete into a character)
+                    None => {
+                        buf.drain(..valid);
+                        return out;
+                    }
+                    // invalid sequence mid-buffer: replace exactly that
+                    // maximal subpart — the same segmentation
+                    // from_utf8_lossy uses for the final text — and keep
+                    // scanning (a fresh lead byte after it stays held)
+                    Some(bad) => {
+                        out.push('\u{fffd}');
+                        buf.drain(..valid + bad);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The final JSON line for a response.
+pub fn response_json(resp: &Response) -> Json {
+    let mut fields = vec![
+        ("id", (resp.id as i64).into()),
+        ("text", resp.text.as_str().into()),
+        ("n_tokens", resp.token_ids.len().into()),
+        ("ttft_s", resp.ttft_s.into()),
+        ("total_s", resp.total_s.into()),
+    ];
+    if let Some(e) = &resp.error {
+        fields.push(("error", e.as_str().into()));
+    }
+    obj(fields)
+}
+
+/// One wire line per event.
+pub fn event_json(ev: &ServeEvent) -> Json {
+    match ev {
+        ServeEvent::Delta { id, index, token_id, text } => obj(vec![
+            ("id", (*id as i64).into()),
+            ("index", (*index).into()),
+            ("token", (*token_id as i64).into()),
+            ("delta", text.as_str().into()),
+        ]),
+        ServeEvent::Done(resp) => response_json(resp),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_line_omits_error_on_success() {
+        let r = Response {
+            id: 7,
+            token_ids: vec![104, 105],
+            text: "hi".into(),
+            ttft_s: 0.25,
+            total_s: 0.5,
+            error: None,
+        };
+        let j = response_json(&r);
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(j.get("n_tokens").unwrap().as_i64().unwrap(), 2);
+        assert!(j.get("error").is_none());
+        // serialized line parses back
+        let line = j.to_string();
+        assert!(Json::parse(&line).unwrap().get("error").is_none());
+    }
+
+    #[test]
+    fn error_line_is_distinguishable_on_the_wire() {
+        let r = Response::error(8, "too big".into());
+        let j = response_json(&r);
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "too big");
+        assert_eq!(j.get("ttft_s").unwrap().as_f64().unwrap(), -1.0);
+        assert_eq!(j.get("n_tokens").unwrap().as_i64().unwrap(), 0);
+    }
+
+    #[test]
+    fn utf8_delta_holds_incomplete_sequences() {
+        // 'é' = 0xC3 0xA9 arriving one byte per token
+        let mut buf = Vec::new();
+        buf.push(0xC3);
+        assert_eq!(utf8_delta(&mut buf), "", "lead byte held, not replaced");
+        assert_eq!(buf, vec![0xC3]);
+        buf.push(0xA9);
+        assert_eq!(utf8_delta(&mut buf), "é");
+        assert!(buf.is_empty());
+        // ascii streams through immediately
+        buf.push(b'h');
+        assert_eq!(utf8_delta(&mut buf), "h");
+        // a valid prefix before an incomplete tail drains the prefix only
+        buf.extend([b'a', 0xE2, 0x82]); // 'a' + 2/3 bytes of '€'
+        assert_eq!(utf8_delta(&mut buf), "a");
+        buf.push(0xAC);
+        assert_eq!(utf8_delta(&mut buf), "€");
+        // an invalid byte is flushed lossily instead of held forever
+        buf.extend([0xFF, b'x']);
+        assert_eq!(utf8_delta(&mut buf), "\u{fffd}x");
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn utf8_delta_invalid_flush_keeps_a_held_lead_byte() {
+        // truncated '€' (0xE2 0x82) followed by 'é' (0xC3 0xA9), one
+        // byte per token: the invalid subpart is replaced, but the 0xC3
+        // lead byte after it must stay held — concat(deltas) must equal
+        // from_utf8_lossy of the full byte sequence
+        let mut buf = Vec::new();
+        let mut streamed = String::new();
+        for b in [0xE2u8, 0x82, 0xC3, 0xA9] {
+            buf.push(b);
+            streamed.push_str(&utf8_delta(&mut buf));
+        }
+        assert!(buf.is_empty());
+        assert_eq!(streamed, String::from_utf8_lossy(&[0xE2, 0x82, 0xC3, 0xA9]));
+        assert_eq!(streamed, "\u{fffd}é");
+    }
+
+    #[test]
+    fn delta_lines_carry_index_and_text() {
+        let ev = ServeEvent::Delta { id: 3, index: 5, token_id: 104, text: "h".into() };
+        let j = event_json(&ev);
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(j.get("index").unwrap().as_i64().unwrap(), 5);
+        assert_eq!(j.get("token").unwrap().as_i64().unwrap(), 104);
+        assert_eq!(j.get("delta").unwrap().as_str().unwrap(), "h");
+        assert!(j.get("text").is_none(), "deltas and finals are distinct shapes");
+    }
+}

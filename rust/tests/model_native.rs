@@ -198,7 +198,12 @@ fn native_engine_serves_synthetic_load_end_to_end() {
     let stats = run_synthetic(Box::new(exec), 6, 8, 4, 0, 42).unwrap();
     assert_eq!(stats.completed, 6);
     assert!(stats.generated_tokens > 0);
-    assert!(stats.engine_steps >= 8 + 4);
+    // default scheduling chunk-prefills the whole 9-token prompt (BOS+8)
+    // in one engine step per request — far fewer steps than the old
+    // one-prompt-token-per-step loop, but at least one step per
+    // generated-token wave
+    assert!(stats.engine_steps >= 2);
+    assert_eq!(stats.prefill_tokens, 6 * 9, "every prompt absorbed chunked");
     assert!(stats.tokens_per_sec() > 0.0);
     assert_eq!(stats.backend, "native");
     assert_eq!(stats.model, "ho2_tiny");

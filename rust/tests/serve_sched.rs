@@ -1,0 +1,386 @@
+//! serve/ scheduler subsystem tests — the ISSUE-4 acceptance criteria,
+//! end to end on the native executor with no artifacts:
+//!
+//!  1. chunked prefill is bit-identical to token-at-a-time decode and
+//!     cuts engine steps for a P-token prompt from ~P to ~⌈P/chunk⌉
+//!     (pinned on `ServeStats::engine_steps`);
+//!  2. a session-cache hit restores the O(1) state, skips re-prefilling
+//!     the shared history, and produces next-token logits within 1e-4 of
+//!     (in fact identical to) a from-scratch full-history prefill;
+//!  3. preempt → park → resume is bit-exact mid-generation;
+//!  4. synthetic load with more requests than slots completes *all*
+//!     requests in arrival order under the FIFO policy (the old
+//!     `Vec::push`/`Vec::pop` pending queue was LIFO and starved the
+//!     oldest waiters).
+
+use std::sync::mpsc::{channel, Receiver};
+
+use holt::coordinator::server::{Engine, ServeStats};
+use holt::model::{native_model_entry, Executor, NativeExecutor};
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::serve::{Policy, Request, ServeEvent, ServeOpts};
+use holt::tokenizer::BOS;
+
+fn executor(seed: u64) -> NativeExecutor {
+    let entry = native_model_entry("ho2_tiny").unwrap();
+    let params = ParamStore::init(&entry.param_spec, &mut Rng::new(seed));
+    NativeExecutor::new(entry, params).unwrap()
+}
+
+/// A deterministic (greedy) request: temperature 0 ignores the engine
+/// rng, so outputs depend only on the prompt and the weights — which is
+/// what lets the preemption/session tests demand bit-exactness.
+fn greedy_request(
+    id: u64,
+    prompt: Vec<i32>,
+    max_tokens: usize,
+    respond: std::sync::mpsc::Sender<ServeEvent>,
+) -> Request {
+    let mut r = Request::new(id, prompt, respond);
+    r.max_tokens = max_tokens;
+    r.temperature = 0.0;
+    r.top_k = 0;
+    r
+}
+
+fn prompt(len: usize, salt: i32) -> Vec<i32> {
+    std::iter::once(BOS)
+        .chain((0..len as i32 - 1).map(|i| (i * 7 + salt) % 256))
+        .collect()
+}
+
+/// Run `requests` through a fresh engine, returning (stats, responses in
+/// completion order).  All requests are queued before the engine starts,
+/// so admission order is exactly arrival order.
+fn run_engine(seed: u64, opts: ServeOpts, requests: Vec<Request>, erx: Receiver<ServeEvent>) -> (ServeStats, Vec<holt::serve::Response>) {
+    let (tx, rx) = channel::<Request>();
+    for r in requests {
+        tx.send(r).unwrap();
+    }
+    drop(tx);
+    let mut engine = Engine::with_opts(Box::new(executor(seed)), 1, opts).unwrap();
+    let stats = engine.run(rx).unwrap();
+    drop(engine); // all event senders inside the engine are gone
+    let responses: Vec<_> = erx
+        .iter()
+        .filter_map(|ev| match ev {
+            ServeEvent::Done(r) => Some(r),
+            ServeEvent::Delta { .. } => None,
+        })
+        .collect();
+    (stats, responses)
+}
+
+#[test]
+fn absorb_slot_is_bit_identical_to_decode_steps() {
+    // the executor-level chunked-prefill contract: any chunking of the
+    // prompt leaves the state exactly where the token loop leaves it
+    let toks = prompt(37, 3);
+    let mut chunked = executor(9);
+    let mut stepped = executor(9);
+    let cs = chunked.alloc_slot().unwrap();
+    let ss = stepped.alloc_slot().unwrap();
+    let mut last_chunk = Vec::new();
+    for block in toks.chunks(16) {
+        last_chunk = chunked.absorb_slot(cs, block).unwrap();
+    }
+    let feed_len = stepped.n_slots();
+    let mut last_step = Vec::new();
+    let v = stepped.model().config.vocab_size;
+    for &t in &toks {
+        let mut feed = vec![holt::tokenizer::PAD; feed_len];
+        feed[ss] = t;
+        let lg = stepped.decode_step(&feed).unwrap();
+        last_step = lg.as_f32().unwrap()[ss * v..(ss + 1) * v].to_vec();
+    }
+    assert_eq!(chunked.pos(cs), toks.len());
+    assert_eq!(stepped.pos(ss), toks.len());
+    assert_eq!(last_chunk, last_step, "chunked prefill drifted from the token loop");
+    // and the next decode step agrees bit-for-bit too
+    let mut feed = vec![holt::tokenizer::PAD; feed_len];
+    feed[cs] = 42;
+    let a = chunked.decode_step(&feed).unwrap();
+    let mut feed = vec![holt::tokenizer::PAD; feed_len];
+    feed[ss] = 42;
+    let b = stepped.decode_step(&feed).unwrap();
+    assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+}
+
+#[test]
+fn chunked_prefill_cuts_engine_steps_by_the_chunk_factor() {
+    // P = 49 prompt tokens, chunk 16 → ⌈49/16⌉ = 4 prefill steps; the
+    // first token samples in the last prefill step, so the whole request
+    // fits in 4 + (max_tokens - 1) engine steps.  Token-at-a-time pays
+    // one step per prompt token.
+    let p = 49;
+    let max_tokens = 4;
+    let mk = |chunk: usize| ServeOpts { prefill_chunk: chunk, ..ServeOpts::default() };
+
+    let (etx, erx) = channel();
+    let reqs = vec![greedy_request(1, prompt(p, 5), max_tokens, etx)];
+    let (on, ron) = run_engine(2, mk(16), reqs, erx);
+    assert_eq!(on.completed, 1);
+    assert_eq!(ron.len(), 1);
+    assert_eq!(on.prefill_chunk, 16);
+    assert_eq!(on.prefill_tokens, p as u64, "every prompt token absorbed chunked");
+    assert!(
+        on.engine_steps <= (p as u64).div_ceil(16) + max_tokens as u64 - 1,
+        "chunked prefill took {} engine steps for a {p}-token prompt",
+        on.engine_steps
+    );
+
+    let (etx, erx) = channel();
+    let reqs = vec![greedy_request(1, prompt(p, 5), max_tokens, etx)];
+    let (off, roff) = run_engine(2, mk(1), reqs, erx);
+    assert_eq!(off.completed, 1);
+    assert_eq!(off.prefill_chunk, 1);
+    assert_eq!(off.prefill_tokens, 0, "token-at-a-time never calls absorb_slot");
+    assert!(
+        off.engine_steps >= p as u64,
+        "token-at-a-time must pay ~P steps, took {}",
+        off.engine_steps
+    );
+    assert!(on.engine_steps < off.engine_steps / 4);
+    // scheduling must not change the output
+    assert_eq!(ron[0].token_ids, roff[0].token_ids);
+}
+
+#[test]
+fn session_cache_hit_skips_reprefill_and_matches_full_history() {
+    // Turn 1 runs a conversation to completion under a session_id; turn 2
+    // extends the history.  The cache hit must (a) restore instead of
+    // re-prefilling the shared prefix and (b) generate exactly what a
+    // from-scratch engine generates for the same full-history prompt.
+    let base = prompt(20, 11);
+    let opts = ServeOpts::default();
+
+    // engine A: two turns through one engine (cache lives in the engine)
+    let (tx, rx) = channel::<Request>();
+    let (etx, erx) = channel::<ServeEvent>();
+    let engine_thread = std::thread::spawn(move || {
+        let mut engine = Engine::with_opts(Box::new(executor(21)), 1, opts).unwrap();
+        engine.run(rx).unwrap()
+    });
+    let mut r1 = greedy_request(1, base.clone(), 6, etx.clone());
+    r1.session_id = Some("conv".into());
+    tx.send(r1).unwrap();
+    let done1 = loop {
+        match erx.recv().unwrap() {
+            ServeEvent::Done(r) => break r,
+            ServeEvent::Delta { .. } => continue,
+        }
+    };
+    assert!(done1.error.is_none());
+    // follow-up = full history (prompt + completion) + new user tokens
+    let mut full: Vec<i32> = base.clone();
+    full.extend(&done1.token_ids);
+    full.extend([65, 66, 67]);
+    let mut r2 = greedy_request(2, full.clone(), 6, etx.clone());
+    r2.session_id = Some("conv".into());
+    tx.send(r2).unwrap();
+    let done2 = loop {
+        match erx.recv().unwrap() {
+            ServeEvent::Done(r) => break r,
+            ServeEvent::Delta { .. } => continue,
+        }
+    };
+    drop(etx);
+    drop(tx);
+    let stats = engine_thread.join().unwrap();
+    assert_eq!(stats.session_misses, 1, "turn 1 misses");
+    assert_eq!(stats.session_hits, 1, "turn 2 restores the cached state");
+    // the hit skipped the shared prefix: only the new suffix prefilled.
+    // turn 1 absorbed 20 prompt + 6 generated tokens chunked? no — only
+    // prompt tokens count; turn 2 chunk-prefills just the new suffix.
+    let absorbed_turn1 = base.len() as u64;
+    assert!(
+        stats.prefill_tokens < absorbed_turn1 + full.len() as u64,
+        "prefill_tokens {} implies the full history was re-absorbed",
+        stats.prefill_tokens
+    );
+
+    // engine B: from scratch, no session — same full-history prompt
+    let (etx2, erx2) = channel();
+    let fresh = vec![greedy_request(9, full.clone(), 6, etx2)];
+    let (stats_b, resp_b) = run_engine(21, ServeOpts::default(), fresh, erx2);
+    assert_eq!(stats_b.session_hits, 0);
+    assert_eq!(
+        done2.token_ids, resp_b[0].token_ids,
+        "cache-resumed generation diverged from full-history prefill"
+    );
+}
+
+#[test]
+fn preempt_park_resume_is_bit_exact() {
+    // 6 identical greedy requests over 4 slots with a 2-token quantum:
+    // slots get preempted (snapshot → park → resume) and every request
+    // must still produce exactly the tokens of an uninterrupted run.
+    // distinct prompts per request: byte-identical snapshots would let a
+    // park/resume state mix-up between requests go undetected
+    let max_tokens = 6;
+    let mk_reqs = |etx: &std::sync::mpsc::Sender<ServeEvent>| -> Vec<Request> {
+        (0..6)
+            .map(|i| greedy_request(i, prompt(12, 2 + i as i32), max_tokens, etx.clone()))
+            .collect()
+    };
+
+    let (etx, erx) = channel();
+    let reqs = mk_reqs(&etx);
+    drop(etx);
+    let plain_opts = ServeOpts::default();
+    let (plain_stats, plain) = run_engine(31, plain_opts, reqs, erx);
+    assert_eq!(plain_stats.preemptions, 0);
+    assert_eq!(plain.len(), 6);
+
+    let (etx, erx) = channel();
+    let reqs = mk_reqs(&etx);
+    drop(etx);
+    let preempt_opts = ServeOpts { preempt_tokens: 2, ..ServeOpts::default() };
+    let (stats, preempted) = run_engine(31, preempt_opts, reqs, erx);
+    assert!(stats.preemptions >= 1, "quantum 2 with 2 waiters must preempt");
+    assert_eq!(stats.resumes, stats.preemptions, "every parked slot resumes");
+    assert_eq!(stats.completed, 6);
+    assert_eq!(preempted.len(), 6);
+
+    // identical greedy prompts ⇒ identical outputs, with or without
+    // preemption — the snapshot/restore cycle is bit-exact
+    let by_id = |mut v: Vec<holt::serve::Response>| {
+        v.sort_by_key(|r| r.id);
+        v
+    };
+    let plain = by_id(plain);
+    let preempted = by_id(preempted);
+    for (a, b) in plain.iter().zip(&preempted) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.token_ids, b.token_ids, "request {} diverged under preemption", a.id);
+    }
+}
+
+#[test]
+fn fifo_completes_overload_in_arrival_order() {
+    // 9 identical requests, 4 slots: the old Vec::pop admission was LIFO
+    // and served the newest arrival first.  Under FIFO every request
+    // completes, in arrival order.
+    let (etx, erx) = channel();
+    let reqs: Vec<Request> =
+        (0..9).map(|i| greedy_request(i, prompt(10, 4), 3, etx.clone())).collect();
+    drop(etx);
+    let (stats, responses) = run_engine(41, ServeOpts::default(), reqs, erx);
+    assert_eq!(stats.completed, 9, "every queued request completes");
+    let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    assert_eq!(ids, sorted, "FIFO must complete in arrival order, got {ids:?}");
+}
+
+#[test]
+fn priority_admits_before_earlier_low_priority_waiters() {
+    // six queued requests for 4 slots: low-priority id 10 arrives before
+    // high-priority id 11, but under the priority policy id 11 is
+    // admitted — and completes — first.
+    let (etx, erx) = channel();
+    let mut reqs: Vec<Request> =
+        (0..4).map(|i| greedy_request(i, prompt(8, 6), 4, etx.clone())).collect();
+    let low = greedy_request(10, prompt(8, 6), 4, etx.clone());
+    let mut high = greedy_request(11, prompt(8, 6), 4, etx.clone());
+    high.priority = 5;
+    reqs.push(low);
+    reqs.push(high);
+    drop(etx);
+    let opts = ServeOpts { policy: Policy::Priority, ..ServeOpts::default() };
+    let (stats, responses) = run_engine(51, opts, reqs, erx);
+    assert_eq!(stats.completed, 6);
+    let pos = |id: u64| responses.iter().position(|r| r.id == id).unwrap();
+    assert!(
+        pos(11) < pos(10),
+        "high priority must overtake the earlier low-priority waiter: {:?}",
+        responses.iter().map(|r| r.id).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn oversized_requests_error_visibly() {
+    let (etx, erx) = channel();
+    // ho2_tiny max_len = 128; 100-token prompt + 120 max_tokens overflows
+    let reqs = vec![greedy_request(1, prompt(100, 1), 120, etx)];
+    let (stats, responses) = run_engine(61, ServeOpts::default(), reqs, erx);
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.rejected, 1, "rejections are counted, not silent");
+    assert_eq!(responses.len(), 1);
+    let r = &responses[0];
+    assert!(r.error.as_deref().unwrap_or("").contains("max_len"), "{:?}", r.error);
+    assert_eq!(r.ttft_s, -1.0, "legacy sentinel preserved");
+    // and the wire line is distinguishable from success
+    let line = holt::serve::stream::response_json(r).to_string();
+    assert!(holt::json::Json::parse(&line).unwrap().get("error").is_some());
+}
+
+#[test]
+fn streaming_emits_one_delta_per_token_then_done() {
+    let (etx, erx) = channel();
+    let mut r = greedy_request(1, prompt(10, 8), 5, etx);
+    r.stream = true;
+    let (tx, rx) = channel::<Request>();
+    tx.send(r).unwrap();
+    drop(tx);
+    let mut engine = Engine::with_opts(Box::new(executor(71)), 1, ServeOpts::default()).unwrap();
+    engine.run(rx).unwrap();
+    drop(engine);
+    let events: Vec<ServeEvent> = erx.iter().collect();
+    let done = match events.last().unwrap() {
+        ServeEvent::Done(r) => r.clone(),
+        ServeEvent::Delta { .. } => panic!("stream must end with the final line"),
+    };
+    assert!(done.error.is_none());
+    let deltas: Vec<(usize, i32)> = events
+        .iter()
+        .filter_map(|e| match e {
+            ServeEvent::Delta { index, token_id, .. } => Some((*index, *token_id)),
+            ServeEvent::Done(_) => None,
+        })
+        .collect();
+    assert_eq!(deltas.len(), done.token_ids.len(), "one delta per generated token");
+    for (i, (idx, tok)) in deltas.iter().enumerate() {
+        assert_eq!(*idx, i, "delta indices are in order");
+        assert_eq!(*tok, done.token_ids[i], "delta tokens match the final response");
+    }
+}
+
+#[test]
+fn tcp_pipelined_requests_on_one_connection() {
+    // satellite: the old handle_conn blocked on recv() after each line —
+    // two JSON lines written back-to-back now batch in the engine and
+    // come back as two tagged responses on the same socket.
+    use std::io::{BufRead, BufReader, Write};
+    const ADDR: &str = "127.0.0.1:18501";
+    std::thread::spawn(|| {
+        holt::coordinator::server::serve_tcp(Box::new(executor(81)), ADDR, 7).unwrap();
+    });
+    let mut conn = None;
+    for _ in 0..100 {
+        match std::net::TcpStream::connect(ADDR) {
+            Ok(c) => {
+                conn = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+    let mut conn = conn.expect("server did not come up");
+    // two requests written before reading anything
+    writeln!(conn, "{}", r#"{"prompt": "ab", "max_tokens": 3}"#).unwrap();
+    writeln!(conn, "{}", r#"{"prompt": "cd", "max_tokens": 3}"#).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ids = Vec::new();
+    for _ in 0..2 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = holt::json::Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "{line}");
+        ids.push(j.get("id").unwrap().as_i64().unwrap());
+    }
+    ids.sort_unstable();
+    assert_eq!(ids.len(), 2);
+    assert_ne!(ids[0], ids[1], "both pipelined requests answered");
+}

@@ -77,9 +77,11 @@ fn tcp_roundtrip_and_concurrent_clients() {
     let resp = request(&mut conn, "still alive", 4);
     assert!(resp.get("n_tokens").is_some());
 
-    // oversized request is rejected cleanly (ttft_s = -1 sentinel)
+    // oversized request is rejected cleanly: explicit error field plus
+    // the legacy ttft_s = -1 sentinel
     let resp = request(&mut conn, &"x".repeat(100), 120); // 101 + 120 > 128
     assert_eq!(resp.get("ttft_s").unwrap().as_f64().unwrap(), -1.0);
+    assert!(resp.get("error").unwrap().as_str().unwrap().contains("max_len"));
 
     // concurrent clients — more than the 4 decode slots
     let handles: Vec<_> = (0..6)
