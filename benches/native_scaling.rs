@@ -8,9 +8,17 @@
 //! growth ratio: the recurrent forms settle at ~2x per doubling (linear),
 //! the oracle at ~4x (quadratic).  The oracle column stops early — that
 //! is the point.  Writes results/native_scaling.csv.
+//!
+//! A second sweep walks the FeatureMap axis — Taylor order ∈ {1, 2, 3}
+//! plus the elu+1 linear baseline at one (n, d) point — and records the
+//! cost model of the order knob: state bytes per head-slot
+//! (feature_dim·(1+dv)·8) against decode-shaped tok/s for the streaming
+//! and chunked evaluations.  Written to results/bench_kernels.json and
+//! published as a CI artifact.
 
 use holt::bench::{bench_budget, BenchResult};
-use holt::kernels::{Evaluation, NativeBackend};
+use holt::json::{obj, Json};
+use holt::kernels::{Evaluation, NativeBackend, RecurrentAttention};
 use holt::mathref;
 use holt::rng::Rng;
 
@@ -114,5 +122,59 @@ fn main() -> anyhow::Result<()> {
          the oracle -> ~4x (O(n^2)). ho2 carries a (1+d+d(d+1)/2)-feature state\n\
          vs linear's d, so it sits a constant factor above linear at equal slope."
     );
+
+    // ---- FeatureMap sweep: the cost model of the Taylor-order knob ----
+    // one serving-relevant head shape; order 3 at d = 32 is 6 545 packed
+    // features per head (the affordable point the redesign unlocked)
+    let (kn, kd) = (512.min(max_n).max(128), 32usize);
+    let mut krng = Rng::new(7);
+    let kq = krng.normal_vec_f32(kn * kd, 1.0);
+    let kk = krng.normal_vec_f32(kn * kd, 1.0);
+    let kv = krng.normal_vec_f32(kn * kd, 1.0);
+    let mut kernel_rows: Vec<Json> = Vec::new();
+    println!("\nfeature-map sweep — n = {kn}, d = dv = {kd}");
+    println!(
+        "{:>10} {:>6} {:>16} {:>14} {:>14}",
+        "kernel", "order", "state KiB/head", "stream tok/s", "chunked tok/s"
+    );
+    let configs: Vec<(&str, usize)> =
+        vec![("ho", 1), ("ho", 2), ("ho", 3), ("linear", 0)];
+    for (kind, order) in configs {
+        let streaming =
+            NativeBackend { evaluation: Evaluation::Streaming, order, ..NativeBackend::paper() };
+        let chunked = NativeBackend { order, ..NativeBackend::paper() };
+        let state_bytes = streaming.state(kind, kd, kd)?.state_elements() * 8;
+        let label = if kind == "ho" { format!("ho_o{order}") } else { kind.to_string() };
+        let rs = bench_budget(&format!("{label}_stream_n{kn}"), 0.3, || {
+            std::hint::black_box(streaming.forward(kind, &kq, &kk, &kv, kn, kd, kd, true).unwrap());
+        });
+        let rc = bench_budget(&format!("{label}_chunked_n{kn}"), 0.3, || {
+            std::hint::black_box(chunked.forward(kind, &kq, &kk, &kv, kn, kd, kd, true).unwrap());
+        });
+        let stream_tok_s = kn as f64 / rs.mean_s;
+        let chunked_tok_s = kn as f64 / rc.mean_s;
+        println!(
+            "{:>10} {:>6} {:>16.1} {:>14.0} {:>14.0}",
+            label,
+            order,
+            state_bytes as f64 / 1024.0,
+            stream_tok_s,
+            chunked_tok_s
+        );
+        kernel_rows.push(obj(vec![
+            ("kernel", label.as_str().into()),
+            ("kind", kind.into()),
+            ("order", order.into()),
+            ("n", kn.into()),
+            ("d", kd.into()),
+            ("state_bytes_per_head_slot", state_bytes.into()),
+            ("streaming_tok_per_s", stream_tok_s.into()),
+            ("chunked_tok_per_s", chunked_tok_s.into()),
+        ]));
+    }
+    let record = obj(vec![("feature_map_sweep", Json::Arr(kernel_rows))]);
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/bench_kernels.json", format!("{record}\n"))?;
+    println!("wrote results/bench_kernels.json");
     Ok(())
 }

@@ -77,7 +77,8 @@ fn main() -> anyhow::Result<()> {
         experiments::write_results(std::path::Path::new("results"), "e1_approx.csv", &csv)?;
     println!("\nwrote {path:?}");
     println!(
-        "\nreading: order 2 < order 1 < order 0 at every alpha (the paper's claim);\n\
+        "\nreading: higher order => lower error at every alpha (the paper's claim —\n\
+         the native grid adds order 3, the point the paper never ran);\n\
          larger alpha => smaller logits => better Taylor fit, at the cost of a\n\
          flatter attention distribution (err_vs_std grows with alpha)."
     );

@@ -23,10 +23,12 @@ fn main() -> anyhow::Result<()> {
     println!("== HOLT quickstart (native O(n) kernels, no artifacts) ==\n");
 
     println!("[1/3] native kernels vs independent O(n^2) oracle");
-    for kind in ["ho2", "linear"] {
+    for kind in ["ho", "linear"] {
         let err = experiments::crosscheck_native(kind, 0, 1e-4)?;
+        let scope = if kind == "ho" { "orders 0-3, " } else { "" };
         println!(
-            "  {kind:<8} streaming + chunked, causal + non-causal   max|diff| = {err:.2e}  OK"
+            "  {kind:<8} {scope}streaming + chunked, causal + non-causal   \
+             max|diff| = {err:.2e}  OK"
         );
     }
 

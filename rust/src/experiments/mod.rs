@@ -97,12 +97,14 @@ pub fn approx_quality(runtime: &Runtime, seed: u64) -> Result<Vec<ApproxRow>> {
 }
 
 /// E1 with no artifacts: the same (alpha, order) grid evaluated by the
-/// native O(n) kernels, targets computed by the `mathref` softmax oracle
-/// with the matching LN + alpha rescaling (logits qₙ·kₙ/(α√d) both sides).
-/// Non-causal over an (n, d) head, like the `approx_n256` artifact.
+/// native O(n) kernels — extended to Taylor order 3, the data point the
+/// paper never ran (the artifact grid stops at 2) — targets computed by
+/// the `mathref` softmax oracle with the matching LN + alpha rescaling
+/// (logits qₙ·kₙ/(α√d) both sides).  Non-causal over an (n, d) head,
+/// like the `approx_n256` artifact.
 pub fn approx_quality_native(seed: u64, n: usize, d: usize) -> Result<Vec<ApproxRow>> {
     let alphas = [1.0, 2.0, 3.0, 4.0];
-    let orders = [0usize, 1, 2];
+    let orders = [0usize, 1, 2, 3];
     let mut rng = Rng::new(seed);
     let q = rng.normal_vec_f32(n * d, 1.0);
     let k = rng.normal_vec_f32(n * d, 1.0);
@@ -208,9 +210,12 @@ pub fn crosscheck_attention(
 /// Cross-check the native O(n) kernels — both evaluation strategies —
 /// against the direct O(n²) `mathref` oracle, causal and non-causal.
 /// The no-artifact twin of [`crosscheck_attention`]; returns the worst
-/// max |diff| seen.  `kind` ∈ {"ho2", "linear"} — "softmax" is rejected,
-/// because the native backend *is* the oracle there (no linear-time
-/// form exists) and comparing it against itself would always "pass".
+/// max |diff| seen.  `kind` ∈ {"ho"/"ho2", "linear"} — for the Taylor
+/// family every order 0–3 is swept (one generic φ-recurrence, the order
+/// is just a config value), the elu+1 baseline has no order.  "softmax"
+/// is rejected, because the native backend *is* the oracle there (no
+/// linear-time form exists) and comparing it against itself would
+/// always "pass".
 pub fn crosscheck_native(kind: &str, seed: u64, tol: f32) -> Result<f32> {
     if kind == "softmax" {
         anyhow::bail!(
@@ -218,6 +223,7 @@ pub fn crosscheck_native(kind: &str, seed: u64, tol: f32) -> Result<f32> {
              to the oracle itself) — nothing to cross-check"
         );
     }
+    let orders: &[usize] = if crate::model::is_ho(kind) { &[0, 1, 2, 3] } else { &[2] };
     let (bh, n, d) = (2, 96, 16);
     let mut rng = Rng::new(seed);
     let count = bh * n * d;
@@ -225,22 +231,25 @@ pub fn crosscheck_native(kind: &str, seed: u64, tol: f32) -> Result<f32> {
     let k = rng.normal_vec_f32(count, 1.0);
     let v = rng.normal_vec_f32(count, 1.0);
     let mut worst = 0.0f32;
-    for causal in [true, false] {
-        let oracle = mathref::attention_bhnd(kind, &q, &k, &v, bh, n, d, 2, 3.0, causal);
-        for evaluation in [Evaluation::Streaming, Evaluation::Chunked] {
-            let backend = NativeBackend { evaluation, chunk: 17, ..NativeBackend::paper() };
-            let out = backend.attention_bhnd(kind, &q, &k, &v, bh, n, d, causal)?;
-            let err = out
-                .iter()
-                .zip(&oracle)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f32, f32::max);
-            anyhow::ensure!(
-                err < tol,
-                "native {kind} ({evaluation:?}, causal={causal}) disagrees with the \
-                 O(n^2) oracle: max|diff| = {err} >= {tol}"
-            );
-            worst = worst.max(err);
+    for &order in orders {
+        for causal in [true, false] {
+            let oracle = mathref::attention_bhnd(kind, &q, &k, &v, bh, n, d, order, 3.0, causal);
+            for evaluation in [Evaluation::Streaming, Evaluation::Chunked] {
+                let backend =
+                    NativeBackend { evaluation, chunk: 17, order, ..NativeBackend::paper() };
+                let out = backend.attention_bhnd(kind, &q, &k, &v, bh, n, d, causal)?;
+                let err = out
+                    .iter()
+                    .zip(&oracle)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                anyhow::ensure!(
+                    err < tol,
+                    "native {kind} o{order} ({evaluation:?}, causal={causal}) disagrees \
+                     with the O(n^2) oracle: max|diff| = {err} >= {tol}"
+                );
+                worst = worst.max(err);
+            }
         }
     }
     Ok(worst)
@@ -279,9 +288,10 @@ mod tests {
     #[test]
     fn native_approx_quality_orders_correctly() {
         // E1's headline, computed with zero artifacts: higher Taylor order
-        // => lower error vs the softmax target, for every alpha
+        // => lower error vs the softmax target, for every alpha — now
+        // including the order-3 point the paper never measured
         let rows = approx_quality_native(123, 64, 16).unwrap();
-        assert_eq!(rows.len(), 12);
+        assert_eq!(rows.len(), 16);
         for alpha in [1.0, 2.0, 3.0, 4.0] {
             let err = |o: usize| {
                 rows.iter()
@@ -289,6 +299,7 @@ mod tests {
                     .unwrap()
                     .rel_err_vs_target
             };
+            assert!(err(3) < err(2), "alpha {alpha}: order3 !< order2");
             assert!(err(2) < err(1), "alpha {alpha}: order2 !< order1");
             assert!(err(1) < err(0), "alpha {alpha}: order1 !< order0");
         }
@@ -304,7 +315,9 @@ mod tests {
 
     #[test]
     fn native_crosscheck_all_kinds() {
-        for kind in ["ho2", "linear"] {
+        // "ho" sweeps Taylor orders 0-3 internally; "ho2" is the same
+        // family (alias), so checking it separately would double the work
+        for kind in ["ho", "linear"] {
             let err = crosscheck_native(kind, 7, 1e-4).unwrap();
             assert!(err < 1e-4, "{kind}: {err}");
         }

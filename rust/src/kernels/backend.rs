@@ -21,18 +21,20 @@ pub enum Evaluation {
 
 /// Config + entry points for the native kernels.
 ///
-/// `kind` strings match the manifest/`mathref` vocabulary: `"ho2"` (the
-/// paper kernel, honoring `order`/`alpha`/`normalize_qk`), `"linear"`
-/// (elu+1 baseline), and `"softmax"` — which has no linear-time form and
-/// falls back to the exact O(n²) reference so callers can still use one
-/// backend for every baseline in a comparison table.
+/// `kind` strings match the manifest/`mathref` vocabulary: `"ho"` (the
+/// Taylor kernel at any `order`, honoring `alpha`/`normalize_qk`; the
+/// historic spelling `"ho2"` is an alias), `"linear"` (elu+1 baseline),
+/// and `"softmax"` — which has no linear-time form and falls back to the
+/// exact O(n²) reference so callers can still use one backend for every
+/// baseline in a comparison table.
 #[derive(Debug, Clone)]
 pub struct NativeBackend {
-    /// Taylor order for the `"ho2"` kind (0..=2).
+    /// Taylor order for the `"ho"`/`"ho2"` kind — any r ≥ 0 whose packed
+    /// feature dim fits [`crate::kernels::MAX_TAYLOR_FEATURES`].
     pub order: usize,
-    /// Logit damping α for the `"ho2"` kind.
+    /// Logit damping α for the `"ho"`/`"ho2"` kind.
     pub alpha: f64,
-    /// Per-row LayerNorm on q/k for the `"ho2"` kind.
+    /// Per-row LayerNorm on q/k for the `"ho"`/`"ho2"` kind.
     pub normalize_qk: bool,
     /// Chunk length for [`Evaluation::Chunked`].
     pub chunk: usize,
@@ -77,7 +79,7 @@ impl NativeBackend {
             ))),
             "linear" => Ok(Box::new(LinearState::new(d, dv))),
             "softmax" => bail!("softmax attention has no O(1) recurrent state"),
-            _ => bail!("unknown attention kind '{kind}' (want ho2 | linear | softmax)"),
+            _ => bail!("unknown attention kind '{kind}' (want ho | ho2 | linear | softmax)"),
         }
     }
 
@@ -104,7 +106,7 @@ impl NativeBackend {
                 "softmax attention has no recurrent state; its backward is \
                  kernels::softmax_attention_vjp"
             ),
-            _ => bail!("unknown attention kind '{kind}' (want ho2 | linear | softmax)"),
+            _ => bail!("unknown attention kind '{kind}' (want ho | ho2 | linear | softmax)"),
         }
     }
 
@@ -212,5 +214,26 @@ mod tests {
     fn softmax_has_no_state() {
         assert!(NativeBackend::paper().state("softmax", 4, 4).is_err());
         assert!(NativeBackend::paper().state("nope", 4, 4).is_err());
+    }
+
+    #[test]
+    fn ho_kind_at_order_three_matches_oracle() {
+        // "ho" is the canonical kind now, order is a config value — the
+        // order-3 data point the paper never ran needs no new kernel code
+        let mut rng = Rng::new(33);
+        let (bh, n, d) = (2, 20, 8);
+        let q = rng.normal_vec_f32(bh * n * d, 1.0);
+        let k = rng.normal_vec_f32(bh * n * d, 1.0);
+        let v = rng.normal_vec_f32(bh * n * d, 1.0);
+        let be = NativeBackend { order: 3, ..NativeBackend::paper() };
+        let got = be.attention_bhnd("ho", &q, &k, &v, bh, n, d, true).unwrap();
+        let want = mathref::attention_bhnd("ho", &q, &k, &v, bh, n, d, 3, 3.0, true);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        let st = be.state("ho", d, d).unwrap();
+        let t2 = d * (d + 1) / 2;
+        let t3 = d * (d + 1) * (d + 2) / 6;
+        assert_eq!(st.state_elements(), (1 + d + t2 + t3) * (1 + d));
     }
 }

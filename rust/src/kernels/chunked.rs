@@ -14,7 +14,7 @@
 //! key), so it degenerates to absorb-all-then-query and `chunk` is
 //! irrelevant; the causal path is the interesting one.
 
-use crate::kernels::{streaming_forward, RecurrentAttention, DEN_FLOOR};
+use crate::kernels::{floor_den, streaming_forward, RecurrentAttention};
 
 /// Full-sequence forward, chunked.  `q`/`k` are (n, d) row-major, `v` is
 /// (n, dv); resets the kernel first.  Equivalent to
@@ -59,7 +59,7 @@ pub fn chunked_forward<K: RecurrentAttention + ?Sized>(
                     *acc += w * x as f64;
                 }
             }
-            let den = den.max(DEN_FLOOR);
+            let den = floor_den(den);
             for (o, &x) in out[i * dv..(i + 1) * dv].iter_mut().zip(num.iter()) {
                 *o = (x / den) as f32;
             }

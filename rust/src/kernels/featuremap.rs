@@ -1,0 +1,519 @@
+//! The [`FeatureMap`] abstraction — *the* choice the paper's O(n) trick
+//! parameterizes over.
+//!
+//! Kernelized attention with weight `w(q, k) = φ_q(q)·φ_k(k)` admits an
+//! O(1)-per-token recurrence over `Σφ_k(k)` and `Σφ_k(k)⊗v` regardless of
+//! what φ is.  This module owns the φs; [`crate::kernels::PhiState`] owns
+//! the (single) recurrence.  Two maps ship:
+//!
+//! * [`TaylorMap`] — the paper's kernel at **any** Taylor order r:
+//!   `w = Σ_{j≤r} (u·k)ʲ/j!` with `u = q/(α√d)` after optional q/k
+//!   LayerNorm.  Degree-j monomials are symmetric in their j indices, so
+//!   the features are packed multisets `a₁ ≤ … ≤ aⱼ`: `C(d+j−1, j)`
+//!   entries per degree instead of dʲ, with the multinomial weight
+//!   `1/Πₐ(αₐ!)` folded into the *query-side* feature only — the key-side
+//!   feature stays the plain monomial `Πₐ kₐ^{αₐ}`, so the state remains
+//!   an exact plain sum of per-key products and absorb stays cheap.
+//!   Total feature dim `Σ_{j≤r} C(d+j−1, j)` — the reason order 3 is
+//!   affordable (e.g. d = 32: 6 545 features, not 32³ = 32 768 for the
+//!   cubic moment alone).
+//! * [`EluMap`] — Katharopoulos et al. 2020's elu(x)+1 baseline: φ is
+//!   applied in the per-row prep stage, the map itself is the identity
+//!   and the pair weight is a plain dot product.
+//!
+//! The q/k asymmetry (scale and multinomial coefficients on the query
+//! side) is why the trait exposes `map_q`/`map_k` rather than the single
+//! `map` a symmetric kernel would need.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::mathref::{elu1, layernorm_noaffine, layernorm_noaffine_vjp, taylor_exp};
+
+/// LayerNorm epsilon — must match `mathref::ho_attention` exactly for the
+/// oracle cross-checks to be meaningful.
+pub(crate) const LN_EPS: f32 = 1e-5;
+
+/// Guard on [`taylor_feature_dim`]: beyond this the per-head state
+/// (`feature_dim · (1 + dv)` f64s) stops being "a few MiB per slot" and
+/// the O(1)-state serving story no longer holds in practice.
+pub const MAX_TAYLOR_FEATURES: usize = 1 << 21;
+
+/// Packed feature count of [`TaylorMap`]: `Σ_{j=0..=order} C(d+j−1, j)`.
+/// `None` when the intermediate binomials overflow `usize` — callers
+/// treat that the same as exceeding [`MAX_TAYLOR_FEATURES`].
+pub fn taylor_feature_dim(d: usize, order: usize) -> Option<usize> {
+    let mut total = 0usize;
+    let mut block = 1usize; // C(d−1, 0) = 1, the degree-0 block
+    for j in 0..=order {
+        if j > 0 {
+            // C(d+j−1, j) = C(d+j−2, j−1) · (d+j−1) / j  (exact division)
+            block = block.checked_mul(d.checked_add(j - 1)?)? / j;
+        }
+        total = total.checked_add(block)?;
+    }
+    Some(total)
+}
+
+/// A feature map φ with everything the generic recurrence
+/// ([`crate::kernels::PhiState`]) needs to run forward *and* backward:
+///
+/// * `prep_rows` — per-row preprocessing shared by q and k (LayerNorm for
+///   Taylor, elu+1 for the linear baseline), paid once per row by blocked
+///   paths instead of once per pair;
+/// * `map_q` / `map_k` — the features of a *prepped* row, query and key
+///   side (asymmetric: scale and symmetry coefficients live on the query
+///   side so the key-side state stays a plain sum);
+/// * the matching VJPs for training;
+/// * `pair_weight_from_dot` — `w(q, k)` as a function of the prepped-row
+///   dot product, the direct form blocked paths use inside a chunk (for
+///   every map here `φ_q(q)·φ_k(k)` collapses to such a function; the
+///   identity is pinned by tests in this module).
+///
+/// Implementing these ~9 methods (most of them one-liners for a pointwise
+/// φ — see [`EluMap`]) is all a new kernel needs: state, decode, chunked
+/// training forward, the hand-derived backward, snapshotting and the
+/// serve scheduler all come from `PhiState` unchanged.
+pub trait FeatureMap: Send {
+    /// Input (head) dimension d.
+    fn d(&self) -> usize;
+
+    /// Number of features per row — the recurrent state is
+    /// `feature_dim · (1 + dv)` f64s.
+    fn feature_dim(&self) -> usize;
+
+    /// Per-row preprocessing of `n` raw q/k rows (LayerNorm / pointwise
+    /// φ).  Blocked paths call this once per row and feed the result to
+    /// `map_*` / `pair_weight_from_dot`.
+    fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32>;
+
+    /// VJP of [`FeatureMap::prep_rows`]: `rows` are the raw rows, `g` the
+    /// gradient w.r.t. the prepped rows; returns the gradient w.r.t.
+    /// `rows`.
+    fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64>;
+
+    /// Query-side features of one prepped row into `out`
+    /// (length [`FeatureMap::feature_dim`]).
+    fn map_q(&self, xp: &[f32], out: &mut [f64]);
+
+    /// Key-side features of one prepped row into `out`.
+    fn map_k(&self, xp: &[f32], out: &mut [f64]);
+
+    /// VJP of [`FeatureMap::map_q`]: accumulate `(∂φ_q/∂xp)ᵀ · dphi`
+    /// into `dxp` (length d).
+    fn map_q_vjp(&self, xp: &[f32], dphi: &[f64], dxp: &mut [f64]);
+
+    /// VJP of [`FeatureMap::map_k`].
+    fn map_k_vjp(&self, xp: &[f32], dphi: &[f64], dxp: &mut [f64]);
+
+    /// `w(q, k) = f(qp·kp)` evaluated from the prepped-row dot product —
+    /// must equal `φ_q(qp)·φ_k(kp)` up to float reassociation.
+    fn pair_weight_from_dot(&self, dot: f64) -> f64;
+
+    /// `df/d(dot)` at the given dot product.
+    fn pair_weight_dot_grad(&self, dot: f64) -> f64;
+}
+
+/// One packed monomial of degree ≥ 2, defined recursively: feature
+/// `base + i` extends feature `parent` (one degree lower) by index
+/// `last`, where `last` now appears `mult` times in the multiset.
+struct Ext {
+    parent: u32,
+    last: u32,
+    mult: u32,
+}
+
+/// The extension table depends only on `(d, order)` but a `TaylorMap` is
+/// constructed per (layer, head) kernel state, per decode slot, per
+/// request — so the table is built once per configuration and shared.
+/// The cache is unbounded but keyed by the handful of `(d, order)` pairs
+/// a process actually serves.
+fn ext_table(d: usize, order: usize) -> Arc<[Ext]> {
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<[Ext]>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(t) = cache.lock().unwrap().get(&(d, order)) {
+        return Arc::clone(t);
+    }
+    // degree-(j−1) block as (global feature index, last index, count of
+    // last in the multiset), extended index-nondecreasingly
+    let mut ext = Vec::new();
+    let mut prev: Vec<(u32, u32, u32)> = (0..d).map(|a| ((1 + a) as u32, a as u32, 1)).collect();
+    for _ in 2..=order {
+        let mut next = Vec::new();
+        for &(pidx, last, cnt) in &prev {
+            for b in last as usize..d {
+                let mult = if b as u32 == last { cnt + 1 } else { 1 };
+                let idx = (1 + d + ext.len()) as u32;
+                ext.push(Ext { parent: pidx, last: b as u32, mult });
+                next.push((idx, b as u32, mult));
+            }
+        }
+        prev = next;
+    }
+    let table: Arc<[Ext]> = ext.into();
+    Arc::clone(
+        cache
+            .lock()
+            .unwrap()
+            .entry((d, order))
+            .or_insert(table),
+    )
+}
+
+/// The paper's Taylor feature map at arbitrary order (see module docs).
+///
+/// Feature layout (the packed degree-≤2 prefix is exactly the historic
+/// `s0/s1/s2` layout, which keeps order ≤ 2 results bit-identical to the
+/// pre-`FeatureMap` kernels — pinned in `rust/tests/golden_order2.rs`):
+///
+/// ```text
+/// [ 1 | x₀ … x_{d−1} | deg-2 multisets lex | deg-3 multisets lex | … ]
+/// ```
+pub struct TaylorMap {
+    d: usize,
+    order: usize,
+    /// 1 / (α √d): folded into the query features, never into the state.
+    scale: f64,
+    normalize_qk: bool,
+    /// recursive construction of every feature of degree ≥ 2 — shared
+    /// across all states of the same (d, order), see [`ext_table`]
+    ext: Arc<[Ext]>,
+    feature_dim: usize,
+}
+
+impl TaylorMap {
+    /// `order` is unbounded in principle; in practice the packed feature
+    /// dim `Σ_{j≤order} C(d+j−1, j)` must stay under
+    /// [`MAX_TAYLOR_FEATURES`] (the panic reports the computed dim —
+    /// config-level paths validate the same bound with a proper error
+    /// via [`crate::model::native_model_entry`]).
+    pub fn new(d: usize, order: usize, alpha: f64, normalize_qk: bool) -> TaylorMap {
+        assert!(d > 0, "empty head dim");
+        assert!(alpha > 0.0, "alpha must be positive");
+        let feature_dim = match taylor_feature_dim(d, order) {
+            Some(f) if f <= MAX_TAYLOR_FEATURES => f,
+            computed => panic!(
+                "TaylorMap order {order} at d = {d} needs {} packed features \
+                 (Σ_j C(d+j−1, j)); the cap is {MAX_TAYLOR_FEATURES}",
+                computed.map_or("> usize::MAX".to_string(), |f| f.to_string()),
+            ),
+        };
+        let ext = ext_table(d, order);
+        debug_assert_eq!(if order == 0 { 1 } else { 1 + d + ext.len() }, feature_dim);
+        TaylorMap { d, order, scale: 1.0 / (alpha * (d as f64).sqrt()), normalize_qk, ext, feature_dim }
+    }
+
+    pub fn order(&self) -> usize {
+        self.order
+    }
+
+    /// Features of degree 1..=order read the prepped row; shared by both
+    /// map directions (query side additionally scales and weights).
+    fn check(&self, xp: &[f32], out: &[f64]) {
+        assert_eq!(xp.len(), self.d, "row length");
+        assert_eq!(out.len(), self.feature_dim, "feature buffer length");
+    }
+}
+
+impl FeatureMap for TaylorMap {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.feature_dim
+    }
+
+    fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32> {
+        let mut out = rows.to_vec();
+        if self.normalize_qk {
+            layernorm_noaffine(&mut out, n, self.d, LN_EPS);
+        }
+        out
+    }
+
+    fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64> {
+        if self.normalize_qk {
+            layernorm_noaffine_vjp(rows, n, self.d, LN_EPS, g)
+        } else {
+            g.to_vec()
+        }
+    }
+
+    fn map_q(&self, xp: &[f32], out: &mut [f64]) {
+        self.check(xp, out);
+        out[0] = 1.0;
+        if self.order == 0 {
+            return;
+        }
+        // u = scaled query; higher degrees multiply scaled factors, so
+        // dot·scale-per-factor matches taylor_exp((qp·kp)·scale, order)
+        for a in 0..self.d {
+            out[1 + a] = self.scale * xp[a] as f64;
+        }
+        let base = 1 + self.d;
+        for (i, e) in self.ext.iter().enumerate() {
+            // multinomial weight 1/Πα! built incrementally: dividing by
+            // the multiplicity of the appended index is exact for the
+            // degree-2 (÷2 = ×0.5) case the goldens pin
+            let f = out[e.parent as usize] * out[1 + e.last as usize];
+            out[base + i] = if e.mult > 1 { f / e.mult as f64 } else { f };
+        }
+    }
+
+    fn map_k(&self, xp: &[f32], out: &mut [f64]) {
+        self.check(xp, out);
+        out[0] = 1.0;
+        if self.order == 0 {
+            return;
+        }
+        for a in 0..self.d {
+            out[1 + a] = xp[a] as f64;
+        }
+        let base = 1 + self.d;
+        for (i, e) in self.ext.iter().enumerate() {
+            out[base + i] = out[e.parent as usize] * out[1 + e.last as usize];
+        }
+    }
+
+    fn map_q_vjp(&self, xp: &[f32], dphi: &[f64], dxp: &mut [f64]) {
+        if self.order == 0 {
+            return; // φ_q ≡ [1]: no input dependence
+        }
+        let mut phi = vec![0.0f64; self.feature_dim];
+        self.map_q(xp, &mut phi);
+        // reverse-mode through the recursive construction: every feature
+        // feeds gradient to its parent and to its appended factor
+        let mut g = dphi.to_vec();
+        let base = 1 + self.d;
+        let mut du = vec![0.0f64; self.d];
+        for i in (0..self.ext.len()).rev() {
+            let e = &self.ext[i];
+            let gf = if e.mult > 1 { g[base + i] / e.mult as f64 } else { g[base + i] };
+            g[e.parent as usize] += gf * phi[1 + e.last as usize];
+            du[e.last as usize] += gf * phi[e.parent as usize];
+        }
+        for a in 0..self.d {
+            du[a] += g[1 + a];
+        }
+        for (o, &x) in dxp.iter_mut().zip(&du) {
+            *o += self.scale * x;
+        }
+    }
+
+    fn map_k_vjp(&self, xp: &[f32], dphi: &[f64], dxp: &mut [f64]) {
+        if self.order == 0 {
+            return;
+        }
+        let mut phi = vec![0.0f64; self.feature_dim];
+        self.map_k(xp, &mut phi);
+        let mut g = dphi.to_vec();
+        let base = 1 + self.d;
+        for i in (0..self.ext.len()).rev() {
+            let e = &self.ext[i];
+            let gf = g[base + i];
+            g[e.parent as usize] += gf * phi[1 + e.last as usize];
+            dxp[e.last as usize] += gf * phi[e.parent as usize];
+        }
+        for a in 0..self.d {
+            dxp[a] += g[1 + a];
+        }
+    }
+
+    fn pair_weight_from_dot(&self, dot: f64) -> f64 {
+        taylor_exp(dot * self.scale, self.order)
+    }
+
+    fn pair_weight_dot_grad(&self, dot: f64) -> f64 {
+        // d/ds Tᵣ(s·scale) = scale · Tᵣ₋₁(s·scale); order 0 is constant
+        if self.order == 0 {
+            0.0
+        } else {
+            self.scale * taylor_exp(dot * self.scale, self.order - 1)
+        }
+    }
+}
+
+/// elu(x)+1 linear attention (Katharopoulos et al. 2020): the pointwise φ
+/// happens in `prep_rows`, so the map is the identity and the pair weight
+/// is the plain dot product of prepped rows.
+pub struct EluMap {
+    d: usize,
+}
+
+impl EluMap {
+    pub fn new(d: usize) -> EluMap {
+        assert!(d > 0, "empty head dim");
+        EluMap { d }
+    }
+}
+
+impl FeatureMap for EluMap {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.d
+    }
+
+    fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
+        rows.iter().map(|&x| elu1(x)).collect()
+    }
+
+    fn prep_rows_vjp(&self, rows: &[f32], _n: usize, g: &[f64]) -> Vec<f64> {
+        // φ = elu+1: φ'(x) = 1 for x > 0, eˣ otherwise
+        rows.iter()
+            .zip(g)
+            .map(|(&x, &gp)| gp * if x > 0.0 { 1.0 } else { (x as f64).exp() })
+            .collect()
+    }
+
+    fn map_q(&self, xp: &[f32], out: &mut [f64]) {
+        assert_eq!(xp.len(), self.d, "row length");
+        for (o, &x) in out.iter_mut().zip(xp) {
+            *o = x as f64;
+        }
+    }
+
+    fn map_k(&self, xp: &[f32], out: &mut [f64]) {
+        self.map_q(xp, out);
+    }
+
+    fn map_q_vjp(&self, xp: &[f32], dphi: &[f64], dxp: &mut [f64]) {
+        let _ = xp;
+        for (o, &g) in dxp.iter_mut().zip(dphi) {
+            *o += g;
+        }
+    }
+
+    fn map_k_vjp(&self, xp: &[f32], dphi: &[f64], dxp: &mut [f64]) {
+        self.map_q_vjp(xp, dphi, dxp);
+    }
+
+    fn pair_weight_from_dot(&self, dot: f64) -> f64 {
+        dot
+    }
+
+    fn pair_weight_dot_grad(&self, _dot: f64) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn feature_dim_closed_form() {
+        // Σ_{j≤r} C(d+j−1, j) against hand-expanded small cases
+        assert_eq!(taylor_feature_dim(5, 0), Some(1));
+        assert_eq!(taylor_feature_dim(5, 1), Some(6));
+        assert_eq!(taylor_feature_dim(5, 2), Some(1 + 5 + 15));
+        assert_eq!(taylor_feature_dim(5, 3), Some(1 + 5 + 15 + 35));
+        assert_eq!(taylor_feature_dim(32, 3), Some(1 + 32 + 528 + 5984));
+        // the packed degree-2 block is d(d+1)/2, the historic layout
+        for d in 1..20 {
+            assert_eq!(taylor_feature_dim(d, 2), Some(1 + d + d * (d + 1) / 2));
+        }
+        // absurd orders overflow into None instead of panicking
+        assert_eq!(taylor_feature_dim(64, 200), None);
+    }
+
+    #[test]
+    fn factorization_identity_every_order() {
+        // THE identity the whole module rests on:
+        // φ_q(q)·φ_k(k) == Σ_{j≤r} (u·k)ʲ/j! == pair_weight_from_dot(q·k)
+        let mut rng = Rng::new(71);
+        let d = 7;
+        for order in 0..=4 {
+            let map = TaylorMap::new(d, order, 3.0, false);
+            for _ in 0..10 {
+                let q = rng.normal_vec_f32(d, 1.0);
+                let k = rng.normal_vec_f32(d, 1.0);
+                let mut pq = vec![0.0f64; map.feature_dim()];
+                let mut pk = vec![0.0f64; map.feature_dim()];
+                map.map_q(&q, &mut pq);
+                map.map_k(&k, &mut pk);
+                let raw: f64 = q.iter().zip(&k).map(|(&a, &b)| a as f64 * b as f64).sum();
+                let want = map.pair_weight_from_dot(raw);
+                let got = dot(&pq, &pk);
+                assert!(
+                    (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "order {order}: φq·φk {got} vs taylor {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn map_vjps_match_finite_differences() {
+        let mut rng = Rng::new(72);
+        let d = 5;
+        for order in 1..=3 {
+            let map = TaylorMap::new(d, order, 2.0, false);
+            let x = rng.normal_vec_f32(d, 1.0);
+            let dphi = (0..map.feature_dim())
+                .map(|_| rng.normal())
+                .collect::<Vec<f64>>();
+            for q_side in [true, false] {
+                let f = |x_: &[f32]| -> f64 {
+                    let mut phi = vec![0.0f64; map.feature_dim()];
+                    if q_side {
+                        map.map_q(x_, &mut phi);
+                    } else {
+                        map.map_k(x_, &mut phi);
+                    }
+                    dot(&phi, &dphi)
+                };
+                let mut g = vec![0.0f64; d];
+                if q_side {
+                    map.map_q_vjp(&x, &dphi, &mut g);
+                } else {
+                    map.map_k_vjp(&x, &dphi, &mut g);
+                }
+                let eps = 1e-4f32;
+                for a in 0..d {
+                    let mut xp = x.clone();
+                    let mut xm = x.clone();
+                    xp[a] += eps;
+                    xm[a] -= eps;
+                    // divide by the *realized* f32 step, not the nominal
+                    // one — ±eps quantizes when added to an O(1) value
+                    let fd = (f(&xp) - f(&xm)) / (xp[a] as f64 - xm[a] as f64);
+                    assert!(
+                        (g[a] - fd).abs() <= 1e-3 * fd.abs().max(1.0),
+                        "order {order} q={q_side} coord {a}: vjp {} vs fd {fd}",
+                        g[a]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elu_map_is_identity_after_prep() {
+        let map = EluMap::new(4);
+        let raw = [1.5f32, -0.5, 0.0, 2.0];
+        let prepped = map.prep_rows(&raw, 1);
+        for (p, &r) in prepped.iter().zip(&raw) {
+            assert_eq!(*p, elu1(r));
+        }
+        let mut phi = vec![0.0f64; 4];
+        map.map_q(&prepped, &mut phi);
+        for (f, &p) in phi.iter().zip(&prepped) {
+            assert_eq!(*f, p as f64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "packed features")]
+    fn absurd_order_reports_feature_dim() {
+        TaylorMap::new(32, 64, 3.0, true);
+    }
+}

@@ -2,9 +2,9 @@
 //!
 //! Katharopoulos et al. 2020 observe that the gradient of causal linear
 //! attention factorizes through the same prefix-sum states as the
-//! forward; this module is that observation made concrete for the
-//! paper's order-0/1/2 Taylor kernel (and the elu+1 baseline), in the
-//! same cache-blocked shape as [`chunked_forward`]:
+//! forward; this module is that observation made concrete for **any**
+//! [`crate::kernels::FeatureMap`] kernel (Taylor at any order, elu+1),
+//! in the same cache-blocked shape as [`chunked_forward`]:
 //!
 //! * **inside a chunk** the O(c²) pairwise weights are differentiated
 //!   directly — `w = f(uᵢ·κⱼ)` with `f' ` supplied by the kernel
@@ -28,10 +28,10 @@
 //! folded in via [`AttentionGrad::query_vjp`].
 //!
 //! Everything is checked against finite differences of the O(n²)
-//! oracles in `rust/tests/grad_check.rs` (all kinds × orders 0–2,
+//! oracles in `rust/tests/grad_check.rs` (all kinds × orders 0–3,
 //! several chunk sizes, rel. err ≤ 1e-3).
 
-use crate::kernels::{RecurrentAttention, DEN_FLOOR};
+use crate::kernels::{den_is_clamped, floor_den, RecurrentAttention};
 
 /// A [`RecurrentAttention`] kernel that can run backward: the vector-
 /// Jacobian products of its three primitive operations (state read,
@@ -39,7 +39,10 @@ use crate::kernels::{RecurrentAttention, DEN_FLOOR};
 ///
 /// Gradients flow in f64 (they accumulate across whole sequences, like
 /// the forward states); the *state gradient* buffers use exactly the
-/// [`RecurrentAttention::save_state`] layout.
+/// [`RecurrentAttention::save_state`] layout.  The single implementation
+/// is the generic [`crate::kernels::PhiState`], which derives every
+/// method from its [`crate::kernels::FeatureMap`] — per-kernel vjp
+/// bodies no longer exist.
 pub trait AttentionGrad: RecurrentAttention {
     /// The pair weight as a function of the prepped-row dot product
     /// (every kernel here is one): `w = f(qp·kp)`.
@@ -162,7 +165,7 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
         kernel.load_state(&snaps[ci]);
         for i in c0..c1 {
             let qi = &qp[(i - c0) * d..(i - c0 + 1) * d];
-            let den = dens[i].max(DEN_FLOOR);
+            let den = floor_den(dens[i]);
             let num = &nums[i * dv..(i + 1) * dv];
             let g = &go[i * dv..(i + 1) * dv];
             // o = num/den: dnum = g/den, dden = −(g·o)/den (0 if clamped)
@@ -172,7 +175,7 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
                 *dn = gc as f64 / den;
                 gdoto += gc as f64 * (nc / den);
             }
-            let dden = if dens[i] > DEN_FLOOR { -gdoto / den } else { 0.0 };
+            let dden = if den_is_clamped(dens[i]) { 0.0 } else { -gdoto / den };
             kernel.query_vjp(qi, &dnum, dden, &mut gstate, &mut gqp[i * d..(i + 1) * d]);
             // intra-chunk triangle, differentiated directly
             for j in c0..=i {
@@ -334,6 +337,53 @@ mod tests {
         let want = crate::mathref::linear_attention(&q, &k, &v, n, n, d, dv, true);
         for (a, b) in out.iter().zip(&want) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn den_floor_subgradient_is_pinned() {
+        // elu+1 features of strongly negative rows are ~e^x tiny, so a
+        // single-token sequence lands below DEN_FLOOR: the forward must
+        // divide by the constant floor and the backward must take the
+        // subgradient dden = 0 — i.e. the only gq/gk signal left is the
+        // numerator path w'·(v·go)/DEN_FLOOR, which has a closed form
+        // for n = 1 that we can check to near-f64 precision.
+        use crate::kernels::{den_is_clamped, DEN_FLOOR};
+        use crate::mathref::elu1;
+        let (d, dv) = (3, 2);
+        let q = vec![-16.0f32, -17.0, -18.0];
+        let k = vec![-18.5f32, -16.5, -17.5];
+        let v = vec![0.7f32, -0.3];
+        let go = vec![1.1f32, 0.4];
+        let mut st = LinearState::new(d, dv);
+        let w = st.pair_weight(&q, &k);
+        assert!(den_is_clamped(w), "test setup: w = {w} must sit below the floor");
+        // forward: out = w·v / DEN_FLOOR (the clamp, not the raw den)
+        let out = chunked_forward(&mut st, &q, &k, &v, 1, 4, true);
+        for (o, &vc) in out.iter().zip(&v) {
+            let want = (w * vc as f64 / DEN_FLOOR) as f32;
+            assert!((o - want).abs() <= want.abs() * 1e-6, "fwd {o} vs {want}");
+        }
+        // backward: with dden = 0, gq_a = (Σ_c go_c·v_c / FLOOR)·φ(k_a)·φ'(q_a)
+        // (and symmetrically for gk) — any dden leakage would add the
+        // enormous −(go·out)/FLOOR term and miss by orders of magnitude
+        let (gq, gk, gv) = chunked_attention_vjp(&mut st, &q, &k, &v, 1, 4, &go);
+        let a = go
+            .iter()
+            .zip(&v)
+            .map(|(&g, &x)| g as f64 * x as f64)
+            .sum::<f64>()
+            / DEN_FLOOR;
+        for c in 0..d {
+            let wq = a * elu1(k[c]) as f64 * (q[c] as f64).exp();
+            let wk = a * elu1(q[c]) as f64 * (k[c] as f64).exp();
+            assert!((gq[c] as f64 - wq).abs() <= wq.abs() * 1e-5, "gq[{c}] {} vs {wq}", gq[c]);
+            assert!((gk[c] as f64 - wk).abs() <= wk.abs() * 1e-5, "gk[{c}] {} vs {wk}", gk[c]);
+        }
+        // gv = w·go/FLOOR
+        for c in 0..dv {
+            let want = (w * go[c] as f64 / DEN_FLOOR) as f32;
+            assert!((gv[c] - want).abs() <= want.abs() * 1e-5, "gv[{c}]");
         }
     }
 

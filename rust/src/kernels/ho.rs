@@ -1,398 +1,42 @@
-//! The paper's higher-order (Taylor) linear attention as recurrent state.
+//! The paper's higher-order (Taylor) linear attention — now a thin
+//! instantiation of the generic φ-outer-product recurrence:
+//! [`HoState`] = [`PhiState`]<[`TaylorMap`]>.
 //!
-//! Order r keeps the key moments 0..=r.  For r = 2 the quadratic moment
-//! k⊗k is symmetric, so only the upper triangle is stored: d(d+1)/2
-//! packed entries instead of d², with the factor 2 for off-diagonal terms
-//! folded into the *query-side* feature (the state stays a plain sum of
-//! per-key products, so absorb stays cheap and exact).
-//!
-//! All state is f64 — the reference oracle accumulates in f64 too, and
-//! running sums live across an entire sequence, where f32 cancellation
-//! would show up long before the 1e-4 cross-check tolerance.
+//! Everything that used to live here (the hand-specialized order-0/1/2
+//! absorb/query/vjp bodies) is the generic [`PhiState`] implementation in
+//! `kernels/phi.rs` driven by the packed-monomial features of
+//! [`TaylorMap`] in `kernels/featuremap.rs` — one recurrence, any order.
+//! Order ≤ 2 results are bit-identical to the deleted specialized code
+//! (pinned in `rust/tests/golden_order2.rs`); order ≥ 3 is the same code
+//! with more feature blocks.
 
-use crate::kernels::{AttentionGrad, RecurrentAttention};
-use crate::mathref::{layernorm_noaffine, layernorm_noaffine_vjp, taylor_exp};
+use crate::kernels::{PhiState, TaylorMap};
 
-/// LayerNorm epsilon — must match `mathref::ho_attention` exactly for the
-/// oracle cross-checks to be meaningful.
-const LN_EPS: f32 = 1e-5;
+/// Recurrent state for Taylor attention of any order over one head.
+pub type HoState = PhiState<TaylorMap>;
 
-/// Recurrent state for order-0/1/2 Taylor attention over one head.
-pub struct HoState {
-    d: usize,
-    dv: usize,
-    order: usize,
-    /// 1 / (α √d): folded into the query features, never into the state.
-    scale: f64,
-    normalize_qk: bool,
-    /// Σ 1 — number of absorbed keys (order ≥ 0 denominator).
-    s0: f64,
-    /// Σ v — (dv).
-    s0v: Vec<f64>,
-    /// Σ k — (d), order ≥ 1.
-    s1: Vec<f64>,
-    /// Σ k⊗v — (d, dv) row-major, order ≥ 1.
-    s1v: Vec<f64>,
-    /// Σ packed(k⊗k) — (d(d+1)/2), order ≥ 2.
-    s2: Vec<f64>,
-    /// Σ packed(k⊗k)⊗v — (d(d+1)/2, dv) row-major, order ≥ 2.
-    s2v: Vec<f64>,
-}
-
-impl HoState {
-    /// New empty state. `order` ≤ 2 (the paper's range — order r would
-    /// need Θ(dʳ·dv) state; r = 2 is the accuracy/cost point the paper
-    /// argues for). `alpha` is the logit damping α, `normalize_qk`
-    /// applies per-row LayerNorm to q and k as in the paper.
+impl PhiState<TaylorMap> {
+    /// New empty state.  `order` is any Taylor order r ≥ 0 — the packed
+    /// symmetric state is `Σ_{j≤r} C(d+j−1, j)` features per head (NOT
+    /// dʳ — packing is exactly why order 3 is affordable); construction
+    /// panics with the computed feature dim when it exceeds
+    /// [`crate::kernels::MAX_TAYLOR_FEATURES`].  `alpha` is the logit
+    /// damping α, `normalize_qk` applies per-row LayerNorm to q and k as
+    /// in the paper.
     pub fn new(d: usize, dv: usize, order: usize, alpha: f64, normalize_qk: bool) -> HoState {
-        assert!(
-            order <= 2,
-            "HoState supports Taylor orders 0..=2, got {order} \
-             (order r needs d^r-sized state; see kernels::ho docs)"
-        );
-        assert!(d > 0 && dv > 0, "empty head dims");
-        assert!(alpha > 0.0, "alpha must be positive");
-        let t = d * (d + 1) / 2;
-        HoState {
-            d,
-            dv,
-            order,
-            scale: 1.0 / (alpha * (d as f64).sqrt()),
-            normalize_qk,
-            s0: 0.0,
-            s0v: vec![0.0; dv],
-            s1: vec![0.0; if order >= 1 { d } else { 0 }],
-            s1v: vec![0.0; if order >= 1 { d * dv } else { 0 }],
-            s2: vec![0.0; if order >= 2 { t } else { 0 }],
-            s2v: vec![0.0; if order >= 2 { t * dv } else { 0 }],
-        }
+        PhiState::with_map(TaylorMap::new(d, order, alpha, normalize_qk), dv)
     }
 
     /// Paper defaults: order 2, α = 3, LayerNorm on q/k.
     pub fn paper(d: usize, dv: usize) -> HoState {
         HoState::new(d, dv, 2, 3.0, true)
     }
-
-    pub fn order(&self) -> usize {
-        self.order
-    }
-
-    /// Row-wise LayerNorm (when enabled) of a single q/k row — f32, same
-    /// arithmetic as the oracle's whole-matrix pass.
-    fn normalized(&self, row: &[f32]) -> Vec<f32> {
-        let mut out = row.to_vec();
-        if self.normalize_qk {
-            layernorm_noaffine(&mut out, 1, self.d, LN_EPS);
-        }
-        out
-    }
-
-    /// State read for an already-normalized query row.
-    fn query_raw_normed(&self, qn: &[f32], num: &mut [f64]) -> f64 {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(qn.len(), d, "q row");
-        assert_eq!(num.len(), dv, "num row");
-        // order-0 term: w ⊇ 1 for every key
-        let mut den = self.s0;
-        num.copy_from_slice(&self.s0v);
-        // u = scaled query; dot·scale == u·k
-        let u: Vec<f64> = qn.iter().map(|&x| self.scale * x as f64).collect();
-        if self.order >= 1 {
-            for a in 0..d {
-                let ua = u[a];
-                den += ua * self.s1[a];
-                let row = &self.s1v[a * dv..(a + 1) * dv];
-                for (acc, &x) in num.iter_mut().zip(row) {
-                    *acc += ua * x;
-                }
-            }
-        }
-        if self.order >= 2 {
-            // ½(u·k)² = Σ_{a≤b} f_ab · (k_a k_b), f_ab = u_a u_b (a = b)
-            // or 2·½·u_a u_b (a < b) — symmetry folded into the query side
-            let mut p = 0;
-            for a in 0..d {
-                let ua = u[a];
-                for b in a..d {
-                    let f = if a == b { 0.5 * ua * ua } else { ua * u[b] };
-                    den += f * self.s2[p];
-                    let row = &self.s2v[p * dv..(p + 1) * dv];
-                    for (acc, &x) in num.iter_mut().zip(row) {
-                        *acc += f * x;
-                    }
-                    p += 1;
-                }
-            }
-        }
-        den
-    }
-}
-
-impl RecurrentAttention for HoState {
-    fn d(&self) -> usize {
-        self.d
-    }
-
-    fn dv(&self) -> usize {
-        self.dv
-    }
-
-    fn reset(&mut self) {
-        self.s0 = 0.0;
-        self.s0v.fill(0.0);
-        self.s1.fill(0.0);
-        self.s1v.fill(0.0);
-        self.s2.fill(0.0);
-        self.s2v.fill(0.0);
-    }
-
-    fn absorb(&mut self, k: &[f32], v: &[f32]) {
-        let kn = self.normalized(k);
-        self.absorb_prepped(&kn, v);
-    }
-
-    /// Absorb a key row that already went through [`Self::prep_rows`] —
-    /// the blocked path pays the LayerNorm once per row instead of twice.
-    fn absorb_prepped(&mut self, kn: &[f32], v: &[f32]) {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(kn.len(), d, "k row");
-        assert_eq!(v.len(), dv, "v row");
-        self.s0 += 1.0;
-        for (acc, &x) in self.s0v.iter_mut().zip(v) {
-            *acc += x as f64;
-        }
-        if self.order >= 1 {
-            for a in 0..d {
-                let ka = kn[a] as f64;
-                self.s1[a] += ka;
-                let row = &mut self.s1v[a * dv..(a + 1) * dv];
-                for (acc, &x) in row.iter_mut().zip(v) {
-                    *acc += ka * x as f64;
-                }
-            }
-        }
-        if self.order >= 2 {
-            let mut p = 0;
-            for a in 0..d {
-                let ka = kn[a] as f64;
-                for b in a..d {
-                    let kk = ka * kn[b] as f64;
-                    self.s2[p] += kk;
-                    let row = &mut self.s2v[p * dv..(p + 1) * dv];
-                    for (acc, &x) in row.iter_mut().zip(v) {
-                        *acc += kk * x as f64;
-                    }
-                    p += 1;
-                }
-            }
-        }
-    }
-
-    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
-        self.query_raw_normed(&self.normalized(q), num)
-    }
-
-    fn query_raw_prepped(&self, q: &[f32], num: &mut [f64]) -> f64 {
-        // prep_rows already applied the LayerNorm
-        self.query_raw_normed(q, num)
-    }
-
-    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
-        self.pair_weight_prepped(&self.normalized(q), &self.normalized(k))
-    }
-
-    /// LayerNorm a whole block of rows once — same arithmetic as
-    /// `normalized` per row, paid n times instead of n·c times.
-    fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32> {
-        let mut out = rows.to_vec();
-        if self.normalize_qk {
-            layernorm_noaffine(&mut out, n, self.d, LN_EPS);
-        }
-        out
-    }
-
-    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
-        let mut dot = 0.0f64;
-        for (&a, &b) in q.iter().zip(k) {
-            dot += a as f64 * b as f64;
-        }
-        taylor_exp(dot * self.scale, self.order)
-    }
-
-    fn state_elements(&self) -> usize {
-        1 + self.s0v.len() + self.s1.len() + self.s1v.len() + self.s2.len() + self.s2v.len()
-    }
-
-    fn save_state(&self, out: &mut Vec<f64>) {
-        out.reserve(self.state_elements());
-        out.push(self.s0);
-        out.extend_from_slice(&self.s0v);
-        out.extend_from_slice(&self.s1);
-        out.extend_from_slice(&self.s1v);
-        out.extend_from_slice(&self.s2);
-        out.extend_from_slice(&self.s2v);
-    }
-
-    fn load_state(&mut self, data: &[f64]) {
-        assert_eq!(data.len(), self.state_elements(), "HoState snapshot size");
-        let (head, rest) = data.split_at(1);
-        self.s0 = head[0];
-        let (a, rest) = rest.split_at(self.s0v.len());
-        self.s0v.copy_from_slice(a);
-        let (a, rest) = rest.split_at(self.s1.len());
-        self.s1.copy_from_slice(a);
-        let (a, rest) = rest.split_at(self.s1v.len());
-        self.s1v.copy_from_slice(a);
-        let (a, rest) = rest.split_at(self.s2.len());
-        self.s2.copy_from_slice(a);
-        self.s2v.copy_from_slice(rest);
-    }
-}
-
-impl AttentionGrad for HoState {
-    fn pair_weight_from_dot(&self, dot: f64) -> f64 {
-        taylor_exp(dot * self.scale, self.order)
-    }
-
-    fn pair_weight_dot_grad(&self, dot: f64) -> f64 {
-        // d/ds Tᵣ(s·scale) = scale · Tᵣ₋₁(s·scale); order 0 is constant
-        if self.order == 0 {
-            0.0
-        } else {
-            self.scale * taylor_exp(dot * self.scale, self.order - 1)
-        }
-    }
-
-    fn query_vjp(&self, qp: &[f32], dnum: &[f64], dden: f64, gstate: &mut [f64], gqp: &mut [f64]) {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(qp.len(), d, "q row");
-        assert_eq!(dnum.len(), dv, "dnum row");
-        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
-        let u: Vec<f64> = qp.iter().map(|&x| self.scale * x as f64).collect();
-        let mut du = vec![0.0f64; d];
-        // gstate layout == save_state: [s0, s0v, s1, s1v, s2, s2v]
-        gstate[0] += dden;
-        let mut off = 1;
-        for (g, &x) in gstate[off..off + dv].iter_mut().zip(dnum) {
-            *g += x;
-        }
-        off += dv;
-        if self.order >= 1 {
-            for a in 0..d {
-                gstate[off + a] += dden * u[a];
-                du[a] += dden * self.s1[a];
-            }
-            off += d;
-            for a in 0..d {
-                let srow = &self.s1v[a * dv..(a + 1) * dv];
-                let grow = &mut gstate[off + a * dv..off + (a + 1) * dv];
-                let mut acc = 0.0f64;
-                for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
-                    *g += u[a] * x;
-                    acc += x * s;
-                }
-                du[a] += acc;
-            }
-            off += d * dv;
-        }
-        if self.order >= 2 {
-            let off2v = off + self.s2.len();
-            let mut p = 0;
-            for a in 0..d {
-                for b in a..d {
-                    // f_p = ½u_a² (a = b) or u_a·u_b (a < b)
-                    let f = if a == b { 0.5 * u[a] * u[a] } else { u[a] * u[b] };
-                    gstate[off + p] += dden * f;
-                    let srow = &self.s2v[p * dv..(p + 1) * dv];
-                    let grow = &mut gstate[off2v + p * dv..off2v + (p + 1) * dv];
-                    let mut dfp = dden * self.s2[p];
-                    for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
-                        *g += f * x;
-                        dfp += x * s;
-                    }
-                    if a == b {
-                        du[a] += dfp * u[a];
-                    } else {
-                        du[a] += dfp * u[b];
-                        du[b] += dfp * u[a];
-                    }
-                    p += 1;
-                }
-            }
-        }
-        for (g, &x) in gqp.iter_mut().zip(&du) {
-            *g += self.scale * x;
-        }
-    }
-
-    fn absorb_vjp(&self, kp: &[f32], v: &[f32], gstate: &[f64], gkp: &mut [f64], gv: &mut [f64]) {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(kp.len(), d, "k row");
-        assert_eq!(v.len(), dv, "v row");
-        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
-        let kn: Vec<f64> = kp.iter().map(|&x| x as f64).collect();
-        // s0 += 1 carries no input gradient
-        let mut off = 1;
-        for (g, &gs) in gv.iter_mut().zip(&gstate[off..off + dv]) {
-            *g += gs;
-        }
-        off += dv;
-        if self.order >= 1 {
-            for a in 0..d {
-                gkp[a] += gstate[off + a];
-            }
-            off += d;
-            for a in 0..d {
-                let grow = &gstate[off + a * dv..off + (a + 1) * dv];
-                let mut acc = 0.0f64;
-                for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
-                    *gvc += kn[a] * gs;
-                    acc += gs * vc as f64;
-                }
-                gkp[a] += acc;
-            }
-            off += d * dv;
-        }
-        if self.order >= 2 {
-            let off2v = off + self.s2.len();
-            let mut p = 0;
-            for a in 0..d {
-                for b in a..d {
-                    let g2 = gstate[off + p];
-                    let grow = &gstate[off2v + p * dv..off2v + (p + 1) * dv];
-                    let kk = kn[a] * kn[b];
-                    let mut gvdot = 0.0f64;
-                    for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
-                        *gvc += kk * gs;
-                        gvdot += gs * vc as f64;
-                    }
-                    let s = g2 + gvdot;
-                    if a == b {
-                        // d(k_a²)/dk_a = 2k_a
-                        gkp[a] += 2.0 * kn[a] * s;
-                    } else {
-                        gkp[a] += kn[b] * s;
-                        gkp[b] += kn[a] * s;
-                    }
-                    p += 1;
-                }
-            }
-        }
-    }
-
-    fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64> {
-        if self.normalize_qk {
-            layernorm_noaffine_vjp(rows, n, self.d, LN_EPS, g)
-        } else {
-            g.to_vec()
-        }
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::streaming_forward;
+    use crate::kernels::{streaming_forward, RecurrentAttention};
     use crate::mathref;
     use crate::rng::Rng;
 
@@ -424,7 +68,8 @@ mod tests {
         let q = rng.normal_vec_f32(n * d, 1.0);
         let k = rng.normal_vec_f32(n * d, 1.0);
         let v = rng.normal_vec_f32(n * dv, 1.0);
-        for order in [0, 1, 2] {
+        // order 3 rides the same loop now — one kernel, one more block
+        for order in [0, 1, 2, 3] {
             for causal in [true, false] {
                 let oracle =
                     mathref::ho_attention(&q, &k, &v, n, n, d, dv, order, 3.0, causal, true);
@@ -471,7 +116,18 @@ mod tests {
         assert_eq!(st.state_elements(), before);
         // packed form: d(d+1)/2 second-order rows, not d²
         let t = d * (d + 1) / 2;
-        assert_eq!(before, 1 + dv + d + d * dv + t + t * dv);
+        assert_eq!(before, (1 + d + t) * (1 + dv));
+    }
+
+    #[test]
+    fn order3_state_is_the_packed_cubic() {
+        let (d, dv) = (8, 8);
+        let st = HoState::new(d, dv, 3, 3.0, true);
+        // C(d+2, 3) packed cubic rows, not d³
+        let t2 = d * (d + 1) / 2;
+        let t3 = d * (d + 1) * (d + 2) / 6;
+        assert_eq!(st.state_elements(), (1 + d + t2 + t3) * (1 + dv));
+        assert_eq!(st.order(), 3);
     }
 
     #[test]
@@ -481,7 +137,7 @@ mod tests {
         let q = rng.normal_vec_f32(d, 1.0);
         let k = rng.normal_vec_f32(d, 1.0);
         let v = rng.normal_vec_f32(dv, 1.0);
-        let mut a = HoState::paper(d, dv);
+        let mut a = HoState::new(d, dv, 3, 3.0, true);
         let mut out1 = vec![0.0f32; dv];
         a.step(&q, &k, &v, &mut out1);
         a.reset();
@@ -491,8 +147,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "orders 0..=2")]
-    fn rejects_order_three() {
-        HoState::new(4, 4, 3, 3.0, true);
+    #[should_panic(expected = "packed features")]
+    fn oversized_order_reports_the_computed_feature_dim() {
+        // the old assert claimed "order r needs d^r-sized state" — wrong
+        // (packed state is C(d+r−1, r) per degree, which is the whole
+        // point); the error now reports the computed feature dim
+        HoState::new(32, 64, 64, 3.0, true);
     }
 }

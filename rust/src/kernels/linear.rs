@@ -1,183 +1,28 @@
-//! First-order linear attention baseline (Katharopoulos et al. 2020):
-//! feature map φ(x) = elu(x)+1, state Σφ(k) and Σφ(k)⊗v.  Same
-//! [`RecurrentAttention`] contract as the higher-order kernel, O(d·dv)
-//! state, and the exact counterpart of `mathref::linear_attention`.
+//! First-order linear attention baseline (Katharopoulos et al. 2020) —
+//! a thin instantiation of the generic φ-outer-product recurrence:
+//! [`LinearState`] = [`PhiState`]<[`EluMap`]>.
+//!
+//! The elu(x)+1 feature map happens in the per-row prep stage, so the map
+//! proper is the identity, the state is `(Σφ(k), Σφ(k)⊗v)` with F = d,
+//! and the pair weight is a plain dot product — the exact counterpart of
+//! `mathref::linear_attention`.  The absorb/query/vjp bodies that used to
+//! be duplicated here live once in `kernels/phi.rs` now.
 
-use crate::kernels::{AttentionGrad, RecurrentAttention};
-use crate::mathref::elu1;
+use crate::kernels::{EluMap, PhiState};
 
 /// Recurrent state for elu+1 linear attention over one head.
-pub struct LinearState {
-    d: usize,
-    dv: usize,
-    /// Σ φ(k) — (d).
-    z: Vec<f64>,
-    /// Σ φ(k)⊗v — (d, dv) row-major.
-    m: Vec<f64>,
-}
+pub type LinearState = PhiState<EluMap>;
 
-impl LinearState {
+impl PhiState<EluMap> {
     pub fn new(d: usize, dv: usize) -> LinearState {
-        assert!(d > 0 && dv > 0, "empty head dims");
-        LinearState { d, dv, z: vec![0.0; d], m: vec![0.0; d * dv] }
-    }
-
-    /// State read with the query features supplied by `phi(a)`.
-    fn query_raw_phi<F: Fn(usize) -> f32>(&self, phi: F, num: &mut [f64]) -> f64 {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(num.len(), dv, "num row");
-        num.fill(0.0);
-        let mut den = 0.0f64;
-        for a in 0..d {
-            let p = phi(a) as f64;
-            den += p * self.z[a];
-            let row = &self.m[a * dv..(a + 1) * dv];
-            for (acc, &x) in num.iter_mut().zip(row) {
-                *acc += p * x;
-            }
-        }
-        den
-    }
-}
-
-impl RecurrentAttention for LinearState {
-    fn d(&self) -> usize {
-        self.d
-    }
-
-    fn dv(&self) -> usize {
-        self.dv
-    }
-
-    fn reset(&mut self) {
-        self.z.fill(0.0);
-        self.m.fill(0.0);
-    }
-
-    fn absorb(&mut self, k: &[f32], v: &[f32]) {
-        assert_eq!(k.len(), self.d, "k row");
-        let kp: Vec<f32> = k.iter().map(|&x| elu1(x)).collect();
-        self.absorb_prepped(&kp, v);
-    }
-
-    /// Absorb a key row with φ already applied ([`Self::prep_rows`]) —
-    /// the blocked path pays the feature map once per row.
-    fn absorb_prepped(&mut self, kp: &[f32], v: &[f32]) {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(kp.len(), d, "k row");
-        assert_eq!(v.len(), dv, "v row");
-        for a in 0..d {
-            let phi = kp[a] as f64;
-            self.z[a] += phi;
-            let row = &mut self.m[a * dv..(a + 1) * dv];
-            for (acc, &x) in row.iter_mut().zip(v) {
-                *acc += phi * x as f64;
-            }
-        }
-    }
-
-    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
-        assert_eq!(q.len(), self.d, "q row");
-        self.query_raw_phi(|a| elu1(q[a]), num)
-    }
-
-    fn query_raw_prepped(&self, q: &[f32], num: &mut [f64]) -> f64 {
-        // prep_rows already applied φ
-        assert_eq!(q.len(), self.d, "q row");
-        self.query_raw_phi(|a| q[a], num)
-    }
-
-    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
-        q.iter()
-            .zip(k)
-            .map(|(&a, &b)| elu1(a) as f64 * elu1(b) as f64)
-            .sum()
-    }
-
-    /// Apply φ once per row block; prepped pair weights are then plain
-    /// dot products.
-    fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
-        rows.iter().map(|&x| elu1(x)).collect()
-    }
-
-    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
-        q.iter().zip(k).map(|(&a, &b)| a as f64 * b as f64).sum()
-    }
-
-    fn state_elements(&self) -> usize {
-        self.z.len() + self.m.len()
-    }
-
-    fn save_state(&self, out: &mut Vec<f64>) {
-        out.reserve(self.state_elements());
-        out.extend_from_slice(&self.z);
-        out.extend_from_slice(&self.m);
-    }
-
-    fn load_state(&mut self, data: &[f64]) {
-        assert_eq!(data.len(), self.state_elements(), "LinearState snapshot size");
-        let (z, m) = data.split_at(self.z.len());
-        self.z.copy_from_slice(z);
-        self.m.copy_from_slice(m);
-    }
-}
-
-impl AttentionGrad for LinearState {
-    fn pair_weight_from_dot(&self, dot: f64) -> f64 {
-        dot
-    }
-
-    fn pair_weight_dot_grad(&self, _dot: f64) -> f64 {
-        1.0
-    }
-
-    fn query_vjp(&self, qp: &[f32], dnum: &[f64], dden: f64, gstate: &mut [f64], gqp: &mut [f64]) {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(qp.len(), d, "q row");
-        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
-        // gstate layout == save_state: [z (d), m (d·dv)]
-        for a in 0..d {
-            let u = qp[a] as f64;
-            gstate[a] += dden * u;
-            let srow = &self.m[a * dv..(a + 1) * dv];
-            let grow = &mut gstate[d + a * dv..d + (a + 1) * dv];
-            let mut acc = dden * self.z[a];
-            for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
-                *g += u * x;
-                acc += x * s;
-            }
-            gqp[a] += acc;
-        }
-    }
-
-    fn absorb_vjp(&self, kp: &[f32], v: &[f32], gstate: &[f64], gkp: &mut [f64], gv: &mut [f64]) {
-        let (d, dv) = (self.d, self.dv);
-        assert_eq!(kp.len(), d, "k row");
-        assert_eq!(v.len(), dv, "v row");
-        for a in 0..d {
-            let grow = &gstate[d + a * dv..d + (a + 1) * dv];
-            let mut acc = gstate[a];
-            for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
-                *gvc += kp[a] as f64 * gs;
-                acc += gs * vc as f64;
-            }
-            gkp[a] += acc;
-        }
-    }
-
-    fn prep_rows_vjp(&self, rows: &[f32], _n: usize, g: &[f64]) -> Vec<f64> {
-        // φ = elu+1: φ'(x) = 1 for x > 0, eˣ otherwise
-        rows.iter()
-            .zip(g)
-            .map(|(&x, &gp)| gp * if x > 0.0 { 1.0 } else { (x as f64).exp() })
-            .collect()
+        PhiState::with_map(EluMap::new(d), dv)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::streaming_forward;
+    use crate::kernels::{streaming_forward, RecurrentAttention};
     use crate::mathref;
     use crate::rng::Rng;
 

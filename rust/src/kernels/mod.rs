@@ -1,63 +1,126 @@
-//! Native O(n) attention kernels — the paper's factorized recurrent form.
+//! Native O(n) attention kernels — the paper's factorized recurrent form,
+//! organized around one abstraction: the **feature map**.
 //!
-//! `mathref` holds the direct O(n²) oracles; this module holds the thing
-//! the paper is actually about: the same attention computed from running
-//! prefix-sum state, so cost is linear in sequence length and decoding is
-//! O(1) per token.  For the order-2 Taylor kernel
-//!
-//! ```text
-//! w(q, k) = 1 + u·k + ½(u·k)²          with u = q / (α√d)   (after LN)
-//! ```
-//!
-//! the weighted sums over history factorize through the moment states
+//! Attention with kernelized weight `w(q, k) = φ_q(q)·φ_k(k)` factorizes
+//! through constant-size moment state
 //!
 //! ```text
-//! Σ1 (scalar)   Σk (d)   Σk⊗v (d×dv)   Σk⊗k (d²)   Σ(k⊗k)⊗v (d²×dv)
+//! Z = Σⱼ φ_k(kⱼ)        (feature_dim)
+//! M = Σⱼ φ_k(kⱼ) ⊗ vⱼ   (feature_dim × dv)
+//! out(q) = φ_q(q)·M / max(φ_q(q)·Z, DEN_FLOOR)
 //! ```
 //!
-//! where the second-order tensors are symmetric in the two k indices and
-//! are stored in packed d(d+1)/2 form (off-diagonal entries weighted 2×
-//! on the query side).  Three evaluation strategies share one state type:
+//! so cost is linear in sequence length and decoding is O(1) per token —
+//! for *any* φ.  The layer is split accordingly:
 //!
-//! * [`RecurrentAttention::step`] — streaming: absorb one (k, v), query
-//!   one q.  O(1) per token; this is the serving decode path.
-//! * [`streaming_forward`] — full sequence via repeated `step` (causal)
-//!   or absorb-all-then-query (non-causal).
-//! * [`chunked_forward`] — cache-blocked training form: direct O(c²)
-//!   weights inside each chunk, recurrent state across chunks.
+//! * [`FeatureMap`] ([`featuremap`]) — the φs: [`TaylorMap`] (the paper's
+//!   kernel at **any** Taylor order r, packed symmetric features,
+//!   `Σ_{j≤r} C(d+j−1, j)` per row) and [`EluMap`] (elu+1, Katharopoulos
+//!   et al. 2020).
+//! * [`PhiState`] ([`phi`]) — the recurrence, implemented **once**:
+//!   absorb / query / snapshot ([`RecurrentAttention`]) and the
+//!   state-gradient VJPs ([`AttentionGrad`]).  [`HoState`] and
+//!   [`LinearState`] are type aliases instantiating it.
+//! * three evaluation strategies over one state type:
+//!   [`RecurrentAttention::step`] (streaming decode),
+//!   [`streaming_forward`], and the cache-blocked [`chunked_forward`]
+//!   (direct O(c²) pair weights inside a chunk via
+//!   [`AttentionGrad::pair_weight_from_dot`], recurrent state across
+//!   chunks).  [`chunked_attention_vjp`] ([`grad`]) runs the same shape
+//!   backward.  [`NativeBackend`] ([`backend`]) wraps construction +
+//!   head/batch loops behind the `(kind, bh, n, d)` surface.
 //!
-//! [`NativeBackend`] wraps kernel construction + head/batch loops behind
-//! the same `(kind, bh, n, d)` surface as `mathref::attention_bhnd`, so
-//! examples, benches and tests run end-to-end with no PJRT artifacts and
-//! no Python.  Everything here is checked against the `mathref` oracles
-//! in `rust/tests/proptests.rs`.
+//! # Adding a feature map (~30 lines)
 //!
-//! Training runs backward through the same recurrence: [`grad`] carries
-//! a state-*gradient* across chunks (mirroring the forward's prefix
-//! sums) and differentiates the intra-chunk triangle directly —
-//! finite-difference-checked in `rust/tests/grad_check.rs`.
+//! Implement [`FeatureMap`] and everything above comes for free — state,
+//! O(1) decode, chunked training forward, hand-derived backward,
+//! snapshot/preemption and the serve scheduler.  For a pointwise φ
+//! (like elu+1) that is nine mostly-one-line methods:
+//!
+//! ```ignore
+//! struct SquaredMap { d: usize }
+//! impl FeatureMap for SquaredMap {
+//!     fn d(&self) -> usize { self.d }
+//!     fn feature_dim(&self) -> usize { self.d }
+//!     // φ(x) = x² + 1 applied row-wise in prep; map is then identity
+//!     fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
+//!         rows.iter().map(|&x| x * x + 1.0).collect()
+//!     }
+//!     fn prep_rows_vjp(&self, rows: &[f32], _n: usize, g: &[f64]) -> Vec<f64> {
+//!         rows.iter().zip(g).map(|(&x, &gp)| gp * 2.0 * x as f64).collect()
+//!     }
+//!     fn map_q(&self, xp: &[f32], out: &mut [f64]) {
+//!         for (o, &x) in out.iter_mut().zip(xp) { *o = x as f64; }
+//!     }
+//!     fn map_k(&self, xp: &[f32], out: &mut [f64]) { self.map_q(xp, out) }
+//!     fn map_q_vjp(&self, _xp: &[f32], dphi: &[f64], dxp: &mut [f64]) {
+//!         for (o, &g) in dxp.iter_mut().zip(dphi) { *o += g; }
+//!     }
+//!     fn map_k_vjp(&self, xp: &[f32], dphi: &[f64], dxp: &mut [f64]) {
+//!         self.map_q_vjp(xp, dphi, dxp)
+//!     }
+//!     fn pair_weight_from_dot(&self, dot: f64) -> f64 { dot }
+//!     fn pair_weight_dot_grad(&self, _dot: f64) -> f64 { 1.0 }
+//! }
+//! // PhiState::with_map(SquaredMap { d }, dv) now decodes, trains, serves.
+//! ```
+//!
+//! A non-pointwise φ (e.g. a SOFT-style Gaussian random-features kernel
+//! from PAPERS.md) instead does its work in `map_q`/`map_k` — see
+//! [`TaylorMap`] for the full-strength example with asymmetric q/k sides.
+//!
+//! Everything here is checked against the independent O(n²) `mathref`
+//! oracles in `rust/tests/proptests.rs` (orders 0–3), FD-checked in
+//! `rust/tests/grad_check.rs`, and pinned bit-identical to the
+//! pre-`FeatureMap` order-≤2 kernels in `rust/tests/golden_order2.rs`.
 
 pub mod backend;
 pub mod chunked;
+pub mod featuremap;
 pub mod grad;
 pub mod ho;
 pub mod linear;
+pub mod phi;
 
 pub use self::backend::{Evaluation, NativeBackend};
 pub use self::chunked::chunked_forward;
+pub use self::featuremap::{
+    taylor_feature_dim, EluMap, FeatureMap, TaylorMap, MAX_TAYLOR_FEATURES,
+};
 pub use self::grad::{chunked_attention_vjp, softmax_attention_vjp, AttentionGrad};
 pub use self::ho::HoState;
 pub use self::linear::LinearState;
+pub use self::phi::PhiState;
 
 /// Denominator clamp, identical to the `mathref` oracles: row weights are
-/// positive by construction (order-2 Taylor ≥ ½, elu+1 > 0), so this only
-/// guards the empty-history edge of step-0 decode.
+/// positive by construction (even-order Taylor ≥ ½ⁱˢʰ, elu+1 > 0), so in
+/// practice this only guards the empty-history edge of step-0 decode and
+/// pathological φ values.
 pub const DEN_FLOOR: f64 = 1e-6;
+
+/// The one shared denominator clamp used by every read path (the trait's
+/// [`RecurrentAttention::query`], [`streaming_forward`],
+/// [`chunked_forward`] and the backward replay in [`grad`]) — previously
+/// each carried its own `max(DEN_FLOOR)` copy that could drift.
+#[inline]
+pub fn floor_den(den: f64) -> f64 {
+    den.max(DEN_FLOOR)
+}
+
+/// Whether a raw denominator sits at/below the floor.  At the floor the
+/// clamped denominator is a constant, so the backward takes the
+/// subgradient `∂out/∂den = 0` — [`grad`] uses this exact predicate so
+/// forward and backward cannot disagree about which side of the clamp a
+/// position is on.
+#[inline]
+pub fn den_is_clamped(den: f64) -> bool {
+    den <= DEN_FLOOR
+}
 
 /// A linear-time attention kernel kept as running prefix-sum state.
 ///
-/// The contract tying the three forms together: after `absorb`ing keys
-/// k₁..kₘ with values v₁..vₘ,
+/// The contract tying the three evaluation forms together: after
+/// `absorb`ing keys k₁..kₘ with values v₁..vₘ,
 ///
 /// ```text
 /// query_raw(q, num) == ( Σⱼ pair_weight(q, kⱼ) · vⱼ ,  Σⱼ pair_weight(q, kⱼ) )
@@ -66,7 +129,8 @@ pub const DEN_FLOOR: f64 = 1e-6;
 /// up to floating-point reassociation — which is exactly what lets
 /// `chunked_forward` mix recurrent inter-chunk state with direct
 /// intra-chunk weights, and what the property tests pin against the
-/// O(n²) oracle.
+/// O(n²) oracle.  The single implementation is [`PhiState`]; this trait
+/// is the object-safe surface the model/serve layers consume.
 pub trait RecurrentAttention {
     /// Key/query feature dimension.
     fn d(&self) -> usize;
@@ -97,7 +161,7 @@ pub trait RecurrentAttention {
     /// the direct form used for intra-chunk blocks and oracle checks.
     fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64;
 
-    /// Apply the kernel's per-row preprocessing (LayerNorm, feature map)
+    /// Apply the kernel's per-row preprocessing (LayerNorm, pointwise φ)
     /// to `n` rows at once, so blocked paths pay it once per row instead
     /// of once per pair. Default: identity copy.
     fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
@@ -126,7 +190,8 @@ pub trait RecurrentAttention {
     /// Append the full state to `out` as exactly [`Self::state_elements`]
     /// f64 values.  This is the serialization used by
     /// `model::DecodeSession::snapshot` for slot preemption; the layout is
-    /// kernel-private but stable within a process.
+    /// kernel-private but stable within a process (for [`PhiState`]:
+    /// `[Z (F), M (F·dv)]`).
     fn save_state(&self, out: &mut Vec<f64>);
 
     /// Restore state previously written by [`Self::save_state`].  `data`
@@ -139,7 +204,7 @@ pub trait RecurrentAttention {
     /// far. `out` has length `dv()`.
     fn query(&self, q: &[f32], out: &mut [f32]) {
         let mut num = vec![0.0f64; self.dv()];
-        let den = self.query_raw(q, &mut num).max(DEN_FLOOR);
+        let den = floor_den(self.query_raw(q, &mut num));
         for (o, x) in out.iter_mut().zip(&num) {
             *o = (x / den) as f32;
         }
@@ -182,10 +247,25 @@ pub fn streaming_forward<K: RecurrentAttention + ?Sized>(
         if causal {
             kernel.absorb(&k[i * d..(i + 1) * d], &v[i * dv..(i + 1) * dv]);
         }
-        let den = kernel.query_raw(&q[i * d..(i + 1) * d], &mut num).max(DEN_FLOOR);
+        let den = floor_den(kernel.query_raw(&q[i * d..(i + 1) * d], &mut num));
         for (o, &x) in out[i * dv..(i + 1) * dv].iter_mut().zip(num.iter()) {
             *o = (x / den) as f32;
         }
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_den_and_clamp_predicate_agree() {
+        // one helper, one predicate: a denominator is clamped exactly
+        // when flooring changed (or pinned) it
+        for den in [-1.0, 0.0, 1e-9, DEN_FLOOR, 1e-3, 7.5] {
+            assert_eq!(floor_den(den), den.max(DEN_FLOOR));
+            assert_eq!(den_is_clamped(den), floor_den(den) > den || den == DEN_FLOOR);
+        }
+    }
 }

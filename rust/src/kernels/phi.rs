@@ -1,0 +1,304 @@
+//! `PhiState` — the one φ-outer-product recurrence every kernel runs on.
+//!
+//! For any [`FeatureMap`] φ the kernelized attention weights factorize:
+//!
+//! ```text
+//! Σⱼ w(q, kⱼ)·vⱼ = φ_q(q) · Σⱼ φ_k(kⱼ)⊗vⱼ      (numerator)
+//! Σⱼ w(q, kⱼ)    = φ_q(q) · Σⱼ φ_k(kⱼ)         (denominator)
+//! ```
+//!
+//! so the whole history lives in the moment state `(Σφ_k(k), Σφ_k(k)⊗v)`
+//! — `feature_dim · (1 + dv)` f64s, constant in sequence length.  This
+//! type implements [`RecurrentAttention`] (absorb / query / snapshot)
+//! and [`AttentionGrad`] (the state-gradient VJPs) **once**; the historic
+//! `HoState` / `LinearState` are now just type aliases instantiating it
+//! with [`TaylorMap`] / `EluMap` (see `kernels/ho.rs`, `kernels/linear.rs`).
+//!
+//! For [`TaylorMap`] at order ≤ 2 the feature layout reproduces the
+//! pre-`FeatureMap` `s0/s1/s2` packed layout entry for entry, and every
+//! accumulator here runs the same f64 additions in the same order as the
+//! deleted hand-specialized bodies — order ≤ 2 outputs are bit-identical
+//! (pinned against a verbatim copy of the old kernels in
+//! `rust/tests/golden_order2.rs`).
+//!
+//! All state is f64 — running sums live across entire sequences, where
+//! f32 cancellation would show up long before the 1e-4 oracle tolerance.
+
+use std::cell::RefCell;
+
+use crate::kernels::{AttentionGrad, FeatureMap, RecurrentAttention, TaylorMap};
+
+/// Recurrent kernelized-attention state over one head for feature map `M`.
+pub struct PhiState<M: FeatureMap> {
+    map: M,
+    dv: usize,
+    /// Σ φ_k(k) — (F).
+    z: Vec<f64>,
+    /// Σ φ_k(k)⊗v — (F, dv) row-major.
+    m: Vec<f64>,
+    /// Reused feature buffer for absorb/query — the decode hot path runs
+    /// both once per token per (layer, head) and must not allocate a
+    /// feature_dim-sized Vec each time.  `RefCell` because `query_raw`
+    /// takes `&self`; states are owned per decode slot / per attention
+    /// unit and never shared across threads (`Send`, not `Sync`).
+    phi_scratch: RefCell<Vec<f64>>,
+}
+
+impl<M: FeatureMap> PhiState<M> {
+    /// Empty state for `map` with value dimension `dv`.
+    pub fn with_map(map: M, dv: usize) -> PhiState<M> {
+        assert!(dv > 0, "empty value dim");
+        let f = map.feature_dim();
+        PhiState {
+            map,
+            dv,
+            z: vec![0.0; f],
+            m: vec![0.0; f * dv],
+            phi_scratch: RefCell::new(vec![0.0; f]),
+        }
+    }
+
+    /// The feature map driving this state.
+    pub fn feature_map(&self) -> &M {
+        &self.map
+    }
+
+    /// Features of the state (= per-degree packed moments for Taylor).
+    pub fn feature_dim(&self) -> usize {
+        self.z.len()
+    }
+}
+
+impl PhiState<TaylorMap> {
+    /// Taylor order of the underlying [`TaylorMap`].
+    pub fn order(&self) -> usize {
+        self.feature_map().order()
+    }
+}
+
+impl<M: FeatureMap> RecurrentAttention for PhiState<M> {
+    fn d(&self) -> usize {
+        self.map.d()
+    }
+
+    fn dv(&self) -> usize {
+        self.dv
+    }
+
+    fn reset(&mut self) {
+        self.z.fill(0.0);
+        self.m.fill(0.0);
+    }
+
+    fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        let kp = self.map.prep_rows(k, 1);
+        self.absorb_prepped(&kp, v);
+    }
+
+    /// Absorb a key row that already went through [`Self::prep_rows`] —
+    /// the blocked path pays the per-row prep once instead of twice.
+    fn absorb_prepped(&mut self, kp: &[f32], v: &[f32]) {
+        let dv = self.dv;
+        assert_eq!(kp.len(), self.map.d(), "k row");
+        assert_eq!(v.len(), dv, "v row");
+        let mut phi = self.phi_scratch.borrow_mut();
+        self.map.map_k(kp, &mut phi);
+        for (a, &p) in phi.iter().enumerate() {
+            self.z[a] += p;
+            let row = &mut self.m[a * dv..(a + 1) * dv];
+            for (acc, &x) in row.iter_mut().zip(v) {
+                *acc += p * x as f64;
+            }
+        }
+    }
+
+    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        let qp = self.map.prep_rows(q, 1);
+        self.query_raw_prepped(&qp, num)
+    }
+
+    fn query_raw_prepped(&self, qp: &[f32], num: &mut [f64]) -> f64 {
+        let dv = self.dv;
+        assert_eq!(qp.len(), self.map.d(), "q row");
+        assert_eq!(num.len(), dv, "num row");
+        let mut phi = self.phi_scratch.borrow_mut();
+        self.map.map_q(qp, &mut phi);
+        num.fill(0.0);
+        let mut den = 0.0f64;
+        for (a, &p) in phi.iter().enumerate() {
+            den += p * self.z[a];
+            let row = &self.m[a * dv..(a + 1) * dv];
+            for (acc, &x) in num.iter_mut().zip(row) {
+                *acc += p * x;
+            }
+        }
+        den
+    }
+
+    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
+        self.pair_weight_prepped(&self.map.prep_rows(q, 1), &self.map.prep_rows(k, 1))
+    }
+
+    fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32> {
+        self.map.prep_rows(rows, n)
+    }
+
+    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
+        let mut dot = 0.0f64;
+        for (&a, &b) in q.iter().zip(k) {
+            dot += a as f64 * b as f64;
+        }
+        self.map.pair_weight_from_dot(dot)
+    }
+
+    fn state_elements(&self) -> usize {
+        self.z.len() + self.m.len()
+    }
+
+    fn save_state(&self, out: &mut Vec<f64>) {
+        out.reserve(self.state_elements());
+        out.extend_from_slice(&self.z);
+        out.extend_from_slice(&self.m);
+    }
+
+    fn load_state(&mut self, data: &[f64]) {
+        assert_eq!(data.len(), self.state_elements(), "PhiState snapshot size");
+        let (z, m) = data.split_at(self.z.len());
+        self.z.copy_from_slice(z);
+        self.m.copy_from_slice(m);
+    }
+}
+
+impl<M: FeatureMap> AttentionGrad for PhiState<M> {
+    fn pair_weight_from_dot(&self, dot: f64) -> f64 {
+        self.map.pair_weight_from_dot(dot)
+    }
+
+    fn pair_weight_dot_grad(&self, dot: f64) -> f64 {
+        self.map.pair_weight_dot_grad(dot)
+    }
+
+    fn query_vjp(&self, qp: &[f32], dnum: &[f64], dden: f64, gstate: &mut [f64], gqp: &mut [f64]) {
+        let (f, dv) = (self.z.len(), self.dv);
+        assert_eq!(qp.len(), self.map.d(), "q row");
+        assert_eq!(dnum.len(), dv, "dnum row");
+        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
+        let mut phi = vec![0.0f64; f];
+        self.map.map_q(qp, &mut phi);
+        // gstate layout == save_state: [z (F), m (F·dv)]
+        let mut dphi = vec![0.0f64; f];
+        for (a, &p) in phi.iter().enumerate() {
+            gstate[a] += dden * p;
+            let mut acc = dden * self.z[a];
+            let srow = &self.m[a * dv..(a + 1) * dv];
+            let grow = &mut gstate[f + a * dv..f + (a + 1) * dv];
+            for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
+                *g += p * x;
+                acc += x * s;
+            }
+            dphi[a] = acc;
+        }
+        self.map.map_q_vjp(qp, &dphi, gqp);
+    }
+
+    fn absorb_vjp(&self, kp: &[f32], v: &[f32], gstate: &[f64], gkp: &mut [f64], gv: &mut [f64]) {
+        let (f, dv) = (self.z.len(), self.dv);
+        assert_eq!(kp.len(), self.map.d(), "k row");
+        assert_eq!(v.len(), dv, "v row");
+        assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
+        let mut phi = vec![0.0f64; f];
+        self.map.map_k(kp, &mut phi);
+        let mut dphi = vec![0.0f64; f];
+        for (a, &p) in phi.iter().enumerate() {
+            let grow = &gstate[f + a * dv..f + (a + 1) * dv];
+            let mut acc = gstate[a];
+            for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
+                *gvc += p * gs;
+                acc += gs * vc as f64;
+            }
+            dphi[a] = acc;
+        }
+        self.map.map_k_vjp(kp, &dphi, gkp);
+    }
+
+    fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64> {
+        self.map.prep_rows_vjp(rows, n, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{streaming_forward, EluMap};
+    use crate::rng::Rng;
+
+    #[test]
+    fn state_count_is_feature_dim_times_one_plus_dv() {
+        let (d, dv) = (6, 5);
+        for order in 0..=3 {
+            let st = PhiState::with_map(TaylorMap::new(d, order, 3.0, true), dv);
+            let f = st.feature_dim();
+            assert_eq!(st.state_elements(), f * (1 + dv), "order {order}");
+        }
+        let st = PhiState::with_map(EluMap::new(d), dv);
+        assert_eq!(st.state_elements(), d * (1 + dv));
+    }
+
+    #[test]
+    fn save_load_roundtrip_any_map() {
+        let mut rng = Rng::new(81);
+        let (d, dv) = (5, 4);
+        let mut a = PhiState::with_map(TaylorMap::new(d, 3, 2.0, true), dv);
+        for _ in 0..6 {
+            a.absorb(&rng.normal_vec_f32(d, 1.0), &rng.normal_vec_f32(dv, 1.0));
+        }
+        let mut snap = Vec::new();
+        a.save_state(&mut snap);
+        let mut b = PhiState::with_map(TaylorMap::new(d, 3, 2.0, true), dv);
+        b.load_state(&snap);
+        let q = rng.normal_vec_f32(d, 1.0);
+        let mut na = vec![0.0f64; dv];
+        let mut nb = vec![0.0f64; dv];
+        assert_eq!(a.query_raw(&q, &mut na), b.query_raw(&q, &mut nb));
+        assert_eq!(na, nb);
+    }
+
+    #[test]
+    fn order3_recurrence_matches_oracle() {
+        // the genuinely new data point: order-3 streaming ≡ the direct
+        // O(n²) Taylor-3 oracle
+        let mut rng = Rng::new(82);
+        let (n, d, dv) = (14, 6, 5);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        for causal in [true, false] {
+            let oracle =
+                crate::mathref::ho_attention(&q, &k, &v, n, n, d, dv, 3, 3.0, causal, true);
+            let mut st = PhiState::with_map(TaylorMap::new(d, 3, 3.0, true), dv);
+            let got = streaming_forward(&mut st, &q, &k, &v, n, causal);
+            for (a, b) in got.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-5, "causal {causal}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_v_is_reproduced_at_order3() {
+        // row-normalized weights reproduce a constant v exactly, at any
+        // order — the denominator really is the summed weights
+        let mut rng = Rng::new(83);
+        let (d, dv) = (8, 8);
+        let mut st = PhiState::with_map(TaylorMap::new(d, 3, 3.0, true), dv);
+        let constant_v = vec![1.5f32; dv];
+        let mut out = vec![0.0f32; dv];
+        for _ in 0..20 {
+            let q = rng.normal_vec_f32(d, 1.0);
+            let k = rng.normal_vec_f32(d, 1.0);
+            st.step(&q, &k, &constant_v, &mut out);
+            for &x in &out {
+                assert!((x - 1.5).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -8,13 +8,17 @@
 //! The crate has **two execution paths**:
 //!
 //! * **Native (default, zero setup)** — [`kernels`] implements the
-//!   factorized recurrence directly in Rust: a streaming [`kernels::HoState`]
-//!   with `step(q, k, v)` for autoregressive decode, a cache-blocked
-//!   [`kernels::chunked_forward`] for full sequences, the elu+1 first-order
-//!   baseline behind the same [`kernels::RecurrentAttention`] trait, and
-//!   [`kernels::NativeBackend`] tying them into the batched `(b·h, n, d)`
-//!   layout. [`mathref`] keeps the direct O(n²) evaluations as independent
-//!   oracles; the property tests pin recurrent ≡ chunked ≡ oracle.
+//!   factorized recurrence directly in Rust, organized around one
+//!   [`kernels::FeatureMap`] abstraction: a single generic
+//!   [`kernels::PhiState`] recurrence (absorb / O(1)-decode `step` /
+//!   backward) instantiated by [`kernels::TaylorMap`] (the paper's
+//!   kernel at *any* Taylor order — `ho_tiny_o3` runs order 3, beyond
+//!   the paper) and [`kernels::EluMap`] (the elu+1 first-order
+//!   baseline), a cache-blocked [`kernels::chunked_forward`] for full
+//!   sequences, and [`kernels::NativeBackend`] tying them into the
+//!   batched `(b·h, n, d)` layout. [`mathref`] keeps the direct O(n²)
+//!   evaluations as independent oracles; the property tests pin
+//!   recurrent ≡ chunked ≡ oracle across orders 0–3.
 //!   On top of the kernels, [`model`] is a full pure-Rust transformer —
 //!   chunked prefill, O(1)-state [`model::DecodeSession`] decoding, the
 //!   [`model::Executor`] trait the coordinator serves through, and

@@ -103,7 +103,14 @@ ARTIFACT-FREE QUICKSTART (pure-Rust executor; no artifacts, no Python):
   holt serve    --backend native --synthetic --requests 8
   holt serve    --backend native --model ho2_tiny       # TCP on :8490
   holt eval     --backend native --model ho2_tiny --task charlm
+  holt crosscheck --native                # Taylor orders 0-3 vs the oracle
+
+ORDER-3 QUICKSTART (beyond the paper: same kernel, one more Taylor term —
+`ho[_oR]` makes the order a config value, `ho_tiny_o3` = order 3):
   holt crosscheck --native
+  holt train    --backend native --model ho_tiny_o3 --task copy --steps 40
+  holt generate --backend native --model ho_tiny_o3 --max-tokens 16
+  holt serve    --backend native --model ho_tiny_o3 --synthetic --requests 4
 
 COMMANDS
   info       [--backend native|artifact] list models (and artifacts)
@@ -140,10 +147,12 @@ COMMANDS
                                            terminal chart of metric curves
   ckpt-info  --ckpt FILE                   inspect a checkpoint
 
-Native model names: {attn}_{preset} with attn in {ho2, linear, softmax}
-and preset in {tiny, small, base, large}, e.g. ho2_small, linear_tiny,
-plus ablation variants like ho2_tiny_a1_o1.  The artifact path locates
-artifacts via $HOLT_ARTIFACTS or ./artifacts.
+Native model names: {attn}_{preset}[_aA][_oR] with attn in {ho, ho2,
+linear, softmax} and preset in {tiny, small, base, large}, e.g.
+ho2_small, linear_tiny, ho2_tiny_a1_o1.  `ho` is the Taylor kernel at
+any order R (default 2) — ho_tiny_o3 runs the order-3 experiment the
+paper never did; `ho2` stays as the historic alias.  The artifact path
+locates artifacts via $HOLT_ARTIFACTS or ./artifacts.
 ";
 
 fn main() {
@@ -269,7 +278,8 @@ fn cmd_info(args: &Args) -> Result<()> {
             }
         }
         println!(
-            "\n(+ ablation variants like ho2_tiny_a1_o1; \
+            "\n(+ ablation variants like ho2_tiny_a1_o1 and higher Taylor orders \
+             via ho_{{preset}}_oR, e.g. ho_tiny_o3; \
              `holt info --backend artifact` lists lowered artifacts)"
         );
         return Ok(());
@@ -606,10 +616,11 @@ fn cmd_fig1(args: &Args) -> Result<()> {
 
 fn cmd_crosscheck(args: &Args) -> Result<()> {
     if args.has("native") {
-        for kind in ["ho2", "linear"] {
+        for kind in ["ho", "linear"] {
             let err = experiments::crosscheck_native(kind, 7, 1e-4)?;
+            let scope = if kind == "ho" { "orders 0-3, " } else { "" };
             println!(
-                "native {kind:<10} (streaming + chunked, causal + non-causal) \
+                "native {kind:<10} ({scope}streaming + chunked, causal + non-causal) \
                  max|diff| vs O(n^2) oracle = {err:.2e}  OK"
             );
         }

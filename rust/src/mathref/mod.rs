@@ -207,7 +207,8 @@ pub fn linear_attention(
 
 /// Run a single-head attention reference over a (b, h, n, d) tensor the
 /// way the AOT attention artifacts are shaped. kind: "softmax" | "linear"
-/// | "ho2" (with order/alpha).
+/// | "ho"/"ho2" (the Taylor kernel, any order/alpha — "ho2" is the
+/// historic spelling kept as an alias).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_bhnd(
     kind: &str,
@@ -232,7 +233,7 @@ pub fn attention_bhnd(
         let o = match kind {
             "softmax" => softmax_attention(qs, ks, vs, n, n, d, d, causal),
             "linear" => linear_attention(qs, ks, vs, n, n, d, d, causal),
-            "ho2" => ho_attention(qs, ks, vs, n, n, d, d, order, alpha, causal, true),
+            "ho" | "ho2" => ho_attention(qs, ks, vs, n, n, d, d, order, alpha, causal, true),
             _ => panic!("unknown attention kind {kind}"),
         };
         out[s * stride..(s + 1) * stride].copy_from_slice(&o);

@@ -79,4 +79,4 @@ pub mod presets;
 pub use self::decode::{DecodeSession, SessionSnapshot};
 pub use self::executor::{ArtifactExecutor, Executor, NativeExecutor, SKIP};
 pub use self::forward::{LayerView, NativeModel};
-pub use self::presets::{native_model_entry, ho_feature_dim, ATTN_KINDS, PRESET_NAMES};
+pub use self::presets::{native_model_entry, ho_feature_dim, is_ho, ATTN_KINDS, PRESET_NAMES};

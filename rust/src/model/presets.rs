@@ -14,19 +14,31 @@
 //! ```
 //!
 //! e.g. `ho2_small`, `linear_tiny`, `softmax_base`, `ho2_tiny_a1_o2`
-//! (the E6 ablation grid).  `attn` ∈ {ho2, linear, softmax}; `preset` ∈
-//! {tiny, small, base, large}.
+//! (the E6 ablation grid), `ho_tiny_o3` (the order-3 run the paper never
+//! did).  `attn` ∈ {ho, ho2, linear, softmax} — `ho` is the Taylor
+//! kernel at any order R ≥ 0 via the `_oR` suffix (default 2), `ho2`
+//! the historic spelling kept as an alias (also `_oR`-overridable);
+//! `preset` ∈ {tiny, small, base, large}.  For `ho` kinds the packed
+//! per-head feature dim `Σ_{j≤R} C(d_head+j−1, j)` is validated here so
+//! an absurd order fails with a number, not an allocation.
 
 use anyhow::{bail, Result};
 
+use crate::kernels::{taylor_feature_dim, MAX_TAYLOR_FEATURES};
 use crate::runtime::{Init, LeafSpec, ModelConfig, ModelEntry};
 use crate::tokenizer::VOCAB_SIZE;
 
 /// Preset names, in size order (mirror of python PRESETS).
 pub const PRESET_NAMES: [&str; 4] = ["tiny", "small", "base", "large"];
 
-/// Attention kinds a model can be built with.
+/// Canonical attention kinds (what `holt info` lists); [`parse_name`]
+/// additionally accepts the generalized `ho` spelling — see [`is_ho`].
 pub const ATTN_KINDS: [&str; 3] = ["ho2", "linear", "softmax"];
+
+/// Whether an attention-kind string is the Taylor (higher-order) family.
+pub fn is_ho(attn: &str) -> bool {
+    matches!(attn, "ho" | "ho2")
+}
 
 /// Base [`ModelConfig`] for a preset (attention defaults: ho2, order 2,
 /// α = 3 — overridden by the name's suffixes) — mirror of configs.py:
@@ -58,21 +70,32 @@ fn base_config(preset: &str) -> Option<ModelConfig> {
     }
 }
 
-/// Feature dimension of the (unpacked) HO feature map for head dim `d` —
-/// mirror of python `ref.ho_feature_dim`; used only for the informational
-/// `state_spec` (the native kernels store the packed d(d+1)/2 form).
+/// Feature dimension of the (unpacked) HO feature map for head dim `d`:
+/// `Σ_{j≤order} dʲ` — mirror of python `ref.ho_feature_dim`, saturating
+/// on overflow; used only for the informational `state_spec` (the native
+/// kernels store the packed `Σ_{j≤order} C(d+j−1, j)` form — see
+/// [`crate::kernels::taylor_feature_dim`]).
 pub fn ho_feature_dim(d: usize, order: usize) -> usize {
-    1 + if order >= 1 { d } else { 0 } + if order >= 2 { d * d } else { 0 }
+    let mut total = 0usize;
+    let mut block = 1usize;
+    for j in 0..=order {
+        if j > 0 {
+            block = block.saturating_mul(d);
+        }
+        total = total.saturating_add(block);
+    }
+    total
 }
 
 /// Parse a manifest-style model name into a [`ModelConfig`].
 fn parse_name(name: &str) -> Result<ModelConfig> {
     let mut parts = name.split('_');
     let attn = parts.next().unwrap_or_default();
-    if !ATTN_KINDS.contains(&attn) {
+    if !(ATTN_KINDS.contains(&attn) || attn == "ho") {
         bail!(
             "unknown model '{name}': want {{attn}}_{{preset}}[_a{{alpha}}][_o{{order}}] \
-             with attn in {ATTN_KINDS:?} and preset in {PRESET_NAMES:?}"
+             with attn in {ATTN_KINDS:?} (or `ho` — any Taylor order via _oR) \
+             and preset in {PRESET_NAMES:?}"
         );
     }
     let preset = parts.next().unwrap_or_default();
@@ -88,8 +111,8 @@ fn parse_name(name: &str) -> Result<ModelConfig> {
             };
         } else if let Some(o) = part.strip_prefix('o') {
             cfg.order = match o.parse() {
-                Ok(x) if x <= 2 => x,
-                _ => bail!("bad order suffix '{part}' in model '{name}' (orders 0..=2)"),
+                Ok(x) => x,
+                _ => bail!("bad order suffix '{part}' in model '{name}'"),
             };
         } else {
             bail!("unrecognized suffix '{part}' in model '{name}'");
@@ -156,7 +179,7 @@ pub fn state_spec(cfg: &ModelConfig) -> Vec<LeafSpec> {
                 init: Init::Zeros,
             });
         } else {
-            let f = if cfg.attn == "ho2" { ho_feature_dim(dh, cfg.order) } else { dh };
+            let f = if is_ho(&cfg.attn) { ho_feature_dim(dh, cfg.order) } else { dh };
             spec.push(LeafSpec {
                 name: format!("layer{i}.S"),
                 shape: vec![b, h, f, dh],
@@ -177,6 +200,20 @@ pub fn native_model_entry(name: &str) -> Result<ModelEntry> {
     let config = parse_name(name)?;
     if config.d_model % config.n_heads != 0 {
         bail!("d_model {} not divisible by n_heads {}", config.d_model, config.n_heads);
+    }
+    if is_ho(&config.attn) {
+        // fail an absurd Taylor order here, with the computed feature
+        // dim, instead of panicking later in TaylorMap construction
+        let dh = config.d_model / config.n_heads;
+        match taylor_feature_dim(dh, config.order) {
+            Some(f) if f <= MAX_TAYLOR_FEATURES => {}
+            computed => bail!(
+                "model '{name}': Taylor order {} at head dim {dh} needs {} packed \
+                 features per head (Σ_j C(d+j−1, j)); the cap is {MAX_TAYLOR_FEATURES}",
+                config.order,
+                computed.map_or("> usize::MAX".to_string(), |f| f.to_string()),
+            ),
+        }
     }
     let param_spec = param_spec(&config);
     let state_spec = state_spec(&config);
@@ -214,7 +251,27 @@ mod tests {
         assert!(native_model_entry("ho3_small").is_err());
         assert!(native_model_entry("ho2_giant").is_err());
         assert!(native_model_entry("ho2_tiny_x9").is_err());
-        assert!(native_model_entry("ho2_tiny_o3").is_err());
+    }
+
+    #[test]
+    fn ho_grammar_unlocks_any_order() {
+        // `ho[_oR]`: R is a config value now, and `ho2` stays an alias
+        let e = native_model_entry("ho_tiny_o3").unwrap();
+        assert_eq!(e.config.attn, "ho");
+        assert_eq!(e.config.order, 3);
+        assert_eq!(e.config.d_model, 64);
+        // bare `ho` keeps the paper's order-2 default
+        let e = native_model_entry("ho_small").unwrap();
+        assert_eq!(e.config.order, 2);
+        // the alias also takes the suffix: ho2_tiny_o3 == ho_tiny_o3
+        // modulo the attn spelling (both drive the same TaylorMap)
+        let e = native_model_entry("ho2_tiny_o3").unwrap();
+        assert_eq!(e.config.order, 3);
+        // an absurd order fails with the computed feature dim, not a
+        // panic or an allocation
+        let err = native_model_entry("ho_tiny_o40").unwrap_err().to_string();
+        assert!(err.contains("packed"), "{err}");
+        assert!(native_model_entry("ho_tiny_ox").is_err());
     }
 
     #[test]

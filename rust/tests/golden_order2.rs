@@ -1,0 +1,443 @@
+//! Golden bit-exactness: the generic `PhiState<TaylorMap>` /
+//! `PhiState<EluMap>` kernels must reproduce the **pre-FeatureMap**
+//! hand-specialized kernels *bit for bit* at order ≤ 2.
+//!
+//! The goldens are not literals — they are the pre-redesign algorithms
+//! themselves: `LegacyHoState` and `LegacyLinearState` below are verbatim
+//! copies of the deleted `HoState`/`LinearState` forward bodies (struct
+//! layout, accumulation order, every expression) as of the commit before
+//! the redesign.  Running both through the same drivers and asserting
+//! `==` on the f32 outputs and the f64 states is the strongest possible
+//! pin: any reassociation, reordering or coefficient slip in the generic
+//! path fails the test exactly, not within a tolerance.
+//!
+//! (The redesign's save_state layout interleaves differently —
+//! [Z | M] instead of [s0, s0v, s1, s1v, s2, s2v] — so state comparison
+//! permutes the legacy vector into the new layout first.)
+
+use holt::kernels::{
+    chunked_forward, streaming_forward, HoState, LinearState, RecurrentAttention,
+};
+use holt::mathref::{elu1, layernorm_noaffine, taylor_exp};
+use holt::rng::Rng;
+
+const LN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// verbatim pre-redesign order-≤2 Taylor kernel
+// ---------------------------------------------------------------------------
+
+struct LegacyHoState {
+    d: usize,
+    dv: usize,
+    order: usize,
+    scale: f64,
+    normalize_qk: bool,
+    s0: f64,
+    s0v: Vec<f64>,
+    s1: Vec<f64>,
+    s1v: Vec<f64>,
+    s2: Vec<f64>,
+    s2v: Vec<f64>,
+}
+
+impl LegacyHoState {
+    fn new(d: usize, dv: usize, order: usize, alpha: f64, normalize_qk: bool) -> LegacyHoState {
+        assert!(order <= 2);
+        let t = d * (d + 1) / 2;
+        LegacyHoState {
+            d,
+            dv,
+            order,
+            scale: 1.0 / (alpha * (d as f64).sqrt()),
+            normalize_qk,
+            s0: 0.0,
+            s0v: vec![0.0; dv],
+            s1: vec![0.0; if order >= 1 { d } else { 0 }],
+            s1v: vec![0.0; if order >= 1 { d * dv } else { 0 }],
+            s2: vec![0.0; if order >= 2 { t } else { 0 }],
+            s2v: vec![0.0; if order >= 2 { t * dv } else { 0 }],
+        }
+    }
+
+    fn normalized(&self, row: &[f32]) -> Vec<f32> {
+        let mut out = row.to_vec();
+        if self.normalize_qk {
+            layernorm_noaffine(&mut out, 1, self.d, LN_EPS);
+        }
+        out
+    }
+
+    fn query_raw_normed(&self, qn: &[f32], num: &mut [f64]) -> f64 {
+        let (d, dv) = (self.d, self.dv);
+        let mut den = self.s0;
+        num.copy_from_slice(&self.s0v);
+        let u: Vec<f64> = qn.iter().map(|&x| self.scale * x as f64).collect();
+        if self.order >= 1 {
+            for a in 0..d {
+                let ua = u[a];
+                den += ua * self.s1[a];
+                let row = &self.s1v[a * dv..(a + 1) * dv];
+                for (acc, &x) in num.iter_mut().zip(row) {
+                    *acc += ua * x;
+                }
+            }
+        }
+        if self.order >= 2 {
+            let mut p = 0;
+            for a in 0..d {
+                let ua = u[a];
+                for b in a..d {
+                    let f = if a == b { 0.5 * ua * ua } else { ua * u[b] };
+                    den += f * self.s2[p];
+                    let row = &self.s2v[p * dv..(p + 1) * dv];
+                    for (acc, &x) in num.iter_mut().zip(row) {
+                        *acc += f * x;
+                    }
+                    p += 1;
+                }
+            }
+        }
+        den
+    }
+}
+
+impl RecurrentAttention for LegacyHoState {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn dv(&self) -> usize {
+        self.dv
+    }
+
+    fn reset(&mut self) {
+        self.s0 = 0.0;
+        self.s0v.fill(0.0);
+        self.s1.fill(0.0);
+        self.s1v.fill(0.0);
+        self.s2.fill(0.0);
+        self.s2v.fill(0.0);
+    }
+
+    fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        let kn = self.normalized(k);
+        self.absorb_prepped(&kn, v);
+    }
+
+    fn absorb_prepped(&mut self, kn: &[f32], v: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        self.s0 += 1.0;
+        for (acc, &x) in self.s0v.iter_mut().zip(v) {
+            *acc += x as f64;
+        }
+        if self.order >= 1 {
+            for a in 0..d {
+                let ka = kn[a] as f64;
+                self.s1[a] += ka;
+                let row = &mut self.s1v[a * dv..(a + 1) * dv];
+                for (acc, &x) in row.iter_mut().zip(v) {
+                    *acc += ka * x as f64;
+                }
+            }
+        }
+        if self.order >= 2 {
+            let mut p = 0;
+            for a in 0..d {
+                let ka = kn[a] as f64;
+                for b in a..d {
+                    let kk = ka * kn[b] as f64;
+                    self.s2[p] += kk;
+                    let row = &mut self.s2v[p * dv..(p + 1) * dv];
+                    for (acc, &x) in row.iter_mut().zip(v) {
+                        *acc += kk * x as f64;
+                    }
+                    p += 1;
+                }
+            }
+        }
+    }
+
+    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        self.query_raw_normed(&self.normalized(q), num)
+    }
+
+    fn query_raw_prepped(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        self.query_raw_normed(q, num)
+    }
+
+    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
+        self.pair_weight_prepped(&self.normalized(q), &self.normalized(k))
+    }
+
+    fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32> {
+        let mut out = rows.to_vec();
+        if self.normalize_qk {
+            layernorm_noaffine(&mut out, n, self.d, LN_EPS);
+        }
+        out
+    }
+
+    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
+        let mut dot = 0.0f64;
+        for (&a, &b) in q.iter().zip(k) {
+            dot += a as f64 * b as f64;
+        }
+        taylor_exp(dot * self.scale, self.order)
+    }
+
+    fn state_elements(&self) -> usize {
+        1 + self.s0v.len() + self.s1.len() + self.s1v.len() + self.s2.len() + self.s2v.len()
+    }
+
+    fn save_state(&self, out: &mut Vec<f64>) {
+        out.push(self.s0);
+        out.extend_from_slice(&self.s0v);
+        out.extend_from_slice(&self.s1);
+        out.extend_from_slice(&self.s1v);
+        out.extend_from_slice(&self.s2);
+        out.extend_from_slice(&self.s2v);
+    }
+
+    fn load_state(&mut self, data: &[f64]) {
+        let (head, rest) = data.split_at(1);
+        self.s0 = head[0];
+        let (a, rest) = rest.split_at(self.s0v.len());
+        self.s0v.copy_from_slice(a);
+        let (a, rest) = rest.split_at(self.s1.len());
+        self.s1.copy_from_slice(a);
+        let (a, rest) = rest.split_at(self.s1v.len());
+        self.s1v.copy_from_slice(a);
+        let (a, rest) = rest.split_at(self.s2.len());
+        self.s2.copy_from_slice(a);
+        self.s2v.copy_from_slice(rest);
+    }
+}
+
+/// Permute the legacy [s0, s0v, s1, s1v, s2, s2v] state into the new
+/// [Z (F) | M (F·dv)] layout: Z = [s0, s1, s2], M = [s0v, s1v, s2v].
+fn legacy_to_phi_layout(st: &LegacyHoState) -> Vec<f64> {
+    let mut out = Vec::with_capacity(st.state_elements());
+    out.push(st.s0);
+    out.extend_from_slice(&st.s1);
+    out.extend_from_slice(&st.s2);
+    out.extend_from_slice(&st.s0v);
+    out.extend_from_slice(&st.s1v);
+    out.extend_from_slice(&st.s2v);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// verbatim pre-redesign elu+1 kernel (layout already matches [Z | M])
+// ---------------------------------------------------------------------------
+
+struct LegacyLinearState {
+    d: usize,
+    dv: usize,
+    z: Vec<f64>,
+    m: Vec<f64>,
+}
+
+impl LegacyLinearState {
+    fn new(d: usize, dv: usize) -> LegacyLinearState {
+        LegacyLinearState { d, dv, z: vec![0.0; d], m: vec![0.0; d * dv] }
+    }
+
+    fn query_raw_phi<F: Fn(usize) -> f32>(&self, phi: F, num: &mut [f64]) -> f64 {
+        let (d, dv) = (self.d, self.dv);
+        num.fill(0.0);
+        let mut den = 0.0f64;
+        for a in 0..d {
+            let p = phi(a) as f64;
+            den += p * self.z[a];
+            let row = &self.m[a * dv..(a + 1) * dv];
+            for (acc, &x) in num.iter_mut().zip(row) {
+                *acc += p * x;
+            }
+        }
+        den
+    }
+}
+
+impl RecurrentAttention for LegacyLinearState {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn dv(&self) -> usize {
+        self.dv
+    }
+
+    fn reset(&mut self) {
+        self.z.fill(0.0);
+        self.m.fill(0.0);
+    }
+
+    fn absorb(&mut self, k: &[f32], v: &[f32]) {
+        let kp: Vec<f32> = k.iter().map(|&x| elu1(x)).collect();
+        self.absorb_prepped(&kp, v);
+    }
+
+    fn absorb_prepped(&mut self, kp: &[f32], v: &[f32]) {
+        let (d, dv) = (self.d, self.dv);
+        for a in 0..d {
+            let phi = kp[a] as f64;
+            self.z[a] += phi;
+            let row = &mut self.m[a * dv..(a + 1) * dv];
+            for (acc, &x) in row.iter_mut().zip(v) {
+                *acc += phi * x as f64;
+            }
+        }
+    }
+
+    fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        self.query_raw_phi(|a| elu1(q[a]), num)
+    }
+
+    fn query_raw_prepped(&self, q: &[f32], num: &mut [f64]) -> f64 {
+        self.query_raw_phi(|a| q[a], num)
+    }
+
+    fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
+        q.iter()
+            .zip(k)
+            .map(|(&a, &b)| elu1(a) as f64 * elu1(b) as f64)
+            .sum()
+    }
+
+    fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
+        rows.iter().map(|&x| elu1(x)).collect()
+    }
+
+    fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
+        q.iter().zip(k).map(|(&a, &b)| a as f64 * b as f64).sum()
+    }
+
+    fn state_elements(&self) -> usize {
+        self.z.len() + self.m.len()
+    }
+
+    fn save_state(&self, out: &mut Vec<f64>) {
+        out.extend_from_slice(&self.z);
+        out.extend_from_slice(&self.m);
+    }
+
+    fn load_state(&mut self, data: &[f64]) {
+        let (z, m) = data.split_at(self.z.len());
+        self.z.copy_from_slice(z);
+        self.m.copy_from_slice(m);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pins
+// ---------------------------------------------------------------------------
+
+fn random_qkv(rng: &mut Rng, n: usize, d: usize, dv: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    (
+        rng.normal_vec_f32(n * d, 1.0),
+        rng.normal_vec_f32(n * d, 1.0),
+        rng.normal_vec_f32(n * dv, 1.0),
+    )
+}
+
+#[test]
+fn taylor_streaming_outputs_are_bit_identical_to_legacy() {
+    let mut rng = Rng::new(1001);
+    for (order, alpha, normalize, causal) in [
+        (2usize, 3.0, true, true),   // the paper's configuration
+        (2, 3.0, true, false),
+        (2, 1.0, false, true),
+        (1, 3.0, true, true),
+        (1, 6.0, false, false),
+        (0, 3.0, true, true),
+    ] {
+        let (n, d, dv) = (19, 6, 5);
+        let (q, k, v) = random_qkv(&mut rng, n, d, dv);
+        let mut new = HoState::new(d, dv, order, alpha, normalize);
+        let mut old = LegacyHoState::new(d, dv, order, alpha, normalize);
+        let a = streaming_forward(&mut new, &q, &k, &v, n, causal);
+        let b = streaming_forward(&mut old, &q, &k, &v, n, causal);
+        assert_eq!(a, b, "order {order} alpha {alpha} ln {normalize} causal {causal}");
+        // the states themselves are bit-identical, modulo the layout
+        // permutation
+        let mut sn = Vec::new();
+        new.save_state(&mut sn);
+        assert_eq!(sn, legacy_to_phi_layout(&old), "state, order {order}");
+    }
+}
+
+#[test]
+fn taylor_chunked_outputs_are_bit_identical_to_legacy() {
+    // chunked_forward exercises prep_rows + query_raw_prepped +
+    // pair_weight_prepped + absorb_prepped — the whole blocked surface
+    let mut rng = Rng::new(1002);
+    let (n, d, dv) = (23, 5, 4);
+    let (q, k, v) = random_qkv(&mut rng, n, d, dv);
+    for order in [0usize, 1, 2] {
+        for chunk in [1usize, 3, 8, 64] {
+            let mut new = HoState::new(d, dv, order, 3.0, true);
+            let mut old = LegacyHoState::new(d, dv, order, 3.0, true);
+            let a = chunked_forward(&mut new, &q, &k, &v, n, chunk, true);
+            let b = chunked_forward(&mut old, &q, &k, &v, n, chunk, true);
+            assert_eq!(a, b, "order {order} chunk {chunk}");
+        }
+    }
+}
+
+#[test]
+fn taylor_decode_steps_are_bit_identical_to_legacy() {
+    // the serving path: step-by-step decode, state compared each token
+    let mut rng = Rng::new(1003);
+    let (d, dv) = (7, 7);
+    let mut new = HoState::paper(d, dv);
+    let mut old = LegacyHoState::new(d, dv, 2, 3.0, true);
+    let mut oa = vec![0.0f32; dv];
+    let mut ob = vec![0.0f32; dv];
+    for i in 0..30 {
+        let q = rng.normal_vec_f32(d, 1.0);
+        let k = rng.normal_vec_f32(d, 1.0);
+        let v = rng.normal_vec_f32(dv, 1.0);
+        new.step(&q, &k, &v, &mut oa);
+        old.step(&q, &k, &v, &mut ob);
+        assert_eq!(oa, ob, "decode step {i}");
+    }
+    let mut sn = Vec::new();
+    new.save_state(&mut sn);
+    assert_eq!(sn, legacy_to_phi_layout(&old));
+}
+
+#[test]
+fn linear_outputs_and_state_are_bit_identical_to_legacy() {
+    let mut rng = Rng::new(1004);
+    let (n, d, dv) = (17, 6, 4);
+    let (q, k, v) = random_qkv(&mut rng, n, d, dv);
+    for causal in [true, false] {
+        let mut new = LinearState::new(d, dv);
+        let mut old = LegacyLinearState::new(d, dv);
+        let a = streaming_forward(&mut new, &q, &k, &v, n, causal);
+        let b = streaming_forward(&mut old, &q, &k, &v, n, causal);
+        assert_eq!(a, b, "causal {causal}");
+        let c = chunked_forward(&mut new, &q, &k, &v, n, 5, true);
+        let e = chunked_forward(&mut old, &q, &k, &v, n, 5, true);
+        assert_eq!(c, e);
+        // elu state layout was already [Z | M]: compare directly
+        let (mut sn, mut so) = (Vec::new(), Vec::new());
+        new.save_state(&mut sn);
+        old.save_state(&mut so);
+        assert_eq!(sn, so);
+    }
+}
+
+#[test]
+fn pair_weights_are_bit_identical_to_legacy() {
+    let mut rng = Rng::new(1005);
+    let d = 9;
+    let new = HoState::paper(d, d);
+    let old = LegacyHoState::new(d, d, 2, 3.0, true);
+    for _ in 0..25 {
+        let q = rng.normal_vec_f32(d, 1.0);
+        let k = rng.normal_vec_f32(d, 1.0);
+        assert_eq!(new.pair_weight(&q, &k), old.pair_weight(&q, &k));
+    }
+}

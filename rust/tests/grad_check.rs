@@ -3,9 +3,11 @@
 //! Kernel level: `chunked_attention_vjp` / `softmax_attention_vjp` are
 //! checked against central differences of *all-f64* direct oracles
 //! (independently written here, LayerNorm included), for every kernel
-//! kind × Taylor order 0/1/2 × several alphas and chunk sizes.  The f64
-//! oracle makes the FD noise floor ~1e-10, so the 1e-3 tolerance is
-//! testing the derivation, not the step size.
+//! kind × Taylor order 0/1/2/3 × several alphas and chunk sizes.  The
+//! f64 oracle makes the FD noise floor ~1e-10, so the 1e-3 tolerance is
+//! testing the derivation, not the step size.  Order 3 runs the same
+//! generic `PhiState`/`TaylorMap` code as order 2 — these sweeps are
+//! what certify the order-3 data point end to end.
 //!
 //! Model level: the full tiny-transformer `loss_and_grad` is checked
 //! against numeric directional derivatives of the f32 loss along the
@@ -73,7 +75,7 @@ fn oracle(
 ) -> Vec<f64> {
     let mut out = vec![0.0f64; n * dv];
     match kind {
-        "ho2" => {
+        "ho" | "ho2" => {
             let qn = ln64(q, d);
             let kn = ln64(k, d);
             let scale = 1.0 / (alpha * (d as f64).sqrt());
@@ -217,10 +219,10 @@ fn check_kernel_case(case: &Case, seed: u64) {
 
 #[test]
 fn ho_kernel_gradients_match_fd_all_orders() {
-    // the acceptance grid: orders 0, 1 and 2, two alphas, chunk sizes
+    // the acceptance grid: orders 0 through 3, two alphas, chunk sizes
     // spanning pure-recurrent (1) to single-chunk (64 > n)
     let mut seed = 100;
-    for order in [0, 1, 2] {
+    for order in [0, 1, 2, 3] {
         for alpha in [1.0, 3.0] {
             for chunk in [1, 3, 64] {
                 check_kernel_case(&Case { kind: "ho2", order, alpha, chunk }, seed);
@@ -228,6 +230,13 @@ fn ho_kernel_gradients_match_fd_all_orders() {
             }
         }
     }
+}
+
+#[test]
+fn ho_kind_alias_gradients_agree() {
+    // "ho" and "ho2" are the same TaylorMap — spot-check the new
+    // spelling through the grad path too
+    check_kernel_case(&Case { kind: "ho", order: 3, alpha: 3.0, chunk: 4 }, 400);
 }
 
 #[test]
@@ -362,7 +371,9 @@ fn check_model_directional(attn: &str, order: usize, seed: u64) {
 
 #[test]
 fn model_gradients_match_directional_fd_ho2_all_orders() {
-    for order in [0, 1, 2] {
+    // orders 0-3 through the full transformer backward (order 3 at the
+    // fdtest head dim 8 is 165 packed features — cheap)
+    for order in [0, 1, 2, 3] {
         check_model_directional("ho2", order, 7 + order as u64);
     }
 }

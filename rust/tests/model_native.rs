@@ -35,8 +35,16 @@ fn prefill_matches_decode_across_kinds_orders_and_shapes() {
     // the serving guarantee: the chunked training-form forward and the
     // O(1)-per-token decode recurrence compute the same logits
     let mut rng = Rng::new(100);
-    let names =
-        ["ho2_tiny", "ho2_tiny_a3_o1", "ho2_tiny_a3_o0", "ho2_tiny_a1_o2", "linear_tiny"];
+    // ho_tiny_o3: the order-3 configuration the FeatureMap redesign
+    // unlocked — same generic recurrence, one more packed block
+    let names = [
+        "ho2_tiny",
+        "ho2_tiny_a3_o1",
+        "ho2_tiny_a3_o0",
+        "ho2_tiny_a1_o2",
+        "ho_tiny_o3",
+        "linear_tiny",
+    ];
     for (mi, name) in names.iter().enumerate() {
         let m = model(name, 40 + mi as u64);
         let v = m.config().vocab_size;
@@ -80,6 +88,21 @@ fn decode_state_is_constant_in_generated_length() {
     }
     assert_eq!(sess.state_elements(), elems, "state grew with context");
     assert_eq!(sess.snapshot().bytes(), elems * 8 + std::mem::size_of::<usize>());
+}
+
+#[test]
+fn order3_decode_state_is_the_packed_cubic() {
+    // the affordability claim behind order 3: per-(layer, head) state is
+    // Σ_{j≤3} C(dh+j−1, j) packed features × (1 + dh) — not dh³·dh
+    let m = model("ho_tiny_o3", 2);
+    let sess = DecodeSession::new(&m).unwrap();
+    let dh = m.config().d_model / m.config().n_heads;
+    let f = 1 + dh + dh * (dh + 1) / 2 + dh * (dh + 1) * (dh + 2) / 6;
+    let per_head = f * (1 + dh);
+    assert_eq!(
+        sess.state_elements(),
+        m.config().n_layers * m.config().n_heads * per_head
+    );
 }
 
 #[test]

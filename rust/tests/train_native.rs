@@ -135,9 +135,10 @@ fn from_checkpoint_restores_preset_models() {
 
 #[test]
 fn ablation_variants_and_baselines_train_natively() {
-    // one step each across the E6 grid axes: orders, alphas, both
-    // baselines — every kind must produce finite loss and step
-    for name in ["ho2_tiny_a1_o1", "ho2_tiny_a3_o0", "linear_tiny"] {
+    // one step each across the E6 grid axes: orders (incl. the order-3
+    // point the FeatureMap redesign unlocked), alphas, both baselines —
+    // every kind must produce finite loss and step
+    for name in ["ho2_tiny_a1_o1", "ho2_tiny_a3_o0", "ho_tiny_o3", "linear_tiny"] {
         let mut tr = NativeTrainer::new(name, 8).unwrap();
         let mut gen = data::make("copy", 8).unwrap();
         let (b, t) = tr.train_shape();
