@@ -1,7 +1,7 @@
 # Build-time entry points. Only the artifact path needs python/jax;
 # tier-1 (`cargo build --release && cargo test -q`) never touches this.
 
-.PHONY: artifacts tier1 train-smoke serve-smoke
+.PHONY: artifacts tier1 train-smoke serve-smoke bench-kernels
 
 # AOT-lower the jax model + attention kernels to HLO-text artifacts
 # under ./artifacts (manifest.json + *.hlo). Requires python3 + jax.
@@ -16,6 +16,13 @@ tier1:
 train-smoke:
 	cargo run --release -- train --backend native --model ho2_tiny \
 	  --task copy --steps 40 --log-every 10 --eval-every 0 --min-loss-ratio 0.85
+
+# kernel cost-model bench: scaling sweep + feature-map sweep with the
+# scalar-vs-SIMD tok/s comparison; writes results/bench_kernels.json
+# (HOLT_SIMD=scalar|unrolled|avx2 overrides the detected lane path)
+bench-kernels:
+	cargo bench --bench native_scaling -- 512
+	@cat results/bench_kernels.json
 
 # serve-scheduler smoke (no artifacts): synthetic overload through the
 # fair-share policy with preemption and 2-turn session reuse; writes the

@@ -18,7 +18,7 @@
 
 use holt::bench::{bench_budget, BenchResult};
 use holt::json::{obj, Json};
-use holt::kernels::{Evaluation, NativeBackend, RecurrentAttention};
+use holt::kernels::{simd, Evaluation, Isa, NativeBackend, RecurrentAttention};
 use holt::mathref;
 use holt::rng::Rng;
 
@@ -132,17 +132,22 @@ fn main() -> anyhow::Result<()> {
     let kk = krng.normal_vec_f32(kn * kd, 1.0);
     let kv = krng.normal_vec_f32(kn * kd, 1.0);
     let mut kernel_rows: Vec<Json> = Vec::new();
-    println!("\nfeature-map sweep — n = {kn}, d = dv = {kd}");
+    let active_isa = format!("{:?}", simd::active());
+    println!("\nfeature-map sweep — n = {kn}, d = dv = {kd}, active isa = {active_isa}");
     println!(
-        "{:>10} {:>6} {:>16} {:>14} {:>14}",
-        "kernel", "order", "state KiB/head", "stream tok/s", "chunked tok/s"
+        "{:>10} {:>6} {:>16} {:>14} {:>14} {:>8} {:>8}",
+        "kernel", "order", "state KiB/head", "stream tok/s", "chunked tok/s", "st simdx", "ch simdx"
     );
     let configs: Vec<(&str, usize)> =
         vec![("ho", 1), ("ho", 2), ("ho", 3), ("linear", 0)];
     for (kind, order) in configs {
+        // isa: None → the runtime-detected lane path; Some(Scalar) pins
+        // the always-kept reference path the speedup is measured against
         let streaming =
             NativeBackend { evaluation: Evaluation::Streaming, order, ..NativeBackend::paper() };
         let chunked = NativeBackend { order, ..NativeBackend::paper() };
+        let scalar_streaming = NativeBackend { isa: Some(Isa::Scalar), ..streaming.clone() };
+        let scalar_chunked = NativeBackend { isa: Some(Isa::Scalar), ..chunked.clone() };
         let state_bytes = streaming.state(kind, kd, kd)?.state_elements() * 8;
         let label = if kind == "ho" { format!("ho_o{order}") } else { kind.to_string() };
         let rs = bench_budget(&format!("{label}_stream_n{kn}"), 0.3, || {
@@ -151,15 +156,31 @@ fn main() -> anyhow::Result<()> {
         let rc = bench_budget(&format!("{label}_chunked_n{kn}"), 0.3, || {
             std::hint::black_box(chunked.forward(kind, &kq, &kk, &kv, kn, kd, kd, true).unwrap());
         });
+        let rss = bench_budget(&format!("{label}_stream_scalar_n{kn}"), 0.3, || {
+            std::hint::black_box(
+                scalar_streaming.forward(kind, &kq, &kk, &kv, kn, kd, kd, true).unwrap(),
+            );
+        });
+        let rcs = bench_budget(&format!("{label}_chunked_scalar_n{kn}"), 0.3, || {
+            std::hint::black_box(
+                scalar_chunked.forward(kind, &kq, &kk, &kv, kn, kd, kd, true).unwrap(),
+            );
+        });
         let stream_tok_s = kn as f64 / rs.mean_s;
         let chunked_tok_s = kn as f64 / rc.mean_s;
+        let scalar_stream_tok_s = kn as f64 / rss.mean_s;
+        let scalar_chunked_tok_s = kn as f64 / rcs.mean_s;
+        let speedup_stream = stream_tok_s / scalar_stream_tok_s;
+        let speedup_chunked = chunked_tok_s / scalar_chunked_tok_s;
         println!(
-            "{:>10} {:>6} {:>16.1} {:>14.0} {:>14.0}",
+            "{:>10} {:>6} {:>16.1} {:>14.0} {:>14.0} {:>8.2} {:>8.2}",
             label,
             order,
             state_bytes as f64 / 1024.0,
             stream_tok_s,
-            chunked_tok_s
+            chunked_tok_s,
+            speedup_stream,
+            speedup_chunked
         );
         kernel_rows.push(obj(vec![
             ("kernel", label.as_str().into()),
@@ -170,9 +191,16 @@ fn main() -> anyhow::Result<()> {
             ("state_bytes_per_head_slot", state_bytes.into()),
             ("streaming_tok_per_s", stream_tok_s.into()),
             ("chunked_tok_per_s", chunked_tok_s.into()),
+            ("scalar_streaming_tok_per_s", scalar_stream_tok_s.into()),
+            ("scalar_chunked_tok_per_s", scalar_chunked_tok_s.into()),
+            ("simd_speedup_streaming", speedup_stream.into()),
+            ("simd_speedup_chunked", speedup_chunked.into()),
         ]));
     }
-    let record = obj(vec![("feature_map_sweep", Json::Arr(kernel_rows))]);
+    let record = obj(vec![
+        ("active_isa", active_isa.as_str().into()),
+        ("feature_map_sweep", Json::Arr(kernel_rows)),
+    ]);
     std::fs::create_dir_all("results")?;
     std::fs::write("results/bench_kernels.json", format!("{record}\n"))?;
     println!("wrote results/bench_kernels.json");

@@ -6,7 +6,8 @@
 use anyhow::{bail, Result};
 
 use crate::kernels::{
-    chunked_forward, streaming_forward, AttentionGrad, HoState, LinearState, RecurrentAttention,
+    chunked_forward, simd, streaming_forward, AttentionGrad, HoState, LinearState,
+    RecurrentAttention,
 };
 use crate::mathref;
 
@@ -39,6 +40,11 @@ pub struct NativeBackend {
     /// Chunk length for [`Evaluation::Chunked`].
     pub chunk: usize,
     pub evaluation: Evaluation,
+    /// Pin the lane dispatch of every state this backend constructs
+    /// (`None` = the runtime-detected [`simd::active`] default).  Benches
+    /// use `Some(Isa::Scalar)` to measure the reference path; tests use
+    /// it to pin bit-exact comparisons.
+    pub isa: Option<simd::Isa>,
 }
 
 impl Default for NativeBackend {
@@ -51,6 +57,7 @@ impl Default for NativeBackend {
             normalize_qk: true,
             chunk: 64,
             evaluation: Evaluation::Chunked,
+            isa: None,
         }
     }
 }
@@ -62,7 +69,7 @@ impl NativeBackend {
 
     /// Fresh recurrent state for one head — the O(1)-per-token decode
     /// object. Errors for `"softmax"`, which has no recurrent form.
-    /// `Send` so per-slot decode sessions can run on scoped threads.
+    /// `Send` so per-slot decode sessions can move across pool threads.
     pub fn state(
         &self,
         kind: &str,
@@ -70,14 +77,20 @@ impl NativeBackend {
         dv: usize,
     ) -> Result<Box<dyn RecurrentAttention + Send>> {
         match kind {
-            "ho2" | "ho" => Ok(Box::new(HoState::new(
-                d,
-                dv,
-                self.order,
-                self.alpha,
-                self.normalize_qk,
-            ))),
-            "linear" => Ok(Box::new(LinearState::new(d, dv))),
+            "ho2" | "ho" => {
+                let mut st = HoState::new(d, dv, self.order, self.alpha, self.normalize_qk);
+                if let Some(isa) = self.isa {
+                    st.set_isa(isa);
+                }
+                Ok(Box::new(st))
+            }
+            "linear" => {
+                let mut st = LinearState::new(d, dv);
+                if let Some(isa) = self.isa {
+                    st.set_isa(isa);
+                }
+                Ok(Box::new(st))
+            }
             "softmax" => bail!("softmax attention has no O(1) recurrent state"),
             _ => bail!("unknown attention kind '{kind}' (want ho | ho2 | linear | softmax)"),
         }
@@ -94,14 +107,20 @@ impl NativeBackend {
         dv: usize,
     ) -> Result<Box<dyn AttentionGrad + Send>> {
         match kind {
-            "ho2" | "ho" => Ok(Box::new(HoState::new(
-                d,
-                dv,
-                self.order,
-                self.alpha,
-                self.normalize_qk,
-            ))),
-            "linear" => Ok(Box::new(LinearState::new(d, dv))),
+            "ho2" | "ho" => {
+                let mut st = HoState::new(d, dv, self.order, self.alpha, self.normalize_qk);
+                if let Some(isa) = self.isa {
+                    st.set_isa(isa);
+                }
+                Ok(Box::new(st))
+            }
+            "linear" => {
+                let mut st = LinearState::new(d, dv);
+                if let Some(isa) = self.isa {
+                    st.set_isa(isa);
+                }
+                Ok(Box::new(st))
+            }
             "softmax" => bail!(
                 "softmax attention has no recurrent state; its backward is \
                  kernels::softmax_attention_vjp"

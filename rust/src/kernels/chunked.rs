@@ -14,7 +14,7 @@
 //! key), so it degenerates to absorb-all-then-query and `chunk` is
 //! irrelevant; the causal path is the interesting one.
 
-use crate::kernels::{floor_den, streaming_forward, RecurrentAttention};
+use crate::kernels::{floor_den, simd, streaming_forward, RecurrentAttention};
 
 /// Full-sequence forward, chunked.  `q`/`k` are (n, d) row-major, `v` is
 /// (n, dv); resets the kernel first.  Equivalent to
@@ -38,15 +38,20 @@ pub fn chunked_forward<K: RecurrentAttention + ?Sized>(
     }
     let chunk = chunk.max(1);
     kernel.reset();
+    let isa = kernel.isa();
     let mut out = vec![0.0f32; n * dv];
     let mut num = vec![0.0f64; dv];
+    // prepped-row buffers hoisted out of the chunk loop: two allocations
+    // per call, zero per chunk
+    let mut qp: Vec<f32> = Vec::with_capacity(chunk.min(n) * d);
+    let mut kp: Vec<f32> = Vec::with_capacity(chunk.min(n) * d);
     let mut c0 = 0;
     while c0 < n {
         let c1 = (c0 + chunk).min(n);
         // per-row prep (LayerNorm / feature map) once per chunk, so the
         // O(c²) triangle below is pure dot products
-        let qp = kernel.prep_rows(&q[c0 * d..c1 * d], c1 - c0);
-        let kp = kernel.prep_rows(&k[c0 * d..c1 * d], c1 - c0);
+        kernel.prep_rows_into(&q[c0 * d..c1 * d], c1 - c0, &mut qp);
+        kernel.prep_rows_into(&k[c0 * d..c1 * d], c1 - c0, &mut kp);
         // query pass: recurrent prefix + direct intra-chunk triangle
         for i in c0..c1 {
             let qi = &qp[(i - c0) * d..(i - c0 + 1) * d];
@@ -54,10 +59,9 @@ pub fn chunked_forward<K: RecurrentAttention + ?Sized>(
             for j in c0..=i {
                 let w = kernel.pair_weight_prepped(qi, &kp[(j - c0) * d..(j - c0 + 1) * d]);
                 den += w;
-                let vj = &v[j * dv..(j + 1) * dv];
-                for (acc, &x) in num.iter_mut().zip(vj) {
-                    *acc += w * x as f64;
-                }
+                // lane-tiled but FMA-free: bit-identical to the scalar
+                // accumulation at any ISA
+                simd::axpy_ps(isa, &mut num, &v[j * dv..(j + 1) * dv], w);
             }
             let den = floor_den(den);
             for (o, &x) in out[i * dv..(i + 1) * dv].iter_mut().zip(num.iter()) {

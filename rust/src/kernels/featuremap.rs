@@ -25,6 +25,7 @@
 //! side) is why the trait exposes `map_q`/`map_k` rather than the single
 //! `map` a symmetric kernel would need.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -86,6 +87,14 @@ pub trait FeatureMap: Send {
     /// φ).  Blocked paths call this once per row and feed the result to
     /// `map_*` / `pair_weight_from_dot`.
     fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32>;
+
+    /// [`FeatureMap::prep_rows`] into a caller-owned buffer, reusing its
+    /// capacity — what the zero-alloc hot paths call.  Default delegates
+    /// to `prep_rows` (correct but allocating; the shipped maps
+    /// override it).
+    fn prep_rows_into(&self, rows: &[f32], n: usize, out: &mut Vec<f32>) {
+        *out = self.prep_rows(rows, n);
+    }
 
     /// VJP of [`FeatureMap::prep_rows`]: `rows` are the raw rows, `g` the
     /// gradient w.r.t. the prepped rows; returns the gradient w.r.t.
@@ -179,6 +188,23 @@ pub struct TaylorMap {
     /// across all states of the same (d, order), see [`ext_table`]
     ext: Arc<[Ext]>,
     feature_dim: usize,
+    /// Reverse-mode transient buffers: the map vjps run once per token
+    /// per train step and must not allocate (the same zero-heap-traffic
+    /// contract as [`crate::kernels::Scratch`]; pinned by
+    /// `rust/tests/alloc_decode.rs`).  `RefCell` because the vjps take
+    /// `&self`; a map is owned by one kernel state and never shared
+    /// across threads (`Send`, not `Sync`).
+    vjp: RefCell<VjpScratch>,
+}
+
+/// See [`TaylorMap::vjp`].
+struct VjpScratch {
+    /// Forward features recomputed for the reverse sweep (len `feature_dim`).
+    phi: Vec<f64>,
+    /// Gradient being pushed down the recursive construction (len `feature_dim`).
+    g: Vec<f64>,
+    /// Accumulated gradient on the scaled input row (len `d`).
+    du: Vec<f64>,
 }
 
 impl TaylorMap {
@@ -200,7 +226,12 @@ impl TaylorMap {
         };
         let ext = ext_table(d, order);
         debug_assert_eq!(if order == 0 { 1 } else { 1 + d + ext.len() }, feature_dim);
-        TaylorMap { d, order, scale: 1.0 / (alpha * (d as f64).sqrt()), normalize_qk, ext, feature_dim }
+        let vjp = RefCell::new(VjpScratch {
+            phi: vec![0.0; feature_dim],
+            g: vec![0.0; feature_dim],
+            du: vec![0.0; d],
+        });
+        TaylorMap { d, order, scale: 1.0 / (alpha * (d as f64).sqrt()), normalize_qk, ext, feature_dim, vjp }
     }
 
     pub fn order(&self) -> usize {
@@ -230,6 +261,14 @@ impl FeatureMap for TaylorMap {
             layernorm_noaffine(&mut out, n, self.d, LN_EPS);
         }
         out
+    }
+
+    fn prep_rows_into(&self, rows: &[f32], n: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(rows);
+        if self.normalize_qk {
+            layernorm_noaffine(out, n, self.d, LN_EPS);
+        }
     }
 
     fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64> {
@@ -280,13 +319,15 @@ impl FeatureMap for TaylorMap {
         if self.order == 0 {
             return; // φ_q ≡ [1]: no input dependence
         }
-        let mut phi = vec![0.0f64; self.feature_dim];
-        self.map_q(xp, &mut phi);
+        assert_eq!(dphi.len(), self.feature_dim, "dphi length");
+        let mut sc = self.vjp.borrow_mut();
+        let VjpScratch { phi, g, du } = &mut *sc;
+        self.map_q(xp, phi);
         // reverse-mode through the recursive construction: every feature
         // feeds gradient to its parent and to its appended factor
-        let mut g = dphi.to_vec();
+        g.copy_from_slice(dphi);
+        du.fill(0.0);
         let base = 1 + self.d;
-        let mut du = vec![0.0f64; self.d];
         for i in (0..self.ext.len()).rev() {
             let e = &self.ext[i];
             let gf = if e.mult > 1 { g[base + i] / e.mult as f64 } else { g[base + i] };
@@ -296,7 +337,7 @@ impl FeatureMap for TaylorMap {
         for a in 0..self.d {
             du[a] += g[1 + a];
         }
-        for (o, &x) in dxp.iter_mut().zip(&du) {
+        for (o, &x) in dxp.iter_mut().zip(du.iter()) {
             *o += self.scale * x;
         }
     }
@@ -305,9 +346,11 @@ impl FeatureMap for TaylorMap {
         if self.order == 0 {
             return;
         }
-        let mut phi = vec![0.0f64; self.feature_dim];
-        self.map_k(xp, &mut phi);
-        let mut g = dphi.to_vec();
+        assert_eq!(dphi.len(), self.feature_dim, "dphi length");
+        let mut sc = self.vjp.borrow_mut();
+        let VjpScratch { phi, g, .. } = &mut *sc;
+        self.map_k(xp, phi);
+        g.copy_from_slice(dphi);
         let base = 1 + self.d;
         for i in (0..self.ext.len()).rev() {
             let e = &self.ext[i];
@@ -359,6 +402,11 @@ impl FeatureMap for EluMap {
 
     fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
         rows.iter().map(|&x| elu1(x)).collect()
+    }
+
+    fn prep_rows_into(&self, rows: &[f32], _n: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(rows.iter().map(|&x| elu1(x)));
     }
 
     fn prep_rows_vjp(&self, rows: &[f32], _n: usize, g: &[f64]) -> Vec<f64> {
@@ -515,5 +563,21 @@ mod tests {
     #[should_panic(expected = "packed features")]
     fn absurd_order_reports_feature_dim() {
         TaylorMap::new(32, 64, 3.0, true);
+    }
+
+    #[test]
+    fn prep_rows_into_matches_prep_rows() {
+        let mut rng = Rng::new(73);
+        let (n, d) = (3, 6);
+        let rows = rng.normal_vec_f32(n * d, 1.0);
+        let mut buf = Vec::new();
+        for normalize in [true, false] {
+            let map = TaylorMap::new(d, 2, 3.0, normalize);
+            map.prep_rows_into(&rows, n, &mut buf);
+            assert_eq!(buf, map.prep_rows(&rows, n), "taylor ln={normalize}");
+        }
+        let map = EluMap::new(d);
+        map.prep_rows_into(&rows, n, &mut buf);
+        assert_eq!(buf, map.prep_rows(&rows, n), "elu");
     }
 }

@@ -31,7 +31,7 @@
 //! oracles in `rust/tests/grad_check.rs` (all kinds × orders 0–3,
 //! several chunk sizes, rel. err ≤ 1e-3).
 
-use crate::kernels::{den_is_clamped, floor_den, RecurrentAttention};
+use crate::kernels::{den_is_clamped, floor_den, simd, RecurrentAttention};
 
 /// A [`RecurrentAttention`] kernel that can run backward: the vector-
 /// Jacobian products of its three primitive operations (state read,
@@ -103,6 +103,7 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
     assert_eq!(go.len(), n * dv, "go shape");
     let chunk = chunk.max(1);
     let n_chunks = n.div_ceil(chunk);
+    let isa = kernel.isa();
 
     // ---- forward replay: raw denominators, f64 numerators, snapshots,
     // and the prepped rows (reused verbatim by the reverse sweep) ----
@@ -125,12 +126,10 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
             let mut den = kernel.query_raw_prepped(qi, num);
             for j in c0..=i {
                 let kj = &kp[(j - c0) * d..(j - c0 + 1) * d];
-                let dot = dot_f64(qi, kj);
+                let dot = simd::dot_ps(isa, qi, kj);
                 let w = kernel.pair_weight_from_dot(dot);
                 den += w;
-                for (acc, &x) in num.iter_mut().zip(&v[j * dv..(j + 1) * dv]) {
-                    *acc += w * x as f64;
-                }
+                simd::axpy_ps(isa, num, &v[j * dv..(j + 1) * dv], w);
             }
             dens[i] = den;
         }
@@ -146,6 +145,8 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
     let mut gkp = vec![0.0f64; n * d];
     let mut gv = vec![0.0f64; n * dv];
     let mut gstate = vec![0.0f64; kernel.state_elements()];
+    // per-position upstream-numerator gradient, hoisted (assign-only)
+    let mut dnum = vec![0.0f64; dv];
     for ci in (0..n_chunks).rev() {
         let c0 = ci * chunk;
         let c1 = (c0 + chunk).min(n);
@@ -169,7 +170,6 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
             let num = &nums[i * dv..(i + 1) * dv];
             let g = &go[i * dv..(i + 1) * dv];
             // o = num/den: dnum = g/den, dden = −(g·o)/den (0 if clamped)
-            let mut dnum = vec![0.0f64; dv];
             let mut gdoto = 0.0f64;
             for ((dn, &gc), &nc) in dnum.iter_mut().zip(g).zip(num) {
                 *dn = gc as f64 / den;
@@ -180,15 +180,13 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
             // intra-chunk triangle, differentiated directly
             for j in c0..=i {
                 let kj = &kp[(j - c0) * d..(j - c0 + 1) * d];
-                let dot = dot_f64(qi, kj);
+                let dot = simd::dot_ps(isa, qi, kj);
                 let w = kernel.pair_weight_from_dot(dot);
                 let mut a_ij = dden;
                 for (dn, &x) in dnum.iter().zip(&v[j * dv..(j + 1) * dv]) {
                     a_ij += dn * x as f64;
                 }
-                for (gvc, dn) in gv[j * dv..(j + 1) * dv].iter_mut().zip(&dnum) {
-                    *gvc += w * dn;
-                }
+                simd::axpy(isa, &mut gv[j * dv..(j + 1) * dv], &dnum, w);
                 let s = kernel.pair_weight_dot_grad(dot) * a_ij;
                 for ((gq, &kc), (gk, &qc)) in gqp[i * d..(i + 1) * d]
                     .iter_mut()

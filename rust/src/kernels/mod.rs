@@ -73,6 +73,38 @@
 //! oracles in `rust/tests/proptests.rs` (orders 0–3), FD-checked in
 //! `rust/tests/grad_check.rs`, and pinned bit-identical to the
 //! pre-`FeatureMap` order-≤2 kernels in `rust/tests/golden_order2.rs`.
+//!
+//! # Hot path invariants
+//!
+//! The decode hot path is `PhiState::step` — absorb one (k, v), read one
+//! q — once per token per (layer, head).  Three invariants keep it fast
+//! and keep the fast paths honest:
+//!
+//! * **Scratch-arena ownership.**  Every transient the recurrence needs
+//!   (φ features, dφ, the widened value row, the normalized-read
+//!   numerator, prepped q/k rows) lives in a per-engine
+//!   [`scratch::Scratch`] behind one `RefCell`.  Entry points take at
+//!   most one borrow at a time; any buffer that must outlive a nested
+//!   scratch-using call travels by `take_*`/`put_*` move instead of a
+//!   held borrow.  After the first token, absorb / query / step and
+//!   both vjps do **zero heap traffic** (pinned by
+//!   `rust/tests/alloc_decode.rs`).  States are `Send`, not `Sync` —
+//!   one engine per decode slot / attention unit.
+//! * **Lane layout.**  The inner loops dispatch on a per-state
+//!   [`simd::Isa`]: the (F, dv) moment update/read runs 4 × f64 lanes,
+//!   two feature rows per pass ([`simd::matvec_accum`]), dots run
+//!   4-lane partial sums + FMA.  Dispatch is chosen at runtime
+//!   ([`simd::active`]: AVX2+FMA detection, `HOLT_SIMD` override) and
+//!   can be pinned per state (`PhiState::set_isa`) — never via mutable
+//!   globals, so parallel tests can't race it.
+//! * **When reassociation is allowed.**  Never for state: the absorb
+//!   update is elementwise multiply-then-add with FMA forbidden, so
+//!   state bits are identical across every ISA (and snapshots /
+//!   golden pins stay exact).  Query-side reductions may reassociate
+//!   and contract: outputs drift ≤ 1e-6 relative vs the always-kept
+//!   [`simd::Isa::Scalar`] reference path, which itself reproduces the
+//!   pre-SIMD accumulation order bit for bit.  Anything asserting
+//!   bit-equality must pin `Isa::Scalar`.
 
 pub mod backend;
 pub mod chunked;
@@ -81,6 +113,8 @@ pub mod grad;
 pub mod ho;
 pub mod linear;
 pub mod phi;
+pub mod scratch;
+pub mod simd;
 
 pub use self::backend::{Evaluation, NativeBackend};
 pub use self::chunked::chunked_forward;
@@ -91,6 +125,8 @@ pub use self::grad::{chunked_attention_vjp, softmax_attention_vjp, AttentionGrad
 pub use self::ho::HoState;
 pub use self::linear::LinearState;
 pub use self::phi::PhiState;
+pub use self::scratch::Scratch;
+pub use self::simd::Isa;
 
 /// Denominator clamp, identical to the `mathref` oracles: row weights are
 /// positive by construction (even-order Taylor ≥ ½ⁱˢʰ, elu+1 > 0), so in
@@ -166,6 +202,22 @@ pub trait RecurrentAttention {
     /// of once per pair. Default: identity copy.
     fn prep_rows(&self, rows: &[f32], _n: usize) -> Vec<f32> {
         rows.to_vec()
+    }
+
+    /// [`Self::prep_rows`] into a caller-owned buffer, reusing its
+    /// capacity — the allocation-free variant the hot paths use.
+    /// Default delegates to [`Self::prep_rows`] (correct for any
+    /// override, but allocates — kernels on the hot path override this).
+    fn prep_rows_into(&self, rows: &[f32], n: usize, out: &mut Vec<f32>) {
+        *out = self.prep_rows(rows, n);
+    }
+
+    /// Which lane-tiled implementation this kernel's inner loops run —
+    /// blocked drivers ([`chunked_forward`], the backward replay) use it
+    /// for their own dots so one knob pins the whole evaluation.
+    /// Default: the process-wide [`simd::active`] choice.
+    fn isa(&self) -> simd::Isa {
+        simd::active()
     }
 
     /// [`Self::pair_weight`] over rows already passed through

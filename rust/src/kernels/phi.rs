@@ -15,17 +15,26 @@
 //! with [`TaylorMap`] / `EluMap` (see `kernels/ho.rs`, `kernels/linear.rs`).
 //!
 //! For [`TaylorMap`] at order ≤ 2 the feature layout reproduces the
-//! pre-`FeatureMap` `s0/s1/s2` packed layout entry for entry, and every
-//! accumulator here runs the same f64 additions in the same order as the
-//! deleted hand-specialized bodies — order ≤ 2 outputs are bit-identical
-//! (pinned against a verbatim copy of the old kernels in
-//! `rust/tests/golden_order2.rs`).
+//! pre-`FeatureMap` `s0/s1/s2` packed layout entry for entry, and under
+//! [`Isa::Scalar`] every accumulator runs the same f64 additions in the
+//! same order as the deleted hand-specialized bodies — order ≤ 2 outputs
+//! are bit-identical (pinned against a verbatim copy of the old kernels
+//! in `rust/tests/golden_order2.rs`).  Off the scalar path the inner
+//! loops are lane-tiled ([`simd`]): the absorb update stays bit-identical
+//! (elementwise, no FMA), the query reductions reassociate within the
+//! documented ≤ 1e-6 (pinned in `rust/tests/simd_hotpath.rs`).
+//!
+//! All transient buffers live in the per-engine [`Scratch`] arena — after
+//! the first token, absorb / query / step / the vjps allocate nothing
+//! (pinned by the counting-allocator test `rust/tests/alloc_decode.rs`).
 //!
 //! All state is f64 — running sums live across entire sequences, where
 //! f32 cancellation would show up long before the 1e-4 oracle tolerance.
 
 use std::cell::RefCell;
 
+use crate::kernels::scratch::{self, Scratch};
+use crate::kernels::simd::{self, Isa};
 use crate::kernels::{AttentionGrad, FeatureMap, RecurrentAttention, TaylorMap};
 
 /// Recurrent kernelized-attention state over one head for feature map `M`.
@@ -36,12 +45,16 @@ pub struct PhiState<M: FeatureMap> {
     z: Vec<f64>,
     /// Σ φ_k(k)⊗v — (F, dv) row-major.
     m: Vec<f64>,
-    /// Reused feature buffer for absorb/query — the decode hot path runs
-    /// both once per token per (layer, head) and must not allocate a
-    /// feature_dim-sized Vec each time.  `RefCell` because `query_raw`
-    /// takes `&self`; states are owned per decode slot / per attention
-    /// unit and never shared across threads (`Send`, not `Sync`).
-    phi_scratch: RefCell<Vec<f64>>,
+    /// Which lane-tiled implementation the inner loops run.  Per-state
+    /// (not global) so tests and benches can pin a path without racing
+    /// other threads; defaults to [`simd::active`].
+    isa: Isa,
+    /// Transient-buffer arena — the decode hot path runs absorb + query
+    /// once per token per (layer, head) and must not allocate.  `RefCell`
+    /// because `query_raw` takes `&self`; states are owned per decode
+    /// slot / per attention unit and never shared across threads
+    /// (`Send`, not `Sync`).
+    scratch: RefCell<Scratch>,
 }
 
 impl<M: FeatureMap> PhiState<M> {
@@ -49,12 +62,14 @@ impl<M: FeatureMap> PhiState<M> {
     pub fn with_map(map: M, dv: usize) -> PhiState<M> {
         assert!(dv > 0, "empty value dim");
         let f = map.feature_dim();
+        let d = map.d();
         PhiState {
-            map,
             dv,
             z: vec![0.0; f],
             m: vec![0.0; f * dv],
-            phi_scratch: RefCell::new(vec![0.0; f]),
+            isa: simd::active(),
+            scratch: RefCell::new(Scratch::sized(f, dv, d)),
+            map,
         }
     }
 
@@ -66,6 +81,12 @@ impl<M: FeatureMap> PhiState<M> {
     /// Features of the state (= per-degree packed moments for Taylor).
     pub fn feature_dim(&self) -> usize {
         self.z.len()
+    }
+
+    /// Pin the lane dispatch for this state (tests, benches, golden
+    /// pins); requests are clamped to what the machine supports.
+    pub fn set_isa(&mut self, isa: Isa) {
+        self.isa = simd::resolve(isa);
     }
 }
 
@@ -85,14 +106,22 @@ impl<M: FeatureMap> RecurrentAttention for PhiState<M> {
         self.dv
     }
 
+    fn isa(&self) -> Isa {
+        self.isa
+    }
+
     fn reset(&mut self) {
         self.z.fill(0.0);
         self.m.fill(0.0);
     }
 
     fn absorb(&mut self, k: &[f32], v: &[f32]) {
-        let kp = self.map.prep_rows(k, 1);
+        // take/put instead of holding the borrow: absorb_prepped needs
+        // the arena for φ
+        let mut kp = self.scratch.get_mut().take_prep();
+        self.map.prep_rows_into(k, 1, &mut kp);
         self.absorb_prepped(&kp, v);
+        self.scratch.get_mut().put_prep(kp);
     }
 
     /// Absorb a key row that already went through [`Self::prep_rows`] —
@@ -101,54 +130,67 @@ impl<M: FeatureMap> RecurrentAttention for PhiState<M> {
         let dv = self.dv;
         assert_eq!(kp.len(), self.map.d(), "k row");
         assert_eq!(v.len(), dv, "v row");
-        let mut phi = self.phi_scratch.borrow_mut();
-        self.map.map_k(kp, &mut phi);
-        for (a, &p) in phi.iter().enumerate() {
+        let isa = self.isa;
+        let sc = self.scratch.get_mut();
+        self.map.map_k(kp, &mut sc.phi);
+        scratch::widen(&mut sc.v64, v);
+        // elementwise mul-then-add (no FMA) in every ISA: the state bits
+        // never depend on the dispatch — see simd module docs
+        for (a, &p) in sc.phi.iter().enumerate() {
             self.z[a] += p;
-            let row = &mut self.m[a * dv..(a + 1) * dv];
-            for (acc, &x) in row.iter_mut().zip(v) {
-                *acc += p * x as f64;
-            }
+            simd::axpy(isa, &mut self.m[a * dv..(a + 1) * dv], &sc.v64, p);
         }
     }
 
     fn query_raw(&self, q: &[f32], num: &mut [f64]) -> f64 {
-        let qp = self.map.prep_rows(q, 1);
-        self.query_raw_prepped(&qp, num)
+        let mut qp = self.scratch.borrow_mut().take_prep();
+        self.map.prep_rows_into(q, 1, &mut qp);
+        let den = self.query_raw_prepped(&qp, num);
+        self.scratch.borrow_mut().put_prep(qp);
+        den
     }
 
     fn query_raw_prepped(&self, qp: &[f32], num: &mut [f64]) -> f64 {
         let dv = self.dv;
         assert_eq!(qp.len(), self.map.d(), "q row");
         assert_eq!(num.len(), dv, "num row");
-        let mut phi = self.phi_scratch.borrow_mut();
-        self.map.map_q(qp, &mut phi);
+        let mut sc = self.scratch.borrow_mut();
+        self.map.map_q(qp, &mut sc.phi);
         num.fill(0.0);
-        let mut den = 0.0f64;
-        for (a, &p) in phi.iter().enumerate() {
-            den += p * self.z[a];
-            let row = &self.m[a * dv..(a + 1) * dv];
-            for (acc, &x) in num.iter_mut().zip(row) {
-                *acc += p * x;
-            }
-        }
+        // split reductions: φ·Z then the blocked (F, dv) read.  Under
+        // Isa::Scalar each accumulator still sees the historic per-index
+        // order, so scalar results stay bit-identical to the pre-SIMD
+        // interleaved loop.
+        let den = simd::dot_pd(self.isa, &sc.phi, &self.z);
+        simd::matvec_accum(self.isa, num, &sc.phi, &self.m, dv);
         den
     }
 
     fn pair_weight(&self, q: &[f32], k: &[f32]) -> f64 {
-        self.pair_weight_prepped(&self.map.prep_rows(q, 1), &self.map.prep_rows(k, 1))
+        let (mut qp, mut kp) = {
+            let mut sc = self.scratch.borrow_mut();
+            (sc.take_prep(), sc.take_prep2())
+        };
+        self.map.prep_rows_into(q, 1, &mut qp);
+        self.map.prep_rows_into(k, 1, &mut kp);
+        let w = self.pair_weight_prepped(&qp, &kp);
+        let mut sc = self.scratch.borrow_mut();
+        sc.put_prep(qp);
+        sc.put_prep2(kp);
+        w
     }
 
     fn prep_rows(&self, rows: &[f32], n: usize) -> Vec<f32> {
         self.map.prep_rows(rows, n)
     }
 
+    fn prep_rows_into(&self, rows: &[f32], n: usize, out: &mut Vec<f32>) {
+        self.map.prep_rows_into(rows, n, out);
+    }
+
     fn pair_weight_prepped(&self, q: &[f32], k: &[f32]) -> f64 {
-        let mut dot = 0.0f64;
-        for (&a, &b) in q.iter().zip(k) {
-            dot += a as f64 * b as f64;
-        }
-        self.map.pair_weight_from_dot(dot)
+        self.map
+            .pair_weight_from_dot(simd::dot_ps(self.isa, q, k))
     }
 
     fn state_elements(&self) -> usize {
@@ -167,6 +209,24 @@ impl<M: FeatureMap> RecurrentAttention for PhiState<M> {
         self.z.copy_from_slice(z);
         self.m.copy_from_slice(m);
     }
+
+    fn query(&self, q: &[f32], out: &mut [f32]) {
+        // overrides the allocating trait default: numerator comes from
+        // the arena, so step() is allocation-free
+        let (mut qp, mut num) = {
+            let mut sc = self.scratch.borrow_mut();
+            (sc.take_prep(), sc.take_num())
+        };
+        self.map.prep_rows_into(q, 1, &mut qp);
+        scratch::ensure_len(&mut num, self.dv);
+        let den = crate::kernels::floor_den(self.query_raw_prepped(&qp, &mut num));
+        for (o, &x) in out.iter_mut().zip(num.iter()) {
+            *o = (x / den) as f32;
+        }
+        let mut sc = self.scratch.borrow_mut();
+        sc.put_prep(qp);
+        sc.put_num(num);
+    }
 }
 
 impl<M: FeatureMap> AttentionGrad for PhiState<M> {
@@ -183,22 +243,19 @@ impl<M: FeatureMap> AttentionGrad for PhiState<M> {
         assert_eq!(qp.len(), self.map.d(), "q row");
         assert_eq!(dnum.len(), dv, "dnum row");
         assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
-        let mut phi = vec![0.0f64; f];
-        self.map.map_q(qp, &mut phi);
+        let isa = self.isa;
+        let mut sc = self.scratch.borrow_mut();
+        let Scratch { phi, dphi, .. } = &mut *sc;
+        self.map.map_q(qp, phi);
         // gstate layout == save_state: [z (F), m (F·dv)]
-        let mut dphi = vec![0.0f64; f];
         for (a, &p) in phi.iter().enumerate() {
             gstate[a] += dden * p;
-            let mut acc = dden * self.z[a];
             let srow = &self.m[a * dv..(a + 1) * dv];
             let grow = &mut gstate[f + a * dv..f + (a + 1) * dv];
-            for ((g, &x), &s) in grow.iter_mut().zip(dnum).zip(srow) {
-                *g += p * x;
-                acc += x * s;
-            }
-            dphi[a] = acc;
+            simd::axpy(isa, grow, dnum, p);
+            dphi[a] = dden * self.z[a] + simd::dot_pd(isa, dnum, srow);
         }
-        self.map.map_q_vjp(qp, &dphi, gqp);
+        self.map.map_q_vjp(qp, dphi, gqp);
     }
 
     fn absorb_vjp(&self, kp: &[f32], v: &[f32], gstate: &[f64], gkp: &mut [f64], gv: &mut [f64]) {
@@ -206,19 +263,17 @@ impl<M: FeatureMap> AttentionGrad for PhiState<M> {
         assert_eq!(kp.len(), self.map.d(), "k row");
         assert_eq!(v.len(), dv, "v row");
         assert_eq!(gstate.len(), self.state_elements(), "gstate layout");
-        let mut phi = vec![0.0f64; f];
-        self.map.map_k(kp, &mut phi);
-        let mut dphi = vec![0.0f64; f];
+        let isa = self.isa;
+        let mut sc = self.scratch.borrow_mut();
+        let Scratch { phi, dphi, v64, .. } = &mut *sc;
+        self.map.map_k(kp, phi);
+        scratch::widen(v64, v);
         for (a, &p) in phi.iter().enumerate() {
             let grow = &gstate[f + a * dv..f + (a + 1) * dv];
-            let mut acc = gstate[a];
-            for ((gvc, &gs), &vc) in gv.iter_mut().zip(grow).zip(v) {
-                *gvc += p * gs;
-                acc += gs * vc as f64;
-            }
-            dphi[a] = acc;
+            simd::axpy(isa, gv, grow, p);
+            dphi[a] = gstate[a] + simd::dot_pd(isa, grow, v64);
         }
-        self.map.map_k_vjp(kp, &dphi, gkp);
+        self.map.map_k_vjp(kp, dphi, gkp);
     }
 
     fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64> {
@@ -275,10 +330,13 @@ mod tests {
         for causal in [true, false] {
             let oracle =
                 crate::mathref::ho_attention(&q, &k, &v, n, n, d, dv, 3, 3.0, causal, true);
-            let mut st = PhiState::with_map(TaylorMap::new(d, 3, 3.0, true), dv);
-            let got = streaming_forward(&mut st, &q, &k, &v, n, causal);
-            for (a, b) in got.iter().zip(&oracle) {
-                assert!((a - b).abs() < 1e-5, "causal {causal}");
+            for isa in simd::available() {
+                let mut st = PhiState::with_map(TaylorMap::new(d, 3, 3.0, true), dv);
+                st.set_isa(isa);
+                let got = streaming_forward(&mut st, &q, &k, &v, n, causal);
+                for (a, b) in got.iter().zip(&oracle) {
+                    assert!((a - b).abs() < 1e-5, "causal {causal} isa {isa:?}");
+                }
             }
         }
     }
@@ -298,6 +356,31 @@ mod tests {
             st.step(&q, &k, &constant_v, &mut out);
             for &x in &out {
                 assert!((x - 1.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_states_are_bit_identical_across_isas() {
+        // the no-FMA elementwise contract at the PhiState level: states
+        // built under any ISA carry exactly the same bits
+        let mut rng = Rng::new(84);
+        let (d, dv, n) = (7, 6, 12);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let mut want = Vec::new();
+        for isa in simd::available() {
+            let mut st = PhiState::with_map(TaylorMap::new(d, 2, 2.0, true), dv);
+            st.set_isa(isa);
+            for j in 0..n {
+                st.absorb(&k[j * d..(j + 1) * d], &v[j * dv..(j + 1) * dv]);
+            }
+            let mut snap = Vec::new();
+            st.save_state(&mut snap);
+            if want.is_empty() {
+                want = snap;
+            } else {
+                assert_eq!(snap, want, "isa {isa:?}");
             }
         }
     }

@@ -1,0 +1,138 @@
+//! Per-engine scratch arena for the φ hot path.
+//!
+//! Every transient buffer the recurrence needs — φ features, reverse-mode
+//! dφ, the f64-widened value row, the normalized-read numerator, and the
+//! prepped q/k rows — lives here, owned by the `PhiState` that uses it.
+//! Buffers are sized once (at state construction or on first use) and
+//! reused for the lifetime of the engine, so decode, prefill, and train
+//! steps do **zero heap traffic per token** after warm-up (pinned by the
+//! counting-allocator test `rust/tests/alloc_decode.rs`).
+//!
+//! # Ownership rules
+//!
+//! * The arena is reached through a single `RefCell` on the owning state;
+//!   kernel entry points take at most one borrow at a time.
+//! * Entry points that need a scratch buffer *and* call back into another
+//!   scratch-using entry point (`absorb` → `absorb_prepped`, `query` →
+//!   `query_raw_prepped`) **move** the buffer out with the `take_*` /
+//!   `put_*` pair instead of holding the borrow across the call — the
+//!   `Vec` travels by value, the `RefCell` stays free, and the capacity
+//!   comes back when the buffer is returned.
+//! * All buffers are assign-only in their users (every element written
+//!   before read), so reuse never needs a zero-fill pass.
+
+/// Reusable transient buffers for one `PhiState` engine.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// φ features of the row being absorbed or queried (len `feature_dim`).
+    pub phi: Vec<f64>,
+    /// Reverse-mode dφ accumulator for the vjps (len `feature_dim`).
+    pub dphi: Vec<f64>,
+    /// f64-widened value row for the state update (len `dv`).
+    pub v64: Vec<f64>,
+    /// Numerator buffer for the normalized `query` read (len `dv`);
+    /// taken/put because `query` hands it to `query_raw_prepped`, which
+    /// borrows the arena itself.
+    num: Vec<f64>,
+    /// Prepped single-row q/k buffer (capacity `d`); taken/put around
+    /// feature-map calls for the same reason.
+    prep: Vec<f32>,
+    /// Second prepped-row buffer — `pair_weight` preps q and k at once.
+    prep2: Vec<f32>,
+}
+
+impl Scratch {
+    /// Arena pre-sized for an engine with `feature_dim` features, value
+    /// width `dv`, and input width `d` — no allocation after this.
+    pub fn sized(feature_dim: usize, dv: usize, d: usize) -> Scratch {
+        Scratch {
+            phi: vec![0.0; feature_dim],
+            dphi: vec![0.0; feature_dim],
+            v64: vec![0.0; dv],
+            num: vec![0.0; dv],
+            prep: Vec::with_capacity(d),
+            prep2: Vec::with_capacity(d),
+        }
+    }
+
+    /// Move the prepped-row buffer out (cleared); return it with
+    /// [`Scratch::put_prep`].  Moving keeps borrow scopes disjoint from
+    /// the f64 buffers the callee borrows.
+    pub fn take_prep(&mut self) -> Vec<f32> {
+        let mut buf = std::mem::take(&mut self.prep);
+        buf.clear();
+        buf
+    }
+
+    pub fn put_prep(&mut self, buf: Vec<f32>) {
+        self.prep = buf;
+    }
+
+    pub fn take_prep2(&mut self) -> Vec<f32> {
+        let mut buf = std::mem::take(&mut self.prep2);
+        buf.clear();
+        buf
+    }
+
+    pub fn put_prep2(&mut self, buf: Vec<f32>) {
+        self.prep2 = buf;
+    }
+
+    /// Move the numerator buffer out; return it with [`Scratch::put_num`].
+    pub fn take_num(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.num)
+    }
+
+    pub fn put_num(&mut self, buf: Vec<f64>) {
+        self.num = buf;
+    }
+}
+
+/// Resize `buf` to `n` reusing capacity; contents are unspecified (the
+/// callers are assign-only, so no zero-fill is spent on reuse).
+#[inline]
+pub fn ensure_len(buf: &mut Vec<f64>, n: usize) {
+    if buf.len() != n {
+        buf.resize(n, 0.0);
+    }
+}
+
+/// `out[i] = x[i] as f64` (exact widening), reusing `out`'s capacity.
+#[inline]
+pub fn widen(out: &mut Vec<f64>, x: &[f32]) {
+    out.clear();
+    out.extend(x.iter().map(|&v| v as f64));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_put_round_trips_capacity() {
+        let mut s = Scratch::sized(8, 4, 16);
+        let mut p = s.take_prep();
+        let cap = p.capacity();
+        assert!(cap >= 16);
+        p.extend_from_slice(&[1.0; 16]);
+        s.put_prep(p);
+        let p = s.take_prep();
+        assert!(p.is_empty() && p.capacity() == cap);
+        s.put_prep(p);
+
+        let mut n = s.take_num();
+        assert_eq!(n.len(), 4);
+        ensure_len(&mut n, 4);
+        s.put_num(n);
+    }
+
+    #[test]
+    fn widen_is_exact_and_reuses() {
+        let mut out = Vec::with_capacity(4);
+        widen(&mut out, &[1.5f32, -2.25, 0.1]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], 1.5);
+        assert_eq!(out[1], -2.25);
+        assert_eq!(out[2], 0.1f32 as f64);
+    }
+}

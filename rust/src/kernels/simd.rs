@@ -1,0 +1,585 @@
+//! Lane-tiled inner-loop primitives for the φ hot path, behind runtime
+//! feature dispatch.
+//!
+//! Every op ships in (up to) three implementations:
+//!
+//! * [`Isa::Scalar`] — the original element-at-a-time loops, kept verbatim
+//!   as the always-available **reference path**.  Accumulation order is
+//!   exactly the pre-SIMD kernels'; the proptests in
+//!   `rust/tests/simd_hotpath.rs` pin the other paths against it.
+//! * [`Isa::Unrolled`] — safe Rust, hand-unrolled into 4 × f64 lanes with
+//!   independent partial accumulators.  Autovectorizes on any target
+//!   (NEON, SSE2 baseline) without `unsafe`.
+//! * [`Isa::Avx2`] — x86_64 AVX2 + FMA intrinsics, selected only when
+//!   `is_x86_feature_detected!` says so at runtime.
+//!
+//! # Reassociation contract
+//!
+//! The elementwise ops ([`axpy`], [`axpy_ps`]) perform the *same*
+//! rounded multiply-then-add per element in every ISA (no FMA
+//! contraction) — results are **bit-identical** across paths, which is
+//! why kernel *states* (built only from elementwise absorbs) never
+//! depend on the dispatch.  The reductions ([`dot_pd`], [`dot_ps`],
+//! [`matvec_accum`]) are where the speedup lives: lane-blocked partial
+//! sums + FMA, i.e. documented float reassociation, ≤ 1e-6 relative
+//! drift vs [`Isa::Scalar`].  Anything pinned bit-exact (golden tests)
+//! must run the scalar path — see `PhiState::set_isa`.
+
+use std::sync::OnceLock;
+
+/// Which implementation of the lane-tiled primitives to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Element-at-a-time reference loops (the pre-SIMD semantics anchor).
+    Scalar,
+    /// Safe 4-lane hand-unrolled Rust — available everywhere.
+    Unrolled,
+    /// AVX2 + FMA intrinsics — x86_64 with runtime detection only.
+    Avx2,
+}
+
+/// Best ISA the running CPU supports.
+pub fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Isa::Avx2;
+        }
+    }
+    Isa::Unrolled
+}
+
+/// Clamp a requested ISA to what this machine can run: [`Isa::Avx2`]
+/// downgrades to [`Isa::Unrolled`] when unavailable, everything else is
+/// returned unchanged.
+pub fn resolve(isa: Isa) -> Isa {
+    if isa == Isa::Avx2 && detect() != Isa::Avx2 {
+        return Isa::Unrolled;
+    }
+    isa
+}
+
+/// The process-wide default: runtime detection, overridable with
+/// `HOLT_SIMD=scalar|unrolled|avx2` (downgraded if unsupported).  Read
+/// once; per-state overrides (`PhiState::set_isa`) exist so tests and
+/// benches can pin a path without touching global state.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("HOLT_SIMD").ok().as_deref() {
+        Some("scalar") => Isa::Scalar,
+        Some("unrolled") => Isa::Unrolled,
+        Some("avx2") => resolve(Isa::Avx2),
+        _ => detect(),
+    })
+}
+
+/// Every ISA runnable on this machine, [`Isa::Scalar`] first — the
+/// iteration axis of the SIMD ≡ scalar pin tests.
+pub fn available() -> Vec<Isa> {
+    let mut out = vec![Isa::Scalar, Isa::Unrolled];
+    if detect() == Isa::Avx2 {
+        out.push(Isa::Avx2);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// axpy: acc[c] += a · x[c]   (f64 × f64 — the Σφ(k)⊗v state update)
+// ---------------------------------------------------------------------------
+
+/// `acc[c] += a · x[c]` — elementwise, multiply-then-add in every path
+/// (**no FMA**): bit-identical across ISAs so absorb leaves the same
+/// state bits no matter the dispatch.
+#[inline]
+pub fn axpy(isa: Isa, acc: &mut [f64], x: &[f64], a: f64) {
+    debug_assert_eq!(acc.len(), x.len());
+    match isa {
+        Isa::Scalar => axpy_scalar(acc, x, a),
+        Isa::Unrolled => axpy_unrolled(acc, x, a),
+        Isa::Avx2 => axpy_avx2_dispatch(acc, x, a),
+    }
+}
+
+fn axpy_scalar(acc: &mut [f64], x: &[f64], a: f64) {
+    for (o, &v) in acc.iter_mut().zip(x) {
+        *o += a * v;
+    }
+}
+
+fn axpy_unrolled(acc: &mut [f64], x: &[f64], a: f64) {
+    let n4 = (acc.len() / 4) * 4;
+    let mut i = 0;
+    while i < n4 {
+        // same rounded mul-then-add per element as scalar — only the
+        // loop structure changes, so results stay bit-identical
+        acc[i] += a * x[i];
+        acc[i + 1] += a * x[i + 1];
+        acc[i + 2] += a * x[i + 2];
+        acc[i + 3] += a * x[i + 3];
+        i += 4;
+    }
+    for c in i..acc.len() {
+        acc[c] += a * x[c];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx2_dispatch(acc: &mut [f64], x: &[f64], a: f64) {
+    // Safety: Isa::Avx2 is only produced by detect()/resolve() when the
+    // CPU reports avx2+fma.
+    unsafe { axpy_avx2(acc, x, a) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn axpy_avx2_dispatch(acc: &mut [f64], x: &[f64], a: f64) {
+    axpy_unrolled(acc, x, a)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2(acc: &mut [f64], x: &[f64], a: f64) {
+    use core::arch::x86_64::*;
+    let n = acc.len();
+    let av = _mm256_set1_pd(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+        let ov = _mm256_loadu_pd(acc.as_ptr().add(i));
+        // mul then add (NOT fmadd): keeps the per-element rounding
+        // identical to the scalar reference — states stay bit-equal
+        let r = _mm256_add_pd(ov, _mm256_mul_pd(av, xv));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(i), r);
+        i += 4;
+    }
+    for c in i..n {
+        acc[c] += a * x[c];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// axpy_ps: acc[c] += a · x[c]   (f64 acc, f32 x — intra-chunk v row)
+// ---------------------------------------------------------------------------
+
+/// `acc[c] += a · (x[c] as f64)` — elementwise, no FMA, bit-identical
+/// across ISAs (the f32 → f64 widening is exact).
+#[inline]
+pub fn axpy_ps(isa: Isa, acc: &mut [f64], x: &[f32], a: f64) {
+    debug_assert_eq!(acc.len(), x.len());
+    match isa {
+        Isa::Scalar => axpy_ps_scalar(acc, x, a),
+        Isa::Unrolled => axpy_ps_unrolled(acc, x, a),
+        Isa::Avx2 => axpy_ps_avx2_dispatch(acc, x, a),
+    }
+}
+
+fn axpy_ps_scalar(acc: &mut [f64], x: &[f32], a: f64) {
+    for (o, &v) in acc.iter_mut().zip(x) {
+        *o += a * v as f64;
+    }
+}
+
+fn axpy_ps_unrolled(acc: &mut [f64], x: &[f32], a: f64) {
+    let n4 = (acc.len() / 4) * 4;
+    let mut i = 0;
+    while i < n4 {
+        acc[i] += a * x[i] as f64;
+        acc[i + 1] += a * x[i + 1] as f64;
+        acc[i + 2] += a * x[i + 2] as f64;
+        acc[i + 3] += a * x[i + 3] as f64;
+        i += 4;
+    }
+    for c in i..acc.len() {
+        acc[c] += a * x[c] as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_ps_avx2_dispatch(acc: &mut [f64], x: &[f32], a: f64) {
+    unsafe { axpy_ps_avx2(acc, x, a) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn axpy_ps_avx2_dispatch(acc: &mut [f64], x: &[f32], a: f64) {
+    axpy_ps_unrolled(acc, x, a)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_ps_avx2(acc: &mut [f64], x: &[f32], a: f64) {
+    use core::arch::x86_64::*;
+    let n = acc.len();
+    let av = _mm256_set1_pd(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+        let ov = _mm256_loadu_pd(acc.as_ptr().add(i));
+        let r = _mm256_add_pd(ov, _mm256_mul_pd(av, xv));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(i), r);
+        i += 4;
+    }
+    for c in i..n {
+        acc[c] += a * x[c] as f64;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dot_pd: Σ a[i]·b[i]   (f64 — the φ(q)·Z denominator read, vjp rows)
+// ---------------------------------------------------------------------------
+
+/// `Σᵢ a[i]·b[i]` over f64 — lane-blocked with FMA off the scalar path
+/// (reassociates; ≤ 1e-6 relative drift vs [`Isa::Scalar`]).
+#[inline]
+pub fn dot_pd(isa: Isa, a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => dot_pd_scalar(a, b),
+        Isa::Unrolled => dot_pd_unrolled(a, b),
+        Isa::Avx2 => dot_pd_avx2_dispatch(a, b),
+    }
+}
+
+fn dot_pd_scalar(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+fn dot_pd_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    let n4 = (a.len() / 4) * 4;
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut tail = 0.0f64;
+    for c in i..a.len() {
+        tail += a[c] * b[c];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_pd_avx2_dispatch(a: &[f64], b: &[f64]) -> f64 {
+    unsafe { dot_pd_avx2(a, b) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_pd_avx2_dispatch(a: &[f64], b: &[f64]) -> f64 {
+    dot_pd_unrolled(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_pd_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_pd(
+            _mm256_loadu_pd(a.as_ptr().add(i)),
+            _mm256_loadu_pd(b.as_ptr().add(i)),
+            acc0,
+        );
+        acc1 = _mm256_fmadd_pd(
+            _mm256_loadu_pd(a.as_ptr().add(i + 4)),
+            _mm256_loadu_pd(b.as_ptr().add(i + 4)),
+            acc1,
+        );
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = _mm256_fmadd_pd(
+            _mm256_loadu_pd(a.as_ptr().add(i)),
+            _mm256_loadu_pd(b.as_ptr().add(i)),
+            acc0,
+        );
+        i += 4;
+    }
+    let mut tail = 0.0f64;
+    for c in i..n {
+        tail += a[c] * b[c];
+    }
+    hsum256(_mm256_add_pd(acc0, acc1)) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn hsum256(v: core::arch::x86_64::__m256d) -> f64 {
+    use core::arch::x86_64::*;
+    let lo = _mm256_castpd256_pd128(v);
+    let hi = _mm256_extractf128_pd::<1>(v);
+    let s = _mm_add_pd(lo, hi);
+    let s = _mm_add_sd(s, _mm_unpackhi_pd(s, s));
+    _mm_cvtsd_f64(s)
+}
+
+// ---------------------------------------------------------------------------
+// dot_ps: Σ a[i]·b[i]   (f32 inputs widened to f64 — the pair-weight dot)
+// ---------------------------------------------------------------------------
+
+/// `Σᵢ (a[i] as f64)·(b[i] as f64)` — the intra-chunk triangle's dot
+/// product.  Lane-blocked + FMA off the scalar path (reassociates).
+#[inline]
+pub fn dot_ps(isa: Isa, a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        Isa::Scalar => dot_ps_scalar(a, b),
+        Isa::Unrolled => dot_ps_unrolled(a, b),
+        Isa::Avx2 => dot_ps_avx2_dispatch(a, b),
+    }
+}
+
+fn dot_ps_scalar(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as f64 * y as f64;
+    }
+    acc
+}
+
+fn dot_ps_unrolled(a: &[f32], b: &[f32]) -> f64 {
+    let n4 = (a.len() / 4) * 4;
+    let mut acc = [0.0f64; 4];
+    let mut i = 0;
+    while i < n4 {
+        acc[0] += a[i] as f64 * b[i] as f64;
+        acc[1] += a[i + 1] as f64 * b[i + 1] as f64;
+        acc[2] += a[i + 2] as f64 * b[i + 2] as f64;
+        acc[3] += a[i + 3] as f64 * b[i + 3] as f64;
+        i += 4;
+    }
+    let mut tail = 0.0f64;
+    for c in i..a.len() {
+        tail += a[c] as f64 * b[c] as f64;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_ps_avx2_dispatch(a: &[f32], b: &[f32]) -> f64 {
+    unsafe { dot_ps_avx2(a, b) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn dot_ps_avx2_dispatch(a: &[f32], b: &[f32]) -> f64 {
+    dot_ps_unrolled(a, b)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_ps_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut i = 0;
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_pd(
+            _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i))),
+            _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i))),
+            acc0,
+        );
+        acc1 = _mm256_fmadd_pd(
+            _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i + 4))),
+            _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i + 4))),
+            acc1,
+        );
+        i += 8;
+    }
+    if i + 4 <= n {
+        acc0 = _mm256_fmadd_pd(
+            _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i))),
+            _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i))),
+            acc0,
+        );
+        i += 4;
+    }
+    let mut tail = 0.0f64;
+    for c in i..n {
+        tail += a[c] as f64 * b[c] as f64;
+    }
+    hsum256(_mm256_add_pd(acc0, acc1)) + tail
+}
+
+// ---------------------------------------------------------------------------
+// matvec_accum: num[c] += Σ_a phi[a] · m[a·dv + c]   (the φ(q)·M read)
+// ---------------------------------------------------------------------------
+
+/// `num[c] += Σₐ phi[a] · m[a·dv + c]` — the moment-matrix read, blocked
+/// two feature rows at a time so each pass over `num` amortizes two rows
+/// of `m` (the (F, dv) matrix streams through cache exactly once).
+/// Reassociates off the scalar path.
+#[inline]
+pub fn matvec_accum(isa: Isa, num: &mut [f64], phi: &[f64], m: &[f64], dv: usize) {
+    debug_assert_eq!(num.len(), dv);
+    debug_assert_eq!(m.len(), phi.len() * dv);
+    match isa {
+        Isa::Scalar => matvec_scalar(num, phi, m, dv),
+        Isa::Unrolled => matvec_unrolled(num, phi, m, dv),
+        Isa::Avx2 => matvec_avx2_dispatch(num, phi, m, dv),
+    }
+}
+
+fn matvec_scalar(num: &mut [f64], phi: &[f64], m: &[f64], dv: usize) {
+    for (a, &p) in phi.iter().enumerate() {
+        let row = &m[a * dv..(a + 1) * dv];
+        for (acc, &x) in num.iter_mut().zip(row) {
+            *acc += p * x;
+        }
+    }
+}
+
+fn matvec_unrolled(num: &mut [f64], phi: &[f64], m: &[f64], dv: usize) {
+    let f = phi.len();
+    let mut a = 0;
+    while a + 2 <= f {
+        let p0 = phi[a];
+        let p1 = phi[a + 1];
+        let r0 = &m[a * dv..(a + 1) * dv];
+        let r1 = &m[(a + 1) * dv..(a + 2) * dv];
+        for c in 0..dv {
+            num[c] += p0 * r0[c] + p1 * r1[c];
+        }
+        a += 2;
+    }
+    if a < f {
+        let p = phi[a];
+        let row = &m[a * dv..(a + 1) * dv];
+        for (acc, &x) in num.iter_mut().zip(row) {
+            *acc += p * x;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn matvec_avx2_dispatch(num: &mut [f64], phi: &[f64], m: &[f64], dv: usize) {
+    unsafe { matvec_avx2(num, phi, m, dv) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn matvec_avx2_dispatch(num: &mut [f64], phi: &[f64], m: &[f64], dv: usize) {
+    matvec_unrolled(num, phi, m, dv)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matvec_avx2(num: &mut [f64], phi: &[f64], m: &[f64], dv: usize) {
+    use core::arch::x86_64::*;
+    let f = phi.len();
+    let dv4 = (dv / 4) * 4;
+    let mut a = 0;
+    while a + 2 <= f {
+        let p0 = _mm256_set1_pd(phi[a]);
+        let p1 = _mm256_set1_pd(phi[a + 1]);
+        let r0 = m.as_ptr().add(a * dv);
+        let r1 = m.as_ptr().add((a + 1) * dv);
+        let mut c = 0;
+        while c < dv4 {
+            let mut acc = _mm256_loadu_pd(num.as_ptr().add(c));
+            acc = _mm256_fmadd_pd(p0, _mm256_loadu_pd(r0.add(c)), acc);
+            acc = _mm256_fmadd_pd(p1, _mm256_loadu_pd(r1.add(c)), acc);
+            _mm256_storeu_pd(num.as_mut_ptr().add(c), acc);
+            c += 4;
+        }
+        while c < dv {
+            num[c] += phi[a] * *r0.add(c) + phi[a + 1] * *r1.add(c);
+            c += 1;
+        }
+        a += 2;
+    }
+    if a < f {
+        let p = phi[a];
+        let row = &m[a * dv..(a + 1) * dv];
+        for (acc, &x) in num.iter_mut().zip(row) {
+            *acc += p * x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn axpy_is_bit_identical_across_isas() {
+        let mut rng = Rng::new(61);
+        for n in [1, 3, 4, 7, 8, 33, 100] {
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let a = rng.normal();
+            let mut want = base.clone();
+            axpy(Isa::Scalar, &mut want, &x, a);
+            for isa in available() {
+                let mut got = base.clone();
+                axpy(isa, &mut got, &x, a);
+                assert_eq!(got, want, "{isa:?} n={n}");
+            }
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let mut want = base.clone();
+            axpy_ps(Isa::Scalar, &mut want, &xf, a);
+            for isa in available() {
+                let mut got = base.clone();
+                axpy_ps(isa, &mut got, &xf, a);
+                assert_eq!(got, want, "ps {isa:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reductions_match_scalar_within_reassociation() {
+        let mut rng = Rng::new(62);
+        for n in [1, 2, 4, 5, 8, 9, 31, 128, 1000] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let want = dot_pd(Isa::Scalar, &a, &b);
+            let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+            let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+            let want_ps = dot_ps(Isa::Scalar, &af, &bf);
+            for isa in available() {
+                assert!(close(dot_pd(isa, &a, &b), want, 1e-12), "{isa:?} n={n}");
+                assert!(close(dot_ps(isa, &af, &bf), want_ps, 1e-12), "ps {isa:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_scalar_within_reassociation() {
+        let mut rng = Rng::new(63);
+        for (f, dv) in [(1, 1), (2, 3), (5, 4), (7, 8), (66, 13), (231, 32)] {
+            let phi: Vec<f64> = (0..f).map(|_| rng.normal()).collect();
+            let m: Vec<f64> = (0..f * dv).map(|_| rng.normal()).collect();
+            let base: Vec<f64> = (0..dv).map(|_| rng.normal()).collect();
+            let mut want = base.clone();
+            matvec_scalar(&mut want, &phi, &m, dv);
+            for isa in available() {
+                let mut got = base.clone();
+                matvec_accum(isa, &mut got, &phi, &m, dv);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(close(*g, *w, 1e-12), "{isa:?} f={f} dv={dv}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_never_returns_unsupported() {
+        for isa in [Isa::Scalar, Isa::Unrolled, Isa::Avx2] {
+            let r = resolve(isa);
+            assert!(available().contains(&r), "{isa:?} resolved to {r:?}");
+        }
+        assert!(available().contains(&active()));
+    }
+}

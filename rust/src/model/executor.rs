@@ -8,7 +8,7 @@
 //! * [`NativeExecutor`] — pure-Rust [`NativeModel`] forward + per-slot
 //!   [`DecodeSession`]s on the O(n) kernels.  Zero setup: no artifacts,
 //!   no PJRT, no Python.  The decode batch loop fans active slots out
-//!   over scoped threads (each session is independent).
+//!   over the persistent worker pool (each session is independent).
 //! * [`ArtifactExecutor`] — the original PJRT path: AOT-lowered decode /
 //!   fwd artifacts driven through [`Runtime`], state slots managed by
 //!   [`StateManager`].  Behavior is unchanged from the pre-trait
@@ -214,8 +214,8 @@ impl Executor for NativeExecutor {
         let mut rows: Vec<Option<Result<Vec<f32>>>> = feed.iter().map(|_| None).collect();
         // the parallel batch loop: active (token, session, result) triples
         // (negative feed = SKIP: leave that slot's state untouched),
-        // chunked over at most `available_parallelism` scoped threads —
-        // sessions are disjoint &mut, the model is a shared &.
+        // fanned out over the persistent worker pool — sessions are
+        // disjoint &mut, the model is a shared &.
         let mut work: Vec<(i32, &mut DecodeSession, &mut Option<Result<Vec<f32>>>)> = self
             .sessions
             .iter_mut()

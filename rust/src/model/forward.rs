@@ -10,8 +10,10 @@
 //! [`DecodeSession`](crate::model::DecodeSession).
 //!
 //! The per-(sequence, head) attention calls are independent, so the
-//! forward fans them out over scoped threads — the same parallelism shape
-//! as the decode batch loop in `NativeExecutor`.
+//! forward fans them out over the persistent
+//! [`WorkerPool`](crate::model::WorkerPool) — the same parallelism shape
+//! (and the same pool) as the decode batch loop in `NativeExecutor` and
+//! the train-step vjp loop.
 
 use anyhow::{ensure, Result};
 
@@ -88,6 +90,7 @@ impl NativeModel {
             normalize_qk: true,
             chunk: 64,
             evaluation: Evaluation::Chunked,
+            isa: None,
         };
         Ok(NativeModel { entry, params, backend })
     }
@@ -196,7 +199,7 @@ impl NativeModel {
     }
 
     /// Run one attention call per (sequence, head) unit, fanned out over
-    /// scoped threads (each unit is independent).
+    /// the persistent worker pool (each unit is independent).
     fn attend_units(
         &self,
         units: &[(Vec<f32>, Vec<f32>, Vec<f32>)],
@@ -217,33 +220,13 @@ impl NativeModel {
     }
 }
 
-/// Run `f` over every item, chunked across at most
-/// `available_parallelism` scoped threads (serially when one thread is
-/// enough).  The one fan-out used by both the prefill head loop and the
-/// executor's decode batch loop.
+/// Run `f` over every item on the persistent process-wide
+/// [`WorkerPool`] (the caller's thread participates; serial when the
+/// batch is trivial).  The one fan-out used by the prefill head loop,
+/// the executor's decode batch loop, and the train-step vjp loop —
+/// previously each call spawned and joined a fresh `std::thread::scope`.
 pub(crate) fn fan_out<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], f: F) {
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(items.len())
-        .max(1);
-    if threads <= 1 {
-        for item in items.iter_mut() {
-            f(item);
-        }
-    } else {
-        let per = items.len().div_ceil(threads);
-        let f = &f;
-        std::thread::scope(|s| {
-            for chunk in items.chunks_mut(per) {
-                s.spawn(move || {
-                    for item in chunk.iter_mut() {
-                        f(item);
-                    }
-                });
-            }
-        });
-    }
+    crate::model::pool::WorkerPool::global().fan_out(items, f)
 }
 
 /// Weight view of block `li` over a [`ParamStore`] whose leaves were

@@ -56,6 +56,7 @@ fn backend_for(cfg: &ModelConfig) -> NativeBackend {
         normalize_qk: true,
         chunk: TRAIN_CHUNK,
         evaluation: Evaluation::Chunked,
+        isa: None,
     }
 }
 

@@ -14,11 +14,11 @@
 //! * [`Executor::forward_logits`] — full-sequence `(B, T) → (B, T, V)`
 //!   teacher-forced forward (prefill / eval).  On the native path this is
 //!   [`NativeModel::forward`]: cache-blocked chunked attention, heads
-//!   fanned out over scoped threads.
+//!   fanned out over the persistent [`WorkerPool`].
 //! * [`Executor::decode_step`] — one token for every allocated slot,
 //!   `(B,) → (B, V)`, advancing each slot's recurrent state in place.
 //!   O(1) work and O(1) state per token per slot — the paper's serving
-//!   claim.  The native impl runs active slots on scoped threads.
+//!   claim.  The native impl runs active slots on the shared pool.
 //! * [`Executor::state_bytes_per_slot`] — the size of one slot's decode
 //!   state in bytes, constant in context length for ho2/linear (vs a
 //!   KV cache that grows with `max_len` for the softmax baseline).
@@ -74,9 +74,11 @@ pub mod executor;
 pub mod forward;
 pub mod grad;
 pub mod nn;
+pub mod pool;
 pub mod presets;
 
 pub use self::decode::{DecodeSession, SessionSnapshot};
 pub use self::executor::{ArtifactExecutor, Executor, NativeExecutor, SKIP};
 pub use self::forward::{LayerView, NativeModel};
+pub use self::pool::WorkerPool;
 pub use self::presets::{native_model_entry, ho_feature_dim, is_ho, ATTN_KINDS, PRESET_NAMES};

@@ -1,0 +1,331 @@
+//! Persistent worker pool behind every model-layer fan-out.
+//!
+//! The historic `fan_out` spawned a fresh `std::thread::scope` per call —
+//! one thread spawn/join per prefill head batch, per decode batch, per
+//! train-step vjp batch.  This module keeps one set of workers alive for
+//! the process ([`WorkerPool::global`]) and hands them *batches*: a slice
+//! of items and a `Fn(&mut T)` to run over each.
+//!
+//! # Design
+//!
+//! * **Caller participates.**  `fan_out` enqueues up to `workers` tickets
+//!   for a batch and then drains the batch itself.  Item claiming is a
+//!   single `fetch_add` on a shared cursor, so progress never depends on
+//!   any worker picking the batch up — if the pool is busy (or has zero
+//!   workers) the caller simply computes everything, which also makes
+//!   nested `fan_out` calls from inside a worker deadlock-free by
+//!   construction.
+//! * **Determinism.**  Item `i` is processed by exactly one thread and
+//!   each item's computation is independent of which thread claimed it,
+//!   so outputs are identical for any worker count (pinned by tests
+//!   here and in `rust/tests/simd_hotpath.rs`).
+//! * **Lifetime safety without scopes.**  A batch shares borrowed data
+//!   (`items`, `f`) with 'static worker threads via type-erased pointers
+//!   in an `Arc<BatchCore>`.  The caller cannot return before every
+//!   worker that *entered* the batch has left (`wait_idle`), and tickets
+//!   that fire late find the cursor exhausted and touch nothing — they
+//!   never dereference the borrowed pointers.  A drop guard runs the
+//!   same wait on unwind, so a panicking `f` on the caller's thread
+//!   still cannot free borrowed data out from under a worker.
+//! * **Panics propagate.**  Worker-side panics are caught, flagged, and
+//!   re-raised on the caller's thread after the batch quiesces —
+//!   matching the scoped-thread behavior this replaces.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+/// A fixed set of persistent worker threads executing [`WorkerPool::fan_out`]
+/// batches.  Construct test instances with [`WorkerPool::new`]; production
+/// code uses the process-wide [`WorkerPool::global`].
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+}
+
+/// Type-erased shared state of one fan-out batch.  `items`/`f` are
+/// borrowed pointers smuggled as `usize`; validity is guaranteed by the
+/// caller of `fan_out` not returning (or unwinding) past `wait_idle`,
+/// and by `drain` never dereferencing them once the cursor is exhausted.
+struct BatchCore {
+    items: usize,
+    f: usize,
+    len: usize,
+    /// Next unclaimed item — `fetch_add` claiming, so each item runs on
+    /// exactly one thread.
+    next: AtomicUsize,
+    panicked: AtomicBool,
+    /// Set once the batch is complete; late tickets exit immediately.
+    expired: AtomicBool,
+    /// Workers currently inside the batch; guarded by a mutex (not an
+    /// atomic) so `wait_idle` cannot miss the last exit's notify.
+    inside: Mutex<usize>,
+    idle: Condvar,
+    drain: unsafe fn(&BatchCore),
+}
+
+impl BatchCore {
+    fn enter(&self) -> bool {
+        if self.expired.load(Ordering::Acquire) {
+            return false;
+        }
+        let mut g = self.inside.lock().unwrap();
+        if self.expired.load(Ordering::Acquire) {
+            return false;
+        }
+        *g += 1;
+        true
+    }
+
+    fn exit(&self) {
+        let mut g = self.inside.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    fn wait_idle(&self) {
+        let mut g = self.inside.lock().unwrap();
+        while *g > 0 {
+            g = self.idle.wait(g).unwrap();
+        }
+    }
+}
+
+/// Claim-and-run loop over the batch, monomorphized per (T, F) and
+/// reached through the `drain` fn pointer.
+///
+/// Safety: caller of `fan_out` guarantees `items`/`f` outlive the batch
+/// (it blocks in `wait_idle` until every entered worker exits); the
+/// pointers are only dereferenced for indices the cursor hands out,
+/// which stop before `len`.
+unsafe fn drain_batch<T: Send, F: Fn(&mut T) + Sync>(core: &BatchCore) {
+    loop {
+        let i = core.next.fetch_add(1, Ordering::Relaxed);
+        if i >= core.len {
+            return;
+        }
+        let f = &*(core.f as *const F);
+        f(&mut *(core.items as *mut T).add(i));
+    }
+}
+
+fn run_ticket(core: &BatchCore) {
+    if !core.enter() {
+        return;
+    }
+    let r = catch_unwind(AssertUnwindSafe(|| unsafe { (core.drain)(core) }));
+    if r.is_err() {
+        core.panicked.store(true, Ordering::Release);
+    }
+    core.exit();
+}
+
+/// Blocks the caller until the batch quiesces even if `f` panics on the
+/// caller's own thread mid-drain.
+struct CallerGuard<'a> {
+    core: &'a BatchCore,
+}
+
+impl Drop for CallerGuard<'_> {
+    fn drop(&mut self) {
+        // make any unclaimed work invisible (workers that already
+        // entered finish their claimed items), then wait them out
+        self.core.next.fetch_add(self.core.len, Ordering::Relaxed);
+        self.core.wait_idle();
+        self.core.expired.store(true, Ordering::Release);
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl WorkerPool {
+    /// Pool with exactly `workers` persistent threads (0 = every batch
+    /// runs entirely on the calling thread).  Tests use this to compare
+    /// outputs across thread counts; production code wants
+    /// [`WorkerPool::global`].
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        });
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("holt-pool-{w}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+        }
+        WorkerPool { shared, workers }
+    }
+
+    /// The process-wide pool every model-layer fan-out shares:
+    /// `available_parallelism − 1` workers (the calling thread is the
+    /// +1), `HOLT_POOL_THREADS` overrides the total.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let total = std::env::var("HOLT_POOL_THREADS")
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+                });
+            WorkerPool::new(total.saturating_sub(1))
+        })
+    }
+
+    /// Worker threads in this pool (the caller adds one more at drain
+    /// time).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f` over every item, the caller's thread included.  Returns
+    /// once every item has been processed and no worker still touches
+    /// the borrowed data.  Panics (from any thread) propagate to the
+    /// caller after the batch quiesces.
+    pub fn fan_out<T: Send, F: Fn(&mut T) + Sync>(&self, items: &mut [T], f: F) {
+        let len = items.len();
+        if len == 0 {
+            return;
+        }
+        if len == 1 || self.workers == 0 {
+            for item in items.iter_mut() {
+                f(item);
+            }
+            return;
+        }
+        let core = Arc::new(BatchCore {
+            items: items.as_mut_ptr() as usize,
+            f: &f as *const F as usize,
+            len,
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            expired: AtomicBool::new(false),
+            inside: Mutex::new(0),
+            idle: Condvar::new(),
+            drain: drain_batch::<T, F>,
+        });
+        // the caller drains too, so more tickets than len−1 can never
+        // find work
+        let tickets = self.workers.min(len - 1);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..tickets {
+                let c = Arc::clone(&core);
+                q.push_back(Box::new(move || run_ticket(&c)));
+            }
+        }
+        self.shared.available.notify_all();
+        {
+            let guard = CallerGuard { core: &core };
+            // caller-side drain: uncaught — but the guard's Drop still
+            // quiesces the batch before the unwind can free items/f
+            unsafe { (core.drain)(&core) };
+            drop(guard);
+        }
+        if core.panicked.load(Ordering::Acquire) {
+            panic!("worker panicked during fan_out batch");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pools() -> Vec<WorkerPool> {
+        vec![WorkerPool::new(0), WorkerPool::new(1), WorkerPool::new(2), WorkerPool::new(8)]
+    }
+
+    #[test]
+    fn every_item_processed_exactly_once() {
+        for pool in pools() {
+            for len in [0usize, 1, 2, 7, 64, 501] {
+                let mut items: Vec<usize> = vec![0; len];
+                pool.fan_out(&mut items, |x| *x += 1);
+                assert!(items.iter().all(|&x| x == 1), "workers={} len={len}", pool.workers());
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_are_independent_of_worker_count() {
+        // per-item work is deterministic, so any thread schedule and any
+        // worker count must produce bit-identical results
+        let compute = |x: &mut f64| {
+            let seed = *x;
+            let mut acc = 0.0f64;
+            for i in 0..2000 {
+                acc += (seed + i as f64).sin() * 1e-3;
+            }
+            *x = acc;
+        };
+        let mut want: Vec<f64> = (0..257).map(|i| i as f64).collect();
+        WorkerPool::new(0).fan_out(&mut want, compute);
+        for pool in pools() {
+            let mut got: Vec<f64> = (0..257).map(|i| i as f64).collect();
+            pool.fan_out(&mut got, compute);
+            assert_eq!(got, want, "workers={}", pool.workers());
+        }
+    }
+
+    #[test]
+    fn nested_fan_out_completes() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let inner_pool = Arc::clone(&pool);
+        let mut outer: Vec<Vec<u32>> = (0..6).map(|_| vec![0; 40]).collect();
+        pool.fan_out(&mut outer, move |row| {
+            inner_pool.fan_out(row, |x| *x += 1);
+        });
+        assert!(outer.iter().flatten().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let mut items: Vec<usize> = (0..64).collect();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.fan_out(&mut items, |x| {
+                if *x == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the caller");
+        // the pool keeps working after a poisoned batch
+        let mut again: Vec<usize> = vec![0; 32];
+        pool.fan_out(&mut again, |x| *x += 1);
+        assert!(again.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let mut items: Vec<usize> = vec![0; 100];
+        WorkerPool::global().fan_out(&mut items, |x| *x += 7);
+        assert!(items.iter().all(|&x| x == 7));
+    }
+}

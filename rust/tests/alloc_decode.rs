@@ -1,0 +1,125 @@
+//! Zero-alloc pin for the φ hot path: after warm-up, decode steps and
+//! the per-token train vjps perform **no heap traffic** — every
+//! transient lives in the per-engine [`Scratch`] arena (and, for the
+//! Taylor map's reverse sweep, the map-internal vjp buffers).
+//!
+//! A counting `#[global_allocator]` wraps `System` and tallies every
+//! `alloc`/`realloc`/`alloc_zeroed` in the process.  The counter is
+//! process-global, so everything runs serially inside ONE `#[test]` —
+//! a second test thread would put its own allocations inside our
+//! measurement window.
+//!
+//! Scope: this pins the *kernel-level* hot path (`step`, `pair_weight`,
+//! `query_vjp` + `absorb_vjp`), i.e. the per-token per-(layer, head)
+//! inner loops.  Whole-model `decode_step` still allocates dense
+//! activation buffers per call; shrinking that is a model-layer follow-up
+//! (see ROADMAP.md).
+//!
+//! [`Scratch`]: holt::kernels::Scratch
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use holt::kernels::{AttentionGrad, EluMap, FeatureMap, PhiState, RecurrentAttention, TaylorMap};
+use holt::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> usize {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+const WARM: usize = 3;
+const MEASURED: usize = 64;
+
+/// `step` (absorb + normalized query) plus `pair_weight`, per token.
+fn decode_phase<M: FeatureMap>(mut st: PhiState<M>, label: &str) {
+    let (d, dv) = (st.d(), st.dv());
+    let total = WARM + MEASURED;
+    let mut rng = Rng::new(41);
+    let q = rng.normal_vec_f32(total * d, 1.0);
+    let k = rng.normal_vec_f32(total * d, 1.0);
+    let v = rng.normal_vec_f32(total * dv, 1.0);
+    let mut out = vec![0.0f32; dv];
+    let mut sink = 0.0f64;
+    for t in 0..WARM {
+        st.step(&q[t * d..(t + 1) * d], &k[t * d..(t + 1) * d], &v[t * dv..(t + 1) * dv], &mut out);
+        sink += st.pair_weight(&q[t * d..(t + 1) * d], &k[t * d..(t + 1) * d]);
+    }
+    let before = allocations();
+    for t in WARM..total {
+        st.step(&q[t * d..(t + 1) * d], &k[t * d..(t + 1) * d], &v[t * dv..(t + 1) * dv], &mut out);
+        sink += st.pair_weight(&q[t * d..(t + 1) * d], &k[t * d..(t + 1) * d]);
+    }
+    let delta = allocations() - before;
+    assert!(sink.is_finite());
+    assert_eq!(delta, 0, "{label}: {delta} allocations in {MEASURED} decode steps");
+}
+
+/// `query_vjp` + `absorb_vjp` — one reverse-mode token of the train step.
+fn vjp_phase<M: FeatureMap>(mut st: PhiState<M>, label: &str) {
+    let (d, dv) = (st.d(), st.dv());
+    let total = WARM + MEASURED;
+    let mut rng = Rng::new(42);
+    // non-trivial history so the vjps read a dense state
+    for _ in 0..4 {
+        st.absorb(&rng.normal_vec_f32(d, 1.0), &rng.normal_vec_f32(dv, 1.0));
+    }
+    let qp = st.prep_rows(&rng.normal_vec_f32(total * d, 1.0), total);
+    let kp = st.prep_rows(&rng.normal_vec_f32(total * d, 1.0), total);
+    let v = rng.normal_vec_f32(total * dv, 1.0);
+    let dnum: Vec<f64> = rng.normal_vec_f32(dv, 1.0).iter().map(|&x| x as f64).collect();
+    let mut gstate = vec![0.0f64; st.state_elements()];
+    let mut gqp = vec![0.0f64; d];
+    let mut gkp = vec![0.0f64; d];
+    let mut gv = vec![0.0f64; dv];
+    for t in 0..WARM {
+        st.query_vjp(&qp[t * d..(t + 1) * d], &dnum, 0.25, &mut gstate, &mut gqp);
+        st.absorb_vjp(&kp[t * d..(t + 1) * d], &v[t * dv..(t + 1) * dv], &gstate, &mut gkp, &mut gv);
+    }
+    let before = allocations();
+    for t in WARM..total {
+        st.query_vjp(&qp[t * d..(t + 1) * d], &dnum, 0.25, &mut gstate, &mut gqp);
+        st.absorb_vjp(&kp[t * d..(t + 1) * d], &v[t * dv..(t + 1) * dv], &gstate, &mut gkp, &mut gv);
+    }
+    let delta = allocations() - before;
+    assert_eq!(delta, 0, "{label}: {delta} allocations in {MEASURED} vjp tokens");
+}
+
+#[test]
+fn kernel_hot_paths_allocate_nothing_after_warmup() {
+    // serial phases, one test — see module docs
+    decode_phase(PhiState::with_map(TaylorMap::new(8, 2, 3.0, true), 8), "taylor o2 decode");
+    decode_phase(PhiState::with_map(TaylorMap::new(6, 3, 3.0, true), 6), "taylor o3 decode");
+    decode_phase(PhiState::with_map(TaylorMap::new(5, 0, 3.0, false), 4), "taylor o0 decode");
+    decode_phase(PhiState::with_map(EluMap::new(8), 8), "elu decode");
+    vjp_phase(PhiState::with_map(TaylorMap::new(6, 2, 3.0, true), 5), "taylor o2 vjp");
+    vjp_phase(PhiState::with_map(TaylorMap::new(5, 3, 3.0, true), 4), "taylor o3 vjp");
+    vjp_phase(PhiState::with_map(EluMap::new(6), 5), "elu vjp");
+}

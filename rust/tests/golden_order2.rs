@@ -14,9 +14,14 @@
 //! (The redesign's save_state layout interleaves differently —
 //! [Z | M] instead of [s0, s0v, s1, s1v, s2, s2v] — so state comparison
 //! permutes the legacy vector into the new layout first.)
+//!
+//! The lane-tiled query paths reassociate by design, so every new-path
+//! state here pins `Isa::Scalar` — the always-available reference
+//! dispatch whose accumulation order *is* the legacy order.  (States are
+//! bit-identical under any ISA; it's the f32 outputs that need the pin.)
 
 use holt::kernels::{
-    chunked_forward, streaming_forward, HoState, LinearState, RecurrentAttention,
+    chunked_forward, streaming_forward, HoState, Isa, LinearState, RecurrentAttention,
 };
 use holt::mathref::{elu1, layernorm_noaffine, taylor_exp};
 use holt::rng::Rng;
@@ -355,6 +360,7 @@ fn taylor_streaming_outputs_are_bit_identical_to_legacy() {
         let (n, d, dv) = (19, 6, 5);
         let (q, k, v) = random_qkv(&mut rng, n, d, dv);
         let mut new = HoState::new(d, dv, order, alpha, normalize);
+        new.set_isa(Isa::Scalar);
         let mut old = LegacyHoState::new(d, dv, order, alpha, normalize);
         let a = streaming_forward(&mut new, &q, &k, &v, n, causal);
         let b = streaming_forward(&mut old, &q, &k, &v, n, causal);
@@ -377,6 +383,7 @@ fn taylor_chunked_outputs_are_bit_identical_to_legacy() {
     for order in [0usize, 1, 2] {
         for chunk in [1usize, 3, 8, 64] {
             let mut new = HoState::new(d, dv, order, 3.0, true);
+            new.set_isa(Isa::Scalar);
             let mut old = LegacyHoState::new(d, dv, order, 3.0, true);
             let a = chunked_forward(&mut new, &q, &k, &v, n, chunk, true);
             let b = chunked_forward(&mut old, &q, &k, &v, n, chunk, true);
@@ -391,6 +398,7 @@ fn taylor_decode_steps_are_bit_identical_to_legacy() {
     let mut rng = Rng::new(1003);
     let (d, dv) = (7, 7);
     let mut new = HoState::paper(d, dv);
+    new.set_isa(Isa::Scalar);
     let mut old = LegacyHoState::new(d, dv, 2, 3.0, true);
     let mut oa = vec![0.0f32; dv];
     let mut ob = vec![0.0f32; dv];
@@ -414,6 +422,7 @@ fn linear_outputs_and_state_are_bit_identical_to_legacy() {
     let (q, k, v) = random_qkv(&mut rng, n, d, dv);
     for causal in [true, false] {
         let mut new = LinearState::new(d, dv);
+        new.set_isa(Isa::Scalar);
         let mut old = LegacyLinearState::new(d, dv);
         let a = streaming_forward(&mut new, &q, &k, &v, n, causal);
         let b = streaming_forward(&mut old, &q, &k, &v, n, causal);
@@ -433,7 +442,8 @@ fn linear_outputs_and_state_are_bit_identical_to_legacy() {
 fn pair_weights_are_bit_identical_to_legacy() {
     let mut rng = Rng::new(1005);
     let d = 9;
-    let new = HoState::paper(d, d);
+    let mut new = HoState::paper(d, d);
+    new.set_isa(Isa::Scalar);
     let old = LegacyHoState::new(d, d, 2, 3.0, true);
     for _ in 0..25 {
         let q = rng.normal_vec_f32(d, 1.0);

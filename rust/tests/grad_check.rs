@@ -175,6 +175,7 @@ fn check_kernel_case(case: &Case, seed: u64) {
             normalize_qk: true,
             chunk: case.chunk,
             evaluation: holt::kernels::Evaluation::Chunked,
+            isa: None,
         };
         let mut st = backend.grad_state(case.kind, d, dv).unwrap();
         chunked_attention_vjp(st.as_mut(), &q, &k, &v, n, case.chunk, &go)

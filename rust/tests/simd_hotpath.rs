@@ -1,0 +1,198 @@
+//! SIMD ≡ scalar pins for the lane-tiled φ hot path.
+//!
+//! The dispatch contract (see `kernels/simd.rs` docs):
+//!
+//! * **States are bit-identical across ISAs** — the absorb update is
+//!   elementwise multiply-then-add with FMA forbidden, so snapshots and
+//!   golden pins never depend on which lane path ran.
+//! * **Query-side reductions may reassociate** — outputs drift at most
+//!   1e-6 relative against the always-kept [`Isa::Scalar`] reference
+//!   path (which itself reproduces the pre-SIMD accumulation order bit
+//!   for bit; `rust/tests/golden_order2.rs` pins that side).
+//!
+//! Swept across the feature-map axis (Taylor orders 0–3 with LayerNorm
+//! on and off, plus the elu+1 linear baseline), the evaluation axis
+//! (streaming, chunked at several chunk sizes, normalized decode
+//! steps), and the backward pass.  Also pins the worker-pool
+//! determinism claim: fan-out outputs are independent of thread count.
+
+use holt::kernels::{
+    chunked_attention_vjp, simd, Evaluation, Isa, NativeBackend, RecurrentAttention,
+};
+use holt::model::WorkerPool;
+use holt::rng::Rng;
+
+/// Every (kind, order, normalize_qk) point the sweep covers.
+fn configs() -> Vec<(&'static str, usize, bool)> {
+    vec![
+        ("ho", 0, true),
+        ("ho", 1, true),
+        ("ho", 2, true),
+        ("ho", 2, false),
+        ("ho", 3, true),
+        ("ho", 3, false),
+        ("linear", 0, true),
+    ]
+}
+
+fn backend(order: usize, normalize_qk: bool, isa: Isa) -> NativeBackend {
+    NativeBackend { order, normalize_qk, isa: Some(isa), ..NativeBackend::paper() }
+}
+
+fn seq(seed: u64, n: usize, d: usize, dv: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec_f32(n * d, 1.0),
+        rng.normal_vec_f32(n * d, 1.0),
+        rng.normal_vec_f32(n * dv, 1.0),
+    )
+}
+
+/// Relative closeness at the documented reassociation tolerance.
+fn assert_close(got: &[f32], want: &[f32], tol: f64, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (&a, &b)) in got.iter().zip(want).enumerate() {
+        let (a, b) = (a as f64, b as f64);
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "{ctx}: [{i}] got {a} want {b}"
+        );
+    }
+}
+
+#[test]
+fn absorbed_state_bits_do_not_depend_on_isa() {
+    let (n, d, dv) = (24, 6, 5);
+    let (_q, k, v) = seq(901, n, d, dv);
+    for (kind, order, ln) in configs() {
+        let mut want: Vec<f64> = Vec::new();
+        for isa in simd::available() {
+            let mut st = backend(order, ln, isa).state(kind, d, dv).unwrap();
+            for j in 0..n {
+                st.absorb(&k[j * d..(j + 1) * d], &v[j * dv..(j + 1) * dv]);
+            }
+            let mut snap = Vec::new();
+            st.save_state(&mut snap);
+            if want.is_empty() {
+                want = snap;
+            } else {
+                // bit-equal, not approximately equal
+                assert_eq!(snap, want, "{kind} o{order} ln={ln} isa {isa:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_outputs_match_scalar_within_tolerance() {
+    let (n, d, dv) = (40, 6, 6);
+    let (q, k, v) = seq(902, n, d, dv);
+    for (kind, order, ln) in configs() {
+        let mk = |isa| NativeBackend {
+            evaluation: Evaluation::Streaming,
+            ..backend(order, ln, isa)
+        };
+        let want = mk(Isa::Scalar).forward(kind, &q, &k, &v, n, d, dv, true).unwrap();
+        for isa in simd::available() {
+            let got = mk(isa).forward(kind, &q, &k, &v, n, d, dv, true).unwrap();
+            assert_close(&got, &want, 1e-6, &format!("{kind} o{order} ln={ln} {isa:?}"));
+        }
+    }
+}
+
+#[test]
+fn chunked_outputs_match_scalar_across_chunk_sizes() {
+    let (n, d, dv) = (40, 6, 6);
+    let (q, k, v) = seq(903, n, d, dv);
+    for (kind, order, ln) in configs() {
+        for chunk in [1usize, 5, 16, 64] {
+            let mk = |isa| NativeBackend { chunk, ..backend(order, ln, isa) };
+            let want = mk(Isa::Scalar).forward(kind, &q, &k, &v, n, d, dv, true).unwrap();
+            for isa in simd::available() {
+                let got = mk(isa).forward(kind, &q, &k, &v, n, d, dv, true).unwrap();
+                assert_close(
+                    &got,
+                    &want,
+                    1e-6,
+                    &format!("{kind} o{order} ln={ln} c{chunk} {isa:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_steps_match_scalar_within_tolerance() {
+    // the zero-alloc normalized `step` read, token by token
+    let (n, d, dv) = (32, 6, 5);
+    let (q, k, v) = seq(904, n, d, dv);
+    for (kind, order, ln) in configs() {
+        let mut want = backend(order, ln, Isa::Scalar).state(kind, d, dv).unwrap();
+        for isa in simd::available() {
+            let mut st = backend(order, ln, isa).state(kind, d, dv).unwrap();
+            want.reset();
+            let (mut ow, mut og) = (vec![0.0f32; dv], vec![0.0f32; dv]);
+            for i in 0..n {
+                let (qi, ki) = (&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d]);
+                let vi = &v[i * dv..(i + 1) * dv];
+                want.step(qi, ki, vi, &mut ow);
+                st.step(qi, ki, vi, &mut og);
+                assert_close(&og, &ow, 1e-6, &format!("{kind} o{order} ln={ln} t{i} {isa:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn backward_grads_match_scalar_within_tolerance() {
+    let (n, d, dv) = (24, 5, 4);
+    let (q, k, v) = seq(905, n, d, dv);
+    let go = Rng::new(906).normal_vec_f32(n * dv, 1.0);
+    for (kind, order, ln) in configs() {
+        let mut reference = backend(order, ln, Isa::Scalar).grad_state(kind, d, dv).unwrap();
+        let (wq, wk, wv) = chunked_attention_vjp(reference.as_mut(), &q, &k, &v, n, 7, &go);
+        for isa in simd::available() {
+            let mut st = backend(order, ln, isa).grad_state(kind, d, dv).unwrap();
+            let (gq, gk, gv) = chunked_attention_vjp(st.as_mut(), &q, &k, &v, n, 7, &go);
+            let ctx = format!("{kind} o{order} ln={ln} {isa:?}");
+            assert_close(&gq, &wq, 1e-6, &format!("{ctx} gq"));
+            assert_close(&gk, &wk, 1e-6, &format!("{ctx} gk"));
+            assert_close(&gv, &wv, 1e-6, &format!("{ctx} gv"));
+        }
+    }
+}
+
+#[test]
+fn pool_fan_out_kernel_batches_are_thread_count_invariant() {
+    // the executor's per-head fan-out shape: each item runs one head's
+    // chunked forward.  Per-item work is deterministic and the isa is
+    // resolved per state, so any worker count must give the same bits.
+    struct Head {
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        out: Vec<f32>,
+    }
+    let (n, d) = (48, 8);
+    let make_heads = || -> Vec<Head> {
+        (0..9)
+            .map(|h| {
+                let (q, k, v) = seq(910 + h as u64, n, d, d);
+                Head { q, k, v, out: Vec::new() }
+            })
+            .collect()
+    };
+    let be = NativeBackend::paper();
+    let run = |pool: &WorkerPool| {
+        let mut heads = make_heads();
+        pool.fan_out(&mut heads, |head| {
+            head.out = be.forward("ho", &head.q, &head.k, &head.v, n, d, d, true).unwrap();
+        });
+        heads.into_iter().map(|h| h.out).collect::<Vec<_>>()
+    };
+    let want = run(&WorkerPool::new(0));
+    for workers in [1usize, 2, 8] {
+        let got = run(&WorkerPool::new(workers));
+        assert_eq!(got, want, "workers={workers}");
+    }
+}
