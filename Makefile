@@ -1,7 +1,7 @@
 # Build-time entry points. Only the artifact path needs python/jax;
 # tier-1 (`cargo build --release && cargo test -q`) never touches this.
 
-.PHONY: artifacts tier1 train-smoke serve-smoke bench-kernels
+.PHONY: artifacts tier1 train-smoke serve-smoke serve-sharded-smoke bench-kernels
 
 # AOT-lower the jax model + attention kernels to HLO-text artifacts
 # under ./artifacts (manifest.json + *.hlo). Requires python3 + jax.
@@ -31,3 +31,12 @@ serve-smoke:
 	cargo run --release -- serve --backend native --model ho2_tiny \
 	  --synthetic --requests 12 --prompt-len 24 --max-tokens 8 \
 	  --policy fair --preempt-tokens 4 --turns 2
+
+# multi-shard overload bench: Zipf session reuse over 4 engine shards
+# behind the session router (snapshot migration + load shedding); writes
+# the shard_overload record (per-shard + aggregate p50/p95/p99, tok/s,
+# migrations, rejections, N-vs-1 speedup) to results/bench_serve.json
+serve-sharded-smoke:
+	cargo run --release -- serve --backend native --model ho2_tiny \
+	  --synthetic --shards 4 --requests 48 --sessions 12 \
+	  --prompt-len 16 --max-tokens 8 --policy fair

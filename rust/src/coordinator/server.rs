@@ -30,22 +30,25 @@
 //!   drivers used by `holt serve --synthetic`, the E4 bench and the
 //!   serve_decode example.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::json::{obj, Json};
 use crate::metrics::Latencies;
 use crate::model::{Executor, SKIP};
 use crate::rng::Rng;
 use crate::serve::{
-    stream, ParkedWork, Prefiller, QueueEntry, Scheduler, ServeEvent, SessionCache,
-    SessionEntry,
+    stream, EngineMsg, ParkedWork, Prefiller, QueueEntry, Router, RouterMsg, Scheduler,
+    ServeEvent, SessionCache, SessionEntry, ShardLoad,
 };
-pub use crate::serve::{Policy, Request, Response, ServeOpts};
+pub use crate::serve::{Policy, Request, Response, RouterOpts, ServeOpts};
 use crate::tokenizer::{ByteTokenizer, EOS, PAD};
 
 /// One in-flight request bound to a decode slot.
@@ -95,6 +98,10 @@ pub struct ServeStats {
     pub session_hits: u64,
     /// requests that carried a session_id but found no reusable entry
     pub session_misses: u64,
+    /// session entries this engine adopted from another shard
+    pub migrations_in: u64,
+    /// session entries this engine exported to another shard
+    pub migrations_out: u64,
     pub ttft: Latencies,
     pub per_request: Latencies,
     pub wall_s: f64,
@@ -122,7 +129,8 @@ impl ServeStats {
         format!(
             "backend={} model={} slots={} policy={} state/slot={:.1}KiB\n\
              requests={} (+{} rejected) tokens={} steps={} wall={:.2}s throughput={:.1} tok/s\n\
-             prefill: chunk={} tokens={}  preempt/resume={}/{}  sessions hit/miss={}/{}\n  \
+             prefill: chunk={} tokens={}  preempt/resume={}/{}  sessions hit/miss={}/{} \
+             migrations in/out={}/{}\n  \
              ttft: {}\n  request latency: {}",
             self.backend,
             self.model,
@@ -141,6 +149,8 @@ impl ServeStats {
             self.resumes,
             self.session_hits,
             self.session_misses,
+            self.migrations_in,
+            self.migrations_out,
             self.ttft.summary(),
             self.per_request.summary(),
         )
@@ -148,9 +158,9 @@ impl ServeStats {
 
     /// Machine-readable record for `results/bench_serve.json`.
     pub fn to_json(&self) -> Json {
-        // one sort per recorder for both percentile reads
-        let ttft = self.ttft.percentiles_us(&[50.0, 95.0]);
-        let lat = self.per_request.percentiles_us(&[50.0, 95.0]);
+        // one sort per recorder for all percentile reads
+        let ttft = self.ttft.percentiles_us(&[50.0, 95.0, 99.0]);
+        let lat = self.per_request.percentiles_us(&[50.0, 95.0, 99.0]);
         obj(vec![
             ("backend", self.backend.as_str().into()),
             ("model", self.model.as_str().into()),
@@ -167,12 +177,16 @@ impl ServeStats {
             ("resumes", (self.resumes as i64).into()),
             ("session_hits", (self.session_hits as i64).into()),
             ("session_misses", (self.session_misses as i64).into()),
+            ("migrations_in", (self.migrations_in as i64).into()),
+            ("migrations_out", (self.migrations_out as i64).into()),
             ("wall_s", self.wall_s.into()),
             ("tok_per_s", self.tokens_per_sec().into()),
             ("ttft_p50_ms", (ttft[0] as f64 / 1e3).into()),
             ("ttft_p95_ms", (ttft[1] as f64 / 1e3).into()),
+            ("ttft_p99_ms", (ttft[2] as f64 / 1e3).into()),
             ("latency_p50_ms", (lat[0] as f64 / 1e3).into()),
             ("latency_p95_ms", (lat[1] as f64 / 1e3).into()),
+            ("latency_p99_ms", (lat[2] as f64 / 1e3).into()),
         ])
     }
 }
@@ -193,6 +207,9 @@ pub struct Engine<'a> {
     chunked: bool,
     /// snapshot/restore available (preemption + session cache gate)
     snapshots: bool,
+    /// when running as a shard: load gauges published every loop
+    /// iteration for the router's lock-free placement decisions
+    load: Option<Arc<ShardLoad>>,
 }
 
 impl<'a> Engine<'a> {
@@ -225,6 +242,7 @@ impl<'a> Engine<'a> {
             chunked,
             snapshots,
             opts,
+            load: None,
         })
     }
 
@@ -238,6 +256,80 @@ impl<'a> Engine<'a> {
 
     fn has_active(&self) -> bool {
         self.slots.iter().any(Option::is_some)
+    }
+
+    /// Publish load gauges into `load` after every loop iteration (set
+    /// by [`crate::serve::ShardHandle::spawn`] before the engine runs).
+    pub fn publish_load(&mut self, load: Arc<ShardLoad>) {
+        self.load = Some(load);
+    }
+
+    fn busy_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn publish(&self) {
+        if let Some(l) = &self.load {
+            l.queued.store(self.scheduler.fresh_waiters(), Ordering::Relaxed);
+            l.busy.store(self.busy_slots(), Ordering::Relaxed);
+            l.sessions.store(self.sessions.len(), Ordering::Relaxed);
+        }
+    }
+
+    /// Migration export: give up this engine's cached entry for `id`
+    /// (None when unknown or the session's turn is still in flight — the
+    /// cache only holds finished turns).
+    pub fn export_session(&mut self, id: &str) -> Option<SessionEntry> {
+        self.sessions.remove(id)
+    }
+
+    /// Migration import: adopt an entry exported from another engine's
+    /// cache partition.
+    pub fn import_session(&mut self, id: &str, entry: SessionEntry) {
+        self.sessions.insert(id.to_string(), entry);
+    }
+
+    /// Live stats snapshot: gauges (busy slots, queue depth, cache
+    /// residency) + the counters accumulated so far — the per-shard half
+    /// of a `{"stats": true}` wire reply.
+    fn live_stats(&self, stats: &ServeStats) -> Json {
+        obj(vec![
+            ("n_slots", self.n_slots().into()),
+            ("slots_busy", self.busy_slots().into()),
+            ("queue_depth", self.scheduler.len().into()),
+            ("fresh_waiters", self.scheduler.fresh_waiters().into()),
+            ("sessions_cached", self.sessions.len().into()),
+            ("completed", (stats.completed as i64).into()),
+            ("rejected", (stats.rejected as i64).into()),
+            ("generated_tokens", (stats.generated_tokens as i64).into()),
+            ("preemptions", (stats.preemptions as i64).into()),
+            ("resumes", (stats.resumes as i64).into()),
+            ("session_hits", (stats.session_hits as i64).into()),
+            ("session_misses", (stats.session_misses as i64).into()),
+            ("migrations_in", (stats.migrations_in as i64).into()),
+            ("migrations_out", (stats.migrations_out as i64).into()),
+        ])
+    }
+
+    /// Handle one inbox message (see [`EngineMsg`]).
+    fn handle_msg(&mut self, msg: EngineMsg, stats: &mut ServeStats) {
+        match msg {
+            EngineMsg::Req(req) => self.accept(req, stats),
+            EngineMsg::Export { id, respond } => {
+                let entry = self.export_session(&id);
+                if entry.is_some() {
+                    stats.migrations_out += 1;
+                }
+                let _ = respond.send(entry);
+            }
+            EngineMsg::Import { id, entry } => {
+                self.import_session(&id, entry);
+                stats.migrations_in += 1;
+            }
+            EngineMsg::Stats { respond } => {
+                let _ = respond.send(self.live_stats(stats));
+            }
+        }
     }
 
     /// Accept one inbound request: invalid budgets and queue overflow
@@ -565,6 +657,23 @@ impl<'a> Engine<'a> {
     /// while anything is active, preempt for waiters, block when idle.
     /// Exits when `rx` disconnects and all work drains.
     pub fn run(&mut self, rx: Receiver<Request>) -> Result<ServeStats> {
+        self.run_inner(rx, EngineMsg::Req)
+    }
+
+    /// [`Engine::run`] over a full [`EngineMsg`] inbox — how a shard
+    /// thread runs the engine, so migration exports/imports and stats
+    /// probes interleave with requests at loop granularity.
+    pub fn run_msgs(&mut self, rx: Receiver<EngineMsg>) -> Result<ServeStats> {
+        self.run_inner(rx, |m| m)
+    }
+
+    /// One loop for both entry points: `into_msg` lifts whatever the
+    /// channel carries into an [`EngineMsg`].
+    fn run_inner<T, F: Fn(T) -> EngineMsg>(
+        &mut self,
+        rx: Receiver<T>,
+        into_msg: F,
+    ) -> Result<ServeStats> {
         let mut stats = ServeStats {
             backend: self.exec.backend_name().to_string(),
             model: self.exec.model().name.clone(),
@@ -579,7 +688,10 @@ impl<'a> Engine<'a> {
         loop {
             loop {
                 match rx.try_recv() {
-                    Ok(r) => self.accept(r, &mut stats),
+                    Ok(r) => {
+                        let m = into_msg(r);
+                        self.handle_msg(m, &mut stats);
+                    }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         disconnected = true;
@@ -592,49 +704,75 @@ impl<'a> Engine<'a> {
                 if disconnected {
                     break;
                 }
-                // idle: block for the next request
+                // idle: publish the (empty) load, block for the next
+                // message
+                self.publish();
                 match rx.recv() {
-                    Ok(r) => self.accept(r, &mut stats),
+                    Ok(r) => {
+                        let m = into_msg(r);
+                        self.handle_msg(m, &mut stats);
+                    }
                     Err(_) => disconnected = true,
                 }
                 continue;
             }
+            self.publish();
             self.step(&mut stats)?;
             self.preempt_for_waiters(&mut stats)?;
         }
+        self.publish();
         stats.wall_s = t0.elapsed().as_secs_f64();
         Ok(stats)
     }
 }
 
-/// Serve over TCP with JSON-lines framing (default scheduling).  Blocks
-/// forever.
-pub fn serve_tcp(exec: Box<dyn Executor + '_>, addr: &str, seed: u64) -> Result<()> {
+/// Serve over TCP with JSON-lines framing (default scheduling, one
+/// shard).  Blocks forever.
+pub fn serve_tcp(exec: Box<dyn Executor + Send>, addr: &str, seed: u64) -> Result<()> {
     serve_tcp_opts(exec, addr, seed, ServeOpts::default())
 }
 
 /// [`serve_tcp`] with explicit [`ServeOpts`] (scheduler policy, prefill
-/// chunk, session cache, preemption quantum, stream default).
+/// chunk, session cache, preemption quantum, stream default).  One
+/// shard; even so the router front end answers `{"stats": true}` probes.
 pub fn serve_tcp_opts(
-    exec: Box<dyn Executor + '_>,
+    exec: Box<dyn Executor + Send>,
     addr: &str,
     seed: u64,
     opts: ServeOpts,
 ) -> Result<()> {
-    let (tx, rx) = channel::<Request>();
+    serve_tcp_sharded(vec![exec], addr, seed, opts, RouterOpts::default())
+}
+
+/// Sharded TCP serving: one engine per executor, each on its own core,
+/// behind a session [`Router`] (see `serve/router.rs` for placement,
+/// migration and load-shedding semantics).  All executors must hold
+/// identical parameters.  Blocks forever.
+pub fn serve_tcp_sharded(
+    execs: Vec<Box<dyn Executor + Send>>,
+    addr: &str,
+    seed: u64,
+    opts: ServeOpts,
+    ropts: RouterOpts,
+) -> Result<()> {
+    ensure!(!execs.is_empty(), "serve needs at least one shard");
+    let (tx, rx) = channel::<RouterMsg>();
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!(
-        "[serve] {} backend, model {} — listening on {addr} \
-         (JSON lines: {{\"prompt\": ..}}; policy={} chunk={} sessions={} preempt={})",
-        exec.backend_name(),
-        exec.model().name,
+        "[serve] {} backend, model {} — listening on {addr} with {} shard(s) \
+         (JSON lines: {{\"prompt\": ..}} or {{\"stats\": true}}; \
+         policy={} chunk={} sessions/shard={} preempt={} global_queue={})",
+        execs[0].backend_name(),
+        execs[0].model().name,
+        execs.len(),
         opts.policy.name(),
         opts.prefill_chunk,
         opts.session_capacity,
         opts.preempt_tokens,
+        ropts.global_queue,
     );
 
-    // acceptor threads feed the engine channel
+    // acceptor threads feed the router channel
     let accept_tx = tx.clone();
     let stream_default = opts.stream_default;
     std::thread::spawn(move || {
@@ -650,9 +788,15 @@ pub fn serve_tcp_opts(
     });
     drop(tx);
 
-    let mut engine = Engine::with_opts(exec, seed, opts)?;
-    let stats = engine.run(rx)?;
-    eprintln!("[serve] engine exited\n{}", stats.report());
+    let router = Router::new(execs, seed, opts, ropts)?;
+    let (per_shard, report) = router.run(rx)?;
+    eprintln!(
+        "[serve] router exited (migrations={} shed={})",
+        report.migrations, report.rejected
+    );
+    for (i, stats) in per_shard.iter().enumerate() {
+        eprintln!("[serve] shard {i}\n{}", stats.report());
+    }
     Ok(())
 }
 
@@ -664,7 +808,7 @@ pub fn serve_tcp_opts(
 /// (each request holds a clone of the event sender until then).
 fn handle_conn(
     conn: TcpStream,
-    tx: Sender<Request>,
+    tx: Sender<RouterMsg>,
     base_id: u64,
     stream_default: bool,
 ) -> Result<()> {
@@ -705,6 +849,14 @@ fn handle_conn(
                 continue;
             }
         };
+        if req_json.get("stats").and_then(|j| j.as_bool()) == Some(true) {
+            // observability probe, answered by the router itself — does
+            // not consume a scheduling slot on any shard
+            if tx.send(RouterMsg::Stats { respond: etx.clone() }).is_err() {
+                break; // router gone
+            }
+            continue;
+        }
         let prompt = req_json.get("prompt").and_then(|j| j.as_str()).unwrap_or("");
         let mut req =
             Request::new(base_id + n, tok.encode_with_specials(prompt, false), etx.clone());
@@ -733,8 +885,8 @@ fn handle_conn(
             .get("stream")
             .and_then(|j| j.as_bool())
             .unwrap_or(stream_default);
-        if tx.send(req).is_err() {
-            break; // engine gone
+        if tx.send(RouterMsg::Req(req)).is_err() {
+            break; // router gone
         }
     }
     drop(etx);
@@ -862,4 +1014,244 @@ pub fn run_synthetic_sessions(
     });
     let mut engine = Engine::with_opts(exec, seed, opts)?;
     engine.run(rx)
+}
+
+/// Knobs for the multi-shard overload bench ([`run_overload_sharded`]).
+#[derive(Debug, Clone)]
+pub struct OverloadOpts {
+    /// total requests offered across the run
+    pub requests: usize,
+    /// distinct synthetic sessions; per-request session rank is drawn
+    /// Zipf(`zipf_s`), so a few sessions are hot (stressing affinity +
+    /// migration) and a long tail is cold (stressing cache eviction)
+    pub sessions: usize,
+    pub prompt_len: usize,
+    pub max_tokens: usize,
+    /// Zipf skew exponent (1.0–1.5 typical; higher = hotter head)
+    pub zipf_s: f64,
+    /// pause between offered requests (0 = open the firehose, letting
+    /// admission control and load shedding do the pacing)
+    pub gap_ms: u64,
+}
+
+impl Default for OverloadOpts {
+    fn default() -> Self {
+        OverloadOpts {
+            requests: 256,
+            sessions: 64,
+            prompt_len: 24,
+            max_tokens: 8,
+            zipf_s: 1.1,
+            gap_ms: 0,
+        }
+    }
+}
+
+/// What the overload bench measured: aggregate counters over the whole
+/// run plus every shard's own [`ServeStats`].
+pub struct OverloadReport {
+    pub shards: usize,
+    pub offered: usize,
+    pub sessions: usize,
+    /// wall clock from first offered request to last delivered response
+    pub wall_s: f64,
+    /// successful responses seen by the synthetic clients
+    pub completed: u64,
+    /// error responses seen by the clients (router shed + per-shard
+    /// queue-bound rejections + oversized prompts)
+    pub rejected: u64,
+    /// session entries shipped between shard cache partitions
+    pub migrations: u64,
+    /// requests shed by the router's global admission budget
+    pub router_rejected: u64,
+    pub generated_tokens: u64,
+    /// ttft/latency samples pooled across shards (percentiles over the
+    /// pool, not averaged per-shard quantiles)
+    pub ttft: Latencies,
+    pub latency: Latencies,
+    pub per_shard: Vec<ServeStats>,
+}
+
+impl OverloadReport {
+    /// Aggregate decode throughput over the bench's own wall clock (the
+    /// per-shard `tok_per_s` figures use each engine's idle-inclusive
+    /// wall and understate a loaded run).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.wall_s
+        }
+    }
+
+    /// One record for `results/bench_serve.json`: aggregate p50/p95/p99 +
+    /// tok/s + migration/shed counters, with the per-shard stats inline.
+    pub fn to_json(&self) -> Json {
+        let ttft = self.ttft.percentiles_us(&[50.0, 95.0, 99.0]);
+        let lat = self.latency.percentiles_us(&[50.0, 95.0, 99.0]);
+        obj(vec![
+            ("shards", self.shards.into()),
+            ("offered", self.offered.into()),
+            ("sessions", self.sessions.into()),
+            ("wall_s", self.wall_s.into()),
+            ("completed", (self.completed as i64).into()),
+            ("rejected", (self.rejected as i64).into()),
+            ("migrations", (self.migrations as i64).into()),
+            ("router_rejected", (self.router_rejected as i64).into()),
+            ("generated_tokens", (self.generated_tokens as i64).into()),
+            ("tok_per_s", self.tokens_per_sec().into()),
+            ("ttft_p50_ms", (ttft[0] as f64 / 1e3).into()),
+            ("ttft_p95_ms", (ttft[1] as f64 / 1e3).into()),
+            ("ttft_p99_ms", (ttft[2] as f64 / 1e3).into()),
+            ("latency_p50_ms", (lat[0] as f64 / 1e3).into()),
+            ("latency_p95_ms", (lat[1] as f64 / 1e3).into()),
+            ("latency_p99_ms", (lat[2] as f64 / 1e3).into()),
+            (
+                "per_shard",
+                Json::Arr(self.per_shard.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "shards={} offered={} completed={} rejected={} (router shed {}) \
+             migrations={} tokens={} wall={:.2}s aggregate={:.1} tok/s\n  \
+             ttft: {}\n  request latency: {}",
+            self.shards,
+            self.offered,
+            self.completed,
+            self.rejected,
+            self.router_rejected,
+            self.migrations,
+            self.generated_tokens,
+            self.wall_s,
+            self.tokens_per_sec(),
+            self.ttft.summary(),
+            self.latency.summary(),
+        )
+    }
+}
+
+/// The multi-shard overload bench behind `holt serve --synthetic
+/// --shards N`: one engine shard per executor behind a [`Router`],
+/// offered `bench.requests` requests over `bench.sessions` synthetic
+/// sessions with Zipf-skewed reuse and mixed priorities.  Hot sessions
+/// revisit their shard (session-cache hits), hash-unlucky hot shards
+/// saturate and trigger snapshot migration, and offered load beyond the
+/// admission budgets is shed — all counted in the returned
+/// [`OverloadReport`].
+pub fn run_overload_sharded(
+    execs: Vec<Box<dyn Executor + Send>>,
+    seed: u64,
+    opts: ServeOpts,
+    ropts: RouterOpts,
+    bench: OverloadOpts,
+) -> Result<OverloadReport> {
+    ensure!(!execs.is_empty(), "overload bench needs at least one shard");
+    ensure!(bench.sessions > 0, "overload bench needs at least one session");
+    ensure!(bench.sessions < (1 << 24), "session ranks are packed into 24 bits of the id");
+    let shards = execs.len();
+    let max_len = execs[0].model().config.max_len;
+    let corpus = crate::data::charlm::CORPUS.as_bytes();
+    let prompt_len = bench.prompt_len.min(corpus.len().saturating_sub(1));
+    let base_prompt = move |rank: usize| -> Vec<i32> {
+        let start = rank.wrapping_mul(2_654_435_761) % (corpus.len() - prompt_len);
+        std::iter::once(crate::tokenizer::BOS)
+            .chain(corpus[start..start + prompt_len].iter().map(|&b| b as i32))
+            .collect()
+    };
+
+    // Zipf CDF over session ranks: weight(r) = 1/(r+1)^s
+    let mut cdf = Vec::with_capacity(bench.sessions);
+    let mut total = 0.0f64;
+    for r in 0..bench.sessions {
+        total += 1.0 / ((r + 1) as f64).powf(bench.zipf_s);
+        cdf.push(total);
+    }
+
+    let mut router = Router::new(execs, seed, opts, ropts)?;
+
+    // Conversation histories shared between the offer loop (reads the
+    // current history as the next prompt) and the collector (appends
+    // each completion).  A data race between a completion landing and
+    // the next turn being offered only re-sends an already-absorbed
+    // prefix — a session-cache hit either way, never a wrong result.
+    let histories: Arc<Mutex<HashMap<usize, Vec<i32>>>> = Arc::new(Mutex::new(HashMap::new()));
+    let (etx, erx) = channel::<ServeEvent>();
+    let coll_histories = histories.clone();
+    let collector = std::thread::spawn(move || {
+        let mut completed = 0u64;
+        let mut rejected = 0u64;
+        for ev in erx {
+            let ServeEvent::Done(resp) = ev else { continue };
+            if resp.error.is_some() {
+                rejected += 1;
+                continue;
+            }
+            completed += 1;
+            let rank = (resp.id & 0x00ff_ffff) as usize;
+            let mut h = coll_histories.lock().expect("histories lock");
+            if let Some(hist) = h.get_mut(&rank) {
+                hist.extend(&resp.token_ids);
+            }
+        }
+        (completed, rejected)
+    });
+
+    let mut rng = Rng::new(seed ^ 0x0eb1_0ad);
+    let t0 = Instant::now();
+    for i in 0..bench.requests {
+        let u = rng.uniform() * total;
+        let rank = cdf.partition_point(|&c| c < u).min(bench.sessions - 1);
+        let prompt = {
+            let mut h = histories.lock().expect("histories lock");
+            let hist = h.entry(rank).or_insert_with(|| base_prompt(rank));
+            if hist.len() + bench.max_tokens > max_len {
+                // conversation outgrew the context window: restart it
+                *hist = base_prompt(rank);
+            }
+            hist.clone()
+        };
+        let mut req = Request::new(((i as u64) << 24) | rank as u64, prompt, etx.clone());
+        req.max_tokens = bench.max_tokens;
+        req.priority = rng.uniform_int(0, 4) as i64 - 1; // mixed -1..=2
+        req.client = format!("tenant{}", rank % 8);
+        req.session_id = Some(format!("z{rank}"));
+        router.route(req);
+        if bench.gap_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(bench.gap_ms));
+        }
+    }
+    drop(etx);
+    let (completed, rejected) = collector
+        .join()
+        .map_err(|_| anyhow::anyhow!("overload collector thread panicked"))?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let migrations = router.report().migrations;
+    let router_rejected = router.report().rejected;
+    let (per_shard, _) = router.finish()?;
+    let mut ttft = Latencies::new();
+    let mut latency = Latencies::new();
+    let mut generated_tokens = 0u64;
+    for s in &per_shard {
+        ttft.merge(&s.ttft);
+        latency.merge(&s.per_request);
+        generated_tokens += s.generated_tokens;
+    }
+    Ok(OverloadReport {
+        shards,
+        offered: bench.requests,
+        sessions: bench.sessions,
+        wall_s,
+        completed,
+        rejected,
+        migrations,
+        router_rejected,
+        generated_tokens,
+        ttft,
+        latency,
+        per_shard,
+    })
 }

@@ -128,10 +128,22 @@ COMMANDS
               --session-cache N --preempt-tokens N --queue-cap N --stream]
              (scheduler: chunked prefill, O(1)-state preemption when
               waiters queue, LRU session cache, streamed deltas)
+             [--shards N --global-queue N]
+             (TCP serving runs N engine shards — default one per core;
+              --shards 1 restores the single engine — behind a session
+              router: session_id hash affinity, few-KiB snapshot
+              migration off saturated shards, global load shedding with
+              explicit `overloaded` errors; `{\"stats\": true}` on the
+              wire returns per-shard + aggregate stats as one JSON line)
              [--synthetic --requests N --prompt-len L --max-tokens N
               --gap-ms MS --turns K --out DIR]
              (synthetic benches chunked vs token-at-a-time prefill plus
               session reuse -> bench_serve.json)
+             [--synthetic --shards N --sessions N --zipf S]
+             (multi-shard overload bench: Zipf-skewed session reuse and
+              mixed priorities offered to 1 shard then N; per-shard +
+              aggregate p50/p95/p99, tok/s, migrations and rejections
+              -> bench_serve.json `shard_overload` record)
   client     --addr HOST:PORT [--requests N --concurrency C
              --prompt STR --max-tokens N]
   approx     [--seed S --out DIR --native] E1 approximation table
@@ -242,7 +254,7 @@ fn build_executor(
     model: &str,
     ckpt: Option<&str>,
     seed: u64,
-) -> Result<Box<dyn Executor>> {
+) -> Result<Box<dyn Executor + Send>> {
     match backend {
         "native" => {
             let entry = native_model_entry(model)?;
@@ -458,18 +470,90 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let opts = serve_opts(args)?;
     let backend = backend_of(args)?;
     let build = || build_executor(backend, &cfg.model, cfg.ckpt.as_deref(), cfg.seed);
+    // --shards N: N engine shards behind the session router; N = 0 (or
+    // the bare flag) means one shard per core
+    let shards_flag = args.has("shards");
+    let shards = match args.get_usize("shards", 0)? {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    };
+    let ropts = server::RouterOpts {
+        global_queue: args
+            .get_usize("global-queue", server::RouterOpts::default().global_queue)?,
+    };
     if !args.has("synthetic") {
-        return server::serve_tcp_opts(build()?, &cfg.addr, cfg.seed, opts);
+        // TCP serving is sharded by default (one engine per core); pass
+        // --shards 1 for the single-engine PR-4 behavior
+        let mut execs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            execs.push(build()?);
+        }
+        return server::serve_tcp_sharded(execs, &cfg.addr, cfg.seed, opts, ropts);
     }
 
-    // synthetic mode is the serving bench: the same load with chunked
-    // prefill on vs off, plus a multi-turn pass through the session
-    // cache — all three records land in results/bench_serve.json
     let requests = args.get_usize("requests", 32)?;
     let prompt_len = args.get_usize("prompt-len", 32)?;
     let max_tokens = args.get_usize("max-tokens", 32)?;
     let gap_ms = args.get_usize("gap-ms", 0)? as u64;
     let turns = args.get_usize("turns", 2)?;
+
+    if shards_flag {
+        // --synthetic --shards N: the multi-shard overload bench — the
+        // same Zipf-skewed session load offered to 1 shard and to N, so
+        // the speedup and the migration/shedding counters land in one
+        // record of results/bench_serve.json
+        let bench = server::OverloadOpts {
+            requests,
+            sessions: args.get_usize("sessions", 64)?,
+            prompt_len,
+            max_tokens,
+            zipf_s: args.get_f64("zipf", 1.1)?,
+            gap_ms,
+        };
+        let single = server::run_overload_sharded(
+            vec![build()?],
+            cfg.seed,
+            opts.clone(),
+            ropts.clone(),
+            bench.clone(),
+        )?;
+        println!("--- overload, 1 shard (baseline) ---\n{}\n", single.report());
+        let mut execs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            execs.push(build()?);
+        }
+        let sharded = server::run_overload_sharded(execs, cfg.seed, opts, ropts, bench)?;
+        println!("--- overload, {shards} shards ---\n{}\n", sharded.report());
+        let speedup = if single.tokens_per_sec() > 0.0 {
+            sharded.tokens_per_sec() / single.tokens_per_sec()
+        } else {
+            0.0
+        };
+        println!(
+            "aggregate decode throughput: {:.1} -> {:.1} tok/s ({:.2}x with {} shards)",
+            single.tokens_per_sec(),
+            sharded.tokens_per_sec(),
+            speedup,
+            shards,
+        );
+        let record = obj(vec![(
+            "shard_overload",
+            obj(vec![
+                ("single_shard", single.to_json()),
+                ("sharded", sharded.to_json()),
+                ("speedup_vs_single", speedup.into()),
+            ]),
+        )]);
+        let out = PathBuf::from(args.get("out").unwrap_or("results"));
+        let path = experiments::write_results(&out, "bench_serve.json", &format!("{record}\n"))?;
+        println!("wrote {path:?}");
+        return Ok(());
+    }
+
+    // synthetic mode without --shards is the single-engine serving
+    // bench: the same load with chunked prefill on vs off, plus a
+    // multi-turn pass through the session cache — all three records
+    // land in results/bench_serve.json
 
     let chunked = server::run_synthetic_opts(
         build()?, requests, prompt_len, max_tokens, gap_ms, cfg.seed, opts.clone(),

@@ -76,6 +76,13 @@ impl Latencies {
         self.samples_us.is_empty()
     }
 
+    /// Fold another recorder's samples into this one — aggregate
+    /// percentiles across engine shards are computed over the pooled
+    /// samples, not averaged per-shard quantiles (which would be wrong).
+    pub fn merge(&mut self, other: &Latencies) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     /// Nearest-rank percentile in a sorted sample: ceil(p/100·n) − 1,
     /// clamped.
     fn rank(sorted: &[u64], p: f64) -> u64 {
@@ -199,6 +206,22 @@ mod tests {
         // batch reads agree with single reads (one sort either way)
         assert_eq!(l.percentiles_us(&[0.0, 50.0, 95.0, 100.0]), vec![1, 50, 95, 100]);
         assert_eq!(Latencies::new().percentiles_us(&[50.0, 99.0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn merge_pools_samples_for_aggregate_percentiles() {
+        let mut a = Latencies::new();
+        let mut b = Latencies::new();
+        for i in 1..=50u64 {
+            a.push(Duration::from_micros(i));
+            b.push(Duration::from_micros(i + 50));
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.percentile_us(50.0), 50);
+        assert_eq!(a.percentile_us(100.0), 100);
+        a.merge(&Latencies::new());
+        assert_eq!(a.len(), 100, "merging an empty recorder is a no-op");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::kernels::RecurrentAttention;
 use crate::model::forward::{
-    block_finish, block_qkv, fan_out, gather_head, scatter_head, NativeModel,
+    block_finish_into, block_qkv_into, fan_out, gather_head, scatter_head, NativeModel,
 };
 use crate::model::nn;
 
@@ -24,6 +24,61 @@ pub struct DecodeSession {
     states: Vec<Box<dyn RecurrentAttention + Send>>,
     n_heads: usize,
     pos: usize,
+    scratch: DecodeScratch,
+}
+
+/// Reusable dense activation buffers for [`DecodeSession::absorb_chunk`].
+/// Grown on demand, never shrunk, never serialized (snapshots carry only
+/// kernel state): after the first chunk of a given size the whole-model
+/// decode path touches the heap zero times — the model-level half of the
+/// zero-alloc claim, pinned in `rust/tests/alloc_decode.rs`.  Every
+/// buffer is fully overwritten by its `_into` producer before being
+/// read, so dirty reuse across calls is safe.
+#[derive(Debug, Default)]
+struct DecodeScratch {
+    /// residual stream (n, d)
+    x: Vec<f32>,
+    /// LayerNorm output, reused by both block halves (n, d)
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// attention output (n, d)
+    a: Vec<f32>,
+    /// attention projection (n, d)
+    ao: Vec<f32>,
+    /// FFN hidden (n, ff)
+    f: Vec<f32>,
+    /// FFN output (n, d)
+    g: Vec<f32>,
+    /// final-LayerNorm row (d)
+    xf: Vec<f32>,
+}
+
+impl DecodeScratch {
+    fn ensure(&mut self, n: usize, d: usize, ff: usize) {
+        let nd = n * d;
+        for buf in [
+            &mut self.x,
+            &mut self.h,
+            &mut self.q,
+            &mut self.k,
+            &mut self.v,
+            &mut self.a,
+            &mut self.ao,
+            &mut self.g,
+        ] {
+            if buf.len() < nd {
+                buf.resize(nd, 0.0);
+            }
+        }
+        if self.f.len() < n * ff {
+            self.f.resize(n * ff, 0.0);
+        }
+        if self.xf.len() < d {
+            self.xf.resize(d, 0.0);
+        }
+    }
 }
 
 /// A serialized [`DecodeSession`] state (slot preemption / migration /
@@ -58,7 +113,12 @@ impl DecodeSession {
         for _ in 0..n {
             states.push(model.kernel_state()?);
         }
-        Ok(DecodeSession { states, n_heads: cfg.n_heads, pos: 0 })
+        Ok(DecodeSession {
+            states,
+            n_heads: cfg.n_heads,
+            pos: 0,
+            scratch: DecodeScratch::default(),
+        })
     }
 
     /// Next position to be consumed (= tokens absorbed so far).
@@ -114,6 +174,18 @@ impl DecodeSession {
         self.absorb_chunk(model, &[token])
     }
 
+    /// [`DecodeSession::decode_step`] into a caller-owned logits buffer
+    /// (`out` has length `vocab`) — together with the internal scratch
+    /// this makes the per-token path allocation-free after warm-up.
+    pub fn decode_step_into(
+        &mut self,
+        model: &NativeModel,
+        token: i32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.absorb_chunk_into(model, &[token], out)
+    }
+
     /// Absorb `tokens` in order and return the next-token logits at the
     /// final absorbed position — the chunked-prefill primitive.
     ///
@@ -124,12 +196,30 @@ impl DecodeSession {
     /// LayerNorm + tied-logits matmul their logits would have wasted,
     /// and the dense halves run over `n` rows at once instead of one.
     pub fn absorb_chunk(&mut self, model: &NativeModel, tokens: &[i32]) -> Result<Vec<f32>> {
+        let v = model.config().vocab_size;
+        let mut out = vec![0.0f32; v];
+        self.absorb_chunk_into(model, tokens, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`DecodeSession::absorb_chunk`] into a caller-owned logits buffer.
+    /// All dense activations come from the session's [`DecodeScratch`],
+    /// so a warmed-up session allocates nothing here for `n = 1` (the
+    /// decode hot path; multi-token chunks still allocate per-head
+    /// gather buffers on multi-head fan-out).
+    pub fn absorb_chunk_into(
+        &mut self,
+        model: &NativeModel,
+        tokens: &[i32],
+        out: &mut [f32],
+    ) -> Result<()> {
         let cfg = model.config();
         let (d, v, nh, ff) = (cfg.d_model, cfg.vocab_size, cfg.n_heads, cfg.d_ff);
         let dh = d / nh;
         let n = tokens.len();
         ensure!(n > 0, "empty prefill chunk");
         ensure!(nh == self.n_heads, "session/model head mismatch");
+        ensure!(out.len() == v, "logits out buffer has wrong length");
         if self.pos + n > cfg.max_len {
             bail!(
                 "context exhausted: position {} + {n} tokens at max_len {}",
@@ -138,13 +228,21 @@ impl DecodeSession {
             );
         }
 
+        self.scratch.ensure(n, d, ff);
+        // disjoint field borrows: kernel states and activation scratch
+        let Self { states: all_states, scratch, pos, .. } = self;
+        let DecodeScratch { x, h, q, k, v: vv, a, ao, f, g, xf } = scratch;
+        let (x, h) = (&mut x[..n * d], &mut h[..n * d]);
+        let (q, k, vv) = (&mut q[..n * d], &mut k[..n * d], &mut vv[..n * d]);
+        let (a, ao) = (&mut a[..n * d], &mut ao[..n * d]);
+        let (f, g, xf) = (&mut f[..n * ff], &mut g[..n * d], &mut xf[..d]);
+
         let embed = model.embed();
         let pose = model.pos_embed();
-        let mut x = vec![0.0f32; n * d];
         for (i, &t) in tokens.iter().enumerate() {
             ensure!((0..v as i32).contains(&t), "token {t} out of vocab {v}");
             let e = &embed[t as usize * d..(t as usize + 1) * d];
-            let p = &pose[(self.pos + i) * d..(self.pos + i + 1) * d];
+            let p = &pose[(*pos + i) * d..(*pos + i + 1) * d];
             for (o, (&ev, &pv)) in x[i * d..(i + 1) * d].iter_mut().zip(e.iter().zip(p)) {
                 *o = ev + pv;
             }
@@ -152,13 +250,13 @@ impl DecodeSession {
 
         for li in 0..cfg.n_layers {
             let lw = model.layer(li);
-            let (q, k, vv) = block_qkv(&lw, &x, n, d);
-            let mut a = vec![0.0f32; n * d];
-            let states = &mut self.states[li * nh..(li + 1) * nh];
+            block_qkv_into(&lw, x, n, d, h, q, k, vv);
+            let states = &mut all_states[li * nh..(li + 1) * nh];
             if n == 1 {
                 // the per-token decode hot path: head slices are already
                 // contiguous in the single row — no gather/scatter, no
-                // per-head buffers
+                // per-head buffers (kernels overwrite their out slice, so
+                // the dirty scratch is safe)
                 for (hd, st) in states.iter_mut().enumerate() {
                     st.step(
                         &q[hd * dh..(hd + 1) * dh],
@@ -183,9 +281,9 @@ impl DecodeSession {
                     &mut Box<dyn RecurrentAttention + Send>,
                     Vec<f32>,
                 )| {
-                    let qh = gather_head(&q, 0, n, d, *hd, dh);
-                    let kh = gather_head(&k, 0, n, d, *hd, dh);
-                    let vh = gather_head(&vv, 0, n, d, *hd, dh);
+                    let qh = gather_head(q, 0, n, d, *hd, dh);
+                    let kh = gather_head(k, 0, n, d, *hd, dh);
+                    let vh = gather_head(vv, 0, n, d, *hd, dh);
                     for i in 0..n {
                         st.step(
                             &qh[i * dh..(i + 1) * dh],
@@ -203,16 +301,17 @@ impl DecodeSession {
                     fan_out(&mut work, run);
                 }
                 for (hd, _, out) in &work {
-                    scatter_head(&mut a, out, 0, n, d, *hd, dh);
+                    scatter_head(a, out, 0, n, d, *hd, dh);
                 }
             }
-            block_finish(&lw, &mut x, &a, n, d, ff);
+            block_finish_into(&lw, x, a, n, d, ff, ao, h, f, g);
         }
-        self.pos += n;
+        *pos += n;
 
         let last = &x[(n - 1) * d..n * d];
-        let xf = nn::layernorm_affine(last, 1, d, model.lnf_g(), model.lnf_b());
-        Ok(nn::tied_logits(&xf, 1, d, embed, v))
+        nn::layernorm_affine_into(last, 1, d, model.lnf_g(), model.lnf_b(), xf);
+        nn::tied_logits_into(xf, 1, d, embed, v, out);
+        Ok(())
     }
 }
 

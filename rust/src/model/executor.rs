@@ -14,8 +14,14 @@
 //!   [`StateManager`].  Behavior is unchanged from the pre-trait
 //!   coordinator.
 //!
-//! Future scaling work (batching policy, sharding, quantized state)
-//! lands as new trait impls or wrappers, not coordinator rewrites.
+//! Both executors are `Send`: the sharded serving tier moves each one
+//! onto a dedicated engine thread (`serve/shard.rs`), and session
+//! snapshots ([`SessionSnapshot`] — plain `Vec<f32>`s) ship between
+//! those threads when the router migrates a session.  The compile-time
+//! assertions in this file's tests keep that property from regressing.
+//!
+//! Future scaling work (batching policy, quantized state) lands as new
+//! trait impls or wrappers, not coordinator rewrites.
 
 use std::sync::Arc;
 
@@ -426,5 +432,24 @@ impl Executor for ArtifactExecutor {
             .as_ref()
             .map(|s| s.state_elements_per_slot() * std::mem::size_of::<f32>())
             .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_send<T: Send>() {}
+
+    /// The sharded serving tier pins one executor per engine thread and
+    /// ships snapshots between threads during migration — all of which
+    /// type-checks only while these stay `Send`.  (Compile-time test:
+    /// it passes by building.)
+    #[test]
+    fn executors_and_snapshots_are_send() {
+        is_send::<NativeExecutor>();
+        is_send::<ArtifactExecutor>();
+        is_send::<SessionSnapshot>();
+        is_send::<Box<dyn Executor + Send>>();
     }
 }

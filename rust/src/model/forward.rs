@@ -262,12 +262,32 @@ pub(crate) fn block_qkv(
     rows: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let h = nn::layernorm_affine(x, rows, d, lw.ln1_g, lw.ln1_b);
-    (
-        nn::matmul(&h, lw.wq, rows, d, d),
-        nn::matmul(&h, lw.wk, rows, d, d),
-        nn::matmul(&h, lw.wv, rows, d, d),
-    )
+    let mut h = vec![0.0f32; rows * d];
+    let mut q = vec![0.0f32; rows * d];
+    let mut k = vec![0.0f32; rows * d];
+    let mut v = vec![0.0f32; rows * d];
+    block_qkv_into(lw, x, rows, d, &mut h, &mut q, &mut k, &mut v);
+    (q, k, v)
+}
+
+/// [`block_qkv`] into caller-owned buffers (`h` is the LN scratch, also
+/// overwritten). The allocating form delegates here — same ops, same
+/// order, bit-identical — so the decode scratch path cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn block_qkv_into(
+    lw: &LayerView<'_>,
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    h: &mut [f32],
+    q: &mut [f32],
+    k: &mut [f32],
+    v: &mut [f32],
+) {
+    nn::layernorm_affine_into(x, rows, d, lw.ln1_g, lw.ln1_b, h);
+    nn::matmul_into(h, lw.wq, rows, d, d, q);
+    nn::matmul_into(h, lw.wk, rows, d, d, k);
+    nn::matmul_into(h, lw.wv, rows, d, d, v);
 }
 
 /// Attention output projection + residual, then the FFN sublayer (`b2`
@@ -281,14 +301,36 @@ pub(crate) fn block_finish(
     d: usize,
     ff: usize,
 ) {
-    let ao = nn::matmul(a, lw.wo, rows, d, d);
-    nn::add_inplace(x, &ao);
-    let h = nn::layernorm_affine(x, rows, d, lw.ln2_g, lw.ln2_b);
-    let mut f = nn::matmul(&h, lw.w1, rows, d, ff);
-    nn::add_bias(&mut f, rows, ff, lw.b1);
-    nn::gelu_inplace(&mut f);
-    let g = nn::matmul(&f, lw.w2, rows, ff, d);
-    nn::add_inplace(x, &g);
+    let mut ao = vec![0.0f32; rows * d];
+    let mut h = vec![0.0f32; rows * d];
+    let mut f = vec![0.0f32; rows * ff];
+    let mut g = vec![0.0f32; rows * d];
+    block_finish_into(lw, x, a, rows, d, ff, &mut ao, &mut h, &mut f, &mut g);
+}
+
+/// [`block_finish`] with caller-owned scratch (`ao`, `h`, `f`, `g` are
+/// all overwritten). The allocating form delegates here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn block_finish_into(
+    lw: &LayerView<'_>,
+    x: &mut [f32],
+    a: &[f32],
+    rows: usize,
+    d: usize,
+    ff: usize,
+    ao: &mut [f32],
+    h: &mut [f32],
+    f: &mut [f32],
+    g: &mut [f32],
+) {
+    nn::matmul_into(a, lw.wo, rows, d, d, ao);
+    nn::add_inplace(x, ao);
+    nn::layernorm_affine_into(x, rows, d, lw.ln2_g, lw.ln2_b, h);
+    nn::matmul_into(h, lw.w1, rows, d, ff, f);
+    nn::add_bias(f, rows, ff, lw.b1);
+    nn::gelu_inplace(f);
+    nn::matmul_into(f, lw.w2, rows, ff, d, g);
+    nn::add_inplace(x, g);
     nn::add_bias(x, rows, d, lw.b2);
 }
 

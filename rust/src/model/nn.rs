@@ -20,9 +20,18 @@ pub(crate) const LN_EPS: f32 = 1e-5;
 /// more importantly — gives every output element the same summation order
 /// whether `n` is a full sequence (prefill) or 1 (decode).
 pub fn matmul(x: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    matmul_into(x, w, n, d, m, &mut out);
+    out
+}
+
+/// [`matmul`] into a caller-owned buffer (overwritten, not accumulated).
+/// The allocating form delegates here, so the two are bit-identical.
+pub fn matmul_into(x: &[f32], w: &[f32], n: usize, d: usize, m: usize, out: &mut [f32]) {
     assert_eq!(x.len(), n * d, "matmul lhs shape");
     assert_eq!(w.len(), d * m, "matmul rhs shape");
-    let mut out = vec![0.0f32; n * m];
+    assert_eq!(out.len(), n * m, "matmul out shape");
+    out.fill(0.0);
     for (xr, or) in x.chunks(d).zip(out.chunks_mut(m)) {
         for (&xi, wr) in xr.iter().zip(w.chunks(m)) {
             for (o, &wv) in or.iter_mut().zip(wr) {
@@ -30,7 +39,6 @@ pub fn matmul(x: &[f32], w: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Elementwise `x += y`.
@@ -65,25 +73,41 @@ pub fn gelu_inplace(x: &mut [f32]) {
 /// Affine LayerNorm over rows of `x` (n, d): `LN(x) * g + b`, returned as
 /// a new buffer (the residual stream stays untouched).
 pub fn layernorm_affine(x: &[f32], n: usize, d: usize, g: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d];
+    layernorm_affine_into(x, n, d, g, b, &mut out);
+    out
+}
+
+/// [`layernorm_affine`] into a caller-owned buffer. The allocating form
+/// delegates here, so the two are bit-identical.
+pub fn layernorm_affine_into(x: &[f32], n: usize, d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
     assert_eq!(x.len(), n * d, "layernorm shape");
     assert_eq!(g.len(), d, "layernorm gain shape");
     assert_eq!(b.len(), d, "layernorm bias shape");
-    let mut out = x.to_vec();
-    layernorm_noaffine(&mut out, n, d, LN_EPS);
+    assert_eq!(out.len(), n * d, "layernorm out shape");
+    out.copy_from_slice(x);
+    layernorm_noaffine(out, n, d, LN_EPS);
     for row in out.chunks_mut(d) {
         for ((v, &gc), &bc) in row.iter_mut().zip(g).zip(b) {
             *v = *v * gc + bc;
         }
     }
-    out
 }
 
 /// Tied LM head: `x` (n, d) @ `embed`ᵀ (d, v) -> logits (n, v), with
 /// `embed` stored row-major (v, d) as in the parameter store.
 pub fn tied_logits(x: &[f32], n: usize, d: usize, embed: &[f32], v: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * v];
+    tied_logits_into(x, n, d, embed, v, &mut out);
+    out
+}
+
+/// [`tied_logits`] into a caller-owned buffer. The allocating form
+/// delegates here, so the two are bit-identical.
+pub fn tied_logits_into(x: &[f32], n: usize, d: usize, embed: &[f32], v: usize, out: &mut [f32]) {
     assert_eq!(x.len(), n * d, "logits input shape");
     assert_eq!(embed.len(), v * d, "embedding shape");
-    let mut out = vec![0.0f32; n * v];
+    assert_eq!(out.len(), n * v, "logits out shape");
     for (xr, or) in x.chunks(d).zip(out.chunks_mut(v)) {
         for (o, er) in or.iter_mut().zip(embed.chunks(d)) {
             let mut acc = 0.0f32;
@@ -93,7 +117,6 @@ pub fn tied_logits(x: &[f32], n: usize, d: usize, embed: &[f32], v: usize) -> Ve
             *o = acc;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -148,6 +171,31 @@ mod tests {
         }
         // and the residual input is untouched (fresh buffer returned)
         assert_eq!(x.len(), n * d);
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_buffers_bit_identically() {
+        // the _into forms must fully overwrite whatever garbage the scratch
+        // buffer held — this is what makes the decode scratch path safe
+        let mut rng = crate::rng::Rng::new(11);
+        let (n, d, m) = (3, 8, 5);
+        let x = rng.normal_vec_f32(n * d, 1.0);
+        let w = rng.normal_vec_f32(d * m, 1.0);
+        let g = rng.normal_vec_f32(d, 1.0);
+        let b = rng.normal_vec_f32(d, 1.0);
+        let e = rng.normal_vec_f32(m * d, 1.0);
+
+        let mut dirty = vec![f32::NAN; n * m];
+        matmul_into(&x, &w, n, d, m, &mut dirty);
+        assert_eq!(dirty, matmul(&x, &w, n, d, m));
+
+        let mut dirty = vec![f32::NAN; n * d];
+        layernorm_affine_into(&x, n, d, &g, &b, &mut dirty);
+        assert_eq!(dirty, layernorm_affine(&x, n, d, &g, &b));
+
+        let mut dirty = vec![f32::NAN; n * m];
+        tied_logits_into(&x, n, d, &e, m, &mut dirty);
+        assert_eq!(dirty, tied_logits(&x, n, d, &e, m));
     }
 
     #[test]

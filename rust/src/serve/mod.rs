@@ -32,19 +32,30 @@
 //! * [`stream`] — the wire events (`ServeEvent`): per-token deltas for
 //!   `"stream": true` requests plus the final response line, and their
 //!   JSON framing.
+//! * [`shard`] — one engine per core on its own thread, driven by an
+//!   [`EngineMsg`] inbox (requests + migration exports/imports + stats
+//!   probes), publishing lock-free load gauges.
+//! * [`router`] — session affinity (FNV-1a hash + bounded migration
+//!   overrides), snapshot migration between saturated shards, and the
+//!   global fresh-waiter admission budget.
 //!
 //! The [`Engine`](crate::coordinator::server::Engine) in
 //! `coordinator/server.rs` owns one of each and keeps only the
-//! token-granularity step loop.
+//! token-granularity step loop; the sharded TCP front end puts a
+//! [`Router`] in front of N such engines.
 
 pub mod prefill;
+pub mod router;
 pub mod scheduler;
 pub mod sessions;
+pub mod shard;
 pub mod stream;
 
 pub use self::prefill::{Prefiller, DEFAULT_PREFILL_CHUNK};
+pub use self::router::{Affinity, Router, RouterMsg, RouterOpts, RouterReport};
 pub use self::scheduler::{ParkedWork, Policy, QueueEntry, Scheduler};
 pub use self::sessions::{SessionCache, SessionEntry};
+pub use self::shard::{EngineMsg, ShardHandle, ShardLoad};
 pub use self::stream::ServeEvent;
 
 use std::sync::mpsc::Sender;

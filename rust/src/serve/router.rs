@@ -1,0 +1,341 @@
+//! Session router over engine shards: hash affinity, snapshot
+//! migration, and global admission control.
+//!
+//! Placement rules, in order:
+//!
+//! 1. **Global admission.** If fresh waiters across all shards reach the
+//!    [`RouterOpts::global_queue`] budget, the request is shed with an
+//!    explicit `overloaded` error line — before it can bury any shard's
+//!    queue (each shard still enforces its own per-queue bound).
+//! 2. **Session affinity.** A `session_id` is owned by exactly one shard
+//!    at a time: its FNV-1a hash home, unless the router has re-homed it
+//!    ([`Affinity`] tracks only those overrides).  Same id → same shard,
+//!    so follow-up turns find their cached snapshot.
+//! 3. **Migration.** When the home shard is saturated and a strictly
+//!    less-loaded shard exists, the router ships the session's cached
+//!    [`SessionEntry`] — the few-KiB O(1) snapshot plus its absorbed
+//!    tokens, the same park format PR 4's preemption uses, bit-exact —
+//!    from home to target and re-homes the session there.  A session
+//!    whose turn is still in flight has nothing cached yet; it is
+//!    re-homed without a shipment and simply re-prefills on the target
+//!    (slower, never wrong).
+//! 4. **Sessionless spread.** Requests without a `session_id` go to the
+//!    least-loaded shard (round-robin among ties).
+//!
+//! The router runs single-threaded in front of the shard inboxes — one
+//! owner for the affinity map, so "no session owned by two shards" holds
+//! by construction (property-tested in `rust/tests/proptests.rs`).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::server::ServeStats;
+use crate::json::{obj, Json};
+use crate::model::Executor;
+use crate::serve::shard::{EngineMsg, ShardHandle};
+use crate::serve::{Request, Response, ServeEvent, ServeOpts};
+
+/// Re-homed sessions tracked before the oldest overrides are dropped.
+/// A dropped override just falls back to the hash home — worst case one
+/// session-cache miss, never a correctness issue — so the map stays
+/// bounded against wire-controlled session-id churn.
+pub const MAX_AFFINITY_OVERRIDES: usize = 4096;
+
+/// Router knobs (per-shard knobs live in [`ServeOpts`]).
+#[derive(Debug, Clone)]
+pub struct RouterOpts {
+    /// Global fresh-waiter budget across all shards; at or above it new
+    /// requests are shed with an `overloaded` error.
+    pub global_queue: usize,
+}
+
+impl Default for RouterOpts {
+    fn default() -> Self {
+        RouterOpts { global_queue: 4096 }
+    }
+}
+
+/// One message into the router loop.
+pub enum RouterMsg {
+    /// Route a request to a shard (or shed it).
+    Req(Request),
+    /// `{"stats": true}` wire probe: reply with one JSON line of
+    /// per-shard + aggregate stats on the request's event channel.
+    Stats { respond: Sender<ServeEvent> },
+}
+
+/// FNV-1a — a fixed, seedless hash so session → shard assignment is
+/// deterministic across runs, processes and the affinity proptest.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The session → shard assignment: FNV-1a hash by default, plus a
+/// bounded map of migration overrides.  Single-owner by construction —
+/// `home` is a function, so a session id can never resolve to two
+/// shards at once.
+pub struct Affinity {
+    n_shards: usize,
+    capacity: usize,
+    tick: u64,
+    /// only re-homed sessions need an entry (hash homes are implicit)
+    overrides: HashMap<String, (u64, usize)>,
+}
+
+impl Affinity {
+    pub fn new(n_shards: usize) -> Affinity {
+        Affinity::with_capacity(n_shards, MAX_AFFINITY_OVERRIDES)
+    }
+
+    pub fn with_capacity(n_shards: usize, capacity: usize) -> Affinity {
+        assert!(n_shards > 0, "affinity over zero shards");
+        Affinity { n_shards, capacity, tick: 0, overrides: HashMap::new() }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The shard that owns `sid` right now.
+    pub fn home(&self, sid: &str) -> usize {
+        match self.overrides.get(sid) {
+            Some(&(_, shard)) => shard,
+            None => self.hash_home(sid),
+        }
+    }
+
+    /// The default (pre-migration) assignment.
+    pub fn hash_home(&self, sid: &str) -> usize {
+        (fnv1a(sid) % self.n_shards as u64) as usize
+    }
+
+    /// Move `sid`'s ownership to `shard`.  Re-homing back to the hash
+    /// home erases the override instead of storing a redundant one.
+    pub fn rehome(&mut self, sid: &str, shard: usize) {
+        assert!(shard < self.n_shards, "rehome to unknown shard {shard}");
+        if shard == self.hash_home(sid) {
+            self.overrides.remove(sid);
+            return;
+        }
+        self.tick += 1;
+        self.overrides.insert(sid.to_string(), (self.tick, shard));
+        while self.overrides.len() > self.capacity {
+            let oldest = self
+                .overrides
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+                .expect("map is non-empty");
+            self.overrides.remove(&oldest);
+        }
+    }
+
+    /// Live override count (≤ the construction capacity).
+    pub fn overrides(&self) -> usize {
+        self.overrides.len()
+    }
+}
+
+/// Aggregate counters the router itself owns (shard engines keep their
+/// own [`ServeStats`]).
+#[derive(Debug, Default, Clone)]
+pub struct RouterReport {
+    /// session entries actually shipped between cache partitions
+    pub migrations: u64,
+    /// requests shed by global admission (or a dead shard)
+    pub rejected: u64,
+}
+
+/// The session router over N engine shards.
+pub struct Router {
+    shards: Vec<ShardHandle>,
+    affinity: Affinity,
+    opts: RouterOpts,
+    report: RouterReport,
+    rr: usize,
+}
+
+impl Router {
+    /// Spawn one shard per executor.  All executors must hold identical
+    /// parameters (same checkpoint / init seed) — migration assumes a
+    /// snapshot restores onto the same model bit-exactly.
+    pub fn new(
+        execs: Vec<Box<dyn Executor + Send>>,
+        seed: u64,
+        opts: ServeOpts,
+        ropts: RouterOpts,
+    ) -> Result<Router> {
+        ensure!(!execs.is_empty(), "router needs at least one shard");
+        let n = execs.len();
+        let mut shards = Vec::with_capacity(n);
+        for (i, exec) in execs.into_iter().enumerate() {
+            // distinct sampling seeds per shard; params are the caller's
+            shards.push(ShardHandle::spawn(i, exec, seed.wrapping_add(i as u64), opts.clone())?);
+        }
+        Ok(Router {
+            shards,
+            affinity: Affinity::new(n),
+            opts: ropts,
+            report: RouterReport::default(),
+            rr: 0,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn report(&self) -> &RouterReport {
+        &self.report
+    }
+
+    /// The shard currently owning `sid`.
+    pub fn shard_of(&self, sid: &str) -> usize {
+        self.affinity.home(sid)
+    }
+
+    fn queued_total(&self) -> usize {
+        self.shards.iter().map(|s| s.queued()).sum()
+    }
+
+    /// Least-loaded shard by [`ShardHandle::load_score`], rotating the
+    /// scan start so equally-idle shards share sessionless load.
+    fn least_loaded(&mut self, exclude: Option<usize>) -> usize {
+        self.rr = (self.rr + 1) % self.shards.len();
+        let n = self.shards.len();
+        let mut best: Option<(usize, usize)> = None;
+        for off in 0..n {
+            let i = (self.rr + off) % n;
+            if Some(i) == exclude {
+                continue;
+            }
+            let score = self.shards[i].load_score();
+            if best.is_none_or(|(b, _)| score < b) {
+                best = Some((score, i));
+            }
+        }
+        best.map(|(_, i)| i).unwrap_or(0)
+    }
+
+    /// Migrate `sid` from its current home to shard `to`: export the
+    /// cached entry (if any), import it on the target, re-home.  Returns
+    /// whether an entry actually shipped.  Public as the deterministic
+    /// hook the bit-exactness tests drive directly.
+    pub fn migrate(&mut self, sid: &str, to: usize) -> bool {
+        let from = self.affinity.home(sid);
+        if from == to || to >= self.shards.len() {
+            return false;
+        }
+        let shipped = match self.shards[from].export_session(sid) {
+            Some(entry) => {
+                let ok = self.shards[to].import_session(sid, entry);
+                if ok {
+                    self.report.migrations += 1;
+                }
+                ok
+            }
+            // nothing cached yet (unknown session, or its turn is still
+            // in flight) — future turns still move to the new home and
+            // re-prefill there
+            None => false,
+        };
+        self.affinity.rehome(sid, to);
+        shipped
+    }
+
+    /// Admission control + placement for one request.
+    pub fn route(&mut self, req: Request) {
+        let waiting = self.queued_total();
+        if waiting >= self.opts.global_queue {
+            self.report.rejected += 1;
+            let msg = format!(
+                "server overloaded: {waiting} requests already waiting across {} shards",
+                self.shards.len()
+            );
+            let _ = req.respond.send(ServeEvent::Done(Response::error(req.id, msg)));
+            return;
+        }
+        let target = match req.session_id.as_deref() {
+            Some(sid) => {
+                let home = self.affinity.home(sid);
+                if self.shards[home].saturated() {
+                    let alt = self.least_loaded(Some(home));
+                    if self.shards[alt].load_score() < self.shards[home].load_score() {
+                        self.migrate(sid, alt);
+                        alt
+                    } else {
+                        home
+                    }
+                } else {
+                    home
+                }
+            }
+            None => self.least_loaded(None),
+        };
+        if let Err(EngineMsg::Req(req)) = self.shards[target].send(EngineMsg::Req(req)) {
+            self.report.rejected += 1;
+            let _ = req.respond.send(ServeEvent::Done(Response::error(
+                req.id,
+                format!("shard {target} unavailable"),
+            )));
+        }
+    }
+
+    /// One JSON object: router counters + per-shard live stats — the
+    /// reply to a `{"stats": true}` wire request.
+    pub fn stats_json(&self) -> Json {
+        let per_shard: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                s.stats()
+                    .unwrap_or_else(|| obj(vec![("error", "shard unavailable".into())]))
+            })
+            .collect();
+        obj(vec![
+            ("stats", true.into()),
+            ("shards", self.shards.len().into()),
+            ("queued_total", self.queued_total().into()),
+            ("affinity_overrides", self.affinity.overrides().into()),
+            ("migrations", (self.report.migrations as i64).into()),
+            ("router_rejected", (self.report.rejected as i64).into()),
+            ("per_shard", Json::Arr(per_shard)),
+        ])
+    }
+
+    /// Handle one router message.
+    pub fn handle(&mut self, msg: RouterMsg) {
+        match msg {
+            RouterMsg::Req(req) => self.route(req),
+            RouterMsg::Stats { respond } => {
+                let _ = respond.send(ServeEvent::Stats(self.stats_json()));
+            }
+        }
+    }
+
+    /// Consume the inbox until every sender drops, then shut the shards
+    /// down and return their final stats.
+    pub fn run(mut self, rx: Receiver<RouterMsg>) -> Result<(Vec<ServeStats>, RouterReport)> {
+        for msg in rx {
+            self.handle(msg);
+        }
+        self.finish()
+    }
+
+    /// Close every shard inbox, join the engines, return final stats.
+    pub fn finish(self) -> Result<(Vec<ServeStats>, RouterReport)> {
+        let Router { shards, report, .. } = self;
+        let mut per_shard = Vec::with_capacity(shards.len());
+        for s in shards {
+            per_shard.push(s.finish()?);
+        }
+        Ok((per_shard, report))
+    }
+}

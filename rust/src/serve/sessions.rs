@@ -72,6 +72,14 @@ impl SessionCache {
         }
     }
 
+    /// Remove and return the session's entry — the migration export: the
+    /// home shard gives up ownership before the entry is shipped to
+    /// another shard's cache, so a session is never resident in two
+    /// partitions at once.
+    pub fn remove(&mut self, id: &str) -> Option<SessionEntry> {
+        self.map.remove(id).map(|(_, entry)| entry)
+    }
+
     /// Insert/replace the session's entry, evicting the least recently
     /// used entry when over capacity.
     pub fn insert(&mut self, id: String, entry: SessionEntry) {
@@ -136,6 +144,16 @@ mod tests {
         assert_eq!(hit.tokens, vec![1, 5]);
         c.insert("d".into(), entry(vec![4]));
         assert!(c.lookup("b", &[2, 9]).is_none(), "b was the LRU entry");
+    }
+
+    #[test]
+    fn remove_exports_exactly_once() {
+        let mut c = SessionCache::new(4);
+        c.insert("a".into(), entry(vec![1, 2]));
+        let got = c.remove("a").expect("entry present");
+        assert_eq!(got.tokens, vec![1, 2]);
+        assert!(c.remove("a").is_none(), "second export finds nothing");
+        assert!(c.lookup("a", &[1, 2, 3]).is_none(), "ownership was given up");
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Engine shards: one continuous-batching engine per core, each on its
+//! own thread with its own slot pool, scheduler and **session cache
+//! partition**.
+//!
+//! A shard is just the PR-4 [`Engine`] driven by an [`EngineMsg`] inbox
+//! instead of a bare request channel: besides requests, the inbox
+//! carries migration exports/imports (a session's few-KiB snapshot +
+//! absorbed-token list changing partitions — the paper's O(1)-state
+//! advantage makes this a constant-cost message, where a KV cache would
+//! ship O(context)) and live stats probes.  The engine publishes its
+//! load gauges ([`ShardLoad`]) after every loop iteration so the router
+//! can place and shed work without locking any shard.
+//!
+//! [`Engine`]: crate::coordinator::server::Engine
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::server::{Engine, ServeStats};
+use crate::json::Json;
+use crate::model::Executor;
+use crate::serve::{Request, ServeOpts, SessionEntry};
+
+/// One message into a shard's engine loop.
+pub enum EngineMsg {
+    /// A client request to schedule.
+    Req(Request),
+    /// Migration export: remove `id` from this shard's session cache and
+    /// hand the entry back (`None` when the session is unknown or its
+    /// current turn is still in flight — nothing cached to ship yet).
+    Export { id: String, respond: Sender<Option<SessionEntry>> },
+    /// Migration import: adopt a session exported from another shard.
+    Import { id: String, entry: SessionEntry },
+    /// Live per-shard stats as one JSON object.
+    Stats { respond: Sender<Json> },
+}
+
+/// Load gauges a shard's engine publishes every loop iteration; the
+/// router reads them lock-free to place sessionless work, detect
+/// saturation and enforce the global admission budget.
+#[derive(Debug, Default)]
+pub struct ShardLoad {
+    /// fresh (never-run) waiters in the shard's queue
+    pub queued: AtomicUsize,
+    /// busy decode slots
+    pub busy: AtomicUsize,
+    /// sessions resident in the cache partition
+    pub sessions: AtomicUsize,
+}
+
+/// Handle to a running shard: its inbox, its published load, and the
+/// join handle that yields the final [`ServeStats`] at shutdown.
+pub struct ShardHandle {
+    pub id: usize,
+    n_slots: usize,
+    tx: Sender<EngineMsg>,
+    pub load: Arc<ShardLoad>,
+    join: JoinHandle<Result<ServeStats>>,
+}
+
+impl ShardHandle {
+    /// Spawn shard `id`: the executor moves to a dedicated thread that
+    /// builds and runs its own engine until every inbox sender drops.
+    /// Shards of one router must be built from identically-initialized
+    /// executors (same params) or migrated sessions would change model.
+    pub fn spawn(
+        id: usize,
+        exec: Box<dyn Executor + Send>,
+        seed: u64,
+        opts: ServeOpts,
+    ) -> Result<ShardHandle> {
+        let n_slots = exec.n_slots();
+        let (tx, rx) = channel();
+        let load = Arc::new(ShardLoad::default());
+        let published = load.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("holt-shard-{id}"))
+            .spawn(move || {
+                let mut engine = Engine::with_opts(exec, seed, opts)?;
+                engine.publish_load(published);
+                engine.run_msgs(rx)
+            })?;
+        Ok(ShardHandle { id, n_slots, tx, load, join })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Send into the shard's inbox; the message comes back if the shard
+    /// thread has exited (so a request can be failed, not lost).
+    pub fn send(&self, msg: EngineMsg) -> std::result::Result<(), EngineMsg> {
+        self.tx.send(msg).map_err(|e| e.0)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.load.queued.load(Ordering::Relaxed)
+    }
+
+    pub fn busy(&self) -> usize {
+        self.load.busy.load(Ordering::Relaxed)
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.load.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Queue-first load ordering: a queued request waits a whole request
+    /// service time, a busy slot only shares one step — so any queue
+    /// depth dominates any slot occupancy when comparing shards.
+    pub fn load_score(&self) -> usize {
+        self.queued() * (self.n_slots.max(1) * 2) + self.busy()
+    }
+
+    /// Saturated: every slot busy *and* fresh work already waiting —
+    /// the point where routing one more session there buys a full queue
+    /// wait that a less-loaded shard would not charge.
+    pub fn saturated(&self) -> bool {
+        self.busy() >= self.n_slots && self.queued() > 0
+    }
+
+    /// Blocking migration export round trip (served within one engine
+    /// step). `None`: session unknown/in-flight, or the shard died.
+    pub fn export_session(&self, id: &str) -> Option<SessionEntry> {
+        let (rtx, rrx) = channel();
+        if self.send(EngineMsg::Export { id: id.to_string(), respond: rtx }).is_err() {
+            return None;
+        }
+        rrx.recv().ok().flatten()
+    }
+
+    /// Hand an exported session entry to this shard's cache partition.
+    pub fn import_session(&self, id: &str, entry: SessionEntry) -> bool {
+        self.send(EngineMsg::Import { id: id.to_string(), entry }).is_ok()
+    }
+
+    /// Live stats round trip; `None` if the shard died.
+    pub fn stats(&self) -> Option<Json> {
+        let (rtx, rrx) = channel();
+        if self.send(EngineMsg::Stats { respond: rtx }).is_err() {
+            return None;
+        }
+        rrx.recv().ok()
+    }
+
+    /// Close the inbox and wait for the engine to drain and exit.
+    pub fn finish(self) -> Result<ServeStats> {
+        let ShardHandle { id, tx, join, .. } = self;
+        drop(tx);
+        join.join().map_err(|_| anyhow!("shard {id} thread panicked"))?
+    }
+}

@@ -27,6 +27,10 @@ pub enum ServeEvent {
     Delta { id: u64, index: usize, token_id: i32, text: String },
     /// The request finished (or failed — see [`Response::error`]).
     Done(Response),
+    /// Reply to a `{"stats": true}` wire request: per-shard gauges +
+    /// counters and the router's aggregate, pre-assembled by the router
+    /// as one JSON object (serialized as a single line).
+    Stats(Json),
 }
 
 /// Drain the longest cleanly-decodable UTF-8 prefix of `buf` (a
@@ -96,6 +100,7 @@ pub fn event_json(ev: &ServeEvent) -> Json {
             ("delta", text.as_str().into()),
         ]),
         ServeEvent::Done(resp) => response_json(resp),
+        ServeEvent::Stats(j) => j.clone(),
     }
 }
 

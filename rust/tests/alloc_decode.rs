@@ -9,11 +9,11 @@
 //! a second test thread would put its own allocations inside our
 //! measurement window.
 //!
-//! Scope: this pins the *kernel-level* hot path (`step`, `pair_weight`,
-//! `query_vjp` + `absorb_vjp`), i.e. the per-token per-(layer, head)
-//! inner loops.  Whole-model `decode_step` still allocates dense
-//! activation buffers per call; shrinking that is a model-layer follow-up
-//! (see ROADMAP.md).
+//! Scope: the *kernel-level* hot path (`step`, `pair_weight`,
+//! `query_vjp` + `absorb_vjp` — the per-token per-(layer, head) inner
+//! loops) AND the *model-level* decode step: `DecodeSession` keeps a
+//! per-slot activation scratch arena, so after warm-up a whole-model
+//! `decode_step_into` call is allocation-free too.
 //!
 //! [`Scratch`]: holt::kernels::Scratch
 
@@ -21,6 +21,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use holt::kernels::{AttentionGrad, EluMap, FeatureMap, PhiState, RecurrentAttention, TaylorMap};
+use holt::model::{native_model_entry, DecodeSession, NativeModel};
+use holt::params::ParamStore;
 use holt::rng::Rng;
 
 struct CountingAlloc;
@@ -112,6 +114,26 @@ fn vjp_phase<M: FeatureMap>(mut st: PhiState<M>, label: &str) {
     assert_eq!(delta, 0, "{label}: {delta} allocations in {MEASURED} vjp tokens");
 }
 
+/// Whole-model single-token decode through [`DecodeSession::decode_step_into`]:
+/// after warm-up grows the per-slot activation scratch, a full L-layer
+/// step (embed → qkv → kernel recurrence → ffn → tied logits) performs
+/// no heap traffic.
+fn model_decode_phase(model: &NativeModel, label: &str) {
+    let v = model.config().vocab_size;
+    let mut sess = DecodeSession::new(model).unwrap();
+    let mut out = vec![0.0f32; v];
+    for t in 0..WARM {
+        sess.decode_step_into(model, (t % 200) as i32, &mut out).unwrap();
+    }
+    let before = allocations();
+    for t in WARM..WARM + MEASURED {
+        sess.decode_step_into(model, (t % 200) as i32, &mut out).unwrap();
+    }
+    let delta = allocations() - before;
+    assert!(out.iter().all(|x| x.is_finite()));
+    assert_eq!(delta, 0, "{label}: {delta} allocations in {MEASURED} whole-model decode steps");
+}
+
 #[test]
 fn kernel_hot_paths_allocate_nothing_after_warmup() {
     // serial phases, one test — see module docs
@@ -122,4 +144,10 @@ fn kernel_hot_paths_allocate_nothing_after_warmup() {
     vjp_phase(PhiState::with_map(TaylorMap::new(6, 2, 3.0, true), 5), "taylor o2 vjp");
     vjp_phase(PhiState::with_map(TaylorMap::new(5, 3, 3.0, true), 4), "taylor o3 vjp");
     vjp_phase(PhiState::with_map(EluMap::new(6), 5), "elu vjp");
+    // model level: the per-slot scratch makes the whole decode step
+    // allocation-free, not just the kernel inner loops
+    let entry = native_model_entry("ho2_tiny").unwrap();
+    let params = ParamStore::init(&entry.param_spec, &mut Rng::new(7));
+    let model = NativeModel::new(entry, params).unwrap();
+    model_decode_phase(&model, "ho2_tiny whole-model decode");
 }

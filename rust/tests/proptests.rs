@@ -371,3 +371,53 @@ fn prop_tensor_error_metrics_consistent() {
         assert!(a.rel_l2(&b).unwrap() > 0.0);
     }
 }
+
+#[test]
+fn prop_affinity_single_owner_stable_and_bounded() {
+    // Router affinity invariants (ISSUE-7): (1) same session_id resolves
+    // to the same shard until a migration re-homes it; (2) a session is
+    // owned by exactly one shard — its home is either the last rehome
+    // target or, once the bounded override map evicts it, the hash home
+    // (never a third shard); (3) the override map never exceeds its
+    // capacity; (4) re-homing back to the hash home stores nothing.
+    use holt::serve::Affinity;
+    let mut rng = Rng::new(0xaff1);
+    for case in 0..CASES {
+        let n_shards = rng.uniform_int(1, 9) as usize;
+        let cap = rng.uniform_int(1, 17) as usize;
+        let mut aff = Affinity::with_capacity(n_shards, cap);
+        // mirror of every rehome issued (unbounded, unlike the map)
+        let mut last_target: std::collections::HashMap<String, usize> =
+            std::collections::HashMap::new();
+        for step in 0..60 {
+            let sid = format!("s{}", rng.uniform_int(0, 24));
+            let h = aff.home(&sid);
+            assert!(h < n_shards, "case {case} step {step}: home out of range");
+            assert_eq!(h, aff.home(&sid), "case {case} step {step}: home not stable");
+            match last_target.get(&sid) {
+                // owned by the last migration target — unless the bounded
+                // map evicted the override, which falls back to the hash
+                // home (a cache miss, never a third shard)
+                Some(&t) => assert!(
+                    h == t || h == aff.hash_home(&sid),
+                    "case {case} step {step}: home {h} is neither the last \
+                     rehome target {t} nor the hash home"
+                ),
+                None => assert_eq!(h, aff.hash_home(&sid), "case {case} step {step}"),
+            }
+            if rng.uniform() < 0.5 {
+                let to = rng.uniform_int(0, n_shards as u64) as usize;
+                aff.rehome(&sid, to);
+                assert_eq!(aff.home(&sid), to, "case {case} step {step}: rehome not immediate");
+                last_target.insert(sid, to);
+            }
+            assert!(aff.overrides() <= cap, "case {case} step {step}: override map unbounded");
+        }
+        // re-homing to the hash home erases rather than stores
+        let sid = format!("fresh{case}");
+        let before = aff.overrides();
+        aff.rehome(&sid, aff.hash_home(&sid));
+        assert_eq!(aff.overrides(), before, "case {case}: redundant override stored");
+        assert_eq!(aff.home(&sid), aff.hash_home(&sid));
+    }
+}

@@ -66,7 +66,7 @@ fn run_engine(seed: u64, opts: ServeOpts, requests: Vec<Request>, erx: Receiver<
         .iter()
         .filter_map(|ev| match ev {
             ServeEvent::Done(r) => Some(r),
-            ServeEvent::Delta { .. } => None,
+            _ => None,
         })
         .collect();
     (stats, responses)
@@ -168,7 +168,7 @@ fn session_cache_hit_skips_reprefill_and_matches_full_history() {
     let done1 = loop {
         match erx.recv().unwrap() {
             ServeEvent::Done(r) => break r,
-            ServeEvent::Delta { .. } => continue,
+            _ => continue,
         }
     };
     assert!(done1.error.is_none());
@@ -182,7 +182,7 @@ fn session_cache_hit_skips_reprefill_and_matches_full_history() {
     let done2 = loop {
         match erx.recv().unwrap() {
             ServeEvent::Done(r) => break r,
-            ServeEvent::Delta { .. } => continue,
+            _ => continue,
         }
     };
     drop(etx);
@@ -330,14 +330,14 @@ fn streaming_emits_one_delta_per_token_then_done() {
     let events: Vec<ServeEvent> = erx.iter().collect();
     let done = match events.last().unwrap() {
         ServeEvent::Done(r) => r.clone(),
-        ServeEvent::Delta { .. } => panic!("stream must end with the final line"),
+        _ => panic!("stream must end with the final line"),
     };
     assert!(done.error.is_none());
     let deltas: Vec<(usize, i32)> = events
         .iter()
         .filter_map(|e| match e {
             ServeEvent::Delta { index, token_id, .. } => Some((*index, *token_id)),
-            ServeEvent::Done(_) => None,
+            _ => None,
         })
         .collect();
     assert_eq!(deltas.len(), done.token_ids.len(), "one delta per generated token");
@@ -383,4 +383,119 @@ fn tcp_pipelined_requests_on_one_connection() {
     ids.sort_unstable();
     assert_eq!(ids.len(), 2);
     assert_ne!(ids[0], ids[1], "both pipelined requests answered");
+}
+
+/// Receive events until the final response line.
+fn recv_done(erx: &Receiver<ServeEvent>) -> holt::serve::Response {
+    loop {
+        match erx.recv().unwrap() {
+            ServeEvent::Done(r) => break r,
+            _ => continue,
+        }
+    }
+}
+
+#[test]
+fn migrated_session_is_bit_identical_to_unmigrated_run() {
+    // ISSUE-7 acceptance: a session that migrates between shards via the
+    // snapshot + absorbed-token shipment must generate exactly what the
+    // same two turns generate on a single unmigrated engine.
+    use holt::serve::{Router, RouterOpts};
+
+    let base = prompt(20, 13);
+    let follow = [65, 66, 67];
+
+    // baseline: both turns through one engine, cache never moves
+    let (tx, rx) = channel::<Request>();
+    let (etx, erx) = channel::<ServeEvent>();
+    let engine_thread = std::thread::spawn(move || {
+        let mut engine =
+            Engine::with_opts(Box::new(executor(91)), 1, ServeOpts::default()).unwrap();
+        engine.run(rx).unwrap()
+    });
+    let mut r1 = greedy_request(1, base.clone(), 6, etx.clone());
+    r1.session_id = Some("mig".into());
+    tx.send(r1).unwrap();
+    let base_done1 = recv_done(&erx);
+    assert!(base_done1.error.is_none());
+    let mut full = base.clone();
+    full.extend(&base_done1.token_ids);
+    full.extend(follow);
+    let mut r2 = greedy_request(2, full.clone(), 6, etx.clone());
+    r2.session_id = Some("mig".into());
+    tx.send(r2).unwrap();
+    let base_done2 = recv_done(&erx);
+    assert!(base_done2.error.is_none());
+    drop((tx, etx));
+    let base_stats = engine_thread.join().unwrap();
+    assert_eq!(base_stats.session_hits, 1);
+
+    // sharded: turn 1 on the hash home, then a forced migration to the
+    // other shard, then turn 2 — which must hit the shipped entry there.
+    // Identically-seeded executors on both shards (the router's usage
+    // contract); greedy sampling makes the engine seeds irrelevant.
+    let execs: Vec<Box<dyn Executor + Send>> =
+        vec![Box::new(executor(91)), Box::new(executor(91))];
+    let mut router = Router::new(execs, 1, ServeOpts::default(), RouterOpts::default()).unwrap();
+    let (etx, erx) = channel::<ServeEvent>();
+    let mut r1 = greedy_request(1, base.clone(), 6, etx.clone());
+    r1.session_id = Some("mig".into());
+    router.route(r1);
+    let done1 = recv_done(&erx);
+    assert!(done1.error.is_none());
+    assert_eq!(done1.token_ids, base_done1.token_ids, "turn 1 diverged before migration");
+
+    let home = router.shard_of("mig");
+    let to = 1 - home;
+    assert!(router.migrate("mig", to), "a finished turn's cached entry must ship");
+    assert_eq!(router.shard_of("mig"), to, "ownership re-homed with the shipment");
+    // single ownership: the entry left the old partition — the stats
+    // probe answers after the export drained, so the gauge is current
+    let stats = router.stats_json();
+    let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
+    let cached = |s: usize| per_shard[s].get("sessions_cached").unwrap().as_i64().unwrap();
+    assert_eq!(cached(home), 0, "migrated entry still resident on the old shard");
+    assert_eq!(cached(to), 1, "migrated entry not resident on the new shard");
+
+    let mut r2 = greedy_request(2, full.clone(), 6, etx.clone());
+    r2.session_id = Some("mig".into());
+    router.route(r2);
+    let done2 = recv_done(&erx);
+    assert!(done2.error.is_none());
+    assert_eq!(
+        done2.token_ids, base_done2.token_ids,
+        "post-migration generation diverged from the unmigrated run"
+    );
+
+    drop(etx);
+    assert_eq!(router.report().migrations, 1);
+    let (per_shard, report) = router.finish().unwrap();
+    assert_eq!(report.migrations, 1);
+    assert_eq!(per_shard[home].migrations_out, 1);
+    assert_eq!(per_shard[to].migrations_in, 1);
+    assert_eq!(per_shard[to].session_hits, 1, "turn 2 restored the shipped snapshot");
+    // and the hit skipped re-prefilling the shared history: across both
+    // shards only turn 1's prompt plus turn 2's fresh suffix absorbed
+    let absorbed: u64 = per_shard.iter().map(|s| s.prefill_tokens).sum();
+    assert!(
+        absorbed < (base.len() + full.len()) as u64,
+        "prefill_tokens {absorbed} implies the full history was re-absorbed after migration"
+    );
+}
+
+#[test]
+fn migration_of_unknown_or_inflight_session_ships_nothing() {
+    use holt::serve::{Router, RouterOpts};
+    let execs: Vec<Box<dyn Executor + Send>> =
+        vec![Box::new(executor(95)), Box::new(executor(95))];
+    let mut router = Router::new(execs, 1, ServeOpts::default(), RouterOpts::default()).unwrap();
+    let home = router.shard_of("ghost");
+    // unknown session: re-homes (future turns go to the target) but no
+    // entry ships, and migrating to the current home is a no-op
+    assert!(!router.migrate("ghost", 1 - home), "nothing cached to ship");
+    assert_eq!(router.shard_of("ghost"), 1 - home);
+    assert!(!router.migrate("ghost", 1 - home), "already home");
+    assert_eq!(router.report().migrations, 0);
+    let (_, report) = router.finish().unwrap();
+    assert_eq!(report.migrations, 0);
 }
