@@ -1,7 +1,7 @@
 # Build-time entry points. Only the artifact path needs python/jax;
 # tier-1 (`cargo build --release && cargo test -q`) never touches this.
 
-.PHONY: artifacts tier1 train-smoke serve-smoke serve-sharded-smoke bench-kernels
+.PHONY: artifacts tier1 train-smoke train-bench serve-smoke serve-sharded-smoke bench-kernels
 
 # AOT-lower the jax model + attention kernels to HLO-text artifacts
 # under ./artifacts (manifest.json + *.hlo). Requires python3 + jax.
@@ -16,6 +16,14 @@ tier1:
 train-smoke:
 	cargo run --release -- train --backend native --model ho2_tiny \
 	  --task copy --steps 40 --log-every 10 --eval-every 0 --min-loss-ratio 0.85
+
+# train throughput bench: per-attention AdamW steps, the long-context
+# (4k-32k token) fused-vs-replay backward comparison and grad-worker
+# scaling; writes results/bench_train.json (one object: steps /
+# long_context / worker_scaling)
+train-bench:
+	cargo bench --bench train_throughput -- tiny
+	@cat results/bench_train.json
 
 # kernel cost-model bench: scaling sweep + feature-map sweep with the
 # scalar-vs-SIMD tok/s comparison; writes results/bench_kernels.json

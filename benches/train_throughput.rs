@@ -3,18 +3,32 @@
 //! native path; the fused artifact on the PJRT path).
 //!
 //!   cargo bench --bench train_throughput [-- preset] [-- --artifact]
+//!                                        [-- --skip-long]
 //!
-//! The native case needs nothing (no artifacts, no Python) and writes
-//! results/bench_train.json next to the serve/scaling bench artifacts;
-//! pass `--artifact` to additionally bench the fused PJRT step (skipped
-//! with a note when artifacts are unavailable).  CSV lands in
+//! Three record groups land in results/bench_train.json (one object):
+//!
+//! * `steps` — whole AdamW steps per attention kind (the original E5).
+//! * `long_context` — the one-forward payoff: `loss_and_grad` (fused
+//!   capture + reverse) vs `loss_and_grad_replay` (the pre-fusion
+//!   forward-then-replay vjp) on 4k–32k-token sequences, reported as
+//!   `fused_speedup_vs_replay`.  Skippable with `--skip-long`.
+//! * `worker_scaling` — data-parallel gradient tok/s at 4k context for
+//!   `grad_workers` in {1, 2, whole pool}.
+//!
+//! The native case needs nothing (no artifacts, no Python); pass
+//! `--artifact` to additionally bench the fused PJRT step (skipped with
+//! a note when artifacts are unavailable).  CSV lands in
 //! results/e5_train_throughput.csv.
 
 use holt::bench::{bench, write_csv, BenchResult};
 use holt::coordinator::trainer::{ArtifactTrainer, NativeTrainer, TrainBackend};
 use holt::data;
 use holt::json::{obj, Json};
-use holt::runtime::Runtime;
+use holt::model::grad;
+use holt::model::presets::param_spec;
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::{ModelConfig, ModelEntry, Runtime};
 
 fn bench_backend(
     trainer: &mut dyn TrainBackend,
@@ -45,6 +59,98 @@ fn bench_backend(
     Ok(())
 }
 
+/// A 2-layer, 2-head ho2 model sized so long sequences fit: the point
+/// is the n-scaling of the backward, not model capacity.
+fn long_entry(batch: usize, t: usize) -> ModelEntry {
+    let config = ModelConfig {
+        preset: "bench_long".into(),
+        vocab_size: holt::tokenizer::VOCAB_SIZE,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        max_len: t,
+        attn: "ho2".into(),
+        order: 2,
+        alpha: 3.0,
+        impl_: "native".into(),
+        train_batch: batch,
+        train_len: t,
+        decode_batch: 1,
+    };
+    let spec = param_spec(&config);
+    let n_params = spec.iter().map(|l| l.shape.iter().product::<usize>()).sum();
+    ModelEntry {
+        name: format!("ho2_bench_long_{t}"),
+        config,
+        n_params,
+        param_spec: spec,
+        state_spec: Vec::new(),
+        artifacts: std::collections::HashMap::new(),
+    }
+}
+
+/// Fused (one-forward) vs replay backward at long context.
+fn bench_long_context(json_rows: &mut Vec<Json>) -> anyhow::Result<()> {
+    println!("\nlong context — fused capture+reverse vs forward+replay vjp");
+    for (task, t) in [("copy", 4096usize), ("assoc", 4096), ("copy", 32768)] {
+        let entry = long_entry(1, t);
+        let params = ParamStore::init(&entry.param_spec, &mut Rng::new(2));
+        let batch = data::make(task, 2)?.batch(1, t);
+        let cfg = &entry.config;
+        let fused = bench(&format!("fused_{task}_{t}"), 1, 2, || {
+            grad::loss_and_grad(cfg, &params, &batch).unwrap();
+        });
+        let replay = bench(&format!("replay_{task}_{t}"), 1, 2, || {
+            grad::loss_and_grad_replay(cfg, &params, &batch).unwrap();
+        });
+        let speedup = replay.mean_s / fused.mean_s;
+        let tok_per_s = t as f64 / fused.mean_s;
+        println!(
+            "  {task} n={t}: fused {:.0} ms, replay {:.0} ms — {speedup:.2}x ({tok_per_s:.0} tok/s)",
+            fused.mean_s * 1e3,
+            replay.mean_s * 1e3,
+        );
+        json_rows.push(obj(vec![
+            ("task", task.into()),
+            ("seq_len", t.into()),
+            ("fused_ms", (fused.mean_s * 1e3).into()),
+            ("replay_ms", (replay.mean_s * 1e3).into()),
+            ("fused_speedup_vs_replay", speedup.into()),
+            ("tok_per_s", tok_per_s.into()),
+        ]));
+    }
+    Ok(())
+}
+
+/// Data-parallel gradient scaling: same 4-sequence batch at 4k context,
+/// different worker caps (the gradient is bit-identical across them —
+/// this measures wall clock only).
+fn bench_worker_scaling(json_rows: &mut Vec<Json>) -> anyhow::Result<()> {
+    println!("\nworker scaling — data-parallel per-sequence gradients, copy n=4096");
+    let (b, t) = (4usize, 4096usize);
+    let entry = long_entry(b, t);
+    let params = ParamStore::init(&entry.param_spec, &mut Rng::new(3));
+    let batch = data::make("copy", 3)?.batch(b, t);
+    let cfg = &entry.config;
+    for workers in [1usize, 2, 0] {
+        let r = bench(&format!("grad_workers_{workers}"), 1, 2, || {
+            grad::loss_and_grad_accum(cfg, &params, &batch, 1, workers).unwrap();
+        });
+        let tok_per_s = (b * t) as f64 / r.mean_s;
+        let label = if workers == 0 { "pool".into() } else { workers.to_string() };
+        println!("  grad_workers={label}: {:.0} ms ({tok_per_s:.0} tok/s)", r.mean_s * 1e3);
+        json_rows.push(obj(vec![
+            ("grad_workers", workers.into()),
+            ("batch", b.into()),
+            ("seq_len", t.into()),
+            ("mean_ms", (r.mean_s * 1e3).into()),
+            ("tok_per_s", tok_per_s.into()),
+        ]));
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let preset = args
@@ -53,6 +159,7 @@ fn main() -> anyhow::Result<()> {
         .cloned()
         .unwrap_or_else(|| "tiny".into());
     let with_artifact = args.iter().any(|a| a == "--artifact");
+    let skip_long = args.iter().any(|a| a == "--skip-long");
 
     let mut rows: Vec<BenchResult> = Vec::new();
     let mut json_rows: Vec<Json> = Vec::new();
@@ -86,11 +193,22 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    let mut long_rows: Vec<Json> = Vec::new();
+    let mut scale_rows: Vec<Json> = Vec::new();
+    if skip_long {
+        println!("\n(long-context + worker-scaling sweeps skipped: --skip-long)");
+    } else {
+        bench_long_context(&mut long_rows)?;
+        bench_worker_scaling(&mut scale_rows)?;
+    }
+
     std::fs::create_dir_all("results")?;
-    std::fs::write(
-        "results/bench_train.json",
-        format!("{}\n", Json::Arr(json_rows)),
-    )?;
+    let doc = obj(vec![
+        ("steps", Json::Arr(json_rows)),
+        ("long_context", Json::Arr(long_rows)),
+        ("worker_scaling", Json::Arr(scale_rows)),
+    ]);
+    std::fs::write("results/bench_train.json", format!("{doc}\n"))?;
     write_csv(std::path::Path::new("results/e5_train_throughput.csv"), &rows)?;
     println!("\nwrote results/bench_train.json and results/e5_train_throughput.csv");
     Ok(())

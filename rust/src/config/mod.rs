@@ -153,6 +153,12 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub ckpt_every: usize,
     pub out_dir: String,
+    /// micro-batches per step (gradient accumulation; 1 = whole batch).
+    /// Bit-invariant: the gradient is identical for every value.
+    pub accum: usize,
+    /// worker cap for data-parallel gradients (0 = whole pool).  Also
+    /// bit-invariant.
+    pub grad_workers: usize,
 }
 
 impl Default for TrainConfig {
@@ -170,6 +176,8 @@ impl Default for TrainConfig {
             eval_every: 50,
             ckpt_every: 0,
             out_dir: "results".into(),
+            accum: 1,
+            grad_workers: 0,
         }
     }
 }
@@ -198,6 +206,10 @@ impl TrainConfig {
                     self.ckpt_every = v.as_i64().context("ckpt_every")? as usize
                 }
                 "out_dir" => self.out_dir = v.as_str().context("out_dir")?.into(),
+                "accum" => self.accum = v.as_i64().context("accum")? as usize,
+                "grad_workers" => {
+                    self.grad_workers = v.as_i64().context("grad_workers")? as usize
+                }
                 _ => bail!("unknown [train] key '{k}'"),
             }
         }

@@ -82,12 +82,26 @@ pub trait TrainBackend {
 // ---------------------------------------------------------------------------
 
 /// Pure-Rust trainer: hand-derived backward + native AdamW.
+///
+/// A step is explicit micro-batch gradient accumulation over
+/// data-parallel gradient workers ([`grad::loss_and_grad_accum`]): the
+/// batch is split per sequence, per-sequence gradients are computed on
+/// up to `grad_workers` pool workers and merged by a fixed-shape tree
+/// reduction, so the loss curve is bit-identical for every
+/// (`accum`, `grad_workers`) setting.
 pub struct NativeTrainer {
     pub model: ModelEntry,
     pub params: ParamStore,
     pub m: ParamStore,
     pub v: ParamStore,
     pub step: u64,
+    /// Micro-batch count per step (gradient accumulation splits; 1 =
+    /// whole batch at once).  Purely a memory/scheduling knob — the
+    /// gradient is bit-identical for every value.
+    pub accum: usize,
+    /// Worker cap for data-parallel per-sequence gradients (0 = whole
+    /// pool).  Also bit-invariant.
+    pub grad_workers: usize,
     /// per-leaf weight decay (GPT-2 convention: matrix leaves only,
     /// embeddings exempt) — precomputed from the param spec
     decay: Vec<f32>,
@@ -141,7 +155,7 @@ impl NativeTrainer {
             cfg.n_heads
         );
         let decay = params::adamw_decay_mask(&model.param_spec);
-        Ok(NativeTrainer { model, params, m, v, step, decay })
+        Ok(NativeTrainer { model, params, m, v, step, accum: 1, grad_workers: 0, decay })
     }
 }
 
@@ -160,7 +174,13 @@ impl TrainBackend for NativeTrainer {
 
     fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<StepStats> {
         let timer = Timer::start();
-        let (loss, grads) = grad::loss_and_grad(&self.model.config, &self.params, batch)?;
+        let (loss, grads) = grad::loss_and_grad_accum(
+            &self.model.config,
+            &self.params,
+            batch,
+            self.accum,
+            self.grad_workers,
+        )?;
         self.step += 1;
         params::adamw_step(
             &mut self.params,
@@ -382,6 +402,8 @@ pub fn run_training(
         ("seed", (cfg.seed as i64).into()),
         ("batch", b.into()),
         ("seq_len", t.into()),
+        ("accum", cfg.accum.into()),
+        ("grad_workers", cfg.grad_workers.into()),
     ]))?;
 
     let mut history = Vec::with_capacity(cfg.steps);

@@ -45,6 +45,18 @@ impl Batch {
         self.tokens.shape[1]
     }
 
+    /// Sequences `[s, e)` as an owned sub-batch — the per-sequence unit
+    /// of the trainer's micro-batch / data-parallel gradient loop.
+    pub fn slice_rows(&self, s: usize, e: usize) -> anyhow::Result<Batch> {
+        let (b, t) = (self.batch_size(), self.seq_len());
+        anyhow::ensure!(s < e && e <= b, "slice_rows [{s}, {e}) of batch size {b}");
+        Ok(Batch {
+            tokens: Tensor::i32(vec![e - s, t], self.tokens.as_i32()?[s * t..e * t].to_vec()),
+            targets: Tensor::i32(vec![e - s, t], self.targets.as_i32()?[s * t..e * t].to_vec()),
+            weights: Tensor::f32(vec![e - s, t], self.weights.as_f32()?[s * t..e * t].to_vec()),
+        })
+    }
+
     /// Weighted mean cross-entropy from logits (B, T, V) — must agree with
     /// the in-graph loss (checked in the integration tests).
     pub fn cross_entropy(&self, logits: &Tensor) -> anyhow::Result<f64> {

@@ -34,8 +34,10 @@ pub fn chunked_forward<K: RecurrentAttention + ?Sized>(
     assert_eq!(k.len(), n * d, "k shape");
     assert_eq!(v.len(), n * dv, "v shape");
     if !causal {
+        // streaming_forward counts the attention forward itself
         return streaming_forward(kernel, q, k, v, n, causal);
     }
+    crate::kernels::counters::count_attn_forward();
     let chunk = chunk.max(1);
     kernel.reset();
     let isa = kernel.isa();

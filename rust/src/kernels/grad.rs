@@ -18,9 +18,18 @@
 //!   way back — the mirror image of the forward prefix sums.
 //!
 //! The reverse sweep needs the state each chunk's queries actually read
-//! (the state *before* that chunk was absorbed), so the forward replay
-//! snapshots the state at every chunk boundary — O(n/c · S) extra
-//! memory, nothing recomputed twice.
+//! (the state *before* that chunk was absorbed), plus the raw
+//! denominators and f64 numerators of every position.  The **capture**
+//! phase ([`chunked_forward_captured`]) records all of it — snapshots at
+//! every chunk boundary, dens/nums, and the prepped q/k rows — into a
+//! [`CapturedChunks`] *while producing the normal attention output*, so
+//! the model's training forward doubles as the backward's tape and a
+//! train step runs exactly **one** attention forward.  The **reverse**
+//! phase ([`chunked_attention_vjp_reverse`]) consumes the capture:
+//! nothing recomputed, nothing re-prepped on the way back.
+//! [`chunked_attention_vjp`] remains as the self-contained
+//! capture-then-reverse wrapper for callers with no forward to reuse
+//! (FD checks, one-off Jacobians).
 //!
 //! Processing order per chunk (reversed) matters: the chunk's absorbs
 //! feed only *later* reads, so [`AttentionGrad::absorb_vjp`] must run
@@ -71,43 +80,62 @@ pub trait AttentionGrad: RecurrentAttention {
     fn prep_rows_vjp(&self, rows: &[f32], n: usize, g: &[f64]) -> Vec<f64>;
 }
 
-/// Backward of [`chunked_forward`] (causal): given `go = dL/d out`,
-/// returns `(gq, gk, gv)`.  Replays the forward internally (storing the
-/// per-position numerator/denominator, the prepped rows, and a state
-/// snapshot per chunk), then runs the reverse chunk sweep described in
-/// the module docs.  O(n·c·d·dv + (n/c)·S) time, linear in `n` like the
-/// forward.
+/// The backward's tape: everything one causal chunked forward must hand
+/// the reverse sweep so nothing is recomputed.  Produced by
+/// [`chunked_forward_captured`], consumed by
+/// [`chunked_attention_vjp_reverse`]; opaque to the model layer, which
+/// just carries it from its forward to its backward.
 ///
-/// The replay means a training step evaluates each head's attention
-/// forward twice (once in the model forward for the residual stream,
-/// once here) — deliberate for now: it keeps this function
-/// self-contained and the model-side activation cache free of
-/// kernel-private state.  Threading (nums, dens, snaps) out of the
-/// model forward to skip the replay is a known follow-up optimization.
+/// Contents per sequence: raw (pre-floor) denominators (n f64), f64
+/// numerators (n·dv), one `save_state` snapshot per chunk boundary
+/// (n/c · S), and the prepped q/k rows (2·n·d f32) — the prepped rows
+/// riding along is what lets the backward run **zero** `prep_rows`
+/// calls.
+pub struct CapturedChunks {
+    n: usize,
+    chunk: usize,
+    /// raw per-position denominators (pre-floor: the subgradient of the
+    /// [`crate::kernels::DEN_FLOOR`] clamp needs the unclamped value)
+    dens: Vec<f64>,
+    /// f64 per-position numerators, row-major (n, dv)
+    nums: Vec<f64>,
+    /// kernel state at each chunk boundary (save_state layout)
+    snaps: Vec<Vec<f64>>,
+    /// prepped (q, k) rows per chunk, exactly as the forward used them
+    preps: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+/// [`chunked_forward`] (causal) that additionally records the backward's
+/// tape: returns the normal attention output **and** a
+/// [`CapturedChunks`] for [`chunked_attention_vjp_reverse`].
+///
+/// Arithmetic is identical to [`chunked_forward`] — same prep, same
+/// per-pair `pair_weight_from_dot(dot)` weights, same accumulation
+/// order, same [`floor_den`] at the output — so the captured output is
+/// bit-identical to the serving forward and the capture is free of any
+/// second pass.  Counts as one attention forward
+/// ([`crate::kernels::counters`]).
 ///
 /// [`chunked_forward`]: crate::kernels::chunked_forward
-#[allow(clippy::too_many_arguments)]
-pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
+pub fn chunked_forward_captured<K: AttentionGrad + ?Sized>(
     kernel: &mut K,
     q: &[f32],
     k: &[f32],
     v: &[f32],
     n: usize,
     chunk: usize,
-    go: &[f32],
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+) -> (Vec<f32>, CapturedChunks) {
     let (d, dv) = (kernel.d(), kernel.dv());
     assert_eq!(q.len(), n * d, "q shape");
     assert_eq!(k.len(), n * d, "k shape");
     assert_eq!(v.len(), n * dv, "v shape");
-    assert_eq!(go.len(), n * dv, "go shape");
     let chunk = chunk.max(1);
     let n_chunks = n.div_ceil(chunk);
     let isa = kernel.isa();
+    crate::kernels::counters::count_attn_forward();
 
-    // ---- forward replay: raw denominators, f64 numerators, snapshots,
-    // and the prepped rows (reused verbatim by the reverse sweep) ----
     kernel.reset();
+    let mut out = vec![0.0f32; n * dv];
     let mut dens = vec![0.0f64; n];
     let mut nums = vec![0.0f64; n * dv];
     let mut snaps: Vec<Vec<f64>> = Vec::with_capacity(n_chunks);
@@ -132,6 +160,10 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
                 simd::axpy_ps(isa, num, &v[j * dv..(j + 1) * dv], w);
             }
             dens[i] = den;
+            let fden = floor_den(den);
+            for (o, &x) in out[i * dv..(i + 1) * dv].iter_mut().zip(num.iter()) {
+                *o = (x / fden) as f32;
+            }
         }
         for j in c0..c1 {
             kernel.absorb_prepped(&kp[(j - c0) * d..(j - c0 + 1) * d], &v[j * dv..(j + 1) * dv]);
@@ -139,8 +171,35 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
         preps.push((qp, kp));
         c0 = c1;
     }
+    (out, CapturedChunks { n, chunk, dens, nums, snaps, preps })
+}
 
-    // ---- reverse sweep ----
+/// Reverse phase: consume a [`CapturedChunks`] tape and `go = dL/d out`,
+/// return `(gq, gk, gv)`.  Runs the chunk sweep described in the module
+/// docs — absorbs first against the carried state gradient, then reads
+/// against the restored boundary snapshot — entirely from the tape:
+/// no forward replay, no `prep_rows` calls (only the row-wise
+/// [`AttentionGrad::prep_rows_vjp`] at the end, which is the prep's
+/// *backward* and irreducible).  O(n·c·d·dv + (n/c)·S) time, linear in
+/// `n` like the forward.
+pub fn chunked_attention_vjp_reverse<K: AttentionGrad + ?Sized>(
+    kernel: &mut K,
+    cap: &CapturedChunks,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (d, dv) = (kernel.d(), kernel.dv());
+    let (n, chunk) = (cap.n, cap.chunk);
+    assert_eq!(q.len(), n * d, "q shape");
+    assert_eq!(k.len(), n * d, "k shape");
+    assert_eq!(v.len(), n * dv, "v shape");
+    assert_eq!(go.len(), n * dv, "go shape");
+    let n_chunks = n.div_ceil(chunk);
+    let isa = kernel.isa();
+    let CapturedChunks { dens, nums, snaps, preps, .. } = cap;
+
     let mut gqp = vec![0.0f64; n * d];
     let mut gkp = vec![0.0f64; n * d];
     let mut gv = vec![0.0f64; n * dv];
@@ -204,6 +263,30 @@ pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
     let gq = kernel.prep_rows_vjp(q, n, &gqp);
     let gk = kernel.prep_rows_vjp(k, n, &gkp);
     (to_f32(&gq), to_f32(&gk), to_f32(&gv))
+}
+
+/// Backward of [`chunked_forward`] (causal): given `go = dL/d out`,
+/// returns `(gq, gk, gv)`.  Self-contained capture-then-reverse wrapper
+/// — it runs [`chunked_forward_captured`] (one attention forward) and
+/// feeds the tape straight to [`chunked_attention_vjp_reverse`].  The
+/// training path doesn't use it: `model/grad.rs` captures during its
+/// own forward and calls the reverse directly, paying for attention
+/// once per step.  This stays as the entry point for FD checks and any
+/// caller without a forward to reuse.
+///
+/// [`chunked_forward`]: crate::kernels::chunked_forward
+#[allow(clippy::too_many_arguments)]
+pub fn chunked_attention_vjp<K: AttentionGrad + ?Sized>(
+    kernel: &mut K,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    chunk: usize,
+    go: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (_out, cap) = chunked_forward_captured(kernel, q, k, v, n, chunk);
+    chunked_attention_vjp_reverse(kernel, &cap, q, k, v, go)
 }
 
 /// Backward of the exact softmax attention baseline
@@ -316,6 +399,44 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "chunk {chunk}: {a} vs {b}");
             }
         }
+    }
+
+    /// The capture phase must be the serving forward, not an
+    /// approximation of it: outputs bit-identical to [`chunked_forward`]
+    /// for the same kernel/chunking (the full order × chunk sweep lives
+    /// in rust/tests/grad_check.rs).
+    #[test]
+    fn captured_forward_matches_chunked_forward_bitwise() {
+        let mut rng = Rng::new(94);
+        let (n, d, dv) = (19, 4, 3);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let mut st = HoState::paper(d, dv);
+        for chunk in [1, 4, 64] {
+            let want = chunked_forward(&mut st, &q, &k, &v, n, chunk, true);
+            let (got, cap) = chunked_forward_captured(&mut st, &q, &k, &v, n, chunk);
+            assert_eq!(got, want, "chunk {chunk}");
+            assert_eq!(cap.dens.len(), n);
+            assert_eq!(cap.snaps.len(), n.div_ceil(chunk));
+        }
+    }
+
+    /// The wrapper (capture + reverse) is the old replay path: same
+    /// gradients as driving the two phases by hand.
+    #[test]
+    fn wrapper_equals_explicit_capture_then_reverse() {
+        let mut rng = Rng::new(95);
+        let (n, d, dv) = (13, 4, 3);
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        let go = rng.normal_vec_f32(n * dv, 1.0);
+        let mut st = HoState::paper(d, dv);
+        let (_out, cap) = chunked_forward_captured(&mut st, &q, &k, &v, n, 4);
+        let by_hand = chunked_attention_vjp_reverse(&mut st, &cap, &q, &k, &v, &go);
+        let wrapped = chunked_attention_vjp(&mut st, &q, &k, &v, n, 4, &go);
+        assert_eq!(by_hand, wrapped);
     }
 
     #[test]

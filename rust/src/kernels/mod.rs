@@ -121,12 +121,42 @@ pub use self::chunked::chunked_forward;
 pub use self::featuremap::{
     taylor_feature_dim, EluMap, FeatureMap, TaylorMap, MAX_TAYLOR_FEATURES,
 };
-pub use self::grad::{chunked_attention_vjp, softmax_attention_vjp, AttentionGrad};
+pub use self::grad::{
+    chunked_attention_vjp, chunked_attention_vjp_reverse, chunked_forward_captured,
+    softmax_attention_vjp, AttentionGrad, CapturedChunks,
+};
 pub use self::ho::HoState;
 pub use self::linear::LinearState;
 pub use self::phi::PhiState;
 pub use self::scratch::Scratch;
 pub use self::simd::Isa;
+
+/// Process-global attention-forward counter — the instrument behind the
+/// "one attention forward per train step" claim.
+///
+/// Every *full-sequence* forward evaluation counts exactly once:
+/// [`streaming_forward`], the causal [`chunked_forward`] pass, and the
+/// capturing [`grad::chunked_forward_captured`].  Per-token decode
+/// ([`RecurrentAttention::step`]) does not — it is a different cost
+/// class and the claim is about training.  The counter is cumulative
+/// for the process (tests measure deltas); because it is global, any
+/// test asserting exact deltas must live alone in its own test binary
+/// (`rust/tests/fused_train.rs`) so concurrent tests can't interleave.
+pub mod counters {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ATTN_FORWARDS: AtomicU64 = AtomicU64::new(0);
+
+    /// Cumulative full-sequence attention forwards since process start.
+    pub fn attn_forwards() -> u64 {
+        ATTN_FORWARDS.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub(crate) fn count_attn_forward() {
+        ATTN_FORWARDS.fetch_add(1, Ordering::Relaxed);
+    }
+}
 
 /// Denominator clamp, identical to the `mathref` oracles: row weights are
 /// positive by construction (even-order Taylor ≥ ½ⁱˢʰ, elu+1 > 0), so in
@@ -285,6 +315,7 @@ pub fn streaming_forward<K: RecurrentAttention + ?Sized>(
     assert_eq!(q.len(), n * d, "q shape");
     assert_eq!(k.len(), n * d, "k shape");
     assert_eq!(v.len(), n * dv, "v shape");
+    counters::count_attn_forward();
     kernel.reset();
     let mut out = vec![0.0f32; n * dv];
     // one numerator scratch for the whole sequence (the per-token `step`

@@ -118,8 +118,14 @@ COMMANDS
              --lr X --seed S --warmup W --log-every K --eval-every K
              --ckpt-every K --out DIR --config FILE --resume CKPT
              --min-loss-ratio R]
-             (native: hand-derived O(n) backward + AdamW, no artifacts;
-              --min-loss-ratio fails the run unless final/first <= R)
+             (native: one-forward backward — the vjp consumes the
+              forward's captured tape, no replay — + AdamW, no
+              artifacts; --min-loss-ratio fails the run unless
+              final/first <= R)
+             [--accum N --grad-workers W]    (native only)
+             (micro-batch gradient accumulation over W data-parallel
+              workers, 0 = whole pool; deterministic tree reduction —
+              the loss curve is bit-identical for every N and W)
   generate   --model M [--backend native|artifact --ckpt FILE --prompt STR
              --max-tokens N --temperature X --top-k K --seed S]
   serve      --model M [--backend native|artifact --ckpt FILE
@@ -331,6 +337,7 @@ fn build_trainer(
     model: &str,
     seed: u64,
     resume: Option<&str>,
+    cfg: &TrainConfig,
 ) -> Result<Box<dyn TrainBackend>> {
     let ckpt = match resume {
         Some(path) => {
@@ -341,11 +348,21 @@ fn build_trainer(
         None => None,
     };
     match backend {
-        "native" => Ok(match ckpt {
-            Some(ck) => Box::new(NativeTrainer::from_checkpoint(model, &ck)?),
-            None => Box::new(NativeTrainer::new(model, seed)?),
-        }),
+        "native" => {
+            let mut t = match ckpt {
+                Some(ck) => NativeTrainer::from_checkpoint(model, &ck)?,
+                None => NativeTrainer::new(model, seed)?,
+            };
+            t.accum = cfg.accum.max(1);
+            t.grad_workers = cfg.grad_workers;
+            Ok(Box::new(t))
+        }
         _ => {
+            // the fused train artifact is a single whole-batch step;
+            // accumulation knobs are native-only
+            if cfg.accum > 1 || cfg.grad_workers != 0 {
+                bail!("--accum/--grad-workers require --backend native");
+            }
             let rt = runtime()?;
             Ok(match ckpt {
                 Some(ck) => Box::new(ArtifactTrainer::from_checkpoint(&rt, model, &ck)?),
@@ -376,9 +393,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(o) = args.get("out") {
         cfg.out_dir = o.into();
     }
+    cfg.accum = args.get_usize("accum", cfg.accum)?;
+    cfg.grad_workers = args.get_usize("grad-workers", cfg.grad_workers)?;
+    if cfg.accum == 0 {
+        bail!("--accum must be >= 1");
+    }
 
     let backend = backend_of(args)?;
-    let mut trainer = build_trainer(backend, &cfg.model, cfg.seed, args.get("resume"))?;
+    let mut trainer = build_trainer(backend, &cfg.model, cfg.seed, args.get("resume"), &cfg)?;
     println!(
         "training {} [{}] on task '{}' for {} steps (lr {:.2e}, seed {})",
         cfg.model, backend, cfg.task, cfg.steps, cfg.lr, cfg.seed

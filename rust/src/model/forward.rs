@@ -229,6 +229,13 @@ pub(crate) fn fan_out<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], f: F) {
     crate::model::pool::WorkerPool::global().fan_out(items, f)
 }
 
+/// [`fan_out`] bounded to at most `cap` threads (0 = uncapped, 1 =
+/// fully serial on the caller) — the data-parallel gradient loop uses
+/// this to honor `--grad-workers` without resizing the shared pool.
+pub(crate) fn fan_out_capped<T: Send, F: Fn(&mut T) + Sync>(items: &mut [T], cap: usize, f: F) {
+    crate::model::pool::WorkerPool::global().fan_out_capped(items, cap, f)
+}
+
 /// Weight view of block `li` over a [`ParamStore`] whose leaves were
 /// validated f32 (see [`NativeModel::new`] / `NativeTrainer`) — shared
 /// by the serving forward and the training backward.

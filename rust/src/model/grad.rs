@@ -1,11 +1,21 @@
 //! Native training: the hand-derived backward pass through the full
 //! transformer, gradient-checked against finite differences.
 //!
-//! # The backward recurrence
+//! # One forward, capture and reverse
 //!
-//! The forward is `model::forward`'s exact arithmetic (same `nn` ops,
-//! same chunked attention evaluation), run once with activations cached.
-//! The backward walks it in reverse:
+//! A train step pays for attention exactly **once**.  The cached
+//! training forward runs [`chunked_forward_captured`] per (sequence,
+//! head) unit: the serving forward's exact arithmetic, which *also*
+//! records the backward's tape — raw denominators, f64 numerators,
+//! chunk-boundary state snapshots, and the prepped q/k rows — into a
+//! [`CapturedChunks`] held in the unit's [`VjpPlan`].  The backward
+//! then calls [`chunked_attention_vjp_reverse`] on that tape: no
+//! forward replay, zero `prep_rows` calls on the way back.  (The
+//! historic replaying path survives as [`loss_and_grad_replay`], the
+//! bench/test baseline; its gradients are bit-identical because the
+//! capture *is* the replay's first phase.)
+//!
+//! # The backward recurrence
 //!
 //! * **loss** — weighted softmax cross-entropy: `dlogits = (p − 1ₜ)·w/W`
 //!   per scored position, `W = max(Σw, 1)` (mirror of
@@ -13,32 +23,57 @@
 //! * **dense ops** (`matmul`, LayerNorm, GELU, tied logits, embedding
 //!   gather) — standard VJPs, written with the same fixed accumulation
 //!   order discipline as the forward in [`crate::model::nn`].
-//! * **attention** — the interesting part: the causal O(n) recurrence is
-//!   differentiated *as the recurrence*, not as an unrolled n² graph.
-//!   [`chunked_attention_vjp`] mirrors `kernels::chunked_forward`
-//!   chunk for chunk: pairwise weights inside a chunk are
-//!   differentiated directly (`Tᵣ'(s) = Tᵣ₋₁(s)` for Taylor order r),
-//!   while a single *state-gradient* vector — the loss gradient w.r.t.
-//!   each prefix-sum moment (Σ1, Σk, Σk⊗v, Σk⊗k, Σ(k⊗k)⊗v) — flows
-//!   backward across chunks, exactly as Katharopoulos et al. 2020
-//!   describe for first-order linear attention.  Cost stays O(n), and
-//!   decode-time state and train-time gradient share one layout.
-//!   The softmax baseline has no linear-time form in either direction
-//!   and uses the direct [`softmax_attention_vjp`].
+//! * **attention** — the causal O(n) recurrence is differentiated *as
+//!   the recurrence*, not as an unrolled n² graph: pairwise weights
+//!   inside a chunk are differentiated directly (`Tᵣ'(s) = Tᵣ₋₁(s)` for
+//!   Taylor order r), while a single *state-gradient* vector — the loss
+//!   gradient w.r.t. each prefix-sum moment (Σ1, Σk, Σk⊗v, Σk⊗k,
+//!   Σ(k⊗k)⊗v) — flows backward across chunks, exactly as Katharopoulos
+//!   et al. 2020 describe for first-order linear attention.  Cost stays
+//!   O(n), and decode-time state and train-time gradient share one
+//!   layout.  The softmax baseline has no linear-time form in either
+//!   direction and uses the direct [`softmax_attention_vjp`].
+//!
+//! # What a FeatureMap owes the vjp
+//!
+//! A new φ gets all of this for free by implementing
+//! `FeatureMap::prep_rows_vjp` + `map_q_vjp`/`map_k_vjp` +
+//! `pair_weight_dot_grad` (see `kernels/featuremap.rs`): the generic
+//! `PhiState` derives the [`crate::kernels::AttentionGrad`] surface —
+//! `query_vjp` (state read), `absorb_vjp` (additive update), and the
+//! row-prep backward — and both the capture and reverse phases are
+//! kernel-agnostic on top of that.  Nothing in this module is
+//! per-kernel.
+//!
+//! # Data-parallel accumulation
+//!
+//! [`loss_and_grad_accum`] is the trainer's entry point: the unit of
+//! computation is always **one sequence** (so splitting a batch across
+//! micro-batches or worker threads cannot reassociate any f32 sum), the
+//! global weight normalizer `W` is computed once over the whole batch
+//! and baked into every per-sequence backward, and the per-sequence
+//! gradients merge through a **fixed-shape binary-counter tree**
+//! ([`TreeReducer`]) keyed only on the sequence index — so loss curves
+//! are bit-reproducible across `--grad-workers` and `--accum` settings
+//! (pinned in `rust/tests/train_native.rs`).
 //!
 //! `rust/tests/grad_check.rs` pins every kernel kind × order against
 //! finite differences of f64 oracles (rel. err ≤ 1e-3) and the full
-//! model against numeric directional derivatives.
+//! model against numeric directional derivatives;
+//! `rust/tests/fused_train.rs` pins the one-forward-per-step claim with
+//! the process-global [`crate::kernels::counters`] instrument.
 
 use anyhow::{ensure, Result};
 
 use crate::data::Batch;
 use crate::kernels::{
-    chunked_attention_vjp, softmax_attention_vjp, Evaluation, NativeBackend,
+    chunked_attention_vjp, chunked_attention_vjp_reverse, chunked_forward_captured,
+    softmax_attention_vjp, AttentionGrad, CapturedChunks, Evaluation, NativeBackend,
 };
 use crate::model::forward::{
-    block_finish, block_qkv, fan_out, gather_head, layer_view, lnf_index, scatter_head, L_B1,
-    L_B2, L_LN1_B, L_LN1_G, L_LN2_B, L_LN2_G, L_PER_BLOCK, L_W1, L_W2, L_WK, L_WO, L_WQ, L_WV,
+    block_finish, block_qkv, fan_out, fan_out_capped, gather_head, layer_view, lnf_index,
+    scatter_head, L_B1, L_B2, L_LN1_B, L_LN1_G, L_LN2_B, L_LN2_G, L_PER_BLOCK, L_W1, L_W2, L_WK,
+    L_WO, L_WQ, L_WV,
 };
 use crate::model::nn::{self, LN_EPS};
 use crate::params::ParamStore;
@@ -66,9 +101,10 @@ struct LayerCache {
     x_in: Vec<f32>,
     /// ln1 output (rows, d)
     h1: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    /// per-(sequence, head) attention units — the gathered q/k/v rows
+    /// the backward re-uses, and (on the fused path) each unit's
+    /// recorded [`VjpPlan`]
+    units: Vec<AttnUnit>,
     /// concatenated attention output (rows, d)
     a: Vec<f32>,
     /// residual stream after the attention sublayer (rows, d)
@@ -90,22 +126,57 @@ struct Cache {
     xf: Vec<f32>,
 }
 
+/// What one attention unit's fused forward leaves behind for its
+/// backward: the kernel instance that ran the capture (the reverse
+/// sweep reuses its scratch arena and pinned ISA) and the tape itself.
+pub(crate) struct VjpPlan {
+    st: Box<dyn AttentionGrad + Send>,
+    cap: CapturedChunks,
+}
+
 /// One attention unit (sequence × head) of the parallel fan-out.
 struct AttnUnit {
     q: Vec<f32>,
     k: Vec<f32>,
     v: Vec<f32>,
     out: Vec<f32>,
+    /// `Some` iff the forward captured (fused path, non-softmax kinds)
+    plan: Option<VjpPlan>,
 }
 
 /// (gq, gk, gv) of one attention unit.
 type UnitGrads = (Vec<f32>, Vec<f32>, Vec<f32>);
 
 /// Run the attention forward for every (sequence, head) unit — the same
-/// dispatch `NativeModel::forward` uses, so logits agree exactly.
-fn attend_forward(cfg: &ModelConfig, units: &mut [AttnUnit], t: usize, dh: usize) -> Result<()> {
+/// dispatch `NativeModel::forward` uses, so logits agree exactly.  With
+/// `capture` set (and a non-softmax kind), each unit runs
+/// [`chunked_forward_captured`] instead: identical output bits, plus
+/// the recorded [`VjpPlan`] that makes the backward replay-free.
+fn attend_forward(
+    cfg: &ModelConfig,
+    units: &mut [AttnUnit],
+    t: usize,
+    dh: usize,
+    capture: bool,
+) -> Result<()> {
     let backend = backend_for(cfg);
     let kind = cfg.attn.as_str();
+    if capture && kind != "softmax" {
+        let mut work: Vec<(&mut AttnUnit, Option<Result<()>>)> =
+            units.iter_mut().map(|u| (u, None)).collect();
+        fan_out(&mut work, |(u, done)| {
+            *done = Some(backend.grad_state(kind, dh, dh).map(|mut st| {
+                let (out, cap) =
+                    chunked_forward_captured(st.as_mut(), &u.q, &u.k, &u.v, t, TRAIN_CHUNK);
+                u.out = out;
+                u.plan = Some(VjpPlan { st, cap });
+            }));
+        });
+        for (_, done) in work {
+            done.expect("every unit computed")?;
+        }
+        return Ok(());
+    }
     let mut work: Vec<(&mut AttnUnit, Option<Result<Vec<f32>>>)> =
         units.iter_mut().map(|u| (u, None)).collect();
     fan_out(&mut work, |(u, out)| {
@@ -145,8 +216,10 @@ fn embed_tokens(
     Ok(x)
 }
 
-/// Attention sublayer over the whole batch: gather heads, fan out, and
-/// scatter back into a (rows, d) buffer.
+/// Attention sublayer over the whole batch: gather heads, fan out,
+/// scatter back into a (rows, d) buffer — and hand the units back so
+/// the cached forward can keep them (q/k/v rows + any recorded
+/// [`VjpPlan`]) for the backward.
 fn attend_batched(
     cfg: &ModelConfig,
     q: &[f32],
@@ -154,7 +227,8 @@ fn attend_batched(
     v: &[f32],
     b: usize,
     t: usize,
-) -> Result<Vec<f32>> {
+    capture: bool,
+) -> Result<(Vec<f32>, Vec<AttnUnit>)> {
     let d = cfg.d_model;
     let nh = cfg.n_heads;
     let dh = d / nh;
@@ -166,27 +240,33 @@ fn attend_batched(
                 k: gather_head(k, bi, t, d, hd, dh),
                 v: gather_head(v, bi, t, d, hd, dh),
                 out: Vec::new(),
+                plan: None,
             });
         }
     }
-    attend_forward(cfg, &mut units, t, dh)?;
+    attend_forward(cfg, &mut units, t, dh, capture)?;
     let mut a = vec![0.0f32; b * t * d];
-    for (u, unit) in units.iter().enumerate() {
+    for (u, unit) in units.iter_mut().enumerate() {
         scatter_head(&mut a, &unit.out, u / nh, t, d, u % nh, dh);
+        // scattered: the backward never reads the per-unit output
+        unit.out = Vec::new();
     }
-    Ok(a)
+    Ok((a, units))
 }
 
 /// Full-sequence forward with activation caching.  Identical arithmetic
 /// to [`crate::model::NativeModel::forward`] (same `nn` ops in the same
-/// order, same chunked attention) — pinned by a test in
-/// `rust/tests/grad_check.rs`.
+/// order, same chunked attention — the capture changes nothing about
+/// the output bits) — pinned by a test in `rust/tests/grad_check.rs`.
+/// With `capture` set, each attention unit records its [`VjpPlan`] so
+/// the backward is replay-free.
 fn forward_cached(
     cfg: &ModelConfig,
     params: &ParamStore,
     tokens: &[i32],
     b: usize,
     t: usize,
+    capture: bool,
 ) -> Result<(Vec<f32>, Cache)> {
     let (d, v, ff) = (cfg.d_model, cfg.vocab_size, cfg.d_ff);
     let rows = b * t;
@@ -201,7 +281,7 @@ fn forward_cached(
         let q = nn::matmul(&h1, lw.wq, rows, d, d);
         let k = nn::matmul(&h1, lw.wk, rows, d, d);
         let vv = nn::matmul(&h1, lw.wv, rows, d, d);
-        let a = attend_batched(cfg, &q, &k, &vv, b, t)?;
+        let (a, units) = attend_batched(cfg, &q, &k, &vv, b, t, capture)?;
 
         let ao = nn::matmul(&a, lw.wo, rows, d, d);
         nn::add_inplace(&mut x, &ao);
@@ -215,7 +295,7 @@ fn forward_cached(
         nn::add_inplace(&mut x, &g);
         nn::add_bias(&mut x, rows, d, lw.b2);
 
-        layers.push(LayerCache { x_in, h1, q, k, v: vv, a, x_mid, h2, f_pre, f_post });
+        layers.push(LayerCache { x_in, h1, units, a, x_mid, h2, f_pre, f_post });
     }
 
     let x_out = x;
@@ -249,7 +329,7 @@ pub fn forward_logits(
     for li in 0..cfg.n_layers {
         let lw = layer_view(params, li);
         let (q, k, vv) = block_qkv(&lw, &x, rows, d);
-        let a = attend_batched(cfg, &q, &k, &vv, b, t)?;
+        let (a, _units) = attend_batched(cfg, &q, &k, &vv, b, t, false)?;
         block_finish(&lw, &mut x, &a, rows, d, ff);
     }
     let lnf = lnf_index(cfg.n_layers);
@@ -263,12 +343,54 @@ pub fn forward_logits(
     Ok(nn::tied_logits(&xf, rows, d, params.leaves[0].as_f32()?, v))
 }
 
+/// The whole batch's weight normalizer `W = max(Σw, 1)` — computed once
+/// over the *full* batch so per-sequence backward calls of
+/// [`loss_and_grad_accum`] bake in the identical scale.
+fn batch_wnorm(batch: &Batch) -> Result<f64> {
+    let weights = batch.weights.as_f32()?;
+    Ok(weights.iter().map(|&w| w as f64).sum::<f64>().max(1.0))
+}
+
 /// Weighted-CE loss and its gradient w.r.t. every parameter leaf, as a
-/// [`ParamStore`] with the same names/shapes as `params`.
+/// [`ParamStore`] with the same names/shapes as `params`.  Fused path:
+/// one attention forward per (sequence, head), backward from the
+/// recorded capture.
 pub fn loss_and_grad(
     cfg: &ModelConfig,
     params: &ParamStore,
     batch: &Batch,
+) -> Result<(f64, ParamStore)> {
+    let wnorm = batch_wnorm(batch)?;
+    let (raw, grads) = loss_and_grad_inner(cfg, params, batch, wnorm, true)?;
+    Ok((raw / wnorm, grads))
+}
+
+/// The historic two-forward path: plain forward (no capture), backward
+/// rebuilds each unit's tape inside [`chunked_attention_vjp`].
+/// Gradients and loss are **bit-identical** to [`loss_and_grad`] — the
+/// capture *is* the replay's first phase, arithmetic unchanged — which
+/// is exactly what lets `rust/tests/fused_train.rs` pin the fusion as a
+/// pure cost optimization, and what `benches/train_throughput.rs`
+/// measures `fused_speedup_vs_replay` against.
+pub fn loss_and_grad_replay(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    batch: &Batch,
+) -> Result<(f64, ParamStore)> {
+    let wnorm = batch_wnorm(batch)?;
+    let (raw, grads) = loss_and_grad_inner(cfg, params, batch, wnorm, false)?;
+    Ok((raw / wnorm, grads))
+}
+
+/// One forward + backward over `batch` with an externally fixed weight
+/// normalizer; returns the **raw** (un-normalized) weighted CE sum so
+/// callers can sum losses across micro-batches in a fixed order.
+fn loss_and_grad_inner(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    batch: &Batch,
+    wnorm: f64,
+    fused: bool,
 ) -> Result<(f64, ParamStore)> {
     let (b, t) = (batch.batch_size(), batch.seq_len());
     let tokens = batch.tokens.as_i32()?;
@@ -279,11 +401,9 @@ pub fn loss_and_grad(
     let rows = b * t;
     ensure!(targets.len() == rows && weights.len() == rows, "batch shapes");
 
-    let (logits, cache) = forward_cached(cfg, params, tokens, b, t)?;
+    let (logits, mut cache) = forward_cached(cfg, params, tokens, b, t, fused)?;
 
     // ---- loss + dlogits (softmax CE, weighted, /max(Σw, 1)) ----
-    let wsum: f64 = weights.iter().map(|&w| w as f64).sum();
-    let wnorm = wsum.max(1.0);
     let mut loss = 0.0f64;
     let mut dlogits = vec![0.0f32; rows * v];
     for i in 0..rows {
@@ -304,7 +424,6 @@ pub fn loss_and_grad(
         }
         drow[targets[i] as usize] -= scale as f32;
     }
-    loss /= wnorm;
 
     // ---- backward ----
     let mut grads = params.zeros_like();
@@ -327,6 +446,7 @@ pub fn loss_and_grad(
 
     for li in (0..cfg.n_layers).rev() {
         let lw = layer_view(params, li);
+        let units = std::mem::take(&mut cache.layers[li].units);
         let lc = &cache.layers[li];
         let base = 2 + li * L_PER_BLOCK;
 
@@ -350,29 +470,24 @@ pub fn loss_and_grad(
         let da = matmul_gx(&dx_mid, lw.wo, rows, d, d);
 
         // per-(sequence, head) attention backward, fanned out like the
-        // forward — each unit replays its chunked forward and runs the
-        // reverse state-gradient sweep
-        let mut units: Vec<(AttnUnit, Vec<f32>, Option<UnitGrads>)> =
-            Vec::with_capacity(b * nh);
-        for bi in 0..b {
-            for hd in 0..nh {
-                units.push((
-                    AttnUnit {
-                        q: gather_head(&lc.q, bi, t, d, hd, dh),
-                        k: gather_head(&lc.k, bi, t, d, hd, dh),
-                        v: gather_head(&lc.v, bi, t, d, hd, dh),
-                        out: Vec::new(),
-                    },
-                    gather_head(&da, bi, t, d, hd, dh),
-                    None,
-                ));
-            }
-        }
+        // forward — fused units run the reverse sweep straight off their
+        // recorded capture; planless units (the replay baseline, and any
+        // future path without a capture) rebuild the tape first
+        let mut work: Vec<(AttnUnit, Vec<f32>, Option<UnitGrads>)> = units
+            .into_iter()
+            .enumerate()
+            .map(|(u, unit)| {
+                let go = gather_head(&da, u / nh, t, d, u % nh, dh);
+                (unit, go, None)
+            })
+            .collect();
         let backend = backend_for(cfg);
         let kind = cfg.attn.as_str();
-        fan_out(&mut units, |(u, go, out)| {
+        fan_out(&mut work, |(u, go, out)| {
             *out = Some(if kind == "softmax" {
                 softmax_attention_vjp(&u.q, &u.k, &u.v, t, dh, dh, true, go)
+            } else if let Some(VjpPlan { st, cap }) = u.plan.as_mut() {
+                chunked_attention_vjp_reverse(st.as_mut(), cap, &u.q, &u.k, &u.v, go)
             } else {
                 let mut st = backend
                     .grad_state(kind, dh, dh)
@@ -383,7 +498,7 @@ pub fn loss_and_grad(
         let mut dq = vec![0.0f32; rows * d];
         let mut dk = vec![0.0f32; rows * d];
         let mut dv = vec![0.0f32; rows * d];
-        for (u, (_, _, out)) in units.iter().enumerate() {
+        for (u, (_, _, out)) in work.iter().enumerate() {
             let (gq, gk, gv) = out.as_ref().expect("every unit computed");
             scatter_head(&mut dq, gq, u / nh, t, d, u % nh, dh);
             scatter_head(&mut dk, gk, u / nh, t, d, u % nh, dh);
@@ -427,6 +542,110 @@ pub fn loss_and_grad(
     }
 
     Ok((loss, grads))
+}
+
+/// [`loss_and_grad`] as explicit micro-batch gradient accumulation plus
+/// data-parallel per-sequence gradient workers — the trainer's entry
+/// point.
+///
+/// Determinism contract (pinned in `rust/tests/train_native.rs`): the
+/// result is **bit-identical** for every `(accum, grad_workers)`
+/// setting, because
+/// * the unit of computation is always one sequence (f32 accumulation
+///   inside a sequence's backward never crosses a split boundary),
+/// * the weight normalizer is computed once over the full batch,
+/// * losses sum in sequence order in f64, and
+/// * per-sequence gradients merge through the fixed-shape
+///   [`TreeReducer`], whose schedule depends only on the batch size.
+///
+/// `accum` splits the batch into that many contiguous micro-batches
+/// (clamped to `[1, B]`); `grad_workers` caps the threads of the
+/// per-sequence fan-out (0 = the whole worker pool, 1 = serial).
+pub fn loss_and_grad_accum(
+    cfg: &ModelConfig,
+    params: &ParamStore,
+    batch: &Batch,
+    accum: usize,
+    grad_workers: usize,
+) -> Result<(f64, ParamStore)> {
+    let b = batch.batch_size();
+    ensure!(b > 0, "empty batch");
+    let wnorm = batch_wnorm(batch)?;
+    let accum = accum.clamp(1, b);
+    let mut reducer = TreeReducer::new();
+    let mut raw = 0.0f64;
+    let mut s0 = 0;
+    for ai in 0..accum {
+        // balanced contiguous micro-batches, fixed by (B, accum) alone
+        let s1 = s0 + (b - s0).div_ceil(accum - ai);
+        let mut items: Vec<(Batch, Option<Result<(f64, ParamStore)>>)> =
+            Vec::with_capacity(s1 - s0);
+        for s in s0..s1 {
+            items.push((batch.slice_rows(s, s + 1)?, None));
+        }
+        fan_out_capped(&mut items, grad_workers, |(sb, out)| {
+            *out = Some(loss_and_grad_inner(cfg, params, sb, wnorm, true));
+        });
+        // fold in sequence order regardless of which thread computed what
+        for (_, out) in items {
+            let (l, g) = out.expect("every sequence computed")?;
+            raw += l;
+            reducer.push(g)?;
+        }
+        s0 = s1;
+    }
+    Ok((raw / wnorm, reducer.finish()?))
+}
+
+/// Deterministic fixed-shape pairwise reduction of per-sequence
+/// gradients: a binary counter of partial sums (the classic pairwise-
+/// summation tree).  Leaves are pushed in sequence order; equal-sized
+/// partials merge like binary-addition carries (1+1→2, 2+2→4, …), so
+/// the full merge schedule is a function of the leaf count alone —
+/// never of worker count, micro-batch split, or thread timing.  f32
+/// addition is not associative; a timing-dependent order here would
+/// make loss curves irreproducible across `--grad-workers` settings.
+struct TreeReducer {
+    /// (leaf count, partial sum), counts strictly decreasing powers of
+    /// two from the bottom up — exactly the set bits of the number of
+    /// leaves pushed so far
+    stack: Vec<(usize, ParamStore)>,
+}
+
+impl TreeReducer {
+    fn new() -> TreeReducer {
+        TreeReducer { stack: Vec::new() }
+    }
+
+    /// Fold in the next leaf (earlier partial += later, preserving
+    /// sequence order inside every merge).
+    fn push(&mut self, g: ParamStore) -> Result<()> {
+        let mut count = 1usize;
+        let mut g = g;
+        while let Some((c, _)) = self.stack.last() {
+            if *c != count {
+                break;
+            }
+            let (_, mut left) = self.stack.pop().expect("checked non-empty");
+            left.add_assign(&g)?;
+            g = left;
+            count *= 2;
+        }
+        self.stack.push((count, g));
+        Ok(())
+    }
+
+    /// Collapse the remaining partials, most recent (smallest) first —
+    /// a fixed order given the leaf count.
+    fn finish(mut self) -> Result<ParamStore> {
+        ensure!(!self.stack.is_empty(), "no gradients reduced");
+        let (_, mut acc) = self.stack.pop().expect("checked non-empty");
+        while let Some((_, mut next)) = self.stack.pop() {
+            next.add_assign(&acc)?;
+            acc = next;
+        }
+        Ok(acc)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -575,6 +794,31 @@ mod tests {
             for j in 0..m {
                 let want: f32 = (0..n).map(|r| x[r * d + i] * dy[r * m + j]).sum();
                 assert!((dw[i * m + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    /// The accumulation determinism contract in miniature: every
+    /// (accum, grad_workers) setting produces the same loss bits and the
+    /// same gradient bits (the full trainer-level curve pin lives in
+    /// rust/tests/train_native.rs).
+    #[test]
+    fn accum_and_workers_do_not_change_the_gradient() {
+        let entry = native_model_entry("ho2_tiny").unwrap();
+        let params = ParamStore::init(&entry.param_spec, &mut Rng::new(5));
+        let mut gen = crate::data::make("copy", 7).unwrap();
+        let batch = gen.batch(4, 12);
+        let (l0, g0) = loss_and_grad_accum(&entry.config, &params, &batch, 1, 1).unwrap();
+        for (accum, workers) in [(1, 2), (4, 1), (4, 0), (2, 8), (3, 3), (9, 0)] {
+            let (l, g) =
+                loss_and_grad_accum(&entry.config, &params, &batch, accum, workers).unwrap();
+            assert_eq!(l.to_bits(), l0.to_bits(), "loss accum={accum} workers={workers}");
+            for ((n_, a), b_) in g.names.iter().zip(&g.leaves).zip(&g0.leaves) {
+                assert_eq!(
+                    a.as_f32().unwrap(),
+                    b_.as_f32().unwrap(),
+                    "leaf {n_} accum={accum} workers={workers}"
+                );
             }
         }
     }

@@ -208,11 +208,29 @@ impl WorkerPool {
     /// the borrowed data.  Panics (from any thread) propagate to the
     /// caller after the batch quiesces.
     pub fn fan_out<T: Send, F: Fn(&mut T) + Sync>(&self, items: &mut [T], f: F) {
+        self.fan_out_capped(items, 0, f)
+    }
+
+    /// [`Self::fan_out`] with an upper bound on the threads that may
+    /// touch this batch: at most `cap` total, the caller counted as one
+    /// (`cap == 0` means uncapped, `cap == 1` runs entirely on the
+    /// calling thread).  Item claiming and per-item work are unchanged,
+    /// so outputs are bit-identical at every cap — the knob only bounds
+    /// concurrency, which is what lets `--grad-workers N` mean "N
+    /// gradient threads" without resizing the shared pool.
+    pub fn fan_out_capped<T: Send, F: Fn(&mut T) + Sync>(&self, items: &mut [T], cap: usize, f: F) {
         let len = items.len();
         if len == 0 {
             return;
         }
-        if len == 1 || self.workers == 0 {
+        // the caller drains too, so more tickets than len−1 (or cap−1)
+        // can never find work
+        let tickets = match cap {
+            0 => self.workers,
+            c => self.workers.min(c - 1),
+        }
+        .min(len.saturating_sub(1));
+        if tickets == 0 {
             for item in items.iter_mut() {
                 f(item);
             }
@@ -229,9 +247,6 @@ impl WorkerPool {
             idle: Condvar::new(),
             drain: drain_batch::<T, F>,
         });
-        // the caller drains too, so more tickets than len−1 can never
-        // find work
-        let tickets = self.workers.min(len - 1);
         {
             let mut q = self.shared.queue.lock().unwrap();
             for _ in 0..tickets {
@@ -290,6 +305,26 @@ mod tests {
             let mut got: Vec<f64> = (0..257).map(|i| i as f64).collect();
             pool.fan_out(&mut got, compute);
             assert_eq!(got, want, "workers={}", pool.workers());
+        }
+    }
+
+    #[test]
+    fn capped_fan_out_matches_uncapped_at_every_cap() {
+        let pool = WorkerPool::new(4);
+        let compute = |x: &mut f64| {
+            let seed = *x;
+            let mut acc = 0.0f64;
+            for i in 0..500 {
+                acc += (seed + i as f64).sin() * 1e-3;
+            }
+            *x = acc;
+        };
+        let mut want: Vec<f64> = (0..97).map(|i| i as f64).collect();
+        pool.fan_out(&mut want, compute);
+        for cap in [0usize, 1, 2, 3, 8, 100] {
+            let mut got: Vec<f64> = (0..97).map(|i| i as f64).collect();
+            pool.fan_out_capped(&mut got, cap, compute);
+            assert_eq!(got, want, "cap={cap}");
         }
     }
 

@@ -49,6 +49,30 @@ impl ParamStore {
         }
     }
 
+    /// Elementwise `self += other` over every f32 leaf — the merge step
+    /// of the trainer's deterministic gradient tree reduction, so the
+    /// accumulation order is fixed by the tree shape, never by thread
+    /// timing.
+    pub fn add_assign(&mut self, other: &ParamStore) -> Result<()> {
+        if self.leaves.len() != other.leaves.len() {
+            bail!(
+                "add_assign leaf count mismatch: {} vs {}",
+                self.leaves.len(),
+                other.leaves.len()
+            );
+        }
+        for (a, b) in self.leaves.iter_mut().zip(&other.leaves) {
+            if a.shape != b.shape {
+                bail!("add_assign shape mismatch: {:?} vs {:?}", a.shape, b.shape);
+            }
+            let src = b.as_f32()?;
+            for (x, &y) in a.as_f32_mut()?.iter_mut().zip(src) {
+                *x += y;
+            }
+        }
+        Ok(())
+    }
+
     pub fn len(&self) -> usize {
         self.leaves.len()
     }

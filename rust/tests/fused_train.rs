@@ -1,0 +1,101 @@
+//! The one-forward training contract, proven by counting.
+//!
+//! `kernels::counters::attn_forwards()` is a process-global counter, so
+//! this must stay a SINGLE-test binary: any concurrently running test
+//! that touches attention would make exact-delta assertions racy.
+//! (Everything else about fusion — bit-identity per kernel case — lives
+//! in grad_check.rs and the kernels::grad unit tests.)
+
+use holt::coordinator::trainer::{NativeTrainer, TrainBackend};
+use holt::data;
+use holt::kernels::counters;
+use holt::model::grad;
+use holt::model::presets::param_spec;
+use holt::params::ParamStore;
+use holt::rng::Rng;
+use holt::runtime::{ModelConfig, ModelEntry};
+
+fn smoke_entry() -> ModelEntry {
+    let config = ModelConfig {
+        preset: "smoke".into(),
+        vocab_size: holt::tokenizer::VOCAB_SIZE,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        max_len: 64,
+        attn: "ho2".into(),
+        order: 2,
+        alpha: 3.0,
+        impl_: "native".into(),
+        train_batch: 4,
+        train_len: 32,
+        decode_batch: 2,
+    };
+    let spec = param_spec(&config);
+    let n_params = spec.iter().map(|l| l.shape.iter().product::<usize>()).sum();
+    ModelEntry {
+        name: "ho2_smoke".into(),
+        config,
+        n_params,
+        param_spec: spec,
+        state_spec: Vec::new(),
+        artifacts: std::collections::HashMap::new(),
+    }
+}
+
+#[test]
+fn train_step_runs_exactly_one_attention_forward_per_unit() {
+    let entry = smoke_entry();
+    let cfg = entry.config.clone();
+    let (b, t) = (cfg.train_batch, cfg.train_len);
+    // one attention "unit" per (sequence, layer, head)
+    let units = (b * cfg.n_layers * cfg.n_heads) as u64;
+    let batch = data::make("copy", 13).unwrap().batch(b, t);
+    let params = ParamStore::init(&entry.param_spec, &mut Rng::new(13));
+
+    // fused loss+grad: the backward consumes the forward's tape — the
+    // forward count IS the unit count
+    let c0 = counters::attn_forwards();
+    let (l_fused, g_fused) = grad::loss_and_grad(&cfg, &params, &batch).unwrap();
+    assert_eq!(
+        counters::attn_forwards() - c0,
+        units,
+        "fused path must run exactly one attention forward per unit"
+    );
+
+    // the pre-fusion path re-runs the forward inside the vjp: twice the
+    // forwards for the same numbers
+    let c1 = counters::attn_forwards();
+    let (l_replay, g_replay) = grad::loss_and_grad_replay(&cfg, &params, &batch).unwrap();
+    assert_eq!(
+        counters::attn_forwards() - c1,
+        2 * units,
+        "replay path must run forward + vjp re-forward per unit"
+    );
+
+    // and fusing the replay away is free: bit-identical loss and grads
+    assert_eq!(l_fused.to_bits(), l_replay.to_bits(), "loss drifted");
+    for ((name, a), bb) in
+        g_fused.names.iter().zip(&g_fused.leaves).zip(&g_replay.leaves)
+    {
+        assert_eq!(
+            a.as_f32().unwrap(),
+            bb.as_f32().unwrap(),
+            "gradient leaf '{name}' drifted between fused and replay"
+        );
+    }
+
+    // a whole trainer step (accumulating, data-parallel) keeps the
+    // contract: per-sequence gradients are still one forward per unit
+    let mut tr = NativeTrainer::from_entry(entry, 13).unwrap();
+    tr.accum = 2;
+    tr.grad_workers = 2;
+    let c2 = counters::attn_forwards();
+    tr.train_step(&batch, 1e-3).unwrap();
+    assert_eq!(
+        counters::attn_forwards() - c2,
+        units,
+        "train_step must run exactly one attention forward per unit"
+    );
+}

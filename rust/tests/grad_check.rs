@@ -16,7 +16,10 @@
 //! derivative does not).
 
 use holt::data::Batch;
-use holt::kernels::{chunked_attention_vjp, softmax_attention_vjp, NativeBackend};
+use holt::kernels::{
+    chunked_attention_vjp, chunked_attention_vjp_reverse, chunked_forward,
+    chunked_forward_captured, softmax_attention_vjp, NativeBackend,
+};
 use holt::model::grad::{forward_logits, loss_and_grad};
 use holt::model::presets::param_spec;
 use holt::params::ParamStore;
@@ -253,6 +256,58 @@ fn linear_kernel_gradients_match_fd() {
 #[test]
 fn softmax_gradients_match_fd() {
     check_kernel_case(&Case { kind: "softmax", order: 0, alpha: 1.0, chunk: 0 }, 300);
+}
+
+// ---------------------------------------------------------------------------
+// fused (capture + reverse) vs replay — bit identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_capture_reverse_is_bit_identical_to_replay_vjp() {
+    // The one-forward training path must not change a single bit: for
+    // every kernel kind × Taylor order 0-3 (+ the elu/linear kernel) ×
+    // chunk size, (a) the capture forward's outputs equal the plain
+    // chunked forward exactly, and (b) reverse-from-tape gradients
+    // equal the wrapper's forward-then-reverse gradients exactly.
+    let (n, d, dv) = (13, 5, 4);
+    let mut seed = 500u64;
+    for (kind, order) in
+        [("ho2", 0), ("ho2", 1), ("ho2", 2), ("ho2", 3), ("linear", 0)]
+    {
+        for chunk in [1usize, 4, 64] {
+            let mut rng = Rng::new(seed);
+            seed += 1;
+            let q = rng.normal_vec_f32(n * d, 1.0);
+            let k = rng.normal_vec_f32(n * d, 1.0);
+            let v = rng.normal_vec_f32(n * dv, 1.0);
+            let go = rng.normal_vec_f32(n * dv, 1.0);
+            let backend = NativeBackend {
+                order,
+                alpha: 3.0,
+                normalize_qk: true,
+                chunk,
+                evaluation: holt::kernels::Evaluation::Chunked,
+                isa: None,
+            };
+            let label = format!("{kind} order={order} chunk={chunk}");
+
+            let mut st_fwd = backend.grad_state(kind, d, dv).unwrap();
+            let plain = chunked_forward(st_fwd.as_mut(), &q, &k, &v, n, chunk, true);
+
+            let mut st = backend.grad_state(kind, d, dv).unwrap();
+            let (out, cap) = chunked_forward_captured(st.as_mut(), &q, &k, &v, n, chunk);
+            assert_eq!(out, plain, "{label}: capture forward drifted");
+            let (gq, gk, gv) =
+                chunked_attention_vjp_reverse(st.as_mut(), &cap, &q, &k, &v, &go);
+
+            let mut st2 = backend.grad_state(kind, d, dv).unwrap();
+            let (rq, rk, rv) =
+                chunked_attention_vjp(st2.as_mut(), &q, &k, &v, n, chunk, &go);
+            assert_eq!(gq, rq, "{label}: dq drifted from replay");
+            assert_eq!(gk, rk, "{label}: dk drifted from replay");
+            assert_eq!(gv, rv, "{label}: dv drifted from replay");
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -158,6 +158,39 @@ fn ablation_variants_and_baselines_train_natively() {
 }
 
 #[test]
+fn loss_curves_bit_reproducible_across_workers_and_accum() {
+    // the tentpole determinism claim: accumulation splits and worker
+    // counts are scheduling knobs only — the whole loss curve and the
+    // final parameters are bit-identical for every setting, because
+    // gradients are always per-sequence units merged by a fixed-shape
+    // tree reduction
+    let entry = smoke_entry("ho2");
+    let run = |accum: usize, workers: usize| -> (Vec<u32>, NativeTrainer) {
+        let mut tr = NativeTrainer::from_entry(entry.clone(), 17).unwrap();
+        tr.accum = accum;
+        tr.grad_workers = workers;
+        let (b, t) = tr.train_shape();
+        let mut gen = data::make("assoc", 17).unwrap();
+        let losses = (0..6)
+            .map(|_| tr.train_step(&gen.batch(b, t), 7e-4).unwrap().loss.to_bits())
+            .collect();
+        (losses, tr)
+    };
+    let (base_losses, base_tr) = run(1, 1);
+    for (accum, workers) in [(1, 2), (1, 8), (1, 0), (4, 1), (4, 2)] {
+        let (losses, tr) = run(accum, workers);
+        assert_eq!(
+            losses, base_losses,
+            "loss curve drifted at accum={accum} grad_workers={workers}"
+        );
+        assert_eq!(
+            tr.params.leaves, base_tr.params.leaves,
+            "final params drifted at accum={accum} grad_workers={workers}"
+        );
+    }
+}
+
+#[test]
 fn eval_accuracy_runs_on_native_trainer() {
     let trainer = NativeTrainer::from_entry(smoke_entry("ho2"), 9).unwrap();
     let mut gen = data::make("copy", 9).unwrap();
