@@ -38,7 +38,8 @@ bench-kernels:
 serve-smoke:
 	cargo run --release -- serve --backend native --model ho2_tiny \
 	  --synthetic --requests 12 --prompt-len 24 --max-tokens 8 \
-	  --policy fair --preempt-tokens 4 --turns 2
+	  --policy fair --preempt-tokens 4 --turns 2 \
+	  --metrics-log results/serve_metrics.jsonl
 
 # multi-shard overload bench: Zipf session reuse over 4 engine shards
 # behind the session router (snapshot migration + load shedding); writes

@@ -41,8 +41,8 @@ use std::time::Instant;
 use anyhow::{ensure, Context, Result};
 
 use crate::json::{obj, Json};
-use crate::metrics::Latencies;
 use crate::model::{Executor, SKIP};
+use crate::obs::{Counter, FlightEvent, FlightRecorder, Gauge, Histo, HistoSnapshot, Registry};
 use crate::rng::Rng;
 use crate::serve::{
     stream, EngineMsg, ParkedWork, Prefiller, QueueEntry, Router, RouterMsg, Scheduler,
@@ -74,9 +74,75 @@ struct Active {
     utf8_buf: Vec<u8>,
 }
 
-/// Aggregate serving statistics — everything the perf trajectory needs,
-/// JSON-serializable via [`ServeStats::to_json`] so benches land in
-/// `results/bench_serve.json`.
+/// The engine's registry handles: every live statistic the engine keeps
+/// is one of these cells — `{"stats": true}`, `{"metrics": true}` and
+/// the final [`ServeStats`] snapshot all read the same registry, and
+/// recording on the decode hot path is a Relaxed atomic (allocation-free
+/// after registration, pinned in `alloc_decode.rs`).
+struct EngineMetrics {
+    registry: Arc<Registry>,
+    completed: Counter,
+    rejected: Counter,
+    generated_tokens: Counter,
+    engine_steps: Counter,
+    prefill_tokens: Counter,
+    preemptions: Counter,
+    resumes: Counter,
+    session_hits: Counter,
+    session_misses: Counter,
+    migrations_in: Counter,
+    migrations_out: Counter,
+    slots_busy: Gauge,
+    queue_depth: Gauge,
+    sessions_cached: Gauge,
+    // per-stage span histograms (µs)
+    prefill_us: Histo,
+    decode_step_us: Histo,
+    sample_us: Histo,
+    park_us: Histo,
+    migrate_us: Histo,
+    ttft_us: Histo,
+    request_us: Histo,
+}
+
+impl EngineMetrics {
+    /// Register every metric eagerly on a fresh per-engine registry, so
+    /// exports list all keys (`prefill_us`, `decode_step_us`,
+    /// `migrate_us`, …) even before the first sample — the CI smoke
+    /// greps the `{"metrics": true}` reply for them.
+    fn new() -> Self {
+        let registry = Arc::new(Registry::new());
+        EngineMetrics {
+            completed: registry.counter("completed"),
+            rejected: registry.counter("rejected"),
+            generated_tokens: registry.counter("generated_tokens"),
+            engine_steps: registry.counter("engine_steps"),
+            prefill_tokens: registry.counter("prefill_tokens"),
+            preemptions: registry.counter("preemptions"),
+            resumes: registry.counter("resumes"),
+            session_hits: registry.counter("session_hits"),
+            session_misses: registry.counter("session_misses"),
+            migrations_in: registry.counter("migrations_in"),
+            migrations_out: registry.counter("migrations_out"),
+            slots_busy: registry.gauge("slots_busy"),
+            queue_depth: registry.gauge("queue_depth"),
+            sessions_cached: registry.gauge("sessions_cached"),
+            prefill_us: registry.histo("prefill_us"),
+            decode_step_us: registry.histo("decode_step_us"),
+            sample_us: registry.histo("sample_us"),
+            park_us: registry.histo("park_us"),
+            migrate_us: registry.histo("migrate_us"),
+            ttft_us: registry.histo("ttft_us"),
+            request_us: registry.histo("request_us"),
+            registry,
+        }
+    }
+}
+
+/// Final serving statistics — a **snapshot of the engine's registry**
+/// taken when the run drains (the engine keeps no live counters outside
+/// the registry), JSON-serializable via [`ServeStats::to_json`] so
+/// benches land in `results/bench_serve.json`.
 #[derive(Debug, Default)]
 pub struct ServeStats {
     pub completed: u64,
@@ -102,8 +168,11 @@ pub struct ServeStats {
     pub migrations_in: u64,
     /// session entries this engine exported to another shard
     pub migrations_out: u64,
-    pub ttft: Latencies,
-    pub per_request: Latencies,
+    pub ttft: HistoSnapshot,
+    pub per_request: HistoSnapshot,
+    /// the full registry dump (counters, gauges, span histograms) at
+    /// drain time — what `--metrics-log` writes per shard
+    pub metrics: Json,
     pub wall_s: f64,
     /// which executor ran ("native" / "artifact")
     pub backend: String,
@@ -156,12 +225,12 @@ impl ServeStats {
         )
     }
 
-    /// Machine-readable record for `results/bench_serve.json`.
+    /// Machine-readable record for `results/bench_serve.json`.  The
+    /// percentile fields come from [`HistoSnapshot::push_ms_fields`]:
+    /// explicit `*_samples` counts, and `null` — not a fake `0.0` —
+    /// when no request completed.
     pub fn to_json(&self) -> Json {
-        // one sort per recorder for all percentile reads
-        let ttft = self.ttft.percentiles_us(&[50.0, 95.0, 99.0]);
-        let lat = self.per_request.percentiles_us(&[50.0, 95.0, 99.0]);
-        obj(vec![
+        let Json::Obj(mut fields) = obj(vec![
             ("backend", self.backend.as_str().into()),
             ("model", self.model.as_str().into()),
             ("n_slots", self.n_slots.into()),
@@ -181,13 +250,13 @@ impl ServeStats {
             ("migrations_out", (self.migrations_out as i64).into()),
             ("wall_s", self.wall_s.into()),
             ("tok_per_s", self.tokens_per_sec().into()),
-            ("ttft_p50_ms", (ttft[0] as f64 / 1e3).into()),
-            ("ttft_p95_ms", (ttft[1] as f64 / 1e3).into()),
-            ("ttft_p99_ms", (ttft[2] as f64 / 1e3).into()),
-            ("latency_p50_ms", (lat[0] as f64 / 1e3).into()),
-            ("latency_p95_ms", (lat[1] as f64 / 1e3).into()),
-            ("latency_p99_ms", (lat[2] as f64 / 1e3).into()),
-        ])
+        ]) else {
+            unreachable!("obj builds an object")
+        };
+        self.ttft.push_ms_fields("ttft", &mut fields);
+        self.per_request.push_ms_fields("latency", &mut fields);
+        fields.push(("metrics".to_string(), self.metrics.clone()));
+        Json::Obj(fields)
     }
 }
 
@@ -210,6 +279,14 @@ pub struct Engine<'a> {
     /// when running as a shard: load gauges published every loop
     /// iteration for the router's lock-free placement decisions
     load: Option<Arc<ShardLoad>>,
+    /// the one registry behind every statistic this engine keeps
+    metrics: EngineMetrics,
+    /// bounded ring of request lifecycle events (admit / park / resume /
+    /// migrate / reject / finish), timestamped on the shared process
+    /// epoch so cross-shard traces sort into one timeline
+    flight: FlightRecorder,
+    /// shard id for flight-recorder events (0 unless [`Engine::set_shard`])
+    shard: usize,
 }
 
 impl<'a> Engine<'a> {
@@ -241,9 +318,19 @@ impl<'a> Engine<'a> {
             sessions: SessionCache::new(if snapshots { opts.session_capacity } else { 0 }),
             chunked,
             snapshots,
+            metrics: EngineMetrics::new(),
+            flight: FlightRecorder::new(0, opts.flight_capacity),
+            shard: 0,
             opts,
             load: None,
         })
+    }
+
+    /// Tag this engine (and its flight-recorder events) with a shard id
+    /// — called by [`crate::serve::ShardHandle::spawn`] before running.
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+        self.flight.set_shard(shard);
     }
 
     pub fn n_slots(&self) -> usize {
@@ -274,6 +361,9 @@ impl<'a> Engine<'a> {
             l.busy.store(self.busy_slots(), Ordering::Relaxed);
             l.sessions.store(self.sessions.len(), Ordering::Relaxed);
         }
+        self.metrics.slots_busy.set(self.busy_slots() as f64);
+        self.metrics.queue_depth.set(self.scheduler.len() as f64);
+        self.metrics.sessions_cached.set(self.sessions.len() as f64);
     }
 
     /// Migration export: give up this engine's cached entry for `id`
@@ -290,44 +380,104 @@ impl<'a> Engine<'a> {
     }
 
     /// Live stats snapshot: gauges (busy slots, queue depth, cache
-    /// residency) + the counters accumulated so far — the per-shard half
+    /// residency) + the registry's counters so far — the per-shard half
     /// of a `{"stats": true}` wire reply.
-    fn live_stats(&self, stats: &ServeStats) -> Json {
+    fn live_stats(&self) -> Json {
+        let m = &self.metrics;
         obj(vec![
             ("n_slots", self.n_slots().into()),
             ("slots_busy", self.busy_slots().into()),
             ("queue_depth", self.scheduler.len().into()),
             ("fresh_waiters", self.scheduler.fresh_waiters().into()),
             ("sessions_cached", self.sessions.len().into()),
-            ("completed", (stats.completed as i64).into()),
-            ("rejected", (stats.rejected as i64).into()),
-            ("generated_tokens", (stats.generated_tokens as i64).into()),
-            ("preemptions", (stats.preemptions as i64).into()),
-            ("resumes", (stats.resumes as i64).into()),
-            ("session_hits", (stats.session_hits as i64).into()),
-            ("session_misses", (stats.session_misses as i64).into()),
-            ("migrations_in", (stats.migrations_in as i64).into()),
-            ("migrations_out", (stats.migrations_out as i64).into()),
+            ("completed", (m.completed.get() as i64).into()),
+            ("rejected", (m.rejected.get() as i64).into()),
+            ("generated_tokens", (m.generated_tokens.get() as i64).into()),
+            ("preemptions", (m.preemptions.get() as i64).into()),
+            ("resumes", (m.resumes.get() as i64).into()),
+            ("session_hits", (m.session_hits.get() as i64).into()),
+            ("session_misses", (m.session_misses.get() as i64).into()),
+            ("migrations_in", (m.migrations_in.get() as i64).into()),
+            ("migrations_out", (m.migrations_out.get() as i64).into()),
         ])
     }
 
+    /// The `{"metrics": true}` per-shard half: the full registry dump
+    /// with the shard id prepended.
+    fn metrics_json(&self) -> Json {
+        let Json::Obj(mut kv) = self.metrics.registry.to_json() else {
+            unreachable!("registry dump is an object")
+        };
+        kv.insert(0, ("shard".to_string(), self.shard.into()));
+        Json::Obj(kv)
+    }
+
+    /// Final [`ServeStats`]: one read of every registry cell at drain
+    /// time (plus the engine's static config fields).
+    fn snapshot_stats(&self, wall_s: f64) -> ServeStats {
+        let m = &self.metrics;
+        ServeStats {
+            completed: m.completed.get(),
+            rejected: m.rejected.get(),
+            generated_tokens: m.generated_tokens.get(),
+            engine_steps: m.engine_steps.get(),
+            prefill_tokens: m.prefill_tokens.get(),
+            prefill_chunk: if self.chunked { self.prefiller.chunk() } else { 1 },
+            preemptions: m.preemptions.get(),
+            resumes: m.resumes.get(),
+            session_hits: m.session_hits.get(),
+            session_misses: m.session_misses.get(),
+            migrations_in: m.migrations_in.get(),
+            migrations_out: m.migrations_out.get(),
+            ttft: m.ttft_us.snapshot(),
+            per_request: m.request_us.snapshot(),
+            metrics: m.registry.to_json(),
+            wall_s,
+            backend: self.exec.backend_name().to_string(),
+            model: self.exec.model().name.clone(),
+            n_slots: self.n_slots(),
+            policy: self.scheduler.policy().name().to_string(),
+            state_bytes_per_slot: self.exec.state_bytes_per_slot(),
+        }
+    }
+
     /// Handle one inbox message (see [`EngineMsg`]).
-    fn handle_msg(&mut self, msg: EngineMsg, stats: &mut ServeStats) {
+    fn handle_msg(&mut self, msg: EngineMsg) {
         match msg {
-            EngineMsg::Req(req) => self.accept(req, stats),
-            EngineMsg::Export { id, respond } => {
-                let entry = self.export_session(&id);
+            EngineMsg::Req(req) => self.accept(req),
+            EngineMsg::Export { id, trace, respond } => {
+                let entry = {
+                    let _span = self.metrics.migrate_us.span();
+                    self.export_session(&id)
+                };
                 if entry.is_some() {
-                    stats.migrations_out += 1;
+                    self.metrics.migrations_out.inc();
+                    self.flight.record(FlightEvent::MigrateOut, trace, 0);
                 }
                 let _ = respond.send(entry);
             }
-            EngineMsg::Import { id, entry } => {
-                self.import_session(&id, entry);
-                stats.migrations_in += 1;
+            EngineMsg::Import { id, entry, trace } => {
+                {
+                    let _span = self.metrics.migrate_us.span();
+                    self.import_session(&id, entry);
+                }
+                self.metrics.migrations_in.inc();
+                self.flight.record(FlightEvent::MigrateIn, trace, 0);
             }
             EngineMsg::Stats { respond } => {
-                let _ = respond.send(self.live_stats(stats));
+                let _ = respond.send(self.live_stats());
+            }
+            EngineMsg::Metrics { respond } => {
+                let _ = respond.send(self.metrics_json());
+            }
+            EngineMsg::Trace { id, respond } => {
+                // id 0: full ring dump (the router's overload path)
+                let j = if id == 0 {
+                    self.flight.to_json()
+                } else {
+                    Json::Arr(self.flight.for_trace(id).iter().map(|r| r.to_json()).collect())
+                };
+                let _ = respond.send(j);
             }
         }
     }
@@ -336,7 +486,7 @@ impl<'a> Engine<'a> {
     /// are rejected on arrival — producing the error needs no slot, so a
     /// saturated server must not make a doomed request wait in the queue
     /// for one — everything else goes to the scheduler.
-    fn accept(&mut self, req: Request, stats: &mut ServeStats) {
+    fn accept(&mut self, req: Request) {
         // the sampling loop always produces at least one token, so a
         // 0-token budget cannot be honored (it used to be silently
         // over-served; clamped negatives land here too)
@@ -362,7 +512,8 @@ impl<'a> Engine<'a> {
         };
         match msg {
             Some(msg) => {
-                stats.rejected += 1;
+                self.metrics.rejected.inc();
+                self.flight.record(FlightEvent::Reject, req.trace, req.id);
                 let _ = req.respond.send(ServeEvent::Done(Response::error(req.id, msg)));
             }
             None => self.scheduler.enqueue(req),
@@ -373,7 +524,7 @@ impl<'a> Engine<'a> {
     /// entry with sequence `exclude` (a just-parked evictee — see
     /// [`Engine::preempt_for_waiters`]).  Returns whether an entry was
     /// admitted; `false` means no eligible waiter or no free slot.
-    fn admit_next(&mut self, stats: &mut ServeStats, exclude: Option<u64>) -> Result<bool> {
+    fn admit_next(&mut self, exclude: Option<u64>) -> Result<bool> {
         if self.exec.free_slots() == 0 {
             return Ok(false);
         }
@@ -409,21 +560,26 @@ impl<'a> Engine<'a> {
             a.last_token = w.last_token;
             a.first_token_at = w.first_token_at;
             a.utf8_buf = w.utf8_buf;
-            stats.resumes += 1;
-        } else if let Some(sid) = a.req.session_id.clone() {
-            // multi-turn follow-up: restore the cached final state and
-            // prefill only the new suffix of the conversation
-            if let Some(e) = self.sessions.lookup(&sid, &a.req.prompt_ids) {
-                let snap = e.snapshot.clone();
-                let tokens = e.tokens.clone();
-                self.exec.restore_slot(slot, &snap)?;
-                a.prompt_pos = tokens.len();
-                a.absorbed = tokens;
-                stats.session_hits += 1;
-            } else {
-                stats.session_misses += 1;
+            self.metrics.resumes.inc();
+            self.flight.record(FlightEvent::Resume, a.req.trace, a.req.id);
+        } else {
+            if let Some(sid) = a.req.session_id.clone() {
+                // multi-turn follow-up: restore the cached final state and
+                // prefill only the new suffix of the conversation
+                if let Some(e) = self.sessions.lookup(&sid, &a.req.prompt_ids) {
+                    let snap = e.snapshot.clone();
+                    let tokens = e.tokens.clone();
+                    self.exec.restore_slot(slot, &snap)?;
+                    a.prompt_pos = tokens.len();
+                    a.absorbed = tokens;
+                    self.metrics.session_hits.inc();
+                } else {
+                    self.metrics.session_misses.inc();
+                }
             }
+            self.flight.record(FlightEvent::Admit, a.req.trace, a.req.id);
         }
+        self.exec.tag_slot(slot, a.req.trace);
         self.slots[slot] = Some(a);
         Ok(true)
     }
@@ -433,9 +589,9 @@ impl<'a> Engine<'a> {
     /// decode step feeds every slot that needs a token (prompt
     /// token-at-a-time on backends without absorb, last sampled token in
     /// decode phase); (3) sample / advance / finish per slot.
-    fn step(&mut self, stats: &mut ServeStats) -> Result<()> {
+    fn step(&mut self) -> Result<()> {
         let b = self.n_slots();
-        stats.engine_steps += 1;
+        self.metrics.engine_steps.inc();
 
         if self.chunked {
             for slot_idx in 0..b {
@@ -446,14 +602,17 @@ impl<'a> Engine<'a> {
                     continue;
                 }
                 let before = a.prompt_pos;
-                let done = self.prefiller.absorb_block(
-                    self.exec.as_mut(),
-                    slot_idx,
-                    &a.req.prompt_ids,
-                    &mut a.prompt_pos,
-                    Some(&mut a.absorbed),
-                )?;
-                stats.prefill_tokens += (a.prompt_pos - before) as u64;
+                let done = {
+                    let _span = self.metrics.prefill_us.span();
+                    self.prefiller.absorb_block(
+                        self.exec.as_mut(),
+                        slot_idx,
+                        &a.req.prompt_ids,
+                        &mut a.prompt_pos,
+                        Some(&mut a.absorbed),
+                    )?
+                };
+                self.metrics.prefill_tokens.add((a.prompt_pos - before) as u64);
                 if let Some(logits) = done {
                     a.pending_logits = Some(logits);
                 }
@@ -484,7 +643,12 @@ impl<'a> Engine<'a> {
         }
         // borrow the batched logits in place — no per-step or per-slot
         // copies on the decode hot path
-        let logits = if any { Some(self.exec.decode_step(&feed)?) } else { None };
+        let logits = if any {
+            let _span = self.metrics.decode_step_us.span();
+            Some(self.exec.decode_step(&feed)?)
+        } else {
+            None
+        };
         let lf = match &logits {
             Some(t) => Some(t.as_f32()?),
             None => None,
@@ -520,7 +684,10 @@ impl<'a> Engine<'a> {
                     &lf[slot_idx * v..(slot_idx + 1) * v]
                 }
             };
-            let next = self.rng.sample_logits(row, a.req.temperature, a.req.top_k) as i32;
+            let next = {
+                let _span = self.metrics.sample_us.span();
+                self.rng.sample_logits(row, a.req.temperature, a.req.top_k) as i32
+            };
             if a.first_token_at.is_none() {
                 a.first_token_at = Some(Instant::now());
             }
@@ -548,7 +715,7 @@ impl<'a> Engine<'a> {
             let over_budget = a.generated.len() >= a.req.max_tokens
                 || self.exec.pos(slot_idx) >= self.max_len - 1;
             if hit_eos || over_budget {
-                self.finish(slot_idx, a, stats, &tok);
+                self.finish(slot_idx, a, &tok);
             } else {
                 self.slots[slot_idx] = Some(a);
             }
@@ -558,16 +725,17 @@ impl<'a> Engine<'a> {
 
     /// Complete one request: retain its session state, deliver the
     /// response, free the slot.
-    fn finish(&mut self, slot_idx: usize, a: Active, stats: &mut ServeStats, tok: &ByteTokenizer) {
+    fn finish(&mut self, slot_idx: usize, a: Active, tok: &ByteTokenizer) {
         let Active { req, absorbed, generated, first_token_at, .. } = a;
         let now = Instant::now();
         let ttft = first_token_at
             .map(|t| t.duration_since(req.enqueued))
             .unwrap_or_default();
-        stats.completed += 1;
-        stats.generated_tokens += generated.len() as u64;
-        stats.ttft.push(ttft);
-        stats.per_request.push(now.duration_since(req.enqueued));
+        self.metrics.completed.inc();
+        self.metrics.generated_tokens.add(generated.len() as u64);
+        self.metrics.ttft_us.record(ttft.as_micros() as u64);
+        self.metrics.request_us.record(now.duration_since(req.enqueued).as_micros() as u64);
+        self.flight.record(FlightEvent::Finish, req.trace, req.id);
         if self.snapshots && self.sessions.capacity() > 0 {
             if let Some(sid) = req.session_id.clone() {
                 // the final O(1) state costs a few KiB to keep — a
@@ -597,7 +765,7 @@ impl<'a> Engine<'a> {
     /// one sweep of the slots per engine step, and a slot must have
     /// decoded at least one token since admission — both prevent
     /// park/admit livelock.
-    fn preempt_for_waiters(&mut self, stats: &mut ServeStats) -> Result<()> {
+    fn preempt_for_waiters(&mut self) -> Result<()> {
         if !self.snapshots {
             return Ok(());
         }
@@ -628,10 +796,15 @@ impl<'a> Engine<'a> {
                 }
             }
             let Some((slot_idx, _)) = pick else { break };
-            let snapshot = self.exec.snapshot_slot(slot_idx)?;
-            let a = self.slots[slot_idx].take().expect("picked an active slot");
-            self.exec.release_slot(slot_idx);
-            stats.preemptions += 1;
+            let (snapshot, a) = {
+                let _span = self.metrics.park_us.span();
+                let snapshot = self.exec.snapshot_slot(slot_idx)?;
+                let a = self.slots[slot_idx].take().expect("picked an active slot");
+                self.exec.release_slot(slot_idx);
+                (snapshot, a)
+            };
+            self.metrics.preemptions.inc();
+            let (trace, rid) = (a.req.trace, a.req.id);
             let parked_seq = self.scheduler.park(
                 a.req,
                 ParkedWork {
@@ -643,10 +816,11 @@ impl<'a> Engine<'a> {
                     utf8_buf: a.utf8_buf,
                 },
             );
+            self.flight.record(FlightEvent::Park, trace, rid);
             // hand the freed slot to an actual waiter: the evictee is
             // excluded so a non-FIFO policy can't pick it right back
             // (it becomes eligible again at the next admission)
-            if !self.admit_next(stats, Some(parked_seq))? {
+            if !self.admit_next(Some(parked_seq))? {
                 break;
             }
         }
@@ -674,15 +848,6 @@ impl<'a> Engine<'a> {
         rx: Receiver<T>,
         into_msg: F,
     ) -> Result<ServeStats> {
-        let mut stats = ServeStats {
-            backend: self.exec.backend_name().to_string(),
-            model: self.exec.model().name.clone(),
-            n_slots: self.n_slots(),
-            policy: self.scheduler.policy().name().to_string(),
-            prefill_chunk: if self.chunked { self.prefiller.chunk() } else { 1 },
-            state_bytes_per_slot: self.exec.state_bytes_per_slot(),
-            ..ServeStats::default()
-        };
         let t0 = Instant::now();
         let mut disconnected = false;
         loop {
@@ -690,7 +855,7 @@ impl<'a> Engine<'a> {
                 match rx.try_recv() {
                     Ok(r) => {
                         let m = into_msg(r);
-                        self.handle_msg(m, &mut stats);
+                        self.handle_msg(m);
                     }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
@@ -699,7 +864,7 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
-            while self.admit_next(&mut stats, None)? {}
+            while self.admit_next(None)? {}
             if !self.has_active() {
                 if disconnected {
                     break;
@@ -710,19 +875,18 @@ impl<'a> Engine<'a> {
                 match rx.recv() {
                     Ok(r) => {
                         let m = into_msg(r);
-                        self.handle_msg(m, &mut stats);
+                        self.handle_msg(m);
                     }
                     Err(_) => disconnected = true,
                 }
                 continue;
             }
             self.publish();
-            self.step(&mut stats)?;
-            self.preempt_for_waiters(&mut stats)?;
+            self.step()?;
+            self.preempt_for_waiters()?;
         }
         self.publish();
-        stats.wall_s = t0.elapsed().as_secs_f64();
-        Ok(stats)
+        Ok(self.snapshot_stats(t0.elapsed().as_secs_f64()))
     }
 }
 
@@ -853,6 +1017,24 @@ fn handle_conn(
             // observability probe, answered by the router itself — does
             // not consume a scheduling slot on any shard
             if tx.send(RouterMsg::Stats { respond: etx.clone() }).is_err() {
+                break; // router gone
+            }
+            continue;
+        }
+        if req_json.get("metrics").and_then(|j| j.as_bool()) == Some(true) {
+            // full registry dump (router aggregates + per-shard)
+            if tx.send(RouterMsg::Metrics { respond: etx.clone() }).is_err() {
+                break; // router gone
+            }
+            continue;
+        }
+        if let Some(id) = req_json.get("trace").and_then(|j| j.as_i64()) {
+            // flight-recorder lookup: every lifecycle event logged under
+            // this router-minted trace id, across all shards, in order
+            if tx
+                .send(RouterMsg::Trace { id: id.max(0) as u64, respond: etx.clone() })
+                .is_err()
+            {
                 break; // router gone
             }
             continue;
@@ -1065,10 +1247,10 @@ pub struct OverloadReport {
     /// requests shed by the router's global admission budget
     pub router_rejected: u64,
     pub generated_tokens: u64,
-    /// ttft/latency samples pooled across shards (percentiles over the
-    /// pool, not averaged per-shard quantiles)
-    pub ttft: Latencies,
-    pub latency: Latencies,
+    /// ttft/latency samples pooled across shards (histogram merge, so
+    /// percentiles are over the pool, not averaged per-shard quantiles)
+    pub ttft: HistoSnapshot,
+    pub latency: HistoSnapshot,
     pub per_shard: Vec<ServeStats>,
 }
 
@@ -1087,9 +1269,7 @@ impl OverloadReport {
     /// One record for `results/bench_serve.json`: aggregate p50/p95/p99 +
     /// tok/s + migration/shed counters, with the per-shard stats inline.
     pub fn to_json(&self) -> Json {
-        let ttft = self.ttft.percentiles_us(&[50.0, 95.0, 99.0]);
-        let lat = self.latency.percentiles_us(&[50.0, 95.0, 99.0]);
-        obj(vec![
+        let Json::Obj(mut fields) = obj(vec![
             ("shards", self.shards.into()),
             ("offered", self.offered.into()),
             ("sessions", self.sessions.into()),
@@ -1100,17 +1280,16 @@ impl OverloadReport {
             ("router_rejected", (self.router_rejected as i64).into()),
             ("generated_tokens", (self.generated_tokens as i64).into()),
             ("tok_per_s", self.tokens_per_sec().into()),
-            ("ttft_p50_ms", (ttft[0] as f64 / 1e3).into()),
-            ("ttft_p95_ms", (ttft[1] as f64 / 1e3).into()),
-            ("ttft_p99_ms", (ttft[2] as f64 / 1e3).into()),
-            ("latency_p50_ms", (lat[0] as f64 / 1e3).into()),
-            ("latency_p95_ms", (lat[1] as f64 / 1e3).into()),
-            ("latency_p99_ms", (lat[2] as f64 / 1e3).into()),
-            (
-                "per_shard",
-                Json::Arr(self.per_shard.iter().map(|s| s.to_json()).collect()),
-            ),
-        ])
+        ]) else {
+            unreachable!("obj builds an object")
+        };
+        self.ttft.push_ms_fields("ttft", &mut fields);
+        self.latency.push_ms_fields("latency", &mut fields);
+        fields.push((
+            "per_shard".to_string(),
+            Json::Arr(self.per_shard.iter().map(|s| s.to_json()).collect()),
+        ));
+        Json::Obj(fields)
     }
 
     pub fn report(&self) -> String {
@@ -1232,8 +1411,8 @@ pub fn run_overload_sharded(
     let migrations = router.report().migrations;
     let router_rejected = router.report().rejected;
     let (per_shard, _) = router.finish()?;
-    let mut ttft = Latencies::new();
-    let mut latency = Latencies::new();
+    let mut ttft = HistoSnapshot::new();
+    let mut latency = HistoSnapshot::new();
     let mut generated_tokens = 0u64;
     for s in &per_shard {
         ttft.merge(&s.ttft);

@@ -25,9 +25,10 @@ use anyhow::{Context, Result};
 use crate::checkpoint::Checkpoint;
 use crate::config::TrainConfig;
 use crate::data::{self, Batch};
-use crate::json::{obj, JsonlWriter};
-use crate::metrics::{Throughput, Timer};
+use crate::json::{obj, Json, JsonlWriter};
+use crate::metrics::Timer;
 use crate::model::{grad, native_model_entry};
+use crate::obs;
 use crate::params::{self, ParamStore};
 use crate::rng::Rng;
 use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
@@ -37,6 +38,10 @@ use crate::runtime::{Executable, ModelEntry, Runtime, Tensor};
 pub struct StepStats {
     pub step: u64,
     pub loss: f32,
+    /// Global L2 norm of the step's gradient, before the AdamW update.
+    /// `NaN` on the artifact backend — the fused train artifact applies
+    /// the gradient without exposing it.
+    pub grad_norm: f64,
     pub step_time_s: f64,
 }
 
@@ -181,6 +186,15 @@ impl TrainBackend for NativeTrainer {
             self.accum,
             self.grad_workers,
         )?;
+        // global gradient L2 — the standard training-health signal
+        // (read-only over the already-reduced gradient, so it cannot
+        // perturb the bit-reproducible update)
+        let mut sq = 0.0f64;
+        for leaf in &grads.leaves {
+            for &g in leaf.as_f32()? {
+                sq += g as f64 * g as f64;
+            }
+        }
         self.step += 1;
         params::adamw_step(
             &mut self.params,
@@ -191,7 +205,12 @@ impl TrainBackend for NativeTrainer {
             lr,
             &self.decay,
         )?;
-        Ok(StepStats { step: self.step, loss: loss as f32, step_time_s: timer.secs() })
+        Ok(StepStats {
+            step: self.step,
+            loss: loss as f32,
+            grad_norm: sq.sqrt(),
+            step_time_s: timer.secs(),
+        })
     }
 
     fn forward(&self, batch: &Batch) -> Result<Tensor> {
@@ -325,7 +344,12 @@ impl TrainBackend for ArtifactTrainer {
         self.m.replace_from(m)?;
         self.v.replace_from(v)?;
         self.step = new_step;
-        Ok(StepStats { step: self.step, loss, step_time_s: timer.secs() })
+        Ok(StepStats {
+            step: self.step,
+            loss,
+            grad_norm: f64::NAN,
+            step_time_s: timer.secs(),
+        })
     }
 
     /// Forward pass on a batch (eval): returns logits (B, T, V).
@@ -406,13 +430,29 @@ pub fn run_training(
         ("grad_workers", cfg.grad_workers.into()),
     ]))?;
 
+    // training throughput + per-phase timing all come from the one
+    // process-global registry: the counter below is what this loop adds
+    // tokens to, and the phase histograms are recorded inside
+    // `grad::loss_and_grad_*` itself.  The registry is cumulative for
+    // the process (tests run several trainings), so the log reports
+    // *deltas* against the values at run start / last log line.
+    let reg = obs::global();
+    let train_tokens = reg.counter("train_tokens");
+    let train_steps = reg.counter("train_steps");
+    let tokens0 = train_tokens.get();
+    let run_timer = Timer::start();
+    const PHASES: [&str; 3] = ["grad_capture_us", "reverse_sweep_us", "tree_reduce_us"];
+    let phase_snap =
+        |name: &str| reg.histo_snapshot(name).unwrap_or_default();
+    let mut phase_last: Vec<obs::HistoSnapshot> = PHASES.iter().map(|n| phase_snap(n)).collect();
+
     let mut history = Vec::with_capacity(cfg.steps);
-    let mut tput = Throughput::new();
     for i in 0..cfg.steps {
         let batch = gen.batch(b, t);
         let lr = cfg.lr_at(start + i) as f32;
         let stats = trainer.train_step(&batch, lr)?;
-        tput.add((b * t) as u64);
+        train_tokens.add((b * t) as u64);
+        train_steps.inc();
         history.push(stats);
 
         if cfg.log_every > 0 && (start + i + 1) % cfg.log_every == 0 {
@@ -421,23 +461,43 @@ pub fn run_training(
                 .map(|s| s.loss as f64)
                 .sum::<f64>()
                 / cfg.log_every.min(history.len()) as f64;
+            let tok_per_s = {
+                let dt = run_timer.secs();
+                if dt <= 0.0 { 0.0 } else { (train_tokens.get() - tokens0) as f64 / dt }
+            };
             if !quiet {
                 println!(
-                    "step {:>5}  loss {:.4}  lr {:.2e}  {:.0} tok/s",
+                    "step {:>5}  loss {:.4}  |g| {:.3}  lr {:.2e}  {:.0} tok/s",
                     stats.step,
                     recent,
+                    stats.grad_norm,
                     lr,
-                    tput.per_sec()
-                );
+                    tok_per_s,
+                )
             }
-            log.write(&obj(vec![
-                ("event", "step".into()),
-                ("step", (stats.step as i64).into()),
-                ("loss", (recent).into()),
-                ("lr", (lr as f64).into()),
-                ("tok_per_s", tput.per_sec().into()),
-                ("step_time_s", stats.step_time_s.into()),
-            ]))?;
+            // mean per-step phase cost over the window since the last
+            // log line (histogram deltas — the registry is cumulative)
+            let mut fields = vec![
+                ("event".to_string(), "step".into()),
+                ("step".to_string(), (stats.step as i64).into()),
+                ("loss".to_string(), recent.into()),
+                ("grad_norm".to_string(), grad_norm_json(stats.grad_norm)),
+                ("lr".to_string(), (lr as f64).into()),
+                ("tok_per_s".to_string(), tok_per_s.into()),
+                ("step_time_s".to_string(), stats.step_time_s.into()),
+            ];
+            for (pi, name) in PHASES.iter().enumerate() {
+                let now = phase_snap(name);
+                let (dc, ds) = (now.count - phase_last[pi].count, now.sum - phase_last[pi].sum);
+                let ms = if dc == 0 {
+                    Json::Null
+                } else {
+                    (ds as f64 / dc as f64 / 1e3).into()
+                };
+                fields.push((format!("{}_ms", name.trim_end_matches("_us")), ms));
+                phase_last[pi] = now;
+            }
+            log.write(&Json::Obj(fields))?;
         }
 
         if cfg.eval_every > 0 && (start + i + 1) % cfg.eval_every == 0 && trainer.supports_eval() {
@@ -469,11 +529,25 @@ pub fn run_training(
         let path = out_dir.join(format!("{}_{}.ckpt", cfg.model, cfg.task));
         trainer.checkpoint().save(&path)?;
     }
+    let tok_per_s = {
+        let dt = run_timer.secs();
+        if dt <= 0.0 { 0.0 } else { (train_tokens.get() - tokens0) as f64 / dt }
+    };
     log.write(&obj(vec![
         ("event", "done".into()),
         ("final_loss", history.last().map(|s| s.loss as f64).unwrap_or(0.0).into()),
-        ("tok_per_s", tput.per_sec().into()),
+        ("tok_per_s", tok_per_s.into()),
     ]))?;
     log.flush()?;
     Ok(history)
+}
+
+/// `grad_norm` as JSON: `null` when the backend can't report one (the
+/// artifact path returns NaN, which has no JSON representation).
+fn grad_norm_json(g: f64) -> Json {
+    if g.is_finite() {
+        g.into()
+    } else {
+        Json::Null
+    }
 }

@@ -143,6 +143,14 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// `Null`, so structs carrying an optional JSON payload can derive
+/// `Default`.
+impl Default for Json {
+    fn default() -> Self {
+        Json::Null
+    }
+}
+
 impl From<&str> for Json {
     fn from(s: &str) -> Self {
         Json::Str(s.to_string())

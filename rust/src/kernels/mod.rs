@@ -138,23 +138,34 @@ pub use self::simd::Isa;
 /// [`streaming_forward`], the causal [`chunked_forward`] pass, and the
 /// capturing [`grad::chunked_forward_captured`].  Per-token decode
 /// ([`RecurrentAttention::step`]) does not — it is a different cost
-/// class and the claim is about training.  The counter is cumulative
-/// for the process (tests measure deltas); because it is global, any
-/// test asserting exact deltas must live alone in its own test binary
-/// (`rust/tests/fused_train.rs`) so concurrent tests can't interleave.
+/// class and the claim is about training.
+///
+/// The counter lives in the global [`crate::obs`] registry under
+/// `"attn_forwards"`, so `{"metrics": true}` and the training step log
+/// see the same cell the tests assert on.  It is cumulative for the
+/// process; tests asserting exact deltas must serialize against each
+/// other (`rust/tests/fused_train.rs` does so with a process-local
+/// mutex) so concurrent tests can't interleave.
 pub mod counters {
-    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::OnceLock;
 
-    static ATTN_FORWARDS: AtomicU64 = AtomicU64::new(0);
+    use crate::obs;
+
+    /// The registry-backed counter cell, registered on first touch.
+    pub fn handle() -> &'static obs::Counter {
+        static HANDLE: OnceLock<obs::Counter> = OnceLock::new();
+        HANDLE.get_or_init(|| obs::global().counter("attn_forwards"))
+    }
 
     /// Cumulative full-sequence attention forwards since process start.
+    /// Shim kept for existing callers; reads the registry cell.
     pub fn attn_forwards() -> u64 {
-        ATTN_FORWARDS.load(Ordering::Relaxed)
+        handle().get()
     }
 
     #[inline]
     pub(crate) fn count_attn_forward() {
-        ATTN_FORWARDS.fetch_add(1, Ordering::Relaxed);
+        handle().inc();
     }
 }
 

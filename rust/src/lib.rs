@@ -54,6 +54,7 @@ pub mod kernels;
 pub mod mathref;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod params;
 pub mod plot;
 pub mod rng;

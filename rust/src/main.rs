@@ -141,6 +141,17 @@ COMMANDS
               migration off saturated shards, global load shedding with
               explicit `overloaded` errors; `{\"stats\": true}` on the
               wire returns per-shard + aggregate stats as one JSON line)
+             [--metrics-log PATH --flight-recorder N]
+             (observability: `{\"metrics\": true}` on the wire dumps every
+              shard's metric registry — counters, gauges, per-stage span
+              histograms like prefill_us/decode_step_us/migrate_us;
+              `{\"trace\": ID}` replays one request's flight-recorder
+              lifecycle (admit/park/resume/migrate/finish) across shards
+              in time order, using the trace id the router mints per
+              request; --flight-recorder N bounds the per-shard event
+              ring (default 256); --metrics-log PATH appends router
+              JSONL: periodic load lines, overload flight dumps, final
+              per-shard registry dumps)
              [--synthetic --requests N --prompt-len L --max-tokens N
               --gap-ms MS --turns K --out DIR]
              (synthetic benches chunked vs token-at-a-time prefill plus
@@ -478,6 +489,7 @@ fn serve_opts(args: &Args) -> Result<ServeOpts> {
         preempt_tokens: args.get_usize("preempt-tokens", d.preempt_tokens)?,
         queue_capacity: args.get_usize("queue-cap", d.queue_capacity)?,
         stream_default: args.has("stream") || d.stream_default,
+        flight_capacity: args.get_usize("flight-recorder", d.flight_capacity)?,
     })
 }
 
@@ -502,6 +514,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ropts = server::RouterOpts {
         global_queue: args
             .get_usize("global-queue", server::RouterOpts::default().global_queue)?,
+        metrics_log: args.get("metrics-log").map(PathBuf::from),
     };
     if !args.has("synthetic") {
         // TCP serving is sharded by default (one engine per core); pass
@@ -620,6 +633,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get("out").unwrap_or("results"));
     let path = experiments::write_results(&out, "bench_serve.json", &format!("{record}\n"))?;
     println!("wrote {path:?}");
+    // --metrics-log PATH: single-engine synthetic runs have no router
+    // writing the JSONL, so dump each bench's final registry here
+    if let Some(mpath) = args.get("metrics-log") {
+        let mut w = holt::json::JsonlWriter::create(mpath)?;
+        for (name, s) in [
+            ("prefill_chunked", &chunked),
+            ("token_at_a_time", &token_at_a_time),
+            ("session_reuse", &sessions),
+        ] {
+            w.write(&obj(vec![
+                ("event", "synthetic_final".into()),
+                ("bench", name.into()),
+                ("metrics", s.metrics.clone()),
+            ]))?;
+        }
+        w.flush()?;
+        println!("wrote {mpath}");
+    }
     Ok(())
 }
 

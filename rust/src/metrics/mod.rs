@@ -52,8 +52,15 @@ impl Stats {
 
 /// Growable latency recorder with exact percentiles.  Percentile reads
 /// sort a copy of the samples; batch the reads through
-/// [`Latencies::percentiles_us`] so hot paths (serve summaries) pay for
-/// one sort, not one per percentile.
+/// [`Latencies::percentiles_us`] so hot paths pay for one sort, not one
+/// per percentile.
+///
+/// An empty recorder has **no** percentiles: the reads return `None`
+/// instead of a fake 0 (a 0µs p99 over zero requests used to read as
+/// "infinitely fast" in bench JSON).  The serve layer now records into
+/// the fixed-footprint [`crate::obs::HistoSnapshot`] (log2-bucketed,
+/// mergeable, same `None`-when-empty contract); this exact recorder
+/// remains for benches that want unbucketed percentiles.
 #[derive(Debug, Clone, Default)]
 pub struct Latencies {
     samples_us: Vec<u64>,
@@ -91,40 +98,44 @@ impl Latencies {
     }
 
     /// Exact percentiles (each p in [0,100]) in microseconds, one sort
-    /// for the whole batch.  Empty recorder reads as all zeros.
-    pub fn percentiles_us(&self, ps: &[f64]) -> Vec<u64> {
+    /// for the whole batch.  `None` when no samples were recorded —
+    /// there is no honest percentile of an empty set.
+    pub fn percentiles_us(&self, ps: &[f64]) -> Option<Vec<u64>> {
         if self.samples_us.is_empty() {
-            return vec![0; ps.len()];
+            return None;
         }
         let mut v = self.samples_us.clone();
         v.sort_unstable();
-        ps.iter().map(|&p| Self::rank(&v, p)).collect()
+        Some(ps.iter().map(|&p| Self::rank(&v, p)).collect())
     }
 
-    /// Exact percentile (p in [0,100]) in microseconds.  For several
-    /// reads use [`Latencies::percentiles_us`].
-    pub fn percentile_us(&self, p: f64) -> u64 {
-        self.percentiles_us(&[p])[0]
+    /// Exact percentile (p in [0,100]) in microseconds; `None` when
+    /// empty.  For several reads use [`Latencies::percentiles_us`].
+    pub fn percentile_us(&self, p: f64) -> Option<u64> {
+        Some(self.percentiles_us(&[p])?[0])
     }
 
-    pub fn mean_us(&self) -> f64 {
+    /// Mean in microseconds; `None` when empty.
+    pub fn mean_us(&self) -> Option<f64> {
         if self.samples_us.is_empty() {
-            return 0.0;
+            return None;
         }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+        Some(self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64)
     }
 
     pub fn summary(&self) -> String {
-        let q = self.percentiles_us(&[50.0, 95.0, 99.0, 100.0]);
-        format!(
-            "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
-            self.len(),
-            self.mean_us(),
-            q[0],
-            q[1],
-            q[2],
-            q[3],
-        )
+        match self.percentiles_us(&[50.0, 95.0, 99.0, 100.0]) {
+            None => "n=0 (no samples)".to_string(),
+            Some(q) => format!(
+                "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
+                self.len(),
+                self.mean_us().expect("non-empty"),
+                q[0],
+                q[1],
+                q[2],
+                q[3],
+            ),
+        }
     }
 }
 
@@ -200,12 +211,25 @@ mod tests {
         for i in 1..=100u64 {
             l.push(Duration::from_micros(i));
         }
-        assert_eq!(l.percentile_us(0.0), 1);
-        assert_eq!(l.percentile_us(50.0), 50);
-        assert_eq!(l.percentile_us(100.0), 100);
+        assert_eq!(l.percentile_us(0.0), Some(1));
+        assert_eq!(l.percentile_us(50.0), Some(50));
+        assert_eq!(l.percentile_us(100.0), Some(100));
         // batch reads agree with single reads (one sort either way)
-        assert_eq!(l.percentiles_us(&[0.0, 50.0, 95.0, 100.0]), vec![1, 50, 95, 100]);
-        assert_eq!(Latencies::new().percentiles_us(&[50.0, 99.0]), vec![0, 0]);
+        assert_eq!(
+            l.percentiles_us(&[0.0, 50.0, 95.0, 100.0]),
+            Some(vec![1, 50, 95, 100])
+        );
+    }
+
+    #[test]
+    fn empty_recorder_has_no_percentiles() {
+        // regression: an empty recorder used to export percentile 0 —
+        // a 0µs p99 over zero requests read as "infinitely fast"
+        let empty = Latencies::new();
+        assert_eq!(empty.percentiles_us(&[50.0, 99.0]), None);
+        assert_eq!(empty.percentile_us(50.0), None);
+        assert_eq!(empty.mean_us(), None);
+        assert_eq!(empty.summary(), "n=0 (no samples)");
     }
 
     #[test]
@@ -218,8 +242,8 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a.len(), 100);
-        assert_eq!(a.percentile_us(50.0), 50);
-        assert_eq!(a.percentile_us(100.0), 100);
+        assert_eq!(a.percentile_us(50.0), Some(50));
+        assert_eq!(a.percentile_us(100.0), Some(100));
         a.merge(&Latencies::new());
         assert_eq!(a.len(), 100, "merging an empty recorder is a no-op");
     }

@@ -25,6 +25,10 @@ pub struct DecodeSession {
     n_heads: usize,
     pos: usize,
     scratch: DecodeScratch,
+    /// observability trace id of the request currently occupying this
+    /// session (0 = untraced); plain metadata, never serialized into
+    /// snapshots — the trace follows the request, not the slot
+    trace: u64,
 }
 
 /// Reusable dense activation buffers for [`DecodeSession::absorb_chunk`].
@@ -118,12 +122,24 @@ impl DecodeSession {
             n_heads: cfg.n_heads,
             pos: 0,
             scratch: DecodeScratch::default(),
+            trace: 0,
         })
     }
 
     /// Next position to be consumed (= tokens absorbed so far).
     pub fn pos(&self) -> usize {
         self.pos
+    }
+
+    /// Tag this session with the occupying request's trace id
+    /// ([`Executor::tag_slot`](crate::model::Executor::tag_slot)).
+    pub fn set_trace(&mut self, trace: u64) {
+        self.trace = trace;
+    }
+
+    /// Trace id of the occupying request (0 = untraced).
+    pub fn trace(&self) -> u64 {
+        self.trace
     }
 
     /// Total f64 state elements across all (layer, head) kernels —

@@ -122,6 +122,14 @@ pub trait Executor {
         let _ = (slot, snap);
         bail!("state restore is only supported on the native backend")
     }
+
+    /// Tag `slot` with the observability trace id of the request now
+    /// occupying it, so backend-level state can be correlated with the
+    /// serve layer's flight recorder.  Metadata only — must not affect
+    /// any computation.  Backends without per-slot state ignore it.
+    fn tag_slot(&mut self, slot: usize, trace: u64) {
+        let _ = (slot, trace);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -205,6 +213,12 @@ impl Executor for NativeExecutor {
 
     fn release_slot(&mut self, slot: usize) {
         self.sessions[slot] = None;
+    }
+
+    fn tag_slot(&mut self, slot: usize, trace: u64) {
+        if let Some(s) = self.sessions[slot].as_mut() {
+            s.set_trace(trace);
+        }
     }
 
     fn pos(&self, slot: usize) -> usize {

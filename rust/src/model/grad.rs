@@ -84,6 +84,34 @@ use crate::runtime::ModelConfig;
 /// bit for bit outside the f64 state reassociation.
 const TRAIN_CHUNK: usize = 64;
 
+/// Training-phase span histograms on the global [`crate::obs`] registry.
+/// Timers only: recording wraps the phases without touching any of their
+/// arithmetic, so loss curves stay bit-reproducible (test- and
+/// CI-pinned) whether or not anyone reads the histograms.
+mod spans {
+    use std::sync::OnceLock;
+
+    use crate::obs;
+
+    /// Forward pass with VJP-tape capture (`forward_cached`).
+    pub fn grad_capture_us() -> &'static obs::Histo {
+        static H: OnceLock<obs::Histo> = OnceLock::new();
+        H.get_or_init(|| obs::global().histo("grad_capture_us"))
+    }
+
+    /// The backward sweep: loss head back to embeddings.
+    pub fn reverse_sweep_us() -> &'static obs::Histo {
+        static H: OnceLock<obs::Histo> = OnceLock::new();
+        H.get_or_init(|| obs::global().histo("reverse_sweep_us"))
+    }
+
+    /// Deterministic pairwise gradient reduction (`TreeReducer`).
+    pub fn tree_reduce_us() -> &'static obs::Histo {
+        static H: OnceLock<obs::Histo> = OnceLock::new();
+        H.get_or_init(|| obs::global().histo("tree_reduce_us"))
+    }
+}
+
 fn backend_for(cfg: &ModelConfig) -> NativeBackend {
     NativeBackend {
         order: cfg.order,
@@ -401,7 +429,10 @@ fn loss_and_grad_inner(
     let rows = b * t;
     ensure!(targets.len() == rows && weights.len() == rows, "batch shapes");
 
-    let (logits, mut cache) = forward_cached(cfg, params, tokens, b, t, fused)?;
+    let (logits, mut cache) = {
+        let _span = spans::grad_capture_us().span();
+        forward_cached(cfg, params, tokens, b, t, fused)?
+    };
 
     // ---- loss + dlogits (softmax CE, weighted, /max(Σw, 1)) ----
     let mut loss = 0.0f64;
@@ -426,6 +457,7 @@ fn loss_and_grad_inner(
     }
 
     // ---- backward ----
+    let _sweep = spans::reverse_sweep_us().span(); // drops at return
     let mut grads = params.zeros_like();
     let embed = params.leaves[0].as_f32()?;
     let lnf = lnf_index(cfg.n_layers);
@@ -587,14 +619,21 @@ pub fn loss_and_grad_accum(
             *out = Some(loss_and_grad_inner(cfg, params, sb, wnorm, true));
         });
         // fold in sequence order regardless of which thread computed what
-        for (_, out) in items {
-            let (l, g) = out.expect("every sequence computed")?;
-            raw += l;
-            reducer.push(g)?;
+        {
+            let _span = spans::tree_reduce_us().span();
+            for (_, out) in items {
+                let (l, g) = out.expect("every sequence computed")?;
+                raw += l;
+                reducer.push(g)?;
+            }
         }
         s0 = s1;
     }
-    Ok((raw / wnorm, reducer.finish()?))
+    let grads = {
+        let _span = spans::tree_reduce_us().span();
+        reducer.finish()?
+    };
+    Ok((raw / wnorm, grads))
 }
 
 /// Deterministic fixed-shape pairwise reduction of per-sequence

@@ -1,0 +1,757 @@
+//! obs — the one observability layer: a zero-dependency, lock-free
+//! [`Registry`] of named counters, gauges and log2-bucket histograms,
+//! RAII [`Span`] timers for per-stage latency, and a bounded
+//! [`FlightRecorder`] ring of per-request lifecycle events.
+//!
+//! Design constraints (all pinned by tests):
+//!
+//! * **Hot path is allocation-free and lock-free.** Handles are `Arc`s
+//!   of plain `AtomicU64`s handed out at registration; `inc`/`set`/
+//!   `record`/`span` touch only Relaxed atomics (and `Instant::now`),
+//!   never the registry lock.  The registry's `Mutex` is taken only to
+//!   register a metric or to export a snapshot — both cold.
+//!   `alloc_decode.rs` pins an instrumented decode step at zero
+//!   allocations after warm-up.
+//! * **Histograms are fixed-shape** — 64 log2 buckets (bucket *i*
+//!   counts values in `[2^i, 2^(i+1))`; bucket 0 holds 0 and 1) plus
+//!   count/sum/min/max — so merging shard snapshots is elementwise and
+//!   associative, and quantile reads never sort anything.  Quantiles
+//!   are nearest-rank over buckets, reported as the bucket's upper
+//!   bound clamped to the observed max (exact for single samples), and
+//!   `None` — never a fake 0 — on an empty histogram.
+//! * **One process epoch.** Flight-recorder timestamps are micros since
+//!   [`epoch`], shared by every shard, so events for a trace that
+//!   crossed shards sort into one coherent timeline.
+//!
+//! Consumers: the serve engine (per-stage spans `prefill_us` /
+//! `decode_step_us` / `sample_us` / `park_us` / `migrate_us`, lifecycle
+//! flight events, `{"stats": true}` / `{"metrics": true}` wire probes),
+//! the trainer (`grad_capture_us` / `reverse_sweep_us` /
+//! `tree_reduce_us` spans and the step log), and the kernels'
+//! attention-forward counter — all reading the same registry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::json::{obj, Json};
+
+/// Number of log2 buckets; covers the full `u64` range.
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a value: `floor(log2(max(v, 1)))`, so bucket `i`
+/// covers `[2^i, 2^(i+1))` and bucket 0 additionally holds 0.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    (63 - (v | 1).leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (`2^(i+1) - 1`; saturates at
+/// `u64::MAX` for the last bucket).
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// handles
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter handle.  Clone freely: clones share the cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge handle (stored as bits in an `AtomicU64`).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistoCore {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl HistoCore {
+    fn new() -> Self {
+        HistoCore {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Log2-bucket histogram handle.  `record` is five Relaxed atomic RMWs,
+/// no branches on the bucket walk, no allocation.
+#[derive(Clone)]
+pub struct Histo(Arc<HistoCore>);
+
+impl Histo {
+    pub fn record(&self, v: u64) {
+        let c = &self.0;
+        c.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.min.fetch_min(v, Ordering::Relaxed);
+        c.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// RAII span timer: records elapsed **microseconds** into the
+    /// histogram when the guard drops.
+    #[must_use = "the span records on drop; binding it to _ measures nothing"]
+    pub fn span(&self) -> Span<'_> {
+        Span { h: self, start: Instant::now() }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough snapshot for export: concurrent writers may
+    /// land between field reads, which skews a quantile by at most the
+    /// in-flight samples — fine for monitoring, free of locks.
+    pub fn snapshot(&self) -> HistoSnapshot {
+        let c = &self.0;
+        HistoSnapshot {
+            buckets: std::array::from_fn(|i| c.buckets[i].load(Ordering::Relaxed)),
+            count: c.count.load(Ordering::Relaxed),
+            sum: c.sum.load(Ordering::Relaxed),
+            min: c.min.load(Ordering::Relaxed),
+            max: c.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII timer returned by [`Histo::span`].
+pub struct Span<'a> {
+    h: &'a Histo,
+    start: Instant,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.h.record(self.start.elapsed().as_micros() as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// snapshots — plain data, mergeable across shards
+// ---------------------------------------------------------------------------
+
+/// Owned histogram state: what [`Histo::snapshot`] exports and what
+/// shard aggregation merges.  All fields are sums/mins/maxes, so
+/// [`HistoSnapshot::merge`] is associative and commutative — pooled
+/// quantiles across shards are computed over the merged buckets, never
+/// by averaging per-shard quantiles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    /// `u64::MAX` when empty (so `merge` is `min`).
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for HistoSnapshot {
+    fn default() -> Self {
+        HistoSnapshot { buckets: [0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl HistoSnapshot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record into an owned snapshot (single-threaded accumulation —
+    /// e.g. building expected values in tests).
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn merge(&mut self, other: &HistoSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank quantile (`p` in `[0, 100]`): the upper bound of the
+    /// bucket holding the rank-th sample, clamped to the observed max.
+    /// `None` when empty — an empty histogram has no p99, and reporting
+    /// 0 would read as "0µs p99".
+    pub fn quantile(&self, p: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((p / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return Some(bucket_upper(i).min(self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum as f64 / self.count as f64)
+        }
+    }
+
+    /// Human line for console reports; explicit about emptiness.
+    pub fn summary(&self) -> String {
+        match (self.quantile(50.0), self.quantile(95.0), self.quantile(99.0)) {
+            (Some(p50), Some(p95), Some(p99)) => format!(
+                "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
+                self.count,
+                self.mean().unwrap_or(0.0),
+                p50,
+                p95,
+                p99,
+                self.max
+            ),
+            _ => "n=0 (no samples)".into(),
+        }
+    }
+
+    /// Structured export: explicit `samples` plus null quantiles when
+    /// empty.
+    pub fn to_json(&self) -> Json {
+        let q = |p: f64| self.quantile(p).map_or(Json::Null, |v| ((v as i64).into()));
+        obj(vec![
+            ("samples", ((self.count as i64).into())),
+            ("mean", self.mean().map_or(Json::Null, Json::from)),
+            ("p50", q(50.0)),
+            ("p95", q(95.0)),
+            ("p99", q(99.0)),
+            ("min", if self.count == 0 { Json::Null } else { (self.min as i64).into() }),
+            ("max", if self.count == 0 { Json::Null } else { (self.max as i64).into() }),
+        ])
+    }
+
+    /// Emit the bench-style `<prefix>_p50_ms`… fields (plus an explicit
+    /// `<prefix>_samples`) into a JSON field list.  The single place
+    /// `ServeStats::to_json` and the overload report share, fixing the
+    /// old `Latencies` behavior where an empty set exported `0.0` for
+    /// every percentile.
+    pub fn push_ms_fields(&self, prefix: &str, fields: &mut Vec<(String, Json)>) {
+        fields.push((format!("{prefix}_samples"), (self.count as i64).into()));
+        for (name, p) in [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)] {
+            let v = self.quantile(p).map_or(Json::Null, |us| (us as f64 / 1e3).into());
+            fields.push((format!("{prefix}_{name}_ms"), v));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histo(Histo),
+}
+
+/// Named metric registry.  Registration (find-or-insert by name) takes
+/// the lock once and returns a shared handle; every subsequent
+/// operation on the handle is lock-free.  Same name ⇒ same cell, so
+/// independently-registered handles aggregate.
+pub struct Registry {
+    inner: Mutex<Vec<(String, Metric)>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { inner: Mutex::new(Vec::new()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<(String, Metric)>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Find-or-register a counter.  Panics if `name` is already a
+    /// different metric kind — a registration-time programming error.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.lock();
+        if let Some((_, metric)) = m.iter().find(|(k, _)| k == name) {
+            match metric {
+                Metric::Counter(c) => return c.clone(),
+                _ => panic!("metric '{name}' is registered as a non-counter"),
+            }
+        }
+        let c = Counter(Arc::new(AtomicU64::new(0)));
+        m.push((name.to_string(), Metric::Counter(c.clone())));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.lock();
+        if let Some((_, metric)) = m.iter().find(|(k, _)| k == name) {
+            match metric {
+                Metric::Gauge(g) => return g.clone(),
+                _ => panic!("metric '{name}' is registered as a non-gauge"),
+            }
+        }
+        let g = Gauge(Arc::new(AtomicU64::new(0)));
+        m.push((name.to_string(), Metric::Gauge(g.clone())));
+        g
+    }
+
+    pub fn histo(&self, name: &str) -> Histo {
+        let mut m = self.lock();
+        if let Some((_, metric)) = m.iter().find(|(k, _)| k == name) {
+            match metric {
+                Metric::Histo(h) => return h.clone(),
+                _ => panic!("metric '{name}' is registered as a non-histogram"),
+            }
+        }
+        let h = Histo(Arc::new(HistoCore::new()));
+        m.push((name.to_string(), Metric::Histo(h.clone())));
+        h
+    }
+
+    /// Snapshot of a histogram by name, if registered.
+    pub fn histo_snapshot(&self, name: &str) -> Option<HistoSnapshot> {
+        let m = self.lock();
+        m.iter().find(|(k, _)| k == name).and_then(|(_, metric)| match metric {
+            Metric::Histo(h) => Some(h.snapshot()),
+            _ => None,
+        })
+    }
+
+    /// Value of a counter by name, if registered.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        let m = self.lock();
+        m.iter().find(|(k, _)| k == name).and_then(|(_, metric)| match metric {
+            Metric::Counter(c) => Some(c.get()),
+            _ => None,
+        })
+    }
+
+    /// One flat JSON object: counters as integers, gauges as floats,
+    /// histograms as `{samples, mean, p50, p95, p99, min, max}` objects
+    /// (null quantiles when empty).  Registration order preserved.
+    pub fn to_json(&self) -> Json {
+        let m = self.lock();
+        Json::Obj(
+            m.iter()
+                .map(|(k, metric)| {
+                    let v = match metric {
+                        Metric::Counter(c) => (c.get() as i64).into(),
+                        Metric::Gauge(g) => g.get().into(),
+                        Metric::Histo(h) => h.snapshot().to_json(),
+                    };
+                    (k.clone(), v)
+                })
+                .collect(),
+        )
+    }
+
+    /// Prometheus text exposition: `holt_<name>` with `# TYPE` lines;
+    /// histograms expand to cumulative `_bucket{le="…"}` series plus
+    /// `_sum` and `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let m = self.lock();
+        let mut out = String::new();
+        for (name, metric) in m.iter() {
+            let n = sanitize(name);
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE holt_{n} counter\nholt_{n} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE holt_{n} gauge\nholt_{n} {}\n", g.get()));
+                }
+                Metric::Histo(h) => {
+                    let s = h.snapshot();
+                    out.push_str(&format!("# TYPE holt_{n} histogram\n"));
+                    let top = s
+                        .buckets
+                        .iter()
+                        .rposition(|&b| b > 0)
+                        .map_or(0, |i| (i + 1).min(BUCKETS - 1));
+                    let mut cum = 0u64;
+                    for i in 0..=top {
+                        cum += s.buckets[i];
+                        out.push_str(&format!(
+                            "holt_{n}_bucket{{le=\"{}\"}} {cum}\n",
+                            bucket_upper(i)
+                        ));
+                    }
+                    out.push_str(&format!("holt_{n}_bucket{{le=\"+Inf\"}} {}\n", s.count));
+                    out.push_str(&format!("holt_{n}_sum {}\n", s.sum));
+                    out.push_str(&format!("holt_{n}_count {}\n", s.count));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' }).collect()
+}
+
+// ---------------------------------------------------------------------------
+// process globals
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide registry: kernels and the trainer record here, and
+/// single-engine servers use it as their shard registry too.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// One shared time origin for the whole process.  Flight-recorder
+/// timestamps are micros since this instant, so events recorded on
+/// different shard threads sort into one timeline.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since [`epoch`].
+pub fn since_epoch_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder
+// ---------------------------------------------------------------------------
+
+/// Request lifecycle event kinds recorded by the serve engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlightEvent {
+    Admit,
+    Park,
+    Resume,
+    MigrateIn,
+    MigrateOut,
+    Reject,
+    Finish,
+}
+
+impl FlightEvent {
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightEvent::Admit => "admit",
+            FlightEvent::Park => "park",
+            FlightEvent::Resume => "resume",
+            FlightEvent::MigrateIn => "migrate_in",
+            FlightEvent::MigrateOut => "migrate_out",
+            FlightEvent::Reject => "reject",
+            FlightEvent::Finish => "finish",
+        }
+    }
+}
+
+/// One flight-recorder entry.  `Copy` and string-free on purpose: the
+/// ring never allocates per event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightRecord {
+    /// Per-recorder monotonic sequence number (1-based).
+    pub seq: u64,
+    /// Micros since the shared process [`epoch`].
+    pub t_us: u64,
+    /// Shard that recorded the event.
+    pub shard: usize,
+    /// Router-minted trace id (0 = never routed).
+    pub trace: u64,
+    /// Request id (0 for events without one).
+    pub req_id: u64,
+    pub event: FlightEvent,
+}
+
+impl FlightRecord {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("seq", (self.seq as i64).into()),
+            ("t_us", (self.t_us as i64).into()),
+            ("shard", self.shard.into()),
+            ("trace", (self.trace as i64).into()),
+            ("req_id", (self.req_id as i64).into()),
+            ("event", self.event.name().into()),
+        ])
+    }
+}
+
+/// Bounded ring of the last `cap` lifecycle events on one shard.
+/// Owned by the engine thread — no locks; once the ring has filled,
+/// recording is pop-front/push-back with no allocation.
+pub struct FlightRecorder {
+    cap: usize,
+    seq: u64,
+    shard: usize,
+    ring: VecDeque<FlightRecord>,
+}
+
+impl FlightRecorder {
+    pub fn new(shard: usize, cap: usize) -> Self {
+        let cap = cap.max(1);
+        FlightRecorder { cap, seq: 0, shard, ring: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn record(&mut self, event: FlightEvent, trace: u64, req_id: u64) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+        }
+        self.seq += 1;
+        self.ring.push_back(FlightRecord {
+            seq: self.seq,
+            t_us: since_epoch_us(),
+            shard: self.shard,
+            trace,
+            req_id,
+            event,
+        });
+    }
+
+    /// Events for one trace id, oldest first.
+    pub fn for_trace(&self, trace: u64) -> Vec<FlightRecord> {
+        self.ring.iter().filter(|r| r.trace == trace).copied().collect()
+    }
+
+    /// Full dump, oldest first — written to the metrics log on overload.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.ring.iter().map(|r| r.to_json()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        for i in 1..BUCKETS - 1 {
+            let lo = 1u64 << i;
+            assert_eq!(bucket_of(lo), i, "lower edge of bucket {i}");
+            assert_eq!(bucket_of(lo * 2 - 1), i, "upper edge of bucket {i}");
+            assert_eq!(bucket_of(lo * 2), i + 1, "first value past bucket {i}");
+        }
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_upper(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_reads_none_not_zero() {
+        let s = HistoSnapshot::new();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(50.0), None);
+        assert_eq!(s.quantile(99.0), None);
+        assert_eq!(s.mean(), None);
+        assert_eq!(s.summary(), "n=0 (no samples)");
+        let j = s.to_json();
+        assert_eq!(j.get("samples").unwrap().as_i64(), Some(0));
+        assert_eq!(j.get("p99"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn single_sample_quantiles_are_exact() {
+        // the observed-max clamp makes one-sample quantiles exact even
+        // though the bucket upper bound is coarse
+        let mut s = HistoSnapshot::new();
+        s.record(100);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s.quantile(p), Some(100));
+        }
+        assert_eq!(s.min, 100);
+        assert_eq!(s.max, 100);
+    }
+
+    #[test]
+    fn quantiles_are_nearest_rank_over_buckets() {
+        let mut s = HistoSnapshot::new();
+        // 90 fast samples in [2^4, 2^5), 10 slow in [2^10, 2^11)
+        for i in 0..90u64 {
+            s.record(16 + i % 16);
+        }
+        for _ in 0..10 {
+            s.record(1500);
+        }
+        assert_eq!(s.quantile(50.0), Some(31), "p50 lands in the fast bucket");
+        assert_eq!(s.quantile(99.0), Some(1500), "p99 lands in the slow bucket, max-clamped");
+    }
+
+    #[test]
+    fn registry_find_or_insert_shares_cells() {
+        let r = Registry::new();
+        let a = r.counter("x");
+        let b = r.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(r.counter_value("x"), Some(3));
+        let h1 = r.histo("lat_us");
+        let h2 = r.histo("lat_us");
+        h1.record(10);
+        h2.record(20);
+        assert_eq!(r.histo_snapshot("lat_us").unwrap().count, 2);
+        let g = r.gauge("load");
+        g.set(0.75);
+        assert_eq!(r.gauge("load").get(), 0.75);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as a non-counter")]
+    fn registry_kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.gauge("x");
+        let _ = r.counter("x");
+    }
+
+    #[test]
+    fn span_records_on_drop() {
+        let r = Registry::new();
+        let h = r.histo("t_us");
+        {
+            let _s = h.span();
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn json_and_prometheus_exports() {
+        let r = Registry::new();
+        r.counter("reqs").add(5);
+        r.gauge("load").set(1.5);
+        r.histo("lat_us").record(100);
+        let j = r.to_json();
+        assert_eq!(j.get("reqs").unwrap().as_i64(), Some(5));
+        assert_eq!(j.get("load").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("lat_us").unwrap().get("samples").unwrap().as_i64(), Some(1));
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE holt_reqs counter"));
+        assert!(text.contains("holt_reqs 5"));
+        assert!(text.contains("# TYPE holt_lat_us histogram"));
+        assert!(text.contains("holt_lat_us_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("holt_lat_us_count 1"));
+    }
+
+    #[test]
+    fn merge_matches_union() {
+        let mut a = HistoSnapshot::new();
+        let mut b = HistoSnapshot::new();
+        let mut union = HistoSnapshot::new();
+        for v in [1u64, 7, 100, 4000] {
+            a.record(v);
+            union.record(v);
+        }
+        for v in [2u64, 900, 65_000] {
+            b.record(v);
+            union.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, union);
+        // merging an empty snapshot is the identity
+        let before = a.clone();
+        a.merge(&HistoSnapshot::new());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn flight_ring_wraps_without_growing() {
+        let mut fr = FlightRecorder::new(3, 4);
+        for i in 0..10u64 {
+            fr.record(FlightEvent::Admit, i, i);
+        }
+        assert_eq!(fr.len(), 4);
+        let all = fr.for_trace(9);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].seq, 10);
+        assert_eq!(all[0].shard, 3);
+        // oldest retained is seq 7
+        let dump = fr.to_json();
+        assert_eq!(dump.as_arr().unwrap()[0].get("seq").unwrap().as_i64(), Some(7));
+    }
+
+    #[test]
+    fn epoch_is_shared_and_monotonic() {
+        let a = since_epoch_us();
+        let b = since_epoch_us();
+        assert!(b >= a);
+    }
+}

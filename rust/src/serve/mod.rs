@@ -83,6 +83,10 @@ pub struct Request {
     /// Emit one [`ServeEvent::Delta`] per generated token before the
     /// final [`ServeEvent::Done`].
     pub stream: bool,
+    /// Trace id minted by the router (0 = not yet routed): every
+    /// flight-recorder lifecycle event for this request carries it, so
+    /// `{"trace": id}` reconstructs the request's path across shards.
+    pub trace: u64,
     pub enqueued: Instant,
     pub respond: Sender<ServeEvent>,
 }
@@ -101,6 +105,7 @@ impl Request {
             deadline_ms: None,
             session_id: None,
             stream: false,
+            trace: 0,
             enqueued: Instant::now(),
             respond,
         }
@@ -160,6 +165,9 @@ pub struct ServeOpts {
     pub queue_capacity: usize,
     /// Stream responses (per-token deltas) for requests that don't say.
     pub stream_default: bool,
+    /// Per-shard flight-recorder capacity (lifecycle events retained in
+    /// the ring; `--flight-recorder N`).
+    pub flight_capacity: usize,
 }
 
 impl Default for ServeOpts {
@@ -171,6 +179,7 @@ impl Default for ServeOpts {
             preempt_tokens: 0,
             queue_capacity: 1024,
             stream_default: false,
+            flight_capacity: 256,
         }
     }
 }

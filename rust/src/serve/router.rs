@@ -27,13 +27,15 @@
 //! by construction (property-tested in `rust/tests/proptests.rs`).
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 
 use anyhow::{ensure, Result};
 
 use crate::coordinator::server::ServeStats;
-use crate::json::{obj, Json};
+use crate::json::{obj, Json, JsonlWriter};
 use crate::model::Executor;
+use crate::obs;
 use crate::serve::shard::{EngineMsg, ShardHandle};
 use crate::serve::{Request, Response, ServeEvent, ServeOpts};
 
@@ -49,11 +51,15 @@ pub struct RouterOpts {
     /// Global fresh-waiter budget across all shards; at or above it new
     /// requests are shed with an `overloaded` error.
     pub global_queue: usize,
+    /// `--metrics-log PATH`: append JSONL snapshots of the router line,
+    /// overload flight-recorder dumps, and the final per-shard registry
+    /// dumps here.
+    pub metrics_log: Option<PathBuf>,
 }
 
 impl Default for RouterOpts {
     fn default() -> Self {
-        RouterOpts { global_queue: 4096 }
+        RouterOpts { global_queue: 4096, metrics_log: None }
     }
 }
 
@@ -64,6 +70,12 @@ pub enum RouterMsg {
     /// `{"stats": true}` wire probe: reply with one JSON line of
     /// per-shard + aggregate stats on the request's event channel.
     Stats { respond: Sender<ServeEvent> },
+    /// `{"metrics": true}` wire probe: per-shard registry dumps
+    /// (counters, gauges, span histograms) as one JSON line.
+    Metrics { respond: Sender<ServeEvent> },
+    /// `{"trace": id}` wire probe: that trace's flight-recorder events
+    /// across all shards, time-ordered, as one JSON line.
+    Trace { id: u64, respond: Sender<ServeEvent> },
 }
 
 /// FNV-1a — a fixed, seedless hash so session → shard assignment is
@@ -160,6 +172,11 @@ pub struct Router {
     opts: RouterOpts,
     report: RouterReport,
     rr: usize,
+    /// Next trace id to mint (sequential from 1, deterministic — the
+    /// trace-propagation test depends on knowing the ids in advance).
+    next_trace: u64,
+    routed: u64,
+    metrics_writer: Option<JsonlWriter>,
 }
 
 impl Router {
@@ -179,13 +196,26 @@ impl Router {
             // distinct sampling seeds per shard; params are the caller's
             shards.push(ShardHandle::spawn(i, exec, seed.wrapping_add(i as u64), opts.clone())?);
         }
+        let metrics_writer = match &ropts.metrics_log {
+            Some(path) => Some(JsonlWriter::create(path)?),
+            None => None,
+        };
         Ok(Router {
             shards,
             affinity: Affinity::new(n),
             opts: ropts,
             report: RouterReport::default(),
             rr: 0,
+            next_trace: 0,
+            routed: 0,
+            metrics_writer,
         })
+    }
+
+    /// Mint the next trace id (sequential from 1).
+    fn mint_trace(&mut self) -> u64 {
+        self.next_trace += 1;
+        self.next_trace
     }
 
     pub fn n_shards(&self) -> usize {
@@ -233,9 +263,12 @@ impl Router {
         if from == to || to >= self.shards.len() {
             return false;
         }
-        let shipped = match self.shards[from].export_session(sid) {
+        // one trace id covers both halves of the shipment: the source
+        // shard logs `migrate_out` and the target `migrate_in` under it
+        let trace = self.mint_trace();
+        let shipped = match self.shards[from].export_session(sid, trace) {
             Some(entry) => {
-                let ok = self.shards[to].import_session(sid, entry);
+                let ok = self.shards[to].import_session(sid, entry, trace);
                 if ok {
                     self.report.migrations += 1;
                 }
@@ -251,10 +284,18 @@ impl Router {
     }
 
     /// Admission control + placement for one request.
-    pub fn route(&mut self, req: Request) {
+    pub fn route(&mut self, mut req: Request) {
+        if req.trace == 0 {
+            req.trace = self.mint_trace();
+        }
+        self.routed += 1;
+        if self.routed % 256 == 0 {
+            self.log_router_line("periodic");
+        }
         let waiting = self.queued_total();
         if waiting >= self.opts.global_queue {
             self.report.rejected += 1;
+            self.dump_on_overload();
             let msg = format!(
                 "server overloaded: {waiting} requests already waiting across {} shards",
                 self.shards.len()
@@ -310,12 +351,119 @@ impl Router {
         ])
     }
 
+    /// `{"metrics": true}` reply: per-shard registry dumps plus the
+    /// router's own counters, one JSON object.
+    pub fn metrics_json(&self) -> Json {
+        let per_shard: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                s.metrics()
+                    .unwrap_or_else(|| obj(vec![("error", "shard unavailable".into())]))
+            })
+            .collect();
+        obj(vec![
+            ("metrics", true.into()),
+            ("t_us", (obs::since_epoch_us() as i64).into()),
+            ("shards", self.shards.len().into()),
+            ("routed", (self.routed as i64).into()),
+            ("traces_minted", (self.next_trace as i64).into()),
+            ("migrations", (self.report.migrations as i64).into()),
+            ("router_rejected", (self.report.rejected as i64).into()),
+            ("per_shard", Json::Arr(per_shard)),
+        ])
+    }
+
+    /// `{"trace": id}` reply: that trace's flight-recorder events from
+    /// every shard, merged and sorted by the shared-epoch timestamp —
+    /// one coherent cross-shard timeline.
+    pub fn trace_json(&self, id: u64) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for s in &self.shards {
+            if let Some(Json::Arr(evs)) = s.trace(id) {
+                events.extend(evs);
+            }
+        }
+        // same-µs events from different shards have no timestamp order
+        // (per-shard `seq` doesn't compare across shards), so break ties
+        // by lifecycle rank — e.g. a migration's export logs before its
+        // import even when both land in the same microsecond
+        let rank = |name: Option<&str>| match name {
+            Some("admit") => 0i64,
+            Some("resume") => 1,
+            Some("park") => 2,
+            Some("migrate_out") => 3,
+            Some("migrate_in") => 4,
+            Some("reject") => 5,
+            Some("finish") => 6,
+            _ => 7,
+        };
+        events.sort_by_key(|e| {
+            (
+                e.get("t_us").and_then(Json::as_i64).unwrap_or(0),
+                rank(e.get("event").and_then(Json::as_str)),
+                e.get("seq").and_then(Json::as_i64).unwrap_or(0),
+            )
+        });
+        obj(vec![
+            ("trace", (id as i64).into()),
+            ("found", (!events.is_empty()).into()),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    /// One light JSONL line (lock-free gauge reads only — no shard round
+    /// trips) into the metrics log.
+    fn log_router_line(&mut self, event: &str) {
+        if let Some(w) = self.metrics_writer.as_mut() {
+            let line = obj(vec![
+                ("event", event.into()),
+                ("t_us", (obs::since_epoch_us() as i64).into()),
+                ("routed", (self.routed as i64).into()),
+                ("queued_total", self.shards.iter().map(|s| s.queued()).sum::<usize>().into()),
+                ("busy_total", self.shards.iter().map(|s| s.busy()).sum::<usize>().into()),
+                ("migrations", (self.report.migrations as i64).into()),
+                ("rejected", (self.report.rejected as i64).into()),
+            ]);
+            let _ = w.write(&line);
+        }
+    }
+
+    /// On overload sheds, dump every shard's flight-recorder ring to the
+    /// metrics log — rate-limited so a shed storm logs the first event
+    /// and then one dump per 128 sheds.
+    fn dump_on_overload(&mut self) {
+        if self.metrics_writer.is_none() || self.report.rejected % 128 != 1 {
+            return;
+        }
+        let rings: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| s.trace(0).unwrap_or(Json::Null))
+            .collect();
+        if let Some(w) = self.metrics_writer.as_mut() {
+            let line = obj(vec![
+                ("event", "overload_flight_dump".into()),
+                ("t_us", (obs::since_epoch_us() as i64).into()),
+                ("rejected", (self.report.rejected as i64).into()),
+                ("flight", Json::Arr(rings)),
+            ]);
+            let _ = w.write(&line);
+        }
+    }
+
     /// Handle one router message.
     pub fn handle(&mut self, msg: RouterMsg) {
         match msg {
             RouterMsg::Req(req) => self.route(req),
             RouterMsg::Stats { respond } => {
                 let _ = respond.send(ServeEvent::Stats(self.stats_json()));
+            }
+            RouterMsg::Metrics { respond } => {
+                let _ = respond.send(ServeEvent::Stats(self.metrics_json()));
+            }
+            RouterMsg::Trace { id, respond } => {
+                let _ = respond.send(ServeEvent::Stats(self.trace_json(id)));
             }
         }
     }
@@ -326,7 +474,22 @@ impl Router {
         for msg in rx {
             self.handle(msg);
         }
-        self.finish()
+        self.log_router_line("final");
+        let mut log = self.metrics_writer.take();
+        let (per_shard, report) = self.finish()?;
+        if let Some(w) = log.as_mut() {
+            // final per-shard registry dumps, one line per shard
+            for (i, s) in per_shard.iter().enumerate() {
+                let line = obj(vec![
+                    ("event", "shard_final".into()),
+                    ("shard", i.into()),
+                    ("metrics", s.metrics.clone()),
+                ]);
+                let _ = w.write(&line);
+            }
+            let _ = w.flush();
+        }
+        Ok((per_shard, report))
     }
 
     /// Close every shard inbox, join the engines, return final stats.

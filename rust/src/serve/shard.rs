@@ -32,11 +32,20 @@ pub enum EngineMsg {
     /// Migration export: remove `id` from this shard's session cache and
     /// hand the entry back (`None` when the session is unknown or its
     /// current turn is still in flight — nothing cached to ship yet).
-    Export { id: String, respond: Sender<Option<SessionEntry>> },
-    /// Migration import: adopt a session exported from another shard.
-    Import { id: String, entry: SessionEntry },
+    /// `trace` is the router-minted id the flight recorder logs the
+    /// `migrate_out` event under.
+    Export { id: String, trace: u64, respond: Sender<Option<SessionEntry>> },
+    /// Migration import: adopt a session exported from another shard
+    /// (`trace`: same id as the paired export — one trace, two shards).
+    Import { id: String, entry: SessionEntry, trace: u64 },
     /// Live per-shard stats as one JSON object.
     Stats { respond: Sender<Json> },
+    /// Per-shard registry dump (counters, gauges, span histograms).
+    Metrics { respond: Sender<Json> },
+    /// Flight-recorder events for one trace id, oldest first (`id: 0` —
+    /// no real trace is ever 0 — dumps the whole ring, the overload
+    /// path).
+    Trace { id: u64, respond: Sender<Json> },
 }
 
 /// Load gauges a shard's engine publishes every loop iteration; the
@@ -81,6 +90,7 @@ impl ShardHandle {
             .name(format!("holt-shard-{id}"))
             .spawn(move || {
                 let mut engine = Engine::with_opts(exec, seed, opts)?;
+                engine.set_shard(id);
                 engine.publish_load(published);
                 engine.run_msgs(rx)
             })?;
@@ -125,23 +135,42 @@ impl ShardHandle {
 
     /// Blocking migration export round trip (served within one engine
     /// step). `None`: session unknown/in-flight, or the shard died.
-    pub fn export_session(&self, id: &str) -> Option<SessionEntry> {
+    pub fn export_session(&self, id: &str, trace: u64) -> Option<SessionEntry> {
         let (rtx, rrx) = channel();
-        if self.send(EngineMsg::Export { id: id.to_string(), respond: rtx }).is_err() {
+        if self.send(EngineMsg::Export { id: id.to_string(), trace, respond: rtx }).is_err() {
             return None;
         }
         rrx.recv().ok().flatten()
     }
 
     /// Hand an exported session entry to this shard's cache partition.
-    pub fn import_session(&self, id: &str, entry: SessionEntry) -> bool {
-        self.send(EngineMsg::Import { id: id.to_string(), entry }).is_ok()
+    pub fn import_session(&self, id: &str, entry: SessionEntry, trace: u64) -> bool {
+        self.send(EngineMsg::Import { id: id.to_string(), entry, trace }).is_ok()
     }
 
     /// Live stats round trip; `None` if the shard died.
     pub fn stats(&self) -> Option<Json> {
         let (rtx, rrx) = channel();
         if self.send(EngineMsg::Stats { respond: rtx }).is_err() {
+            return None;
+        }
+        rrx.recv().ok()
+    }
+
+    /// Per-shard registry dump round trip; `None` if the shard died.
+    pub fn metrics(&self) -> Option<Json> {
+        let (rtx, rrx) = channel();
+        if self.send(EngineMsg::Metrics { respond: rtx }).is_err() {
+            return None;
+        }
+        rrx.recv().ok()
+    }
+
+    /// Flight-recorder events for `trace` on this shard (a JSON array,
+    /// possibly empty); `None` if the shard died.
+    pub fn trace(&self, trace: u64) -> Option<Json> {
+        let (rtx, rrx) = channel();
+        if self.send(EngineMsg::Trace { id: trace, respond: rtx }).is_err() {
             return None;
         }
         rrx.recv().ok()

@@ -134,6 +134,50 @@ fn model_decode_phase(model: &NativeModel, label: &str) {
     assert_eq!(delta, 0, "{label}: {delta} allocations in {MEASURED} whole-model decode steps");
 }
 
+/// ISSUE-9 acceptance: observability must not buy telemetry with heap
+/// traffic.  A whole-model decode step instrumented the way the serve
+/// engine instruments it — RAII span timer into a registry histogram,
+/// counter bump, gauge write, flight-recorder event — stays
+/// allocation-free after warm-up (registration done, ring at capacity).
+fn instrumented_model_decode_phase(model: &NativeModel, label: &str) {
+    use holt::obs::{FlightEvent, FlightRecorder, Registry};
+    let v = model.config().vocab_size;
+    let registry = Registry::new();
+    let steps = registry.counter("engine_steps");
+    let busy = registry.gauge("slots_busy");
+    let step_us = registry.histo("decode_step_us");
+    let mut flight = FlightRecorder::new(0, 8);
+    let mut sess = DecodeSession::new(model).unwrap();
+    let mut out = vec![0.0f32; v];
+    // warm-up grows the activation scratch AND fills the ring to
+    // capacity, so measured recording is pure pop-front/push-back
+    let warm = WARM.max(flight.capacity());
+    for t in 0..warm {
+        let _span = step_us.span();
+        sess.decode_step_into(model, (t % 200) as i32, &mut out).unwrap();
+        steps.inc();
+        busy.set(1.0);
+        flight.record(FlightEvent::Admit, 1, t as u64);
+    }
+    let before = allocations();
+    for t in 0..MEASURED {
+        let _span = step_us.span();
+        sess.decode_step_into(model, (t % 200) as i32, &mut out).unwrap();
+        steps.inc();
+        busy.set(1.0);
+        flight.record(FlightEvent::Finish, 1, t as u64);
+    }
+    let delta = allocations() - before;
+    assert!(out.iter().all(|x| x.is_finite()));
+    assert_eq!(steps.get(), (warm + MEASURED) as u64);
+    assert_eq!(step_us.count(), (warm + MEASURED) as u64, "{label}: spans not recorded");
+    assert_eq!(flight.len(), flight.capacity(), "{label}: ring not at capacity");
+    assert_eq!(
+        delta, 0,
+        "{label}: {delta} allocations in {MEASURED} instrumented decode steps"
+    );
+}
+
 #[test]
 fn kernel_hot_paths_allocate_nothing_after_warmup() {
     // serial phases, one test — see module docs
@@ -150,4 +194,6 @@ fn kernel_hot_paths_allocate_nothing_after_warmup() {
     let params = ParamStore::init(&entry.param_spec, &mut Rng::new(7));
     let model = NativeModel::new(entry, params).unwrap();
     model_decode_phase(&model, "ho2_tiny whole-model decode");
+    // obs layer: instrumentation adds zero heap traffic on the same path
+    instrumented_model_decode_phase(&model, "ho2_tiny instrumented decode");
 }

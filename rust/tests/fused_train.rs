@@ -1,10 +1,15 @@
 //! The one-forward training contract, proven by counting.
 //!
-//! `kernels::counters::attn_forwards()` is a process-global counter, so
-//! this must stay a SINGLE-test binary: any concurrently running test
-//! that touches attention would make exact-delta assertions racy.
-//! (Everything else about fusion — bit-identity per kernel case — lives
-//! in grad_check.rs and the kernels::grad unit tests.)
+//! `kernels::counters::attn_forwards()` reads the process-global
+//! `attn_forwards` counter in the observability registry, so any two
+//! concurrently running tests that touch attention would make
+//! exact-delta assertions racy.  Rather than forcing a single-test
+//! binary, every test here takes `LOCK` first — deltas are measured
+//! only while no other test in this binary runs.  (Everything else
+//! about fusion — bit-identity per kernel case — lives in
+//! grad_check.rs and the kernels::grad unit tests.)
+
+use std::sync::Mutex;
 
 use holt::coordinator::trainer::{NativeTrainer, TrainBackend};
 use holt::data;
@@ -14,6 +19,11 @@ use holt::model::presets::param_spec;
 use holt::params::ParamStore;
 use holt::rng::Rng;
 use holt::runtime::{ModelConfig, ModelEntry};
+
+/// Serializes the counter-delta windows.  `unwrap_or_else(into_inner)`:
+/// a poisoned lock (another test panicked) must not cascade — each test
+/// re-reads the counter baseline itself.
+static LOCK: Mutex<()> = Mutex::new(());
 
 fn smoke_entry() -> ModelEntry {
     let config = ModelConfig {
@@ -44,58 +54,86 @@ fn smoke_entry() -> ModelEntry {
     }
 }
 
+/// One attention "unit" per (sequence, layer, head).
+fn units(cfg: &ModelConfig) -> u64 {
+    (cfg.train_batch * cfg.n_layers * cfg.n_heads) as u64
+}
+
 #[test]
-fn train_step_runs_exactly_one_attention_forward_per_unit() {
+fn fused_path_runs_exactly_one_attention_forward_per_unit() {
+    let _lock = LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let entry = smoke_entry();
     let cfg = entry.config.clone();
-    let (b, t) = (cfg.train_batch, cfg.train_len);
-    // one attention "unit" per (sequence, layer, head)
-    let units = (b * cfg.n_layers * cfg.n_heads) as u64;
-    let batch = data::make("copy", 13).unwrap().batch(b, t);
+    let batch = data::make("copy", 13).unwrap().batch(cfg.train_batch, cfg.train_len);
     let params = ParamStore::init(&entry.param_spec, &mut Rng::new(13));
 
     // fused loss+grad: the backward consumes the forward's tape — the
     // forward count IS the unit count
     let c0 = counters::attn_forwards();
-    let (l_fused, g_fused) = grad::loss_and_grad(&cfg, &params, &batch).unwrap();
+    grad::loss_and_grad(&cfg, &params, &batch).unwrap();
     assert_eq!(
         counters::attn_forwards() - c0,
-        units,
+        units(&cfg),
         "fused path must run exactly one attention forward per unit"
     );
+}
+
+#[test]
+fn replay_path_runs_two_attention_forwards_per_unit() {
+    let _lock = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let entry = smoke_entry();
+    let cfg = entry.config.clone();
+    let batch = data::make("copy", 13).unwrap().batch(cfg.train_batch, cfg.train_len);
+    let params = ParamStore::init(&entry.param_spec, &mut Rng::new(13));
 
     // the pre-fusion path re-runs the forward inside the vjp: twice the
     // forwards for the same numbers
-    let c1 = counters::attn_forwards();
-    let (l_replay, g_replay) = grad::loss_and_grad_replay(&cfg, &params, &batch).unwrap();
+    let c0 = counters::attn_forwards();
+    grad::loss_and_grad_replay(&cfg, &params, &batch).unwrap();
     assert_eq!(
-        counters::attn_forwards() - c1,
-        2 * units,
+        counters::attn_forwards() - c0,
+        2 * units(&cfg),
         "replay path must run forward + vjp re-forward per unit"
     );
+}
 
-    // and fusing the replay away is free: bit-identical loss and grads
+#[test]
+fn fusing_the_replay_away_is_bit_free() {
+    let _lock = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let entry = smoke_entry();
+    let cfg = entry.config.clone();
+    let batch = data::make("copy", 13).unwrap().batch(cfg.train_batch, cfg.train_len);
+    let params = ParamStore::init(&entry.param_spec, &mut Rng::new(13));
+
+    let (l_fused, g_fused) = grad::loss_and_grad(&cfg, &params, &batch).unwrap();
+    let (l_replay, g_replay) = grad::loss_and_grad_replay(&cfg, &params, &batch).unwrap();
     assert_eq!(l_fused.to_bits(), l_replay.to_bits(), "loss drifted");
-    for ((name, a), bb) in
-        g_fused.names.iter().zip(&g_fused.leaves).zip(&g_replay.leaves)
-    {
+    for ((name, a), b) in g_fused.names.iter().zip(&g_fused.leaves).zip(&g_replay.leaves) {
         assert_eq!(
             a.as_f32().unwrap(),
-            bb.as_f32().unwrap(),
+            b.as_f32().unwrap(),
             "gradient leaf '{name}' drifted between fused and replay"
         );
     }
+}
+
+#[test]
+fn train_step_keeps_the_one_forward_contract() {
+    let _lock = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let entry = smoke_entry();
+    let cfg = entry.config.clone();
+    let batch = data::make("copy", 13).unwrap().batch(cfg.train_batch, cfg.train_len);
 
     // a whole trainer step (accumulating, data-parallel) keeps the
     // contract: per-sequence gradients are still one forward per unit
     let mut tr = NativeTrainer::from_entry(entry, 13).unwrap();
     tr.accum = 2;
     tr.grad_workers = 2;
-    let c2 = counters::attn_forwards();
+    let c0 = counters::attn_forwards();
     tr.train_step(&batch, 1e-3).unwrap();
     assert_eq!(
-        counters::attn_forwards() - c2,
-        units,
+        counters::attn_forwards() - c0,
+        units(&cfg),
         "train_step must run exactly one attention forward per unit"
     );
 }

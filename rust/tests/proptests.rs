@@ -373,6 +373,102 @@ fn prop_tensor_error_metrics_consistent() {
 }
 
 #[test]
+fn prop_obs_histogram_bucket_invariants() {
+    // log2 bucketing invariants over random u64s spanning the full range:
+    // every value lands in exactly one bucket whose bounds contain it, and
+    // the recorded quantiles bracket the observed min/max
+    use holt::obs::{bucket_of, bucket_upper, HistoSnapshot, BUCKETS};
+    let mut rng = Rng::new(0x0b5_1);
+    for case in 0..CASES {
+        let mut s = HistoSnapshot::new();
+        let n = rng.uniform_int(1, 65) as usize;
+        let (mut want_sum, mut want_min, mut want_max) = (0u64, u64::MAX, 0u64);
+        for _ in 0..n {
+            // shift by 0..=63 so the bucket checks cover every magnitude
+            let raw = rng.next_u64() >> rng.uniform_int(0, 64);
+            let i = bucket_of(raw);
+            assert!(i < BUCKETS, "case {case}: bucket {i} out of range for {raw}");
+            assert!(raw <= bucket_upper(i), "case {case}: {raw} above bucket {i} upper");
+            if i > 0 {
+                assert!(
+                    raw > bucket_upper(i - 1),
+                    "case {case}: {raw} not above bucket {} upper",
+                    i - 1
+                );
+            }
+            // record a bounded value (< 2^56) so 64 samples cannot
+            // overflow the histogram's u64 running sum
+            let v = raw >> 8;
+            s.record(v);
+            want_sum += v;
+            want_min = want_min.min(v);
+            want_max = want_max.max(v);
+        }
+        assert_eq!(s.count, n as u64, "case {case}");
+        assert_eq!(s.sum, want_sum, "case {case}");
+        assert_eq!((s.min, s.max), (want_min, want_max), "case {case}");
+        assert_eq!(s.buckets.iter().sum::<u64>(), n as u64, "case {case}");
+        // quantiles are monotone in p and clamped to the observed extremes
+        assert_eq!(s.quantile(100.0), Some(want_max), "case {case}");
+        let mut prev = 0u64;
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 100.0] {
+            let q = s.quantile(p).unwrap();
+            assert!(
+                (want_min..=want_max).contains(&q),
+                "case {case} p{p}: {q} outside [{want_min}, {want_max}]"
+            );
+            assert!(q >= prev, "case {case} p{p}: quantile not monotone");
+            prev = q;
+        }
+    }
+}
+
+#[test]
+fn prop_obs_histogram_merge_associative_and_lossless() {
+    // cross-shard aggregation contract: merge is associative and
+    // commutative, and merging per-shard snapshots is indistinguishable
+    // from having recorded every sample into one histogram
+    use holt::obs::HistoSnapshot;
+    let mut rng = Rng::new(0x0b5_2);
+    for case in 0..CASES {
+        let mut pooled = HistoSnapshot::new();
+        let mut parts: Vec<HistoSnapshot> = Vec::new();
+        for _ in 0..3 {
+            let mut s = HistoSnapshot::new();
+            // empty parts are legal (an idle shard merges as identity)
+            let n = rng.uniform_int(0, 40) as usize;
+            for _ in 0..n {
+                let v = rng.next_u64() >> rng.uniform_int(16, 64);
+                s.record(v);
+                pooled.record(v);
+            }
+            parts.push(s);
+        }
+        let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(b);
+        left.merge(c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "case {case}: merge not associative");
+        // b ⊕ a == a ⊕ b
+        let mut ba = b.clone();
+        ba.merge(a);
+        ba.merge(c);
+        assert_eq!(left, ba, "case {case}: merge not commutative");
+        assert_eq!(left, pooled, "case {case}: merged != pooled recording");
+        // identity: merging an empty snapshot changes nothing
+        let before = left.clone();
+        left.merge(&HistoSnapshot::new());
+        assert_eq!(left, before, "case {case}: empty merge not identity");
+    }
+}
+
+#[test]
 fn prop_affinity_single_owner_stable_and_bounded() {
     // Router affinity invariants (ISSUE-7): (1) same session_id resolves
     // to the same shard until a migration re-homes it; (2) a session is

@@ -484,6 +484,104 @@ fn migrated_session_is_bit_identical_to_unmigrated_run() {
 }
 
 #[test]
+fn trace_ids_follow_a_request_across_a_migration() {
+    // ISSUE-9 acceptance: router-minted trace ids thread through
+    // RouterMsg -> EngineMsg -> scheduler -> flight recorder, so one
+    // `{"trace": id}` probe reconstructs a request's lifecycle — and a
+    // migration's two halves land on *different* shards under one trace.
+    use holt::json::Json;
+    use holt::serve::{Router, RouterOpts};
+
+    let base = prompt(20, 13);
+    let execs: Vec<Box<dyn Executor + Send>> =
+        vec![Box::new(executor(91)), Box::new(executor(91))];
+    let mut router = Router::new(execs, 1, ServeOpts::default(), RouterOpts::default()).unwrap();
+    let (etx, erx) = channel::<ServeEvent>();
+
+    // turn 1: the router mints trace 1 (ids are sequential from 1)
+    let mut r1 = greedy_request(1, base.clone(), 6, etx.clone());
+    r1.session_id = Some("mig".into());
+    router.route(r1);
+    let done1 = recv_done(&erx);
+    assert!(done1.error.is_none());
+
+    // forced cross-shard migration: mints trace 2, shared by both halves
+    let home = router.shard_of("mig");
+    let to = 1 - home;
+    assert!(router.migrate("mig", to), "cached entry must ship");
+
+    // turn 2 lands on the new home under trace 3
+    let mut full = base.clone();
+    full.extend(&done1.token_ids);
+    full.extend([65, 66, 67]);
+    let mut r2 = greedy_request(2, full, 6, etx.clone());
+    r2.session_id = Some("mig".into());
+    router.route(r2);
+    assert!(recv_done(&erx).error.is_none());
+
+    let events_of = |j: &Json| -> Vec<(String, i64)> {
+        j.get("events")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|e| {
+                (
+                    e.get("event").and_then(Json::as_str).unwrap().to_string(),
+                    e.get("shard").and_then(Json::as_i64).unwrap(),
+                )
+            })
+            .collect()
+    };
+
+    // trace 2 = the migration: exactly export-then-import, one event per
+    // shard, merged into a single ordered timeline by the probe
+    let t2 = router.trace_json(2);
+    assert_eq!(t2.get("found").unwrap(), &Json::Bool(true));
+    let evs = events_of(&t2);
+    assert_eq!(
+        evs,
+        vec![("migrate_out".to_string(), home as i64), ("migrate_in".to_string(), to as i64)],
+        "migration trace must show the export on the source shard before \
+         the import on the target shard"
+    );
+
+    // traces 1 and 3 = the two turns: admitted and finished, each wholly
+    // on the shard that owned the session at the time
+    for (trace, shard) in [(1u64, home as i64), (3, to as i64)] {
+        let t = router.trace_json(trace);
+        assert_eq!(t.get("found").unwrap(), &Json::Bool(true), "trace {trace}");
+        let evs = events_of(&t);
+        let names: Vec<&str> = evs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["admit", "finish"], "trace {trace}");
+        assert!(
+            evs.iter().all(|&(_, s)| s == shard),
+            "trace {trace} expected entirely on shard {shard}, got {evs:?}"
+        );
+    }
+
+    // an unknown trace id answers explicitly, not with a fake timeline
+    let none = router.trace_json(999);
+    assert_eq!(none.get("found").unwrap(), &Json::Bool(false));
+    assert!(none.get("events").and_then(Json::as_arr).unwrap().is_empty());
+
+    // the metrics probe aggregates the same registry the engines record
+    // into: both migration halves and all four lifecycle stages counted
+    let m = router.metrics_json();
+    let shard_metric = |s: usize, key: &str| -> i64 {
+        m.get("per_shard").and_then(Json::as_arr).unwrap()[s]
+            .get(key)
+            .and_then(Json::as_i64)
+            .unwrap_or_else(|| panic!("shard {s} missing metric {key}"))
+    };
+    assert_eq!(shard_metric(home, "migrations_out"), 1);
+    assert_eq!(shard_metric(to, "migrations_in"), 1);
+    assert_eq!(shard_metric(home, "completed") + shard_metric(to, "completed"), 2);
+
+    drop(etx);
+    router.finish().unwrap();
+}
+
+#[test]
 fn migration_of_unknown_or_inflight_session_ships_nothing() {
     use holt::serve::{Router, RouterOpts};
     let execs: Vec<Box<dyn Executor + Send>> =
