@@ -1,7 +1,7 @@
 # Build-time entry points. Only the artifact path needs python/jax;
 # tier-1 (`cargo build --release && cargo test -q`) never touches this.
 
-.PHONY: artifacts tier1 train-smoke train-bench serve-smoke serve-sharded-smoke bench-kernels
+.PHONY: artifacts tier1 train-smoke train-bench serve-smoke serve-sharded-smoke bench-kernels state-smoke
 
 # AOT-lower the jax model + attention kernels to HLO-text artifacts
 # under ./artifacts (manifest.json + *.hlo). Requires python3 + jax.
@@ -40,6 +40,26 @@ serve-smoke:
 	  --synthetic --requests 12 --prompt-len 24 --max-tokens 8 \
 	  --policy fair --preempt-tokens 4 --turns 2 \
 	  --metrics-log results/serve_metrics.jsonl
+
+# compact-state smoke (no artifacts): serve with f16 session snapshots
+# under a 4 MiB/shard byte budget (bench_serve.json reports state_dtype,
+# sessions_per_gib and the park/restore histograms), then train a few
+# steps with checkpointing on and verify the container-v2 file loads
+# through the zero-copy mmap reader by resuming from it
+state-smoke:
+	cargo run --release -- serve --backend native --model ho2_tiny \
+	  --synthetic --requests 12 --prompt-len 24 --max-tokens 8 \
+	  --policy fair --turns 2 --state-dtype f16 --session-cache-mb 4
+	grep -q '"sessions_per_gib"' results/bench_serve.json
+	grep -q '"state_dtype"' results/bench_serve.json
+	cargo run --release -- train --backend native --model ho2_tiny \
+	  --task copy --steps 8 --log-every 4 --eval-every 0 \
+	  --ckpt-every 4 --out results/state-smoke
+	cargo run --release -- ckpt-info \
+	  --ckpt results/state-smoke/ho2_tiny_copy.ckpt | grep 'container v2'
+	cargo run --release -- train --backend native --model ho2_tiny \
+	  --task copy --steps 4 --log-every 2 --eval-every 0 \
+	  --resume results/state-smoke/ho2_tiny_copy.ckpt --out results/state-smoke
 
 # multi-shard overload bench: Zipf session reuse over 4 engine shards
 # behind the session router (snapshot migration + load shedding); writes

@@ -4,23 +4,48 @@
 //! step, named f32 leaves).  Written atomically (tmp file + rename) so a
 //! crash mid-save never corrupts the previous checkpoint.
 //!
-//! Layout:
+//! Two container versions, both readable:
+//!
+//! **v1** (legacy, streaming): metadata and payloads interleaved —
+//! reading any leaf means parsing everything before it.
 //! ```text
 //! magic[8] version:u32 step:u64 n_sections:u32
 //! per section: name_len:u32 name[..] n_leaves:u32
 //!   per leaf: name_len:u32 name[..] rank:u32 dims[rank]:u64 data[f32...]
 //! ```
+//!
+//! **v2** (current, mmap-indexable): all metadata up front as an offset
+//! index, every leaf payload at a 64-byte-aligned absolute file offset.
+//! A reader can `mmap` the file and hand out `&[f32]` views of the
+//! payloads without copying or parsing past the header —
+//! [`MmapCheckpoint`].  ([`Checkpoint::load`] materializes v2 through
+//! that same mapping: one `memcpy` per leaf instead of buffered-read
+//! syscall churn.)
+//! ```text
+//! magic[8] version:u32 step:u64 n_sections:u32
+//! per section: name_len:u32 name[..] n_leaves:u32
+//!   per leaf: name_len:u32 name[..] rank:u32 dims[rank]:u64
+//!             offset:u64 nbytes:u64
+//! zero padding to the first 64-byte boundary, then payloads
+//! (each leaf's f32 data at its recorded offset, offsets ascending,
+//!  64-byte-aligned)
+//! ```
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::params::ParamStore;
 use crate::runtime::Tensor;
 
 const MAGIC: &[u8; 8] = b"HOLTCKPT";
-const VERSION: u32 = 1;
+/// Container version new checkpoints are written as.
+pub const VERSION: u32 = 2;
+/// Leaf-payload alignment in v2 files: a cache line, and a multiple of
+/// every scalar size we store — an mmap'd payload is directly usable as
+/// an aligned `&[f32]`.
+pub const PAYLOAD_ALIGN: usize = 64;
 
 /// A full training checkpoint: params + AdamW moments + step counter.
 pub struct Checkpoint {
@@ -66,37 +91,41 @@ fn read_str(r: &mut impl Read) -> Result<String> {
     Ok(String::from_utf8(b)?)
 }
 
+fn align_up(x: usize) -> usize {
+    x.div_ceil(PAYLOAD_ALIGN) * PAYLOAD_ALIGN
+}
+
+fn leaf_bytes(t: &Tensor) -> Result<&[u8]> {
+    let data = t.as_f32()?;
+    // bulk I/O — leaves can be tens of MB
+    Ok(unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) })
+}
+
 impl Checkpoint {
+    /// Save as the current container version (v2).  Atomic: written to a
+    /// tmp file and renamed over `path`.
     pub fn save(&self, path: &Path) -> Result<()> {
+        self.save_as(path, VERSION)
+    }
+
+    /// Save as an explicit container version — v1 exists for
+    /// compatibility coverage (old readers, and tests that pin the
+    /// v1→v2 upgrade path).
+    pub fn save_as(&self, path: &Path, version: u32) -> Result<()> {
+        ensure!(
+            version == 1 || version == 2,
+            "cannot write checkpoint container version {version}"
+        );
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let tmp = path.with_extension("tmp");
         {
             let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
-            w.write_all(MAGIC)?;
-            write_u32(&mut w, VERSION)?;
-            write_u64(&mut w, self.step)?;
-            write_u32(&mut w, self.sections.len() as u32)?;
-            for (name, store) in &self.sections {
-                write_str(&mut w, name)?;
-                write_u32(&mut w, store.len() as u32)?;
-                for (leaf_name, t) in store.names.iter().zip(&store.leaves) {
-                    write_str(&mut w, leaf_name)?;
-                    write_u32(&mut w, t.shape.len() as u32)?;
-                    for &d in &t.shape {
-                        write_u64(&mut w, d as u64)?;
-                    }
-                    let data = t.as_f32()?;
-                    // bulk write — leaves can be tens of MB
-                    let bytes: &[u8] = unsafe {
-                        std::slice::from_raw_parts(
-                            data.as_ptr() as *const u8,
-                            data.len() * 4,
-                        )
-                    };
-                    w.write_all(bytes)?;
-                }
+            if version == 1 {
+                self.write_v1(&mut w)?;
+            } else {
+                self.write_v2(&mut w)?;
             }
             w.flush()?;
         }
@@ -104,7 +133,88 @@ impl Checkpoint {
         Ok(())
     }
 
+    fn write_v1(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(MAGIC)?;
+        write_u32(w, 1)?;
+        write_u64(w, self.step)?;
+        write_u32(w, self.sections.len() as u32)?;
+        for (name, store) in &self.sections {
+            write_str(w, name)?;
+            write_u32(w, store.len() as u32)?;
+            for (leaf_name, t) in store.names.iter().zip(&store.leaves) {
+                write_str(w, leaf_name)?;
+                write_u32(w, t.shape.len() as u32)?;
+                for &d in &t.shape {
+                    write_u64(w, d as u64)?;
+                }
+                w.write_all(leaf_bytes(t)?)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn write_v2(&self, w: &mut impl Write) -> Result<()> {
+        // pass 1: the header size is deterministic (offset/nbytes are
+        // fixed-width), so leaf offsets can be assigned before anything
+        // is written
+        let mut header = 8 + 4 + 8 + 4;
+        for (name, store) in &self.sections {
+            header += 4 + name.len() + 4;
+            for (leaf_name, t) in store.names.iter().zip(&store.leaves) {
+                header += 4 + leaf_name.len() + 4 + 8 * t.shape.len() + 8 + 8;
+            }
+        }
+        let mut cursor = align_up(header);
+        let mut offsets = Vec::new();
+        for (_, store) in &self.sections {
+            for t in &store.leaves {
+                let nbytes = t.shape.iter().product::<usize>() * 4;
+                offsets.push((cursor, nbytes));
+                cursor = align_up(cursor + nbytes);
+            }
+        }
+        // pass 2: header with the index, padding, then the payloads
+        w.write_all(MAGIC)?;
+        write_u32(w, 2)?;
+        write_u64(w, self.step)?;
+        write_u32(w, self.sections.len() as u32)?;
+        let mut it = offsets.iter();
+        for (name, store) in &self.sections {
+            write_str(w, name)?;
+            write_u32(w, store.len() as u32)?;
+            for (leaf_name, t) in store.names.iter().zip(&store.leaves) {
+                let &(offset, nbytes) = it.next().expect("one offset per leaf");
+                write_str(w, leaf_name)?;
+                write_u32(w, t.shape.len() as u32)?;
+                for &d in &t.shape {
+                    write_u64(w, d as u64)?;
+                }
+                write_u64(w, offset as u64)?;
+                write_u64(w, nbytes as u64)?;
+            }
+        }
+        let mut pos = header;
+        let mut it = offsets.iter();
+        for (_, store) in &self.sections {
+            for t in &store.leaves {
+                let &(offset, nbytes) = it.next().expect("one offset per leaf");
+                w.write_all(&vec![0u8; offset - pos])?;
+                w.write_all(leaf_bytes(t)?)?;
+                pos = offset + nbytes;
+            }
+        }
+        Ok(())
+    }
+
     pub fn load(path: &Path) -> Result<Checkpoint> {
+        match container_version(path)? {
+            1 => Self::load_v1(path),
+            2 => Ok(MmapCheckpoint::open(path)?.to_checkpoint()),
+            v => bail!("unsupported checkpoint version {v}"),
+        }
+    }
+
+    fn load_v1(path: &Path) -> Result<Checkpoint> {
         let mut r = BufReader::new(
             std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
         );
@@ -114,9 +224,7 @@ impl Checkpoint {
             bail!("{path:?} is not a HOLT checkpoint");
         }
         let version = read_u32(&mut r)?;
-        if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
-        }
+        ensure!(version == 1, "load_v1 called on a v{version} file");
         let step = read_u64(&mut r)?;
         let n_sections = read_u32(&mut r)? as usize;
         let mut sections = Vec::with_capacity(n_sections);
@@ -155,6 +263,247 @@ impl Checkpoint {
     }
 }
 
+/// Container version of a checkpoint file (reads only the 12-byte
+/// preamble) — `ckpt-info` reports it, [`Checkpoint::load`] dispatches
+/// on it.
+pub fn container_version(path: &Path) -> Result<u32> {
+    let mut r = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut pre = [0u8; 12];
+    r.read_exact(&mut pre)
+        .with_context(|| format!("{path:?} is too short to be a checkpoint"))?;
+    if &pre[..8] != MAGIC {
+        bail!("{path:?} is not a HOLT checkpoint");
+    }
+    Ok(u32::from_le_bytes(pre[8..12].try_into().unwrap()))
+}
+
+// ---------------------------------------------------------------------------
+// zero-copy v2 reader
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// File bytes behind an [`MmapCheckpoint`]: a real mapping on unix, a
+/// heap copy elsewhere (same API, one extra copy).  The heap fallback
+/// allocates `u64`s so payload views keep ≥ 8-byte alignment.
+enum Backing {
+    #[cfg(unix)]
+    Mapped {
+        ptr: *const u8,
+        len: usize,
+    },
+    // on unix builds only the mapped variant is ever constructed
+    #[cfg_attr(unix, allow(dead_code))]
+    Heap {
+        buf: Vec<u64>,
+        len: usize,
+    },
+}
+
+impl Backing {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Backing::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self {
+            unsafe {
+                sys::munmap(*ptr as *mut std::os::raw::c_void, *len);
+            }
+        }
+    }
+}
+
+struct LeafIndex {
+    name: String,
+    shape: Vec<usize>,
+    offset: usize,
+    nbytes: usize,
+}
+
+/// Zero-copy reader for v2 checkpoints: the file is mapped read-only
+/// and every leaf is an aligned `&[f32]` view straight into the mapping
+/// — no payload is parsed, copied or even touched until asked for.
+pub struct MmapCheckpoint {
+    backing: Backing,
+    step: u64,
+    index: Vec<(String, Vec<LeafIndex>)>,
+}
+
+impl MmapCheckpoint {
+    pub fn open(path: &Path) -> Result<MmapCheckpoint> {
+        let backing = Self::map(path)?;
+        let bytes = backing.bytes();
+        let mut r: &[u8] = bytes;
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a HOLT checkpoint");
+        }
+        let version = read_u32(&mut r)?;
+        ensure!(
+            version == 2,
+            "zero-copy loads need a v2 checkpoint, {path:?} is v{version} \
+             (Checkpoint::load reads it; re-saving writes v2)"
+        );
+        let step = read_u64(&mut r)?;
+        let n_sections = read_u32(&mut r)? as usize;
+        let mut index = Vec::with_capacity(n_sections);
+        for _ in 0..n_sections {
+            let name = read_str(&mut r)?;
+            let n_leaves = read_u32(&mut r)? as usize;
+            let mut leaves = Vec::with_capacity(n_leaves);
+            for _ in 0..n_leaves {
+                let leaf_name = read_str(&mut r)?;
+                let rank = read_u32(&mut r)? as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(read_u64(&mut r)? as usize);
+                }
+                let offset = read_u64(&mut r)? as usize;
+                let nbytes = read_u64(&mut r)? as usize;
+                let n: usize = shape.iter().product();
+                ensure!(
+                    nbytes == n * 4,
+                    "leaf '{leaf_name}': index says {nbytes} bytes, shape {shape:?} needs {}",
+                    n * 4
+                );
+                ensure!(
+                    offset % PAYLOAD_ALIGN == 0,
+                    "leaf '{leaf_name}': payload offset {offset} is not {PAYLOAD_ALIGN}-byte aligned"
+                );
+                ensure!(
+                    offset.checked_add(nbytes).is_some_and(|end| end <= bytes.len()),
+                    "leaf '{leaf_name}': payload [{offset}, {offset}+{nbytes}) \
+                     exceeds file size {} (truncated checkpoint?)",
+                    bytes.len()
+                );
+                leaves.push(LeafIndex { name: leaf_name, shape, offset, nbytes });
+            }
+            index.push((name, leaves));
+        }
+        Ok(MmapCheckpoint { backing, step, index })
+    }
+
+    #[cfg(unix)]
+    fn map(path: &Path) -> Result<Backing> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        let len = f.metadata()?.len() as usize;
+        ensure!(len >= 12, "{path:?} is too short to be a checkpoint");
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            bail!("mmap({path:?}, {len} bytes) failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Backing::Mapped { ptr: ptr as *const u8, len })
+    }
+
+    #[cfg(not(unix))]
+    fn map(path: &Path) -> Result<Backing> {
+        let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        ensure!(raw.len() >= 12, "{path:?} is too short to be a checkpoint");
+        let mut buf = vec![0u64; raw.len().div_ceil(8)];
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), buf.as_mut_ptr() as *mut u8, raw.len());
+        }
+        Ok(Backing::Heap { buf, len: raw.len() })
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn section_names(&self) -> Vec<&str> {
+        self.index.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn leaf_names(&self, section: &str) -> Vec<&str> {
+        self.index
+            .iter()
+            .find(|(n, _)| n == section)
+            .map(|(_, ls)| ls.iter().map(|l| l.name.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Borrow one leaf without copying: `(shape, data)` where `data`
+    /// points into the mapping (64-byte-aligned by the v2 layout).
+    pub fn leaf(&self, section: &str, leaf: &str) -> Result<(&[usize], &[f32])> {
+        let (_, leaves) = self
+            .index
+            .iter()
+            .find(|(n, _)| n == section)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint has no section '{section}'"))?;
+        let l = leaves
+            .iter()
+            .find(|l| l.name == leaf)
+            .ok_or_else(|| anyhow::anyhow!("section '{section}' has no leaf '{leaf}'"))?;
+        let bytes = &self.backing.bytes()[l.offset..l.offset + l.nbytes];
+        debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+        let data =
+            unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, l.nbytes / 4) };
+        Ok((&l.shape, data))
+    }
+
+    /// Materialize into an owned [`Checkpoint`] — one `memcpy` per leaf
+    /// straight out of the mapping (the [`Checkpoint::load`] v2 path).
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let sections = self
+            .index
+            .iter()
+            .map(|(name, leaves)| {
+                let names = leaves.iter().map(|l| l.name.clone()).collect();
+                let tensors = leaves
+                    .iter()
+                    .map(|l| {
+                        let (shape, data) = self
+                            .leaf(name, &l.name)
+                            .expect("index entries resolve against their own index");
+                        Tensor::f32(shape.to_vec(), data.to_vec())
+                    })
+                    .collect();
+                (name.clone(), ParamStore { names, leaves: tensors })
+            })
+            .collect();
+        Checkpoint { step: self.step, sections }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,27 +518,102 @@ mod tests {
         ParamStore::init(&spec, &mut Rng::new(seed))
     }
 
-    #[test]
-    fn roundtrip() {
-        let dir = std::env::temp_dir().join("holt_ckpt_test");
-        let path = dir.join("test.ckpt");
-        let ck = Checkpoint {
+    fn checkpoint() -> Checkpoint {
+        Checkpoint {
             step: 123,
             sections: vec![
                 ("params".into(), store(1)),
                 ("m".into(), store(2)),
                 ("v".into(), store(3)),
             ],
-        };
-        ck.save(&path).unwrap();
-        let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(back.step, 123);
-        assert_eq!(back.sections.len(), 3);
-        for (orig, loaded) in ck.sections.iter().zip(&back.sections) {
+        }
+    }
+
+    fn assert_same(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.sections.len(), b.sections.len());
+        for (orig, loaded) in a.sections.iter().zip(&b.sections) {
             assert_eq!(orig.0, loaded.0);
             assert_eq!(orig.1.names, loaded.1.names);
             assert_eq!(orig.1.leaves, loaded.1.leaves);
         }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("holt_ckpt_test");
+        let path = dir.join("test.ckpt");
+        let ck = checkpoint();
+        ck.save(&path).unwrap();
+        assert_eq!(container_version(&path).unwrap(), VERSION);
+        let back = Checkpoint::load(&path).unwrap();
+        assert_same(&ck, &back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        // the backward-compat pin: a checkpoint saved by the pre-v2 code
+        // (bit-identical writer, kept as save_as(.., 1)) must keep
+        // loading to the same tensors forever
+        let dir = std::env::temp_dir().join("holt_ckpt_test_v1");
+        let path = dir.join("old.ckpt");
+        let ck = checkpoint();
+        ck.save_as(&path, 1).unwrap();
+        assert_eq!(container_version(&path).unwrap(), 1);
+        let back = Checkpoint::load(&path).unwrap();
+        assert_same(&ck, &back);
+        // and re-saving upgrades the container without touching the data
+        let upgraded = dir.join("new.ckpt");
+        back.save(&upgraded).unwrap();
+        assert_eq!(container_version(&upgraded).unwrap(), 2);
+        assert_same(&ck, &Checkpoint::load(&upgraded).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_views_match_without_copying() {
+        let dir = std::env::temp_dir().join("holt_ckpt_test_mmap");
+        let path = dir.join("test.ckpt");
+        let ck = checkpoint();
+        ck.save(&path).unwrap();
+        let m = MmapCheckpoint::open(&path).unwrap();
+        assert_eq!(m.step(), 123);
+        assert_eq!(m.section_names(), vec!["params", "m", "v"]);
+        assert_eq!(m.leaf_names("params"), vec!["a", "b"]);
+        for (name, store) in &ck.sections {
+            for (leaf, t) in store.names.iter().zip(&store.leaves) {
+                let (shape, data) = m.leaf(name, leaf).unwrap();
+                assert_eq!(shape, &t.shape[..]);
+                assert_eq!(data, &t.as_f32().unwrap()[..]);
+                // f32 views demand 4-byte alignment; the mapped path
+                // additionally lands on the 64-byte file alignment
+                assert_eq!(data.as_ptr() as usize % 4, 0);
+            }
+        }
+        assert_same(&ck, &m.to_checkpoint());
+        assert!(m.leaf("params", "nope").is_err());
+        assert!(m.leaf("nope", "a").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_rejects_v1_and_truncation() {
+        let dir = std::env::temp_dir().join("holt_ckpt_test_reject");
+        let v1 = dir.join("v1.ckpt");
+        checkpoint().save_as(&v1, 1).unwrap();
+        let err = MmapCheckpoint::open(&v1).unwrap_err().to_string();
+        assert!(err.contains("v2"), "{err}");
+
+        // a truncated v2 file fails the index bounds check up front,
+        // not with a fault on first payload touch
+        let v2 = dir.join("v2.ckpt");
+        checkpoint().save(&v2).unwrap();
+        let full = std::fs::read(&v2).unwrap();
+        let cut = dir.join("cut.ckpt");
+        std::fs::write(&cut, &full[..full.len() - 16]).unwrap();
+        let err = MmapCheckpoint::open(&cut).unwrap_err().to_string();
+        assert!(err.contains("exceeds file size"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -200,6 +624,15 @@ mod tests {
         let path = dir.join("garbage.ckpt");
         std::fs::write(&path, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        assert!(MmapCheckpoint::open(&path).is_err());
+        let vpath = dir.join("future.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&vpath, &bytes).unwrap();
+        let err = Checkpoint::load(&vpath).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version 99"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

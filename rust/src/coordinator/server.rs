@@ -100,6 +100,7 @@ struct EngineMetrics {
     decode_step_us: Histo,
     sample_us: Histo,
     park_us: Histo,
+    restore_us: Histo,
     migrate_us: Histo,
     ttft_us: Histo,
     request_us: Histo,
@@ -131,6 +132,7 @@ impl EngineMetrics {
             decode_step_us: registry.histo("decode_step_us"),
             sample_us: registry.histo("sample_us"),
             park_us: registry.histo("park_us"),
+            restore_us: registry.histo("restore_us"),
             migrate_us: registry.histo("migrate_us"),
             ttft_us: registry.histo("ttft_us"),
             request_us: registry.histo("request_us"),
@@ -183,6 +185,23 @@ pub struct ServeStats {
     /// per-slot decode state footprint (bytes) — O(1) in context for
     /// ho2/linear, max_len-sized KV cache for softmax
     pub state_bytes_per_slot: usize,
+    /// wire dtype cached session snapshots are encoded in
+    /// (`--state-dtype`; "f64" = the lossless default)
+    pub state_dtype: String,
+    /// session-cache byte budget (`--session-cache-mb`)
+    pub session_cache_bytes: usize,
+    /// resident sessions a GiB of cache holds at the active dtype
+    /// (encoded snapshot + header; analytic, so it is exact even for a
+    /// run too small to fill a GiB)
+    pub sessions_per_gib: f64,
+    /// park (state encode on preemption / session retain) latencies, µs
+    pub park: HistoSnapshot,
+    /// restore (state decode on resume / session hit) latencies, µs
+    pub restore: HistoSnapshot,
+    /// comparative per-dtype footprint block (encoded bytes,
+    /// sessions-per-GiB, density vs the f64 baseline) — the before/after
+    /// record `bench_serve.json` carries for every run
+    pub state_footprint: Json,
 }
 
 impl ServeStats {
@@ -236,6 +255,9 @@ impl ServeStats {
             ("n_slots", self.n_slots.into()),
             ("policy", self.policy.as_str().into()),
             ("state_bytes_per_slot", self.state_bytes_per_slot.into()),
+            ("state_dtype", self.state_dtype.as_str().into()),
+            ("session_cache_bytes", self.session_cache_bytes.into()),
+            ("sessions_per_gib", self.sessions_per_gib.into()),
             ("requests_completed", (self.completed as i64).into()),
             ("requests_rejected", (self.rejected as i64).into()),
             ("generated_tokens", (self.generated_tokens as i64).into()),
@@ -255,9 +277,46 @@ impl ServeStats {
         };
         self.ttft.push_ms_fields("ttft", &mut fields);
         self.per_request.push_ms_fields("latency", &mut fields);
+        self.park.push_ms_fields("park", &mut fields);
+        self.restore.push_ms_fields("restore", &mut fields);
+        fields.push(("state_footprint".to_string(), self.state_footprint.clone()));
         fields.push(("metrics".to_string(), self.metrics.clone()));
         Json::Obj(fields)
     }
+}
+
+/// Resident sessions one GiB holds when snapshots are encoded as
+/// `dtype` for a state of `state_elems` f64 elements (payload + the
+/// snapshot header [`SessionSnapshot::bytes`] counts).
+fn sessions_per_gib(dtype: crate::state::StateDtype, state_elems: usize) -> f64 {
+    let entry = dtype.encoded_len(state_elems)
+        + std::mem::size_of::<crate::model::SessionSnapshot>();
+    (1u64 << 30) as f64 / entry as f64
+}
+
+/// The per-dtype footprint comparison `bench_serve.json` records on
+/// every run: encoded bytes per session, sessions-per-GiB, and density
+/// relative to the f64 baseline — analytic from the executor's state
+/// size, so one run reports the whole dtype sweep (the acceptance
+/// check reads the ≥3× f16-vs-f64 ratio straight off this block).
+fn state_footprint_json(state_elems: usize) -> Json {
+    let f64_per_gib = sessions_per_gib(crate::state::StateDtype::F64, state_elems);
+    let mut fields: Vec<(String, Json)> = vec![(
+        "state_elements".to_string(),
+        Json::Num(state_elems as f64),
+    )];
+    for dtype in crate::state::StateDtype::ALL {
+        let per_gib = sessions_per_gib(dtype, state_elems);
+        fields.push((
+            dtype.name().to_string(),
+            obj(vec![
+                ("encoded_bytes", dtype.encoded_len(state_elems).into()),
+                ("sessions_per_gib", per_gib.into()),
+                ("density_vs_f64", (per_gib / f64_per_gib).into()),
+            ]),
+        ));
+    }
+    Json::Obj(fields)
 }
 
 /// The continuous-batching engine over any [`Executor`], scheduled by
@@ -315,7 +374,7 @@ impl<'a> Engine<'a> {
             max_len,
             scheduler: Scheduler::new(opts.policy),
             prefiller: Prefiller::new(opts.prefill_chunk),
-            sessions: SessionCache::new(if snapshots { opts.session_capacity } else { 0 }),
+            sessions: SessionCache::new(if snapshots { opts.session_cache_bytes } else { 0 }),
             chunked,
             snapshots,
             metrics: EngineMetrics::new(),
@@ -438,6 +497,15 @@ impl<'a> Engine<'a> {
             n_slots: self.n_slots(),
             policy: self.scheduler.policy().name().to_string(),
             state_bytes_per_slot: self.exec.state_bytes_per_slot(),
+            state_dtype: self.opts.state_dtype.name().to_string(),
+            session_cache_bytes: self.opts.session_cache_bytes,
+            sessions_per_gib: sessions_per_gib(
+                self.opts.state_dtype,
+                self.exec.state_bytes_per_slot() / 8,
+            ),
+            park: m.park_us.snapshot(),
+            restore: m.restore_us.snapshot(),
+            state_footprint: state_footprint_json(self.exec.state_bytes_per_slot() / 8),
         }
     }
 
@@ -551,9 +619,14 @@ impl<'a> Engine<'a> {
             utf8_buf: Vec::new(),
         };
         if let Some(w) = resume {
-            // parked preempted work: restore the snapshot and continue
-            // decoding exactly where it stopped — no prefix replay
-            self.exec.restore_slot(slot, &w.snapshot)?;
+            // parked preempted work: restore the snapshot (always f64 —
+            // parks are transient, and the bit-exact resume pin depends
+            // on it) and continue decoding exactly where it stopped —
+            // no prefix replay
+            {
+                let _span = self.metrics.restore_us.span();
+                self.exec.restore_slot(slot, &w.snapshot)?;
+            }
             a.prompt_pos = a.req.prompt_ids.len();
             a.absorbed = w.absorbed;
             a.generated = w.generated;
@@ -569,7 +642,12 @@ impl<'a> Engine<'a> {
                 if let Some(e) = self.sessions.lookup(&sid, &a.req.prompt_ids) {
                     let snap = e.snapshot.clone();
                     let tokens = e.tokens.clone();
-                    self.exec.restore_slot(slot, &snap)?;
+                    // rehydrates the f64 live state whatever dtype the
+                    // cache holds (the restore side of `--state-dtype`)
+                    {
+                        let _span = self.metrics.restore_us.span();
+                        self.exec.restore_slot(slot, &snap)?;
+                    }
                     a.prompt_pos = tokens.len();
                     a.absorbed = tokens;
                     self.metrics.session_hits.inc();
@@ -736,11 +814,16 @@ impl<'a> Engine<'a> {
         self.metrics.ttft_us.record(ttft.as_micros() as u64);
         self.metrics.request_us.record(now.duration_since(req.enqueued).as_micros() as u64);
         self.flight.record(FlightEvent::Finish, req.trace, req.id);
-        if self.snapshots && self.sessions.capacity() > 0 {
+        if self.snapshots && self.sessions.budget() > 0 {
             if let Some(sid) = req.session_id.clone() {
                 // the final O(1) state costs a few KiB to keep — a
-                // follow-up extending `absorbed` skips this whole prefix
+                // follow-up extending `absorbed` skips this whole prefix;
+                // cached copies carry the configured `--state-dtype`
+                // (parks stay f64 — only retained sessions pay the
+                // quantization for density)
+                let _span = self.metrics.park_us.span();
                 if let Ok(snapshot) = self.exec.snapshot_slot(slot_idx) {
+                    let snapshot = snapshot.transcode(self.opts.state_dtype);
                     self.sessions.insert(sid, SessionEntry { snapshot, tokens: absorbed });
                 }
             }
@@ -925,13 +1008,14 @@ pub fn serve_tcp_sharded(
     eprintln!(
         "[serve] {} backend, model {} — listening on {addr} with {} shard(s) \
          (JSON lines: {{\"prompt\": ..}} or {{\"stats\": true}}; \
-         policy={} chunk={} sessions/shard={} preempt={} global_queue={})",
+         policy={} chunk={} session_cache/shard={}MiB state_dtype={} preempt={} global_queue={})",
         execs[0].backend_name(),
         execs[0].model().name,
         execs.len(),
         opts.policy.name(),
         opts.prefill_chunk,
-        opts.session_capacity,
+        opts.session_cache_bytes >> 20,
+        opts.state_dtype,
         opts.preempt_tokens,
         ropts.global_queue,
     );

@@ -60,6 +60,7 @@ pub mod plot;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod state;
 pub mod tokenizer;
 
 /// Locate the artifacts directory: `$HOLT_ARTIFACTS` if set (validated),

@@ -40,6 +40,7 @@ use holt::params::ParamStore;
 use holt::rng::Rng;
 use holt::runtime::{ModelEntry, Runtime};
 use holt::serve::{Policy, ServeOpts};
+use holt::state::StateDtype;
 
 /// Parsed `--key value` flags (plus bare `--flag` booleans).
 struct Args {
@@ -131,9 +132,14 @@ COMMANDS
   serve      --model M [--backend native|artifact --ckpt FILE
              --addr HOST:PORT --seed S]
              [--policy fifo|priority|fair --prefill-chunk N
-              --session-cache N --preempt-tokens N --queue-cap N --stream]
+              --session-cache-mb N --state-dtype f64|f32|f16|bf16|int8
+              --preempt-tokens N --queue-cap N --stream]
              (scheduler: chunked prefill, O(1)-state preemption when
-              waiters queue, LRU session cache, streamed deltas)
+              waiters queue, byte-budgeted LRU session cache, streamed
+              deltas; --state-dtype picks the wire encoding for cached
+              snapshots — f64 is bit-lossless, f16/bf16/int8 trade
+              bounded logit drift for 4-8x more resident sessions;
+              restore always rehydrates full-precision state)
              [--shards N --global-queue N]
              (TCP serving runs N engine shards — default one per core;
               --shards 1 restores the single engine — behind a session
@@ -176,12 +182,14 @@ COMMANDS
                                            terminal chart of metric curves
   ckpt-info  --ckpt FILE                   inspect a checkpoint
 
-Native model names: {attn}_{preset}[_aA][_oR] with attn in {ho, ho2,
-linear, softmax} and preset in {tiny, small, base, large}, e.g.
+Native model names: {attn}_{preset}[_aA][_oR][_sD] with attn in {ho,
+ho2, linear, softmax} and preset in {tiny, small, base, large}, e.g.
 ho2_small, linear_tiny, ho2_tiny_a1_o1.  `ho` is the Taylor kernel at
 any order R (default 2) — ho_tiny_o3 runs the order-3 experiment the
-paper never did; `ho2` stays as the historic alias.  The artifact path
-locates artifacts via $HOLT_ARTIFACTS or ./artifacts.
+paper never did; `ho2` stays as the historic alias.  `_sD` with D in
+{f64, f32, f16, bf16, int8} sets the model's default snapshot dtype
+(e.g. ho2_tiny_sf16; serve --state-dtype overrides).  The artifact
+path locates artifacts via $HOLT_ARTIFACTS or ./artifacts.
 ";
 
 fn main() {
@@ -480,12 +488,19 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 /// `holt serve` scheduler flags → [`ServeOpts`] (defaults come from
 /// `ServeOpts::default()` so the flag defaults can't drift from it).
-fn serve_opts(args: &Args) -> Result<ServeOpts> {
+/// `model_default` is the model's `_s{dtype}` preset suffix, used when
+/// no `--state-dtype` flag is given.
+fn serve_opts(args: &Args, model_default: StateDtype) -> Result<ServeOpts> {
     let d = ServeOpts::default();
     Ok(ServeOpts {
         policy: Policy::parse(args.get("policy").unwrap_or(d.policy.name()))?,
         prefill_chunk: args.get_usize("prefill-chunk", d.prefill_chunk)?,
-        session_capacity: args.get_usize("session-cache", d.session_capacity)?,
+        session_cache_bytes: args.get_usize("session-cache-mb", d.session_cache_bytes >> 20)?
+            << 20,
+        state_dtype: match args.get("state-dtype") {
+            Some(s) => StateDtype::parse(s)?,
+            None => model_default,
+        },
         preempt_tokens: args.get_usize("preempt-tokens", d.preempt_tokens)?,
         queue_capacity: args.get_usize("queue-cap", d.queue_capacity)?,
         stream_default: args.has("stream") || d.stream_default,
@@ -501,7 +516,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 0)? as u64,
         ..Default::default()
     };
-    let opts = serve_opts(args)?;
+    // the `_s{dtype}` preset suffix is the model's snapshot-dtype
+    // default; artifact-manifest names that don't parse natively fall
+    // back to lossless f64 (the `--state-dtype` flag overrides either)
+    let model_default = native_model_entry(&cfg.model)
+        .map(|e| e.config.state_dtype)
+        .unwrap_or_default();
+    let opts = serve_opts(args, model_default)?;
     let backend = backend_of(args)?;
     let build = || build_executor(backend, &cfg.model, cfg.ckpt.as_deref(), cfg.seed);
     // --shards N: N engine shards behind the session router; N = 0 (or
@@ -898,8 +919,13 @@ fn cmd_ckpt_info(args: &Args) -> Result<()> {
     let path = args
         .get("ckpt")
         .ok_or_else(|| anyhow::anyhow!("--ckpt FILE required"))?;
+    let version = holt::checkpoint::container_version(std::path::Path::new(path))?;
     let ck = Checkpoint::load(std::path::Path::new(path))?;
-    println!("{path}: step {}", ck.step);
+    println!(
+        "{path}: step {} (container v{version}{})",
+        ck.step,
+        if version >= 2 { ", mmap-indexable" } else { "" }
+    );
     for (name, store) in &ck.sections {
         println!(
             "  section '{}': {} leaves, {} elements ({:.1} MiB)",
@@ -954,6 +980,27 @@ mod tests {
         let a = parse(&["--steps", "abc"]);
         assert!(a.get_usize("steps", 0).is_err());
         assert!(a.get_f64("steps", 0.0).is_err());
+    }
+
+    #[test]
+    fn serve_state_flags_resolve() {
+        use holt::state::StateDtype;
+        // flag wins over the model's preset-suffix default
+        let a = parse(&["--state-dtype", "f16"]);
+        assert_eq!(super::serve_opts(&a, StateDtype::Int8).unwrap().state_dtype, StateDtype::F16);
+        // no flag: the model default flows through
+        let b = parse(&[]);
+        let o = super::serve_opts(&b, StateDtype::Int8).unwrap();
+        assert_eq!(o.state_dtype, StateDtype::Int8);
+        assert_eq!(o.session_cache_bytes, holt::serve::ServeOpts::default().session_cache_bytes);
+        // --session-cache-mb is MiB on the wire, bytes in ServeOpts
+        let c = parse(&["--session-cache-mb", "4"]);
+        assert_eq!(super::serve_opts(&c, StateDtype::F64).unwrap().session_cache_bytes, 4 << 20);
+        let z = parse(&["--session-cache-mb", "0"]);
+        assert_eq!(super::serve_opts(&z, StateDtype::F64).unwrap().session_cache_bytes, 0);
+        // unknown dtypes fail loudly at flag-parse time, not mid-serve
+        let d = parse(&["--state-dtype", "q4"]);
+        assert!(super::serve_opts(&d, StateDtype::F64).is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::model::forward::{
     block_finish_into, block_qkv_into, fan_out, gather_head, scatter_head, NativeModel,
 };
 use crate::model::nn;
+use crate::state::{SnapshotCodec, StateDtype};
 
 /// Per-sequence decode state: `n_layers · n_heads` kernel states + the
 /// next position.  Create with [`DecodeSession::new`], drive with
@@ -86,23 +87,76 @@ impl DecodeScratch {
 }
 
 /// A serialized [`DecodeSession`] state (slot preemption / migration /
-/// the serve session cache).  `Default` is the empty snapshot (position
-/// 0, no state) — a placeholder, restorable only into a 0-state session.
+/// the serve session cache).  The state rides as *encoded bytes* in one
+/// of the [`StateDtype`] wire formats (f64 passthrough by default —
+/// bit-lossless, today's park format byte for byte); restore always
+/// rehydrates the full-precision f64 live state.  `Default` is the
+/// empty snapshot (position 0, no state) — a placeholder, restorable
+/// only into a 0-state session.
+///
+/// Equality compares encoded bytes, which for the f64 dtype is *bit*
+/// equality of the state — stricter than the old `Vec<f64>` compare
+/// (and exactly what the chunked-vs-streaming pins claim).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SessionSnapshot {
     pos: usize,
-    state: Vec<f64>,
+    /// Decoded (f64) element count — the shape check on restore.
+    n_elems: usize,
+    dtype: StateDtype,
+    encoded: Vec<u8>,
 }
 
 impl SessionSnapshot {
+    /// Encode a raw state vector (the layout `save_state` produces) at
+    /// position `pos` into `dtype`'s wire format.
+    pub fn encode(pos: usize, state: &[f64], dtype: StateDtype) -> SessionSnapshot {
+        SessionSnapshot {
+            pos,
+            n_elems: state.len(),
+            dtype,
+            encoded: SnapshotCodec::new(dtype).encode(state),
+        }
+    }
+
     /// Position the snapshot resumes from.
     pub fn pos(&self) -> usize {
         self.pos
     }
 
-    /// Serialized size in bytes (f64 state + position).
+    /// Wire dtype the state is encoded in.
+    pub fn dtype(&self) -> StateDtype {
+        self.dtype
+    }
+
+    /// Decoded f64 element count.
+    pub fn state_elements(&self) -> usize {
+        self.n_elems
+    }
+
+    /// Resident size in bytes (encoded payload + struct header) — the
+    /// unit the byte-budgeted session cache accounts in.
     pub fn bytes(&self) -> usize {
-        self.state.len() * std::mem::size_of::<f64>() + std::mem::size_of::<usize>()
+        self.encoded.len() + std::mem::size_of::<SessionSnapshot>()
+    }
+
+    /// Rehydrate the full-precision state vector.  (Infallible by
+    /// construction — the payload length invariantly matches `n_elems`;
+    /// the fields are private so no external code can break that.)
+    pub fn decode_state(&self) -> Vec<f64> {
+        SnapshotCodec::new(self.dtype)
+            .decode(&self.encoded, self.n_elems)
+            .expect("snapshot payload length is maintained by construction")
+    }
+
+    /// Re-encode into another dtype.  Same-dtype transcodes are a plain
+    /// clone (no decode/encode round-trip); every codec is idempotent,
+    /// so a lossy snapshot transcoded onward degrades no further than
+    /// its first encode did.
+    pub fn transcode(&self, dtype: StateDtype) -> SessionSnapshot {
+        if dtype == self.dtype {
+            return self.clone();
+        }
+        SessionSnapshot::encode(self.pos, &self.decode_state(), dtype)
     }
 }
 
@@ -153,28 +207,37 @@ impl DecodeSession {
         self.state_elements() * std::mem::size_of::<f64>()
     }
 
-    /// Serialize the full session state.
+    /// Serialize the full session state — f64 passthrough (bit-lossless;
+    /// the preemption park path depends on that).
     pub fn snapshot(&self) -> SessionSnapshot {
+        self.snapshot_as(StateDtype::F64)
+    }
+
+    /// Serialize the full session state into `dtype`'s wire format in
+    /// one pass (no intermediate f64 snapshot to transcode).
+    pub fn snapshot_as(&self, dtype: StateDtype) -> SessionSnapshot {
         let mut state = Vec::with_capacity(self.state_elements());
         for s in &self.states {
             s.save_state(&mut state);
         }
-        SessionSnapshot { pos: self.pos, state }
+        SessionSnapshot::encode(self.pos, &state, dtype)
     }
 
-    /// Restore a snapshot taken from a session of the same model shape.
+    /// Restore a snapshot taken from a session of the same model shape,
+    /// rehydrating the f64 live state whatever the snapshot's dtype.
     pub fn restore(&mut self, snap: &SessionSnapshot) -> Result<()> {
         ensure!(
-            snap.state.len() == self.state_elements(),
+            snap.state_elements() == self.state_elements(),
             "snapshot has {} state elements, session expects {} \
              (snapshot from a different model?)",
-            snap.state.len(),
+            snap.state_elements(),
             self.state_elements()
         );
+        let state = snap.decode_state();
         let mut off = 0;
         for s in &mut self.states {
             let n = s.state_elements();
-            s.load_state(&snap.state[off..off + n]);
+            s.load_state(&state[off..off + n]);
             off += n;
         }
         self.pos = snap.pos;
@@ -405,6 +468,87 @@ mod tests {
         s.absorb_chunk(&m, &toks).unwrap();
         assert_eq!(s.pos(), max);
         assert!(s.absorb_chunk(&m, &[1]).is_err(), "context exhausted");
+    }
+
+    #[test]
+    fn f64_park_format_round_trips_bit_exactly() {
+        // the default (f64 passthrough) park format: snapshot -> restore
+        // -> snapshot is the identity down to the bit, and continuation
+        // from the restored state is bit-identical to never parking
+        let m = model("ho2_tiny");
+        let mut s = DecodeSession::new(&m).unwrap();
+        let toks: Vec<i32> = (0..31).map(|i| (i * 7 + 3) % 256).collect();
+        s.absorb_chunk(&m, &toks).unwrap();
+        let park = s.snapshot();
+        assert_eq!(park.dtype(), StateDtype::F64);
+        let mut restored = DecodeSession::new(&m).unwrap();
+        restored.restore(&park).unwrap();
+        assert_eq!(restored.snapshot(), park, "f64 round-trip must be bit-lossless");
+        assert_eq!(
+            restored.decode_step(&m, 42).unwrap(),
+            s.decode_step(&m, 42).unwrap(),
+            "continuation after a lossless park must not drift"
+        );
+    }
+
+    #[test]
+    fn f32_compact_baseline_is_canonical_and_idempotent() {
+        // the canonical compact format: encoding costs one f64->f32
+        // rounding, after which restore -> re-snapshot(f32) is a fixed
+        // point — and the one-pass snapshot_as agrees bit for bit with
+        // transcoding today's f64 park format
+        let m = model("ho2_tiny");
+        let mut s = DecodeSession::new(&m).unwrap();
+        let toks: Vec<i32> = (0..31).map(|i| (i * 11 + 1) % 256).collect();
+        s.absorb_chunk(&m, &toks).unwrap();
+        let compact = s.snapshot_as(StateDtype::F32);
+        assert_eq!(
+            s.snapshot().transcode(StateDtype::F32),
+            compact,
+            "direct f32 snapshot must equal the transcoded f64 park format"
+        );
+        let mut restored = DecodeSession::new(&m).unwrap();
+        restored.restore(&compact).unwrap();
+        assert_eq!(
+            restored.snapshot_as(StateDtype::F32),
+            compact,
+            "f32 round-trip must be idempotent (bit-exact after first encode)"
+        );
+    }
+
+    #[test]
+    fn lossy_restore_logit_drift_is_bounded() {
+        // restoring through a narrow dtype perturbs the state once; the
+        // next-token logits must stay within a per-dtype envelope of the
+        // lossless continuation (the model-level face of the kernel-level
+        // oracle drift sweep in rust/tests/proptests.rs)
+        let m = model("ho2_tiny");
+        let mut s = DecodeSession::new(&m).unwrap();
+        let toks: Vec<i32> = (0..48).map(|i| (i * 5 + 2) % 256).collect();
+        s.absorb_chunk(&m, &toks).unwrap();
+        let park = s.snapshot();
+        let want = s.decode_step(&m, 9).unwrap();
+        for (dtype, bound) in [
+            (StateDtype::F32, 1e-2f32),
+            (StateDtype::F16, 0.5),
+            (StateDtype::Bf16, 2.0),
+            (StateDtype::Int8, 2.0),
+        ] {
+            let compact = park.transcode(dtype);
+            assert!(compact.bytes() < park.bytes(), "{dtype} must be denser than f64");
+            let mut r = DecodeSession::new(&m).unwrap();
+            r.restore(&compact).unwrap();
+            let got = r.decode_step(&m, 9).unwrap();
+            let err = want
+                .iter()
+                .zip(&got)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                err.is_finite() && err <= bound,
+                "{dtype} restore drift {err} exceeds {bound}"
+            );
+        }
     }
 
     #[test]

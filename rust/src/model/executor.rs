@@ -16,9 +16,11 @@
 //!
 //! Both executors are `Send`: the sharded serving tier moves each one
 //! onto a dedicated engine thread (`serve/shard.rs`), and session
-//! snapshots ([`SessionSnapshot`] — plain `Vec<f32>`s) ship between
-//! those threads when the router migrates a session.  The compile-time
-//! assertions in this file's tests keep that property from regressing.
+//! snapshots ([`SessionSnapshot`] — the live f64 kernel state encoded
+//! into one of the [`StateDtype`](crate::state::StateDtype) wire
+//! formats, f64 passthrough by default) ship between those threads when
+//! the router migrates a session.  The compile-time assertions in this
+//! file's tests keep that property from regressing.
 //!
 //! Future scaling work (batching policy, quantized state) lands as new
 //! trait impls or wrappers, not coordinator rewrites.

@@ -10,22 +10,27 @@
 //! Model names follow the manifest convention:
 //!
 //! ```text
-//! {attn}_{preset}[_a{alpha}][_o{order}]
+//! {attn}_{preset}[_a{alpha}][_o{order}][_s{dtype}]
 //! ```
 //!
 //! e.g. `ho2_small`, `linear_tiny`, `softmax_base`, `ho2_tiny_a1_o2`
 //! (the E6 ablation grid), `ho_tiny_o3` (the order-3 run the paper never
-//! did).  `attn` ∈ {ho, ho2, linear, softmax} — `ho` is the Taylor
-//! kernel at any order R ≥ 0 via the `_oR` suffix (default 2), `ho2`
-//! the historic spelling kept as an alias (also `_oR`-overridable);
-//! `preset` ∈ {tiny, small, base, large}.  For `ho` kinds the packed
-//! per-head feature dim `Σ_{j≤R} C(d_head+j−1, j)` is validated here so
-//! an absurd order fails with a number, not an allocation.
+//! did), `ho2_tiny_sf16` (f16 session snapshots by default).  `attn` ∈
+//! {ho, ho2, linear, softmax} — `ho` is the Taylor kernel at any order
+//! R ≥ 0 via the `_oR` suffix (default 2), `ho2` the historic spelling
+//! kept as an alias (also `_oR`-overridable); `preset` ∈ {tiny, small,
+//! base, large}; `_s{dtype}` with dtype ∈ {f64, f32, f16, bf16, int8}
+//! sets the model's default [`StateDtype`] for *cached* session
+//! snapshots (serve-time `--state-dtype` wins; the live compute state
+//! stays f64 regardless).  For `ho` kinds the packed per-head feature
+//! dim `Σ_{j≤R} C(d_head+j−1, j)` is validated here so an absurd order
+//! fails with a number, not an allocation.
 
 use anyhow::{bail, Result};
 
 use crate::kernels::{taylor_feature_dim, MAX_TAYLOR_FEATURES};
 use crate::runtime::{Init, LeafSpec, ModelConfig, ModelEntry};
+use crate::state::StateDtype;
 use crate::tokenizer::VOCAB_SIZE;
 
 /// Preset names, in size order (mirror of python PRESETS).
@@ -60,6 +65,7 @@ fn base_config(preset: &str) -> Option<ModelConfig> {
         train_batch: tb,
         train_len: tl,
         decode_batch: db,
+        state_dtype: StateDtype::F64,
     };
     match preset {
         "tiny" => Some(cfg(64, 2, 2, 256, 128, 8, 64, 4, VOCAB_SIZE)),
@@ -114,6 +120,9 @@ fn parse_name(name: &str) -> Result<ModelConfig> {
                 Ok(x) => x,
                 _ => bail!("bad order suffix '{part}' in model '{name}'"),
             };
+        } else if let Some(s) = part.strip_prefix('s') {
+            cfg.state_dtype = StateDtype::parse(s)
+                .map_err(|e| e.context(format!("bad state-dtype suffix '{part}' in model '{name}'")))?;
         } else {
             bail!("unrecognized suffix '{part}' in model '{name}'");
         }
@@ -272,6 +281,31 @@ mod tests {
         let err = native_model_entry("ho_tiny_o40").unwrap_err().to_string();
         assert!(err.contains("packed"), "{err}");
         assert!(native_model_entry("ho_tiny_ox").is_err());
+    }
+
+    #[test]
+    fn state_dtype_suffix_sets_snapshot_default() {
+        use crate::state::StateDtype;
+        // bare names keep the lossless default — every existing
+        // bit-exactness pin depends on it
+        let e = native_model_entry("ho2_tiny").unwrap();
+        assert_eq!(e.config.state_dtype, StateDtype::F64);
+        // `_s{dtype}` composes with the other suffixes in any position
+        let e = native_model_entry("ho2_tiny_sf16").unwrap();
+        assert_eq!(e.config.state_dtype, StateDtype::F16);
+        let e = native_model_entry("ho_tiny_o3_sint8").unwrap();
+        assert_eq!(e.config.order, 3);
+        assert_eq!(e.config.state_dtype, StateDtype::Int8);
+        let e = native_model_entry("ho2_tiny_sbf16_a1").unwrap();
+        assert_eq!(e.config.state_dtype, StateDtype::Bf16);
+        assert!((e.config.alpha - 1.0).abs() < 1e-12);
+        // the dtype never changes shapes/params — same model otherwise
+        let base = native_model_entry("ho2_tiny").unwrap();
+        let f16 = native_model_entry("ho2_tiny_sf16").unwrap();
+        assert_eq!(base.n_params, f16.n_params);
+        // unknown dtypes fail with the spelling list, not a panic
+        let err = native_model_entry("ho2_tiny_sq4").unwrap_err().to_string();
+        assert!(err.contains("state-dtype"), "{err}");
     }
 
     #[test]

@@ -60,6 +60,10 @@ pub struct ModelConfig {
     pub train_batch: usize,
     pub train_len: usize,
     pub decode_batch: usize,
+    /// Default wire dtype for this model's cached session snapshots
+    /// (`_s{dtype}` name suffix; `--state-dtype` overrides at serve
+    /// time).  Never affects the live f64 compute state.
+    pub state_dtype: crate::state::StateDtype,
 }
 
 /// One registered model: config + leaf specs + artifact names.
@@ -167,6 +171,12 @@ impl Manifest {
                 train_batch: c.req("train_batch")?.as_i64().unwrap_or(0) as usize,
                 train_len: c.req("train_len")?.as_i64().unwrap_or(0) as usize,
                 decode_batch: c.req("decode_batch")?.as_i64().unwrap_or(0) as usize,
+                // older manifests predate the compact-state subsystem:
+                // absent means the lossless default
+                state_dtype: match c.get("state_dtype").and_then(|j| j.as_str()) {
+                    Some(s) => crate::state::StateDtype::parse(s)?,
+                    None => crate::state::StateDtype::F64,
+                },
             };
             let param_spec: Result<Vec<_>> = m
                 .req("param_spec")?

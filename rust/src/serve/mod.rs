@@ -61,6 +61,8 @@ pub use self::stream::ServeEvent;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::state::StateDtype;
+
 /// One inbound generation request.
 pub struct Request {
     pub id: u64,
@@ -151,9 +153,17 @@ pub struct ServeOpts {
     /// chunked prefill where the executor supports it (native backend),
     /// 0/1 keeps the token-at-a-time path.
     pub prefill_chunk: usize,
-    /// Session-cache capacity (finished-request snapshots, LRU-evicted);
-    /// 0 disables the cache.
-    pub session_capacity: usize,
+    /// Session-cache byte budget (finished-request snapshots,
+    /// LRU-evicted by resident bytes — `--session-cache-mb`); 0 disables
+    /// the cache.
+    pub session_cache_bytes: usize,
+    /// Wire dtype for *cached* session snapshots (`--state-dtype`, also
+    /// settable per model via the `_s{dtype}` preset suffix).  Migration
+    /// ships whatever the cache holds, verbatim.  In-flight preemption
+    /// parks are always f64 — they are transient, never the memory
+    /// bottleneck, and the preempt/resume bit-exactness pin depends on
+    /// it.
+    pub state_dtype: StateDtype,
     /// Decode-token quantum after which a running request becomes
     /// preemptible when the queue has waiters; 0 disables the quantum
     /// (per-request `deadline_ms` budgets still trigger preemption).
@@ -175,7 +185,8 @@ impl Default for ServeOpts {
         ServeOpts {
             policy: Policy::Fifo,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
-            session_capacity: 16,
+            session_cache_bytes: 16 << 20,
+            state_dtype: StateDtype::F64,
             preempt_tokens: 0,
             queue_capacity: 1024,
             stream_default: false,

@@ -1,4 +1,4 @@
-//! Bounded LRU session cache over O(1)-state snapshots.
+//! Byte-budgeted LRU session cache over O(1)-state snapshots.
 //!
 //! When a request carries a `session_id`, the engine retains its final
 //! decode state ([`SessionSnapshot`], a few KiB — constant in history
@@ -10,12 +10,16 @@
 //! — the whole shared prefix is never recomputed.
 //!
 //! The restored path is bit-identical to a from-scratch full-history
-//! prefill (pinned ≤ 1e-4 in `rust/tests/serve_sched.rs`): the snapshot
-//! is an exact serialization of the recurrent state, not an
-//! approximation.
+//! prefill when the snapshot dtype is lossless (pinned in
+//! `rust/tests/serve_sched.rs`); narrow dtypes (`--state-dtype f16`,
+//! …) trade bounded drift for more resident sessions per byte.
 //!
-//! The cache is strictly bounded: `capacity` entries, least-recently-used
-//! eviction (lookup hits and inserts both refresh recency).
+//! The cache is bounded by *bytes*, not entries (`--session-cache-mb`):
+//! the binding constraint on resident sessions is memory, and encoded
+//! snapshot sizes vary 8× across dtypes, so an entry count would either
+//! waste the budget or blow it.  Least-recently-used eviction (lookup
+//! hits and inserts both refresh recency); an entry larger than the
+//! whole budget is never cached.
 
 use std::collections::HashMap;
 
@@ -24,29 +28,46 @@ use crate::model::SessionSnapshot;
 /// A finished request's resumable state.
 #[derive(Debug, Clone)]
 pub struct SessionEntry {
-    /// Final decode state (all (layer, head) kernel states + position).
+    /// Final decode state (all (layer, head) kernel states + position),
+    /// encoded in the engine's configured
+    /// [`StateDtype`](crate::state::StateDtype).
     pub snapshot: SessionSnapshot,
     /// Exactly the tokens that state has absorbed, in order — the
     /// reusable-prefix check compares a follow-up prompt against this.
     pub tokens: Vec<i32>,
 }
 
-/// `session_id` → [`SessionEntry`], LRU-bounded.
+impl SessionEntry {
+    /// Resident footprint in bytes (encoded snapshot + token history) —
+    /// the unit the cache budget accounts in.
+    pub fn bytes(&self) -> usize {
+        self.snapshot.bytes() + self.tokens.len() * std::mem::size_of::<i32>()
+    }
+}
+
+/// `session_id` → [`SessionEntry`], LRU-bounded by total bytes.
 pub struct SessionCache {
-    capacity: usize,
+    budget: usize,
+    used: usize,
     tick: u64,
     map: HashMap<String, (u64, SessionEntry)>,
 }
 
 impl SessionCache {
-    /// `capacity` = 0 disables the cache (every lookup misses, inserts
-    /// are dropped).
-    pub fn new(capacity: usize) -> SessionCache {
-        SessionCache { capacity, tick: 0, map: HashMap::new() }
+    /// `budget` = resident-byte bound across all entries; 0 disables the
+    /// cache (every lookup misses, inserts are dropped).
+    pub fn new(budget: usize) -> SessionCache {
+        SessionCache { budget, used: 0, tick: 0, map: HashMap::new() }
     }
 
-    pub fn capacity(&self) -> usize {
-        self.capacity
+    /// The configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently resident (always ≤ budget).
+    pub fn used_bytes(&self) -> usize {
+        self.used
     }
 
     pub fn len(&self) -> usize {
@@ -77,25 +98,37 @@ impl SessionCache {
     /// another shard's cache, so a session is never resident in two
     /// partitions at once.
     pub fn remove(&mut self, id: &str) -> Option<SessionEntry> {
-        self.map.remove(id).map(|(_, entry)| entry)
+        let (_, entry) = self.map.remove(id)?;
+        self.used -= entry.bytes();
+        Some(entry)
     }
 
-    /// Insert/replace the session's entry, evicting the least recently
-    /// used entry when over capacity.
+    /// Insert/replace the session's entry, evicting least-recently-used
+    /// entries until the byte budget holds.  An entry that alone exceeds
+    /// the whole budget is not cached (the alternative — evicting
+    /// everything and still failing — helps nobody).
     pub fn insert(&mut self, id: String, entry: SessionEntry) {
-        if self.capacity == 0 {
+        let bytes = entry.bytes();
+        if bytes > self.budget {
+            // also drop any stale entry under this id: the caller's
+            // newest state is unretainable, so serving the old one on a
+            // future lookup would silently rewind the session
+            self.remove(&id);
             return;
         }
         self.tick += 1;
-        self.map.insert(id, (self.tick, entry));
-        while self.map.len() > self.capacity {
+        if let Some((_, old)) = self.map.insert(id, (self.tick, entry)) {
+            self.used -= old.bytes();
+        }
+        self.used += bytes;
+        while self.used > self.budget {
             let oldest = self
                 .map
                 .iter()
                 .min_by_key(|(_, (t, _))| *t)
                 .map(|(k, _)| k.clone())
-                .expect("map is non-empty");
-            self.map.remove(&oldest);
+                .expect("over budget implies non-empty");
+            self.remove(&oldest);
         }
     }
 }
@@ -108,9 +141,15 @@ mod tests {
         SessionEntry { snapshot: SessionSnapshot::default(), tokens }
     }
 
+    /// Resident bytes of a one-token entry — the unit the budget tests
+    /// count in (entries with equal token counts have equal footprints).
+    fn unit() -> usize {
+        entry(vec![0]).bytes()
+    }
+
     #[test]
     fn hit_requires_strict_prefix() {
-        let mut c = SessionCache::new(4);
+        let mut c = SessionCache::new(4 * unit());
         c.insert("s".into(), entry(vec![257, 1, 2]));
         assert!(c.lookup("s", &[257, 1, 2, 3]).is_some(), "strict prefix hits");
         assert!(c.lookup("s", &[257, 1, 2]).is_none(), "identical prompt has no new token");
@@ -120,26 +159,51 @@ mod tests {
     }
 
     #[test]
-    fn lru_evicts_least_recently_used() {
-        let mut c = SessionCache::new(2);
+    fn byte_budget_evicts_least_recently_used() {
+        // budget fits exactly two one-token entries
+        let mut c = SessionCache::new(2 * unit());
         c.insert("a".into(), entry(vec![1]));
         c.insert("b".into(), entry(vec![2]));
+        assert_eq!(c.used_bytes(), 2 * unit());
         // touch a so b becomes the LRU entry
         assert!(c.lookup("a", &[1, 9]).is_some());
         c.insert("c".into(), entry(vec![3]));
         assert_eq!(c.len(), 2);
+        assert_eq!(c.used_bytes(), 2 * unit(), "eviction must release bytes");
         assert!(c.lookup("b", &[2, 9]).is_none(), "b was evicted");
         assert!(c.lookup("a", &[1, 9]).is_some());
         assert!(c.lookup("c", &[3, 9]).is_some());
     }
 
     #[test]
+    fn one_large_entry_displaces_many_small() {
+        // the byte budget is the invariant, not an entry count: a
+        // 3-token entry costs more than a 1-token one, so inserting it
+        // evicts as many old entries as its footprint requires
+        let mut c = SessionCache::new(entry(vec![1]).bytes() + entry(vec![1, 2, 3]).bytes());
+        c.insert("a".into(), entry(vec![1]));
+        c.insert("b".into(), entry(vec![2]));
+        assert_eq!(c.len(), 2);
+        c.insert("big".into(), entry(vec![7, 8, 9]));
+        assert_eq!(c.len(), 2, "one small entry had to go");
+        assert!(c.lookup("a", &[1, 9]).is_none(), "a was the LRU entry");
+        assert!(c.lookup("b", &[2, 9]).is_some());
+        assert!(c.lookup("big", &[7, 8, 9, 1]).is_some());
+        assert!(c.used_bytes() <= c.budget());
+    }
+
+    #[test]
     fn reinsert_replaces_and_refreshes() {
-        let mut c = SessionCache::new(2);
+        let mut c = SessionCache::new(2 * entry(vec![1, 5]).bytes());
         c.insert("a".into(), entry(vec![1]));
         c.insert("b".into(), entry(vec![2]));
         c.insert("a".into(), entry(vec![1, 5]));
         assert_eq!(c.len(), 2);
+        assert_eq!(
+            c.used_bytes(),
+            entry(vec![1]).bytes() + entry(vec![1, 5]).bytes(),
+            "replacement must release the old entry's bytes"
+        );
         let hit = c.lookup("a", &[1, 5, 9]).unwrap();
         assert_eq!(hit.tokens, vec![1, 5]);
         c.insert("d".into(), entry(vec![4]));
@@ -148,19 +212,35 @@ mod tests {
 
     #[test]
     fn remove_exports_exactly_once() {
-        let mut c = SessionCache::new(4);
+        let mut c = SessionCache::new(4 * unit());
         c.insert("a".into(), entry(vec![1, 2]));
+        let before = c.used_bytes();
+        assert!(before > 0);
         let got = c.remove("a").expect("entry present");
         assert_eq!(got.tokens, vec![1, 2]);
+        assert_eq!(c.used_bytes(), 0, "export must release {before} bytes");
         assert!(c.remove("a").is_none(), "second export finds nothing");
         assert!(c.lookup("a", &[1, 2, 3]).is_none(), "ownership was given up");
     }
 
     #[test]
-    fn zero_capacity_disables() {
+    fn oversized_entry_is_not_cached_and_drops_stale_state() {
+        let mut c = SessionCache::new(unit());
+        c.insert("a".into(), entry(vec![1]));
+        assert_eq!(c.len(), 1);
+        // a newer state for the same session that no longer fits must
+        // not leave the stale small entry behind
+        c.insert("a".into(), entry(vec![1, 2, 3, 4, 5, 6, 7, 8]));
+        assert!(c.is_empty(), "unretainable update must also drop the stale entry");
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn zero_budget_disables() {
         let mut c = SessionCache::new(0);
         c.insert("a".into(), entry(vec![1]));
         assert!(c.is_empty());
+        assert_eq!(c.used_bytes(), 0);
         assert!(c.lookup("a", &[1, 2]).is_none());
     }
 }

@@ -1,0 +1,587 @@
+//! Compact state: the snapshot codec behind parked / cached / migrated
+//! session state.
+//!
+//! The paper's serving story is that attention collapses to an O(1)
+//! recurrent state per sequence, which makes *resident* sessions cheap —
+//! until the resident form itself is wasteful.  The live kernel state
+//! ([`PhiState`](crate::kernels::PhiState)) accumulates in f64 (the Z/M
+//! sums genuinely need the headroom while they are being *updated*), but
+//! a parked snapshot is read-only: nothing accumulates into it again
+//! until it is rehydrated.  A read-only copy can afford a narrower
+//! dtype, so the session cache's binding constraint — bytes per resident
+//! session — drops by 2–8× depending on how much drift the deployment
+//! tolerates.
+//!
+//! [`SnapshotCodec`] encodes a `&[f64]` state vector into one of:
+//!
+//! * **f64** — bit-lossless passthrough: today's park format, byte for
+//!   byte.  The default, so every bit-exactness pin (preempt/resume,
+//!   cache hit, migration) holds with certainty.
+//! * **f32** — the canonical *compact* baseline: 2× smaller, round-trip
+//!   error below the oracle tolerance the kernels are pinned to, and
+//!   idempotent (re-encoding a decoded snapshot is bit-identical).
+//! * **f16 / bf16** — 4× smaller.  Manual bit conversion (the vendor
+//!   set has no `half` crate): round-to-nearest-even, subnormals and
+//!   infinities handled.
+//! * **int8** — ~7.5× smaller: per-block scales ([`INT8_BLOCK`] = 64
+//!   elements share one f32 scale = max|x|/127), symmetric round-to-
+//!   nearest quantization.
+//!
+//! Restore always rehydrates the full-precision f64 live state; lossy
+//! dtypes trade bounded logit drift (measured against the `mathref`
+//! crosscheck oracle in `rust/tests/proptests.rs`) for density.  The
+//! drift shows up once per park/restore, not per token — the rehydrated
+//! state then evolves in f64 again.
+//!
+//! Every codec is *idempotent*: `encode(decode(encode(x))) ==
+//! encode(x)`, so a snapshot that shuttles between shards any number of
+//! times degrades exactly once, at first encode.
+
+use anyhow::{bail, ensure, Result};
+
+/// Elements per int8 quantization block (one shared f32 scale each).
+pub const INT8_BLOCK: usize = 64;
+
+/// Wire dtype for encoded state snapshots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StateDtype {
+    /// Bit-lossless passthrough — today's park format (the default).
+    F64,
+    /// Canonical compact baseline: 2× smaller, sub-oracle-tolerance drift.
+    F32,
+    /// IEEE 754 binary16: 4× smaller.
+    F16,
+    /// bfloat16 (f32 with the bottom 16 mantissa bits dropped): 4× smaller.
+    Bf16,
+    /// Symmetric int8 with one f32 scale per [`INT8_BLOCK`] elements.
+    Int8,
+}
+
+impl StateDtype {
+    /// All dtypes, widest first — the order bench reports sweep.
+    pub const ALL: [StateDtype; 5] = [
+        StateDtype::F64,
+        StateDtype::F32,
+        StateDtype::F16,
+        StateDtype::Bf16,
+        StateDtype::Int8,
+    ];
+
+    /// Parse a CLI / preset-suffix spelling.
+    pub fn parse(s: &str) -> Result<StateDtype> {
+        Ok(match s {
+            "f64" => StateDtype::F64,
+            "f32" => StateDtype::F32,
+            "f16" => StateDtype::F16,
+            "bf16" => StateDtype::Bf16,
+            "int8" => StateDtype::Int8,
+            _ => bail!(
+                "unknown state dtype '{s}' (expected f64, f32, f16, bf16 or int8)"
+            ),
+        })
+    }
+
+    /// The canonical spelling ([`StateDtype::parse`] inverse).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StateDtype::F64 => "f64",
+            StateDtype::F32 => "f32",
+            StateDtype::F16 => "f16",
+            StateDtype::Bf16 => "bf16",
+            StateDtype::Int8 => "int8",
+        }
+    }
+
+    /// Encoded payload size for `n` state elements — analytic, so byte
+    /// budgets and sessions-per-GiB projections need no trial encode.
+    pub fn encoded_len(&self, n: usize) -> usize {
+        match self {
+            StateDtype::F64 => n * 8,
+            StateDtype::F32 => n * 4,
+            StateDtype::F16 | StateDtype::Bf16 => n * 2,
+            StateDtype::Int8 => n + 4 * n.div_ceil(INT8_BLOCK),
+        }
+    }
+}
+
+impl Default for StateDtype {
+    fn default() -> Self {
+        StateDtype::F64
+    }
+}
+
+impl std::fmt::Display for StateDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Encoder/decoder for one [`StateDtype`].  Stateless — the struct
+/// exists so call sites read `codec.encode(..)` against a fixed dtype
+/// instead of threading the enum through every helper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SnapshotCodec {
+    dtype: StateDtype,
+}
+
+impl SnapshotCodec {
+    pub fn new(dtype: StateDtype) -> SnapshotCodec {
+        SnapshotCodec { dtype }
+    }
+
+    pub fn dtype(&self) -> StateDtype {
+        self.dtype
+    }
+
+    /// Payload bytes for `n` elements (see [`StateDtype::encoded_len`]).
+    pub fn encoded_len(&self, n: usize) -> usize {
+        self.dtype.encoded_len(n)
+    }
+
+    /// Encode a full-precision state vector into the wire payload.
+    pub fn encode(&self, state: &[f64]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len(state.len()));
+        match self.dtype {
+            StateDtype::F64 => {
+                for &x in state {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            StateDtype::F32 => {
+                for &x in state {
+                    out.extend_from_slice(&(x as f32).to_le_bytes());
+                }
+            }
+            StateDtype::F16 => {
+                for &x in state {
+                    out.extend_from_slice(&f32_to_f16_bits(x as f32).to_le_bytes());
+                }
+            }
+            StateDtype::Bf16 => {
+                for &x in state {
+                    out.extend_from_slice(&f32_to_bf16_bits(x as f32).to_le_bytes());
+                }
+            }
+            StateDtype::Int8 => {
+                for block in state.chunks(INT8_BLOCK) {
+                    let max_abs = block.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+                    // the scale ships as f32; quantize against the value
+                    // the decoder will actually multiply by, so the
+                    // codec is idempotent
+                    let scale = (max_abs / 127.0) as f32;
+                    if scale == 0.0 || !scale.is_finite() {
+                        // all-zero block, or a state with inf/NaN (the
+                        // kernels never produce one; quantizing it is
+                        // meaningless) — ship scale 0 + zero bytes so the
+                        // block decodes to exact zeros (a non-finite
+                        // scale would decode 0·inf = NaN)
+                        out.extend_from_slice(&0.0f32.to_le_bytes());
+                        out.resize(out.len() + block.len(), 0u8);
+                    } else {
+                        out.extend_from_slice(&scale.to_le_bytes());
+                        let s = scale as f64;
+                        for &x in block {
+                            let q = (x / s).round().clamp(-127.0, 127.0) as i8;
+                            out.push(q as u8);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode a payload produced by [`SnapshotCodec::encode`] back into
+    /// `n_elems` f64 values (the live-state rehydration).
+    pub fn decode(&self, bytes: &[u8], n_elems: usize) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(n_elems);
+        self.decode_into(bytes, n_elems, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`SnapshotCodec::decode`] into a caller-owned buffer (cleared
+    /// first) — the restore hot path reuses one buffer per engine.
+    pub fn decode_into(&self, bytes: &[u8], n_elems: usize, out: &mut Vec<f64>) -> Result<()> {
+        ensure!(
+            bytes.len() == self.encoded_len(n_elems),
+            "encoded {} snapshot has {} bytes, expected {} for {} elements",
+            self.dtype,
+            bytes.len(),
+            self.encoded_len(n_elems),
+            n_elems
+        );
+        out.clear();
+        out.reserve(n_elems);
+        match self.dtype {
+            StateDtype::F64 => {
+                for b in bytes.chunks_exact(8) {
+                    out.push(f64::from_le_bytes(b.try_into().unwrap()));
+                }
+            }
+            StateDtype::F32 => {
+                for b in bytes.chunks_exact(4) {
+                    out.push(f32::from_le_bytes(b.try_into().unwrap()) as f64);
+                }
+            }
+            StateDtype::F16 => {
+                for b in bytes.chunks_exact(2) {
+                    out.push(f16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap())) as f64);
+                }
+            }
+            StateDtype::Bf16 => {
+                for b in bytes.chunks_exact(2) {
+                    out.push(bf16_bits_to_f32(u16::from_le_bytes(b.try_into().unwrap())) as f64);
+                }
+            }
+            StateDtype::Int8 => {
+                let mut remaining = n_elems;
+                let mut off = 0;
+                while remaining > 0 {
+                    let blk = remaining.min(INT8_BLOCK);
+                    let scale =
+                        f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as f64;
+                    off += 4;
+                    for &b in &bytes[off..off + blk] {
+                        out.push((b as i8) as f64 * scale);
+                    }
+                    off += blk;
+                    remaining -= blk;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// half-precision bit conversion (no `half` crate in the vendor set)
+// ---------------------------------------------------------------------------
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even.  Overflow saturates
+/// to ±inf, underflow denormalizes then flushes to ±0, NaN stays NaN.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN — keep the top mantissa bits, but never collapse a
+        // NaN to inf
+        let m = (man >> 13) as u16;
+        return sign | 0x7c00 | if man != 0 && m == 0 { 1 } else { m };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // below the smallest subnormal → ±0
+        }
+        // subnormal: add the implicit bit, then shift out 14 - e bits
+        // (13 mantissa-width difference + 1 - e for the lost exponent
+        // range) with round-to-nearest-even
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = (man >> shift) as u16;
+        let round = 1u32 << (shift - 1);
+        let rem = man & ((1 << shift) - 1);
+        if rem > round || (rem == round && (half & 1) == 1) {
+            // a carry out of the subnormal range lands on the smallest
+            // normal (0x0400) — exactly right
+            return sign | (half + 1);
+        }
+        return sign | half;
+    }
+    // normal: drop 13 mantissa bits with round-to-nearest-even; a
+    // mantissa carry correctly overflows into the exponent (and a carry
+    // out of e = 30 correctly produces inf)
+    let half = sign | ((e as u16) << 10) | ((man >> 13) as u16);
+    let rem = man & 0x1fff;
+    if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half + 1
+    } else {
+        half
+    }
+}
+
+/// IEEE binary16 bits → f32 (exact — every f16 value is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize into f32's larger exponent range
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even.  NaN is forced quiet so
+/// rounding can never collapse it to inf.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    ((bits + round) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_state(rng: &mut Rng, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for d in StateDtype::ALL {
+            assert_eq!(StateDtype::parse(d.name()).unwrap(), d);
+        }
+        assert!(StateDtype::parse("f8").is_err());
+        assert!(StateDtype::parse("").is_err());
+        assert_eq!(StateDtype::default(), StateDtype::F64);
+    }
+
+    #[test]
+    fn encoded_len_matches_actual_encode() {
+        let mut rng = Rng::new(0x57a7e);
+        for n in [0usize, 1, 7, 63, 64, 65, 128, 1000] {
+            let state = random_state(&mut rng, n, 3.0);
+            for d in StateDtype::ALL {
+                let codec = SnapshotCodec::new(d);
+                assert_eq!(
+                    codec.encode(&state).len(),
+                    codec.encoded_len(n),
+                    "{d} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_lossless() {
+        let mut rng = Rng::new(0x57a7e + 1);
+        let codec = SnapshotCodec::new(StateDtype::F64);
+        for case in 0..20 {
+            let mut state = random_state(&mut rng, 97, 1e3);
+            // adversarial values a float codec could plausibly mangle
+            state.extend([0.0, -0.0, f64::MIN_POSITIVE, 1e-300, -1e300, f64::NAN]);
+            let back = codec.decode(&codec.encode(&state), state.len()).unwrap();
+            for (i, (&a, &b)) in state.iter().zip(&back).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {case} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exactly_the_f32_cast() {
+        let mut rng = Rng::new(0x57a7e + 2);
+        let codec = SnapshotCodec::new(StateDtype::F32);
+        let state = random_state(&mut rng, 300, 50.0);
+        let back = codec.decode(&codec.encode(&state), state.len()).unwrap();
+        for (&a, &b) in state.iter().zip(&back) {
+            assert_eq!((a as f32).to_bits(), (b as f32).to_bits());
+            assert_eq!(b, (a as f32) as f64, "decode must rehydrate the exact cast");
+        }
+    }
+
+    #[test]
+    fn every_codec_is_idempotent() {
+        // one lossy step at first encode, then a fixed point: shuttling a
+        // snapshot between shards any number of times loses nothing more
+        let mut rng = Rng::new(0x57a7e + 3);
+        for case in 0..10 {
+            let state = random_state(&mut rng, 130, [1e-3, 1.0, 1e4][case % 3]);
+            for d in StateDtype::ALL {
+                let codec = SnapshotCodec::new(d);
+                let once = codec.encode(&state);
+                let back = codec.decode(&once, state.len()).unwrap();
+                let twice = codec.encode(&back);
+                assert_eq!(once, twice, "case {case} {d} not idempotent");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_wrong_length() {
+        let codec = SnapshotCodec::new(StateDtype::F16);
+        let bytes = codec.encode(&[1.0, 2.0, 3.0]);
+        assert!(codec.decode(&bytes, 4).is_err());
+        assert!(codec.decode(&bytes[..4], 3).is_err());
+    }
+
+    #[test]
+    fn f16_known_values() {
+        for (x, want) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),  // largest finite f16
+            (65536.0, 0x7c00),  // overflow → inf
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+            (6.103_515_6e-5, 0x0400),  // smallest normal 2^-14
+            (5.960_464_5e-8, 0x0001),  // smallest subnormal 2^-24
+            (2.980_232_2e-8, 0x0000),  // 2^-25: tie, rounds to even (0)
+        ] {
+            assert_eq!(f32_to_f16_bits(x), want, "encode {x}");
+        }
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // decode side: every encoded value above rehydrates exactly
+        for (x, bits) in [(1.0f32, 0x3c00u16), (65504.0, 0x7bff), (5.960_464_5e-8, 0x0001)] {
+            assert_eq!(f16_bits_to_f32(bits), x, "decode {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next f16 (1 + 2^-10):
+        // ties go to the even mantissa, i.e. 1.0
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_488_281_25), 0x3c00);
+        // 1 + 3·2^-11 ties between 1+2^-10 and 1+2^-9 → even → 1+2^-9
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 0.000_488_281_25), 0x3c02);
+        // just above a tie rounds up
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_489), 0x3c01);
+    }
+
+    #[test]
+    fn bf16_known_values_and_rne() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(-1.0), 0xbf80);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        // tie at the dropped half-bit: 0x3f80_8000 → even (0x3f80),
+        // 0x3f81_8000 → even is up (0x3f82)
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f80_8000)), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(f32::from_bits(0x3f81_8000)), 0x3f82);
+    }
+
+    #[test]
+    fn half_roundtrips_are_exact_for_representable_values() {
+        // decode(bits) then encode must give the bits back for every
+        // finite f16 / bf16 value — the codec idempotence base case
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp != 0x1f {
+                assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "f16 {h:#06x}");
+            }
+            let x = bf16_bits_to_f32(h);
+            if x.is_finite() {
+                assert_eq!(f32_to_bf16_bits(x), h, "bf16 {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_error_is_bounded() {
+        // float dtypes: relative error ≤ half an ulp at that precision;
+        // int8: absolute error ≤ half a quantization step per block
+        let mut rng = Rng::new(0x57a7e + 4);
+        for case in 0..10 {
+            let state = random_state(&mut rng, 256, [1e-2, 1.0, 1e3][case % 3]);
+            for (d, rel) in [
+                (StateDtype::F32, 2f64.powi(-24)),
+                (StateDtype::F16, 2f64.powi(-11)),
+                (StateDtype::Bf16, 2f64.powi(-8)),
+            ] {
+                let codec = SnapshotCodec::new(d);
+                let back = codec.decode(&codec.encode(&state), state.len()).unwrap();
+                for (&a, &b) in state.iter().zip(&back) {
+                    assert!(
+                        (a - b).abs() <= rel * a.abs() + 1e-300,
+                        "case {case} {d}: {a} -> {b}"
+                    );
+                }
+            }
+            let codec = SnapshotCodec::new(StateDtype::Int8);
+            let back = codec.decode(&codec.encode(&state), state.len()).unwrap();
+            for (blk, (orig, dec)) in state
+                .chunks(INT8_BLOCK)
+                .zip(back.chunks(INT8_BLOCK))
+                .enumerate()
+            {
+                let max_abs = orig.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+                let step = (max_abs / 127.0) as f32 as f64;
+                for (&a, &b) in orig.iter().zip(dec) {
+                    assert!(
+                        (a - b).abs() <= 0.5 * step + 1e-12 * max_abs,
+                        "case {case} int8 block {blk}: {a} -> {b} (step {step})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_block_and_tail() {
+        // an all-zero block ships scale 0 and decodes to exact zeros; a
+        // ragged tail block (n % 64 != 0) round-trips
+        let mut state = vec![0.0f64; INT8_BLOCK];
+        state.extend([1.0, -2.0, 3.0]);
+        let codec = SnapshotCodec::new(StateDtype::Int8);
+        let bytes = codec.encode(&state);
+        assert_eq!(bytes.len(), codec.encoded_len(state.len()));
+        let back = codec.decode(&bytes, state.len()).unwrap();
+        assert!(back[..INT8_BLOCK].iter().all(|&x| x == 0.0));
+        for (&a, &b) in state[INT8_BLOCK..].iter().zip(&back[INT8_BLOCK..]) {
+            assert!((a - b).abs() <= 3.0 / 127.0 * 0.5 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn int8_nonfinite_block_ships_zeros_and_stays_idempotent() {
+        // the kernels never emit inf/NaN state, but if one arrives the
+        // block must decode to exact zeros (never 0·inf = NaN) and the
+        // codec must stay a fixed point after one encode
+        let mut state = vec![f64::INFINITY; 3];
+        state.extend([f64::NAN, -1.0, 2.0]);
+        state.resize(INT8_BLOCK, 0.5); // still one block: scale is non-finite
+        state.extend([4.0, -8.0]); // finite tail block round-trips normally
+        let codec = SnapshotCodec::new(StateDtype::Int8);
+        let once = codec.encode(&state);
+        let back = codec.decode(&once, state.len()).unwrap();
+        assert!(back[..INT8_BLOCK].iter().all(|&x| x == 0.0), "{:?}", &back[..4]);
+        assert!((back[INT8_BLOCK] - 4.0).abs() <= 8.0 / 127.0 * 0.5 + 1e-9);
+        // fixed point: re-encoding the decoded snapshot is bit-identical
+        assert_eq!(codec.encode(&back), once);
+    }
+
+    #[test]
+    fn compression_ratios_hold() {
+        // the acceptance numbers: f16 is 4× denser than the f64 baseline
+        // (≥ 3× required), int8 ≥ 7×
+        let n = 4096;
+        let f64_len = StateDtype::F64.encoded_len(n) as f64;
+        assert!(f64_len / StateDtype::F16.encoded_len(n) as f64 >= 3.0);
+        assert!(f64_len / StateDtype::Bf16.encoded_len(n) as f64 >= 3.0);
+        assert!(f64_len / StateDtype::F32.encoded_len(n) as f64 >= 2.0);
+        assert!(f64_len / StateDtype::Int8.encoded_len(n) as f64 >= 7.0);
+    }
+}

@@ -330,6 +330,7 @@ fn tiny_entry(attn: &str, order: usize) -> ModelEntry {
         train_batch: 2,
         train_len: 8,
         decode_batch: 2,
+        state_dtype: Default::default(),
     };
     let spec = param_spec(&config);
     let n_params = spec.iter().map(|l| l.shape.iter().product::<usize>()).sum();

@@ -354,6 +354,120 @@ fn prop_checkpoint_roundtrips_random_stores() {
 }
 
 #[test]
+fn prop_snapshot_codec_drift_vs_oracle() {
+    // ISSUE-10: park a kernel mid-sequence, round-trip the state through
+    // every SnapshotCodec dtype, resume, and bound the worst-case output
+    // drift against the O(n^2) oracle — across kinds (linear + ho) and
+    // Taylor orders 0..=3.  f64 must stay exactly at the kernel's own
+    // oracle error; each narrower dtype gets its measured, test-pinned
+    // bound.  Bounds are on |output| drift, the quantity a logit
+    // inherits; the model-level drift test lives in model/decode.rs.
+    use holt::state::{SnapshotCodec, StateDtype};
+
+    // the trait has no clone, so kinds are factories: every run builds
+    // its kernels fresh from the same constructor arguments
+    type Make = Box<dyn Fn() -> Box<dyn RecurrentAttention>>;
+
+    // (dtype, absolute output-drift bound vs the f64-resumed run)
+    let bounds = [
+        (StateDtype::F64, 0.0f32),   // bit-lossless: zero drift, exactly
+        (StateDtype::F32, 1e-3),
+        (StateDtype::F16, 0.25),
+        (StateDtype::Bf16, 1.0),
+        (StateDtype::Int8, 1.0),
+    ];
+    let mut rng = Rng::new(0x51a7e);
+    let mut worst = std::collections::HashMap::new();
+    for case in 0..16 {
+        let n = rng.uniform_int(8, 49) as usize;
+        let cut = rng.uniform_int(4, n as u64 / 2 + 2) as usize;
+        let d = rng.uniform_int(2, 13) as usize;
+        let dv = rng.uniform_int(2, 13) as usize;
+        let q = rng.normal_vec_f32(n * d, 1.0);
+        let k = rng.normal_vec_f32(n * d, 1.0);
+        let v = rng.normal_vec_f32(n * dv, 1.0);
+        // kinds: linear + every Taylor order the oracle covers
+        let kernels: Vec<(String, Make)> = (0..=3)
+            .map(|o| {
+                (
+                    format!("ho_o{o}"),
+                    Box::new(move || {
+                        Box::new(HoState::new(d, dv, o, 3.0, true))
+                            as Box<dyn RecurrentAttention>
+                    }) as Make,
+                )
+            })
+            .chain(std::iter::once((
+                "linear".to_string(),
+                Box::new(move || {
+                    Box::new(LinearState::new(d, dv)) as Box<dyn RecurrentAttention>
+                }) as Make,
+            )))
+            .collect();
+        for (kind, make) in kernels {
+            let oracle = if kind == "linear" {
+                mathref::linear_attention(&q, &k, &v, n, n, d, dv, true)
+            } else {
+                let order: usize = kind[4..].parse().unwrap();
+                mathref::ho_attention(&q, &k, &v, n, n, d, dv, order, 3.0, true, true)
+            };
+            // reference run: park at `cut` with the lossless passthrough
+            let run = |dtype: StateDtype| -> Vec<f32> {
+                let mut st = make();
+                let mut out = vec![0.0f32; dv];
+                let mut produced = Vec::with_capacity(n * dv);
+                for i in 0..cut {
+                    st.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * dv..(i + 1) * dv], &mut out);
+                    produced.extend_from_slice(&out);
+                }
+                // park: encode the live state, drop the kernel, decode
+                // into a fresh one — the serve-path restore shape
+                let mut state = Vec::new();
+                st.save_state(&mut state);
+                let codec = SnapshotCodec::new(dtype);
+                let bytes = codec.encode(&state);
+                assert_eq!(bytes.len(), codec.encoded_len(state.len()));
+                let restored = codec.decode(&bytes, state.len()).unwrap();
+                if dtype == StateDtype::F64 {
+                    assert!(
+                        state.iter().zip(&restored).all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "f64 passthrough must be bit-lossless"
+                    );
+                }
+                let mut st = make();
+                st.load_state(&restored);
+                for i in cut..n {
+                    st.step(&q[i * d..(i + 1) * d], &k[i * d..(i + 1) * d], &v[i * dv..(i + 1) * dv], &mut out);
+                    produced.extend_from_slice(&out);
+                }
+                produced
+            };
+            let via_f64 = run(StateDtype::F64);
+            // the f64-resumed run is itself pinned against the oracle
+            assert!(
+                max_abs_diff(&via_f64, &oracle) <= 1e-4,
+                "case {case} {kind}: lossless park/resume broke the oracle pin"
+            );
+            for (dtype, bound) in bounds {
+                let got = run(dtype);
+                let drift = max_abs_diff(&got, &via_f64);
+                assert!(
+                    drift <= bound,
+                    "case {case} {kind} {dtype}: park/restore drift {drift} > {bound}"
+                );
+                let w = worst.entry(dtype.name()).or_insert(0.0f32);
+                *w = w.max(drift);
+            }
+        }
+    }
+    // the measured hierarchy: wider dtypes drift strictly less (f64
+    // exactly zero), which is the whole density-vs-fidelity tradeoff
+    assert_eq!(worst["f64"], 0.0);
+    assert!(worst["f32"] <= worst["f16"]);
+    eprintln!("worst park/restore output drift per dtype: {worst:?}");
+}
+
+#[test]
 fn prop_tensor_error_metrics_consistent() {
     let mut rng = Rng::new(8);
     for _ in 0..CASES {

@@ -582,6 +582,136 @@ fn trace_ids_follow_a_request_across_a_migration() {
 }
 
 #[test]
+fn compact_dtype_session_cache_serves_and_reports_density() {
+    // ISSUE-10: a lossy --state-dtype must thread end to end — the
+    // finished turn is cached f16, the follow-up hit decodes it back to
+    // live f64 state and completes — and the stats record the dtype plus
+    // the analytic sessions-per-GiB sweep the acceptance reads.
+    use holt::state::StateDtype;
+
+    let base = prompt(20, 17);
+    let opts = ServeOpts { state_dtype: StateDtype::F16, ..ServeOpts::default() };
+    let (tx, rx) = channel::<Request>();
+    let (etx, erx) = channel::<ServeEvent>();
+    let engine_thread = std::thread::spawn(move || {
+        let mut engine = Engine::with_opts(Box::new(executor(23)), 1, opts).unwrap();
+        engine.run(rx).unwrap()
+    });
+    let mut r1 = greedy_request(1, base.clone(), 6, etx.clone());
+    r1.session_id = Some("conv".into());
+    tx.send(r1).unwrap();
+    let done1 = recv_done(&erx);
+    assert!(done1.error.is_none());
+    let mut full = base.clone();
+    full.extend(&done1.token_ids);
+    full.extend([65, 66, 67]);
+    let mut r2 = greedy_request(2, full, 6, etx.clone());
+    r2.session_id = Some("conv".into());
+    tx.send(r2).unwrap();
+    let done2 = recv_done(&erx);
+    assert!(done2.error.is_none(), "generation from a rehydrated f16 snapshot failed");
+    drop((tx, etx));
+    let stats = engine_thread.join().unwrap();
+    assert_eq!(stats.session_hits, 1, "the f16 entry must still be a usable hit");
+    assert_eq!(stats.state_dtype, "f16");
+    assert!(stats.session_cache_bytes > 0);
+
+    // the analytic footprint block: f16 fits ≥ 3x the sessions of the
+    // f64 baseline in the same GiB (the ISSUE-10 acceptance ratio), and
+    // the top-level sessions_per_gib matches the active dtype's entry
+    let density = |dtype: &str| -> f64 {
+        stats
+            .state_footprint
+            .get(dtype)
+            .and_then(|d| d.get("density_vs_f64"))
+            .and_then(|j| j.as_f64())
+            .unwrap_or_else(|| panic!("state_footprint missing dtype {dtype}"))
+    };
+    assert!((density("f64") - 1.0).abs() < 1e-12);
+    assert!(density("f16") >= 3.0, "f16 density {} below the 3x acceptance", density("f16"));
+    assert!(density("int8") > density("f16"), "int8 must be densest");
+    let f16_per_gib = stats
+        .state_footprint
+        .get("f16")
+        .and_then(|d| d.get("sessions_per_gib"))
+        .and_then(|j| j.as_f64())
+        .unwrap();
+    assert!((stats.sessions_per_gib - f16_per_gib).abs() < 1e-9);
+    // park/restore timings recorded for the cache round-trip
+    assert!(stats.park.count >= 1, "session retain must record a park span");
+    assert!(stats.restore.count >= 1, "session hit must record a restore span");
+}
+
+#[test]
+fn migrated_encoded_session_is_bit_identical_for_lossy_dtypes() {
+    // the encoded-bytes bit-path: migration ships the cache entry
+    // verbatim (no re-encode), so even a *lossy* dtype generates exactly
+    // the same continuation whether the session stayed home or shipped —
+    // the quantization happened once, at park, on both paths.
+    use holt::serve::{Router, RouterOpts};
+    use holt::state::StateDtype;
+
+    let base = prompt(20, 19);
+    let follow = [65, 66, 67];
+    let opts = || ServeOpts { state_dtype: StateDtype::Int8, ..ServeOpts::default() };
+
+    // baseline: both turns through one engine, entry never moves
+    let (tx, rx) = channel::<Request>();
+    let (etx, erx) = channel::<ServeEvent>();
+    let baseline_opts = opts();
+    let engine_thread = std::thread::spawn(move || {
+        let mut engine = Engine::with_opts(Box::new(executor(97)), 1, baseline_opts).unwrap();
+        engine.run(rx).unwrap()
+    });
+    let mut r1 = greedy_request(1, base.clone(), 6, etx.clone());
+    r1.session_id = Some("mig".into());
+    tx.send(r1).unwrap();
+    let base_done1 = recv_done(&erx);
+    assert!(base_done1.error.is_none());
+    let mut full = base.clone();
+    full.extend(&base_done1.token_ids);
+    full.extend(follow);
+    let mut r2 = greedy_request(2, full.clone(), 6, etx.clone());
+    r2.session_id = Some("mig".into());
+    tx.send(r2).unwrap();
+    let base_done2 = recv_done(&erx);
+    assert!(base_done2.error.is_none());
+    drop((tx, etx));
+    let base_stats = engine_thread.join().unwrap();
+    assert_eq!(base_stats.session_hits, 1);
+
+    // sharded: same turn 1, forced migration, then turn 2 off the
+    // shipped (still-int8) entry on the other shard
+    let execs: Vec<Box<dyn Executor + Send>> =
+        vec![Box::new(executor(97)), Box::new(executor(97))];
+    let mut router = Router::new(execs, 1, opts(), RouterOpts::default()).unwrap();
+    let (etx, erx) = channel::<ServeEvent>();
+    let mut r1 = greedy_request(1, base.clone(), 6, etx.clone());
+    r1.session_id = Some("mig".into());
+    router.route(r1);
+    let done1 = recv_done(&erx);
+    assert_eq!(done1.token_ids, base_done1.token_ids, "turn 1 diverged before migration");
+
+    let home = router.shard_of("mig");
+    assert!(router.migrate("mig", 1 - home), "cached entry must ship");
+
+    let mut r2 = greedy_request(2, full, 6, etx.clone());
+    r2.session_id = Some("mig".into());
+    router.route(r2);
+    let done2 = recv_done(&erx);
+    assert!(done2.error.is_none());
+    assert_eq!(
+        done2.token_ids, base_done2.token_ids,
+        "migrated int8 snapshot decoded differently than the unmigrated one \
+         (migration must ship encoded bytes verbatim)"
+    );
+    drop(etx);
+    let (per_shard, report) = router.finish().unwrap();
+    assert_eq!(report.migrations, 1);
+    assert_eq!(per_shard[1 - home].session_hits, 1, "turn 2 hit the shipped entry");
+}
+
+#[test]
 fn migration_of_unknown_or_inflight_session_ships_nothing() {
     use holt::serve::{Router, RouterOpts};
     let execs: Vec<Box<dyn Executor + Send>> =

@@ -30,6 +30,7 @@ fn smoke_entry(attn: &str) -> ModelEntry {
         train_batch: 4,
         train_len: 32,
         decode_batch: 2,
+        state_dtype: Default::default(),
     };
     let spec = param_spec(&config);
     let n_params = spec.iter().map(|l| l.shape.iter().product::<usize>()).sum();
